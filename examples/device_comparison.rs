@@ -1,0 +1,82 @@
+//! Device-technology exploration: sweep all four RRAM materials across
+//! write-verify budgets and EC settings on a workload of your choice,
+//! printing a decision matrix — which device to pick at a given accuracy
+//! target, and what it costs in energy and latency.
+//!
+//! ```sh
+//! cargo run --release --example device_comparison -- [matrix] [--reps N]
+//! ```
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::metrics::table::TableBuilder;
+use meliso::prelude::*;
+use meliso::solver::ReplicationSummary;
+use meliso::util::sci;
+
+fn main() -> Result<(), String> {
+    let args = BenchArgs::parse();
+    let matrix = args
+        .rest
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "bcsstk02".to_string());
+    let reps = args.reps_or(2, 5, 20);
+    let backend = backend();
+
+    let source = registry::build(&matrix)?;
+    let n = source.nrows();
+    if n > 2048 {
+        return Err("pick a small operand (<=2048) for this example".into());
+    }
+    let x = Vector::standard_normal(source.ncols(), 11);
+    let cell = meliso::runtime::fit_tile(&backend.tile_sizes(), n);
+    let system = SystemConfig::single_mca(cell);
+
+    println!("# device comparison on {matrix} ({n}²), cell {cell}², {reps} reps\n");
+    let mut table = TableBuilder::new(
+        "accuracy / energy / latency decision matrix",
+        &["mode", "eps_l2", "E_w (J)", "L_w (s)", "E·L product"],
+    );
+    let mut best: Option<(String, f64)> = None;
+    for material in Material::ALL {
+        for (mode, ec, k) in [
+            ("raw      ", false, 0),
+            ("wv k=5   ", false, 5),
+            ("EC       ", true, 0),
+            ("EC+wv k=5", true, 5),
+        ] {
+            let opts = SolveOptions::default()
+                .with_device(material)
+                .with_ec(ec)
+                .with_wv_iters(k);
+            let solver = Meliso::with_backend(system, opts, backend.clone());
+            let reports = solver.replicate(source.as_ref(), &x, reps)?;
+            let s = ReplicationSummary::from_reports(&reports);
+            table.row(
+                &format!("{:<10}", material.name()),
+                vec![
+                    mode.to_string(),
+                    sci(s.rel_err_l2),
+                    sci(s.ew_mean),
+                    sci(s.lw_mean),
+                    sci(s.ew_mean * s.lw_mean),
+                ],
+            );
+            // "Best" = accurate enough (<5% error) with the smallest E·L.
+            if s.rel_err_l2 < 0.05 {
+                let cost = s.ew_mean * s.lw_mean;
+                if best.as_ref().map(|(_, c)| cost < *c).unwrap_or(true) {
+                    best = Some((format!("{} {}", material.name(), mode.trim()), cost));
+                }
+            }
+        }
+    }
+    print!("{}", table.render());
+    match best {
+        Some((choice, _)) => println!("\nbest <5%-error configuration by E*L: {choice}"),
+        None => println!("\nno configuration reached <5% error — increase k or enable EC"),
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: solve one in-memory MVM with error correction and print the
+//! report.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use meliso::prelude::*;
+
+fn main() -> Result<(), String> {
+    // 1. Pick an operand (a 66x66 near-identity matrix, the paper's M2)
+    //    and a standard-normal input vector.
+    let a = meliso::matrices::registry::build("iperturb66")?;
+    let x = Vector::standard_normal(a.ncols(), 7);
+
+    // 2. Configure a single 128² crossbar of TaOx-HfOx devices — the low-
+    //    energy, low-precision material the paper champions — with the
+    //    two-tier error correction and 2 write-verify iterations.
+    let system = SystemConfig::single_mca(128);
+    let opts = SolveOptions::default()
+        .with_device(Material::TaOxHfOx)
+        .with_ec(true)
+        .with_wv_iters(2);
+
+    // 3. Build the solver.  `Meliso::new` starts the PJRT runtime and loads
+    //    the AOT artifacts from ./artifacts (falls back with a clear error
+    //    if `make artifacts` has not run).
+    let solver = match Meliso::new(system, opts.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("note: {e}\nfalling back to the native backend");
+            Meliso::with_backend(
+                system,
+                opts.with_backend(BackendKind::Native),
+                std::sync::Arc::new(meliso::runtime::native::NativeBackend::new()),
+            )
+        }
+    };
+
+    // 4. Solve and inspect.
+    let report = solver.solve_source(a.as_ref(), &x)?;
+    println!("backend          : {}", solver.backend_name());
+    println!("rel l2 error     : {:.4e}", report.rel_err_l2);
+    println!("rel linf error   : {:.4e}", report.rel_err_inf);
+    println!("write energy (J) : {:.4e}", report.ew_mean);
+    println!("write latency (s): {:.4e}", report.lw_mean);
+    println!("wall time (s)    : {:.3}", report.wall_seconds);
+
+    // The corrected in-memory result is in report.y; compare a few entries
+    // against the exact product.
+    let b = a.matvec(&x);
+    for i in 0..4 {
+        println!(
+            "y[{i}] = {:+.5}   (exact {:+.5})",
+            report.y.get(i),
+            b.get(i)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""AOT pipeline: lower the L2 model to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto) is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (the version behind the published ``xla`` rust crate)
+rejects (``proto.id() <= INT_MAX``).  The HLO text parser reassigns ids, so text
+round-trips cleanly — see /opt/xla-example/gen_hlo.py.
+
+Run once at build time (``make artifacts``); the Rust binary is self-contained
+afterwards.  Python is never on the request path.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--sizes 32,64]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def _sha256(text: str) -> str:
+    return hashlib.sha256(text.encode()).hexdigest()
+
+
+def build(out_dir: str, sizes) -> dict:
+    """Build every artifact and the manifest; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "schema": 1,
+        "dtype": "f32",
+        "tile_sizes": list(sizes),
+        "artifacts": {},
+    }
+    for n in sizes:
+        for name, fn, specs, outputs in (
+            ("mvm", model.mvm, model.mvm_specs(n), ["y_raw"]),
+            ("ec_mvm", model.ec_mvm, model.ec_mvm_specs(n), ["y_raw", "p", "y_corr"]),
+        ):
+            text = lower_artifact(fn, specs)
+            fname = f"{name}_{n}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"][f"{name}_{n}"] = {
+                "file": fname,
+                "tile": n,
+                "inputs": len(specs),
+                "outputs": outputs,
+                "sha256": _sha256(text),
+                "bytes": len(text),
+            }
+            print(f"  wrote {fname}  ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in model.TILE_SIZES),
+        help="comma-separated tile sizes",
+    )
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    build(args.out_dir, sizes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the paper's compute hot-spot (crossbar MVM) and the
+# first-order EC combine, plus the pure-jnp oracle (ref.py).
+from .crossbar_mvm import crossbar_mvm, crossbar_mvm_batched  # noqa: F401
+from .ec_combine import ec_combine  # noqa: F401

@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: tiled crossbar matrix-vector multiplication.
+
+This is the compute hot-spot of MELISO+: every analog MVM a memory crossbar
+array (MCA) performs is simulated as a dense tile MVM.  The Pallas tiling
+mirrors the physical structure:
+
+  * one ``BlockSpec`` block of ``A``  == one physical crossbar subarray read,
+  * the grid dimension over column-blocks == chunked analog bitline summation
+    (partial currents accumulated by the peripheral circuitry),
+  * VMEM staging of a block == biasing the subarray's wordlines.
+
+On a real TPU the (128, 128) block feeds the MXU systolic array directly
+(f32 here; bf16 on hardware).  The kernel MUST be lowered with
+``interpret=True`` in this image: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Physical subarray tile mirrored by the BlockSpec.  128 matches both the MXU
+# systolic dimension and a common crossbar subarray size.
+DEFAULT_BLOCK = 128
+
+
+def _mvm_kernel(a_ref, x_ref, y_ref):
+    """One grid step: accumulate a (bm, bn) @ (bn, 1) partial product."""
+    # First column-block initializes the accumulator ("reset the integrator").
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += a_ref[...] @ x_ref[...]
+
+
+def _block_for(n: int, block: int) -> int:
+    return n if n < block else block
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def crossbar_mvm(a: jax.Array, x: jax.Array, *, block: int = DEFAULT_BLOCK):
+    """Compute ``a @ x`` with a crossbar-tiled Pallas kernel.
+
+    Args:
+      a: ``(m, n)`` matrix (the encoded conductance image of the operand).
+      x: ``(n, 1)`` column vector (the applied wordline voltages).
+      block: tile edge; both ``m`` and ``n`` must be divisible by the
+        resolved block (the virtualization layer zero-pads to guarantee it).
+
+    Returns:
+      ``(m, 1)`` result vector (the integrated bitline currents).
+    """
+    m, n = a.shape
+    bm = _block_for(m, block)
+    bn = _block_for(n, block)
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m},{n}) not divisible by block ({bm},{bn})")
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _mvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), a.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(a, x)
+
+
+def _mvm_batched_kernel(a_ref, x_ref, y_ref):
+    """Batched grid step: (bm, bn) @ (bn, b) partial products."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def crossbar_mvm_batched(a: jax.Array, xs: jax.Array, *, block: int = DEFAULT_BLOCK):
+    """Batched crossbar MVM: ``a @ xs`` with ``xs`` of shape ``(n, b)``.
+
+    The TPU-deployment extension documented in DESIGN.md
+    §Hardware-Adaptation: a rank-1 matvec leaves the MXU systolic array
+    memory-bound (arithmetic intensity ~0.5 flop/B); batching ``b`` input
+    vectors raises intensity ~b-fold, which is how multiple MVM requests
+    sharing one encoded operand would be served on real hardware.  On the
+    analog side this corresponds to time-multiplexing ``b`` wordline bias
+    patterns over one programmed crossbar.
+    """
+    m, n = a.shape
+    n2, b = xs.shape
+    if n != n2:
+        raise ValueError(f"dim mismatch: A is {a.shape}, xs is {xs.shape}")
+    bm = _block_for(m, block)
+    bn = _block_for(n, block)
+    if m % bm or n % bn:
+        raise ValueError(f"shape ({m},{n}) not divisible by block ({bm},{bn})")
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _mvm_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, b), a.dtype),
+        interpret=True,
+    )(a, xs)

@@ -1,0 +1,71 @@
+"""Pure-jnp/numpy oracle for the L1 kernels and L2 model.
+
+Everything here is the *specification*: the Pallas kernels and the lowered
+HLO artifacts are correct iff they match these functions to float32 tolerance.
+The Rust native backend mirrors these semantics (see rust/src/runtime/native.rs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mvm_ref(a, x):
+    """Reference MVM: ``(m, n) @ (n, 1) -> (m, 1)``."""
+    return a @ x
+
+
+def ec_combine_ref(v, u, y):
+    """First-order combine ``p = v + u - y`` (v=Ãx, u=Ax̃, y=Ãx̃)."""
+    return v + u - y
+
+
+def first_order_ref(a, at, x, xt):
+    """Full first-order EC: three products then combine."""
+    return ec_combine_ref(at @ x, a @ xt, at @ xt)
+
+
+def difference_matrix(n: int, h: float = -1.0) -> np.ndarray:
+    """Paper Eq. 9: first-order difference matrix L (diag 1, superdiag h)."""
+    l = np.eye(n)
+    l[np.arange(n - 1), np.arange(1, n)] = h
+    return l
+
+
+def denoise_inverse(n: int, lam: float, h: float = -1.0) -> np.ndarray:
+    """Closed-form denoiser matrix ``(I + λ LᵀL)⁻¹`` (paper Eq. 10).
+
+    Built in float64 then cast by callers; ``I + λLᵀL`` is SPD tridiagonal so
+    the inverse is well defined for every λ > 0.
+    """
+    l = difference_matrix(n, h)
+    return np.linalg.inv(np.eye(n) + lam * (l.T @ l))
+
+
+def denoise_ref(p, lam: float, h: float = -1.0):
+    """Apply the denoiser digitally (no encoding noise)."""
+    n = p.shape[0]
+    minv = denoise_inverse(n, lam, h).astype(np.float32)
+    return jnp.asarray(minv) @ p
+
+
+def corrected_mvm_ref(a, at, x, xt, minv, nv=None, nu=None, ny=None):
+    """Full two-tier EC pipeline oracle.
+
+    Returns ``(y_raw, p, y_corr)`` matching the ``ec_mvm`` artifact contract:
+      y_raw  = Ãx̃ ∘ ny                  (uncorrected measured product)
+      p      = Ãx∘nv + Ax̃∘nu − Ãx̃∘ny  (first-order corrected)
+      y_corr = M̃inv @ p                 (second-order denoised, in-memory)
+
+    ``nv/nu/ny`` are per-element multiplicative read-noise vectors
+    (default: ideal readout, all ones).
+    """
+    ones = np.ones_like(np.asarray(x))
+    nv = ones if nv is None else nv
+    nu = ones if nu is None else nu
+    ny = ones if ny is None else ny
+    y = at @ xt
+    p = (at @ x) * nv + (a @ xt) * nu - y * ny
+    y_corr = minv @ p
+    return y * ny, p, y_corr

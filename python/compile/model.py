@@ -1,0 +1,94 @@
+"""L2: the MELISO+ per-tile compute graph.
+
+The model is the paper's ``correctedMatVecMul`` (Supplementary Alg. 6) *after*
+the encoding step: the Rust coordinator owns the stochastic write–verify
+protocols and hands this graph the true operands (``a``, ``x``), their encoded
+(noisy) images (``at``, ``xt``), and the encoded denoiser matrix ``minv``.
+The graph performs the four crossbar MVMs and the first-order combine — all of
+which lower into a single HLO module per tile size.
+
+Shapes are static per artifact: ``n ∈ {32, 64, 128, 256, 512, 1024}`` with the
+virtualization layer responsible for zero-padding to the nearest tile size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import crossbar_mvm, ec_combine
+
+#: Tile sizes for which AOT artifacts are produced.  1024 is the paper's
+#: largest array cell size (Fig. 4/5); 32 its smallest.
+TILE_SIZES = (32, 64, 128, 256, 512, 1024)
+
+
+#: Pallas block edge used when lowering AOT artifacts.  128 mirrors the
+#: physical crossbar subarray / MXU tile (DESIGN.md §Hardware-Adaptation);
+#: the CPU-PJRT artifacts are lowered with the *full tile* as one block
+#: (grid 1x1) because interpret-mode grid emulation (dynamic-slice loops)
+#: dominates XLA-CPU runtime — a 60-100x hot-path win measured in
+#: EXPERIMENTS.md §Perf.  On a real TPU target this constant goes back to
+#: 128 and the grid pipelines through VMEM.
+AOT_FULL_TILE_BLOCK = 4096  # >= max tile size -> resolved block = n
+
+
+def mvm(at: jax.Array, xt: jax.Array) -> tuple[jax.Array]:
+    """No-EC path: the raw in-memory product ``Ãx̃``.
+
+    Returns a 1-tuple so every artifact uniformly lowers with
+    ``return_tuple=True`` (see aot.py / the rust loader's ``to_tuple``).
+    """
+    return (crossbar_mvm(at, xt, block=AOT_FULL_TILE_BLOCK),)
+
+
+def ec_mvm(
+    a: jax.Array,
+    at: jax.Array,
+    x: jax.Array,
+    xt: jax.Array,
+    minv: jax.Array,
+    nv: jax.Array,
+    nu: jax.Array,
+    ny: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Two-tier error-corrected MVM for one tile.
+
+    Args:
+      a:    true operand matrix ``(n, n)``.
+      at:   encoded (noisy) matrix ``Ã``.
+      x:    true input vector ``(n, 1)``.
+      xt:   encoded (noisy) vector ``x̃``.
+      minv: encoded denoiser ``(I + λLᵀL)⁻¹`` — itself programmed onto the
+            crossbar by the coordinator, per the paper.
+      nv/nu/ny: ``(n, 1)`` multiplicative read-noise vectors for the three
+            measured products (generated per call by the coordinator; ones
+            for an ideal readout).
+
+    Returns:
+      ``(y_raw, p, y_corr)``:
+        y_raw  = Ãx̃ ∘ ny                   — uncorrected measured product,
+        p      = Ãx∘nv + Ax̃∘nu − Ãx̃∘ny   — first-order corrected (Eq. 7),
+        y_corr = M̃inv p                    — second-order denoised (Eq. 10).
+    """
+    blk = AOT_FULL_TILE_BLOCK
+    v = crossbar_mvm(at, x, block=blk)   # Ãx
+    u = crossbar_mvm(a, xt, block=blk)   # Ax̃
+    y_raw = crossbar_mvm(at, xt, block=blk)  # Ãx̃
+    p = ec_combine(v, u, y_raw, nv, nu, ny, block=blk)
+    y_corr = crossbar_mvm(minv, p, block=blk)
+    return (y_raw * ny, p, y_corr)
+
+
+def mvm_specs(n: int):
+    """Example-arg specs for lowering ``mvm`` at tile size ``n``."""
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n, 1), jnp.float32)
+    return (mat, vec)
+
+
+def ec_mvm_specs(n: int):
+    """Example-arg specs for lowering ``ec_mvm`` at tile size ``n``."""
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n, 1), jnp.float32)
+    return (mat, mat, vec, vec, mat, vec, vec, vec)

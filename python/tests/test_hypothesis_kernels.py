@@ -1,0 +1,67 @@
+# Property-based sweeps over the Pallas kernel's shape/value space
+# (hypothesis), asserting allclose against the pure-jnp oracle (ref.py).
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import crossbar_mvm, crossbar_mvm_batched, ec_combine
+from compile.kernels import ref
+
+# Shapes are multiples of 8 (we pass block=8 to keep interpret-mode runtime
+# bounded) up to a few hundred; values span typical conductance-scaled ranges.
+dims = st.integers(min_value=1, max_value=24).map(lambda k: 8 * k)
+scales = st.sampled_from([1e-3, 1.0, 1e2, 1.8e4])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _rand(rng, shape, scale):
+    return (scale * rng.standard_normal(shape)).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, n=dims, scale=scales, seed=seeds)
+def test_mvm_matches_ref_over_shapes(m, n, scale, seed):
+    rng = np.random.default_rng(seed)
+    a, x = _rand(rng, (m, n), scale), _rand(rng, (n, 1), 1.0)
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x), block=8))
+    want = ref.mvm_ref(a, x)
+    tol = max(1e-4, 1e-6 * scale * n)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, seed=seeds)
+def test_ec_combine_matches_ref_over_shapes(m, seed):
+    rng = np.random.default_rng(seed)
+    v, u, y = (_rand(rng, (m, 1), 1.0) for _ in range(3))
+    got = np.asarray(
+        ec_combine(jnp.asarray(v), jnp.asarray(u), jnp.asarray(y), block=8)
+    )
+    np.testing.assert_allclose(got, ref.ec_combine_ref(v, u, y), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=dims, eps=st.sampled_from([1e-4, 1e-3, 1e-2]), seed=seeds)
+def test_first_order_identity_algebra(n, eps, seed):
+    # ref-level property: p = Ax(1 - εaεx) exactly (rank-1 multiplicative
+    # error model of the paper, per-row εa and shared εx scalar here).
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (n, n), 1.0)
+    x = _rand(rng, (n, 1), 1.0)
+    ea = np.float32(eps)
+    ex = np.float32(-eps)
+    at = a * (1 + ea)
+    xt = x * (1 + ex)
+    p = np.asarray(ref.first_order_ref(a, at, x, xt))
+    want = (a @ x) * (1 - ea * ex)
+    np.testing.assert_allclose(p, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, n=dims, b=st.integers(min_value=1, max_value=8), seed=seeds)
+def test_batched_mvm_matches_ref_over_shapes(m, n, b, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (m, n), 1.0)
+    xs = _rand(rng, (n, b), 1.0)
+    got = np.asarray(crossbar_mvm_batched(jnp.asarray(a), jnp.asarray(xs), block=8))
+    np.testing.assert_allclose(got, a @ xs, rtol=2e-4, atol=1e-3)

@@ -1,0 +1,111 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal for L1.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import crossbar_mvm, crossbar_mvm_batched, ec_combine
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=1.0):
+    return (scale * RNG.standard_normal(shape)).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [8, 32, 64, 128, 256, 512])
+def test_crossbar_mvm_square(n):
+    a, x = _rand((n, n)), _rand((n, 1))
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x)))
+    want = ref.mvm_ref(a, x)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("m,n", [(128, 256), (256, 128), (384, 128), (64, 32)])
+def test_crossbar_mvm_rect(m, n):
+    a, x = _rand((m, n)), _rand((n, 1))
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_allclose(got, ref.mvm_ref(a, x), rtol=2e-5, atol=2e-4)
+
+
+def test_crossbar_mvm_small_block_resolution():
+    # n smaller than the default block resolves the block to n.
+    a, x = _rand((16, 16)), _rand((16, 1))
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_allclose(got, ref.mvm_ref(a, x), rtol=2e-5, atol=2e-4)
+
+
+def test_crossbar_mvm_custom_block():
+    a, x = _rand((128, 128)), _rand((128, 1))
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x), block=32))
+    np.testing.assert_allclose(got, ref.mvm_ref(a, x), rtol=2e-5, atol=2e-4)
+
+
+def test_crossbar_mvm_rejects_indivisible():
+    a, x = _rand((130, 130)), _rand((130, 1))
+    with pytest.raises(ValueError):
+        crossbar_mvm(jnp.asarray(a), jnp.asarray(x))
+
+
+def test_crossbar_mvm_zero_matrix():
+    a = np.zeros((64, 64), np.float32)
+    x = _rand((64, 1))
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x)))
+    assert np.all(got == 0.0)
+
+
+def test_crossbar_mvm_identity():
+    n = 128
+    a = np.eye(n, dtype=np.float32)
+    x = _rand((n, 1))
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_allclose(got, x, rtol=1e-6, atol=1e-6)
+
+
+def test_crossbar_mvm_large_magnitudes():
+    # bcsstk02-like spectral norm ~1.8e4 must not overflow f32 accumulation.
+    a, x = _rand((128, 128), scale=1.8e4), _rand((128, 1))
+    got = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(x)))
+    np.testing.assert_allclose(got, ref.mvm_ref(a, x), rtol=1e-4, atol=1e-1)
+
+
+@pytest.mark.parametrize("m", [8, 128, 384])
+def test_ec_combine_matches_ref(m):
+    v, u, y = _rand((m, 1)), _rand((m, 1)), _rand((m, 1))
+    got = np.asarray(ec_combine(jnp.asarray(v), jnp.asarray(u), jnp.asarray(y)))
+    np.testing.assert_allclose(got, ref.ec_combine_ref(v, u, y), rtol=1e-6, atol=1e-6)
+
+
+def test_ec_combine_shape_mismatch():
+    with pytest.raises(ValueError):
+        ec_combine(jnp.zeros((8, 1)), jnp.zeros((16, 1)), jnp.zeros((8, 1)))
+
+
+def test_ec_combine_exact_cancellation():
+    # With v == y, p == u exactly (elementwise f32 arithmetic).
+    v = _rand((128, 1))
+    u = _rand((128, 1))
+    got = np.asarray(ec_combine(jnp.asarray(v), jnp.asarray(u), jnp.asarray(v)))
+    np.testing.assert_allclose(got, u, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("b", [1, 4, 8])
+def test_crossbar_mvm_batched_matches_ref(b):
+    m, n = 128, 64
+    a, xs = _rand((m, n)), _rand((n, b))
+    got = np.asarray(crossbar_mvm_batched(jnp.asarray(a), jnp.asarray(xs)))
+    np.testing.assert_allclose(got, a @ xs, rtol=2e-5, atol=2e-4)
+
+
+def test_crossbar_mvm_batched_consistent_with_single():
+    n, b = 64, 4
+    a, xs = _rand((n, n)), _rand((n, b))
+    batched = np.asarray(crossbar_mvm_batched(jnp.asarray(a), jnp.asarray(xs)))
+    for k in range(b):
+        single = np.asarray(crossbar_mvm(jnp.asarray(a), jnp.asarray(xs[:, k : k + 1])))
+        np.testing.assert_allclose(batched[:, k : k + 1], single, rtol=2e-5, atol=2e-4)
+
+
+def test_crossbar_mvm_batched_rejects_mismatch():
+    with pytest.raises(ValueError):
+        crossbar_mvm_batched(jnp.zeros((32, 32)), jnp.zeros((16, 4)))

@@ -1,0 +1,129 @@
+# pytest: L2 model semantics — EC cancellation properties and the artifact
+# contract (y_raw, p, y_corr).
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(77)
+
+
+def _operands(n, eps_a, eps_x):
+    a = RNG.standard_normal((n, n)).astype(np.float32)
+    x = RNG.standard_normal((n, 1)).astype(np.float32)
+    # Paper Eq. 2/3: multiplicative row-wise / element-wise programming error.
+    ea = (eps_a * RNG.standard_normal((n, 1))).astype(np.float32)
+    ex = (eps_x * RNG.standard_normal((n, 1))).astype(np.float32)
+    at = a * (1.0 + ea)  # row-wise error ε_{a_i}
+    xt = x * (1.0 + ex)
+    return a, at, x, xt
+
+
+def _minv(n, lam=1e-12):
+    return ref.denoise_inverse(n, lam).astype(np.float32)
+
+
+def test_mvm_artifact_contract():
+    n = 64
+    a, at, x, xt = _operands(n, 0.05, 0.05)
+    (y,) = model.mvm(jnp.asarray(at), jnp.asarray(xt))
+    np.testing.assert_allclose(np.asarray(y), at @ xt, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("n", [32, 64, 128])
+def test_ec_mvm_matches_oracle(n):
+    a, at, x, xt = _operands(n, 0.05, 0.05)
+    minv = _minv(n)
+    nv, nu, ny = (1.0 + 0.003 * RNG.standard_normal((n, 1)).astype(np.float32)
+                  for _ in range(3))
+    got = model.ec_mvm(
+        *[jnp.asarray(v) for v in (a, at, x, xt, minv, nv, nu, ny)]
+    )
+    want = ref.corrected_mvm_ref(a, at, x, xt, minv, nv, nu, ny)
+    for g, w, name in zip(got, want, ("y_raw", "p", "y_corr")):
+        np.testing.assert_allclose(
+            np.asarray(g), w, rtol=5e-5, atol=5e-4, err_msg=name
+        )
+
+
+def test_first_order_cancellation_is_second_order():
+    # ||p - Ax|| must scale like eps^2, not eps (the paper's Eq. 7 claim).
+    n = 128
+    b_errs = []
+    for eps in (1e-2, 1e-3):
+        a, at, x, xt = _operands(n, eps, eps)
+        minv = _minv(n)
+        ones = np.ones((n, 1), np.float32)
+        _, p, _ = model.ec_mvm(
+            *[jnp.asarray(v) for v in (a, at, x, xt, minv, ones, ones, ones)]
+        )
+        b = a @ x
+        b_errs.append(np.linalg.norm(np.asarray(p) - b) / np.linalg.norm(b))
+    # One decade in eps should shrink the residual ~two decades (allow slack
+    # for f32 roundoff at the small end).
+    assert b_errs[1] < b_errs[0] * 5e-2, b_errs
+
+
+def test_raw_error_is_first_order():
+    # Contrast: the uncorrected product degrades linearly in eps.
+    n = 128
+    eps = 1e-2
+    a, at, x, xt = _operands(n, eps, eps)
+    minv = _minv(n)
+    ones = np.ones((n, 1), np.float32)
+    y_raw, p, _ = model.ec_mvm(
+        *[jnp.asarray(v) for v in (a, at, x, xt, minv, ones, ones, ones)]
+    )
+    b = a @ x
+    raw = np.linalg.norm(np.asarray(y_raw) - b) / np.linalg.norm(b)
+    cor = np.linalg.norm(np.asarray(p) - b) / np.linalg.norm(b)
+    assert cor < raw * 0.1, (raw, cor)  # >90% reduction (headline claim)
+
+
+def test_zero_noise_is_exact_passthrough():
+    n = 64
+    a = RNG.standard_normal((n, n)).astype(np.float32)
+    x = RNG.standard_normal((n, 1)).astype(np.float32)
+    minv = np.eye(n, dtype=np.float32)  # λ=0 limit
+    ones = np.ones((n, 1), np.float32)
+    y_raw, p, y_corr = model.ec_mvm(
+        *[jnp.asarray(v) for v in (a, a, x, x, minv, ones, ones, ones)]
+    )
+    np.testing.assert_allclose(np.asarray(p), np.asarray(y_raw), rtol=1e-6, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_corr), np.asarray(p), rtol=2e-5, atol=2e-4)
+
+
+def test_denoise_inverse_properties():
+    # (I + λLᵀL) is SPD; its inverse times (I + λLᵀL) is I; λ→0 gives I.
+    n = 66
+    lam = 1e-12
+    l = ref.difference_matrix(n)
+    m = np.eye(n) + lam * l.T @ l
+    minv = ref.denoise_inverse(n, lam)
+    np.testing.assert_allclose(minv @ m, np.eye(n), atol=1e-10)
+    np.testing.assert_allclose(minv, np.eye(n), atol=1e-10)
+
+
+def test_denoise_attenuates_rough_noise():
+    # With a non-trivial λ the denoiser must attenuate high-frequency noise
+    # more than it distorts a smooth signal.
+    n = 256
+    lam = 0.5
+    t = np.linspace(0, 1, n)
+    smooth = np.sin(2 * np.pi * t)[:, None]
+    noise = RNG.standard_normal((n, 1)) * 0.3
+    minv = ref.denoise_inverse(n, lam).astype(np.float32)
+    den = minv @ (smooth + noise).astype(np.float32)
+    err_before = np.linalg.norm(smooth + noise - smooth)
+    err_after = np.linalg.norm(den - smooth)
+    assert err_after < err_before
+
+
+def test_tile_sizes_exported():
+    assert model.TILE_SIZES == (32, 64, 128, 256, 512, 1024)
+    for n in model.TILE_SIZES:
+        mat, vec = model.mvm_specs(n)
+        assert mat.shape == (n, n) and vec.shape == (n, 1)
+        assert len(model.ec_mvm_specs(n)) == 8

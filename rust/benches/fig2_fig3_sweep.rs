@@ -1,0 +1,100 @@
+//! Regenerates **Figures 2, 3, S1, S2**: the effect of the
+//! `adjustableWriteandVerify` iteration count k on relative error norms,
+//! write energy and write latency — without (Fig 2/S1) and with (Fig 3/S2)
+//! the two-tier error correction, on Iperturb (Fig 2/3) and bcsstk02
+//! (Fig S1/S2).
+//!
+//! Usage: `cargo bench --bench fig2_fig3_sweep [-- --fig 2|3|s1|s2 --reps N]`
+//! (no `--fig` runs all four).  Series go to stdout and CSVs under
+//! `bench_results/`.
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::prelude::*;
+use meliso::solver::ReplicationSummary;
+
+struct FigSpec {
+    name: &'static str,
+    matrix: &'static str,
+    ec: bool,
+}
+
+const FIGS: &[FigSpec] = &[
+    FigSpec { name: "fig2", matrix: "iperturb66", ec: false },
+    FigSpec { name: "fig3", matrix: "iperturb66", ec: true },
+    FigSpec { name: "figs1", matrix: "bcsstk02", ec: false },
+    FigSpec { name: "figs2", matrix: "bcsstk02", ec: true },
+];
+
+fn main() {
+    let args = BenchArgs::parse();
+    let reps = args.reps_or(2, 3, 100);
+    let which = args
+        .rest
+        .iter()
+        .position(|a| a == "--fig")
+        .and_then(|i| args.rest.get(i + 1))
+        .map(|s| format!("fig{}", s.trim_start_matches("fig")));
+
+    // The paper sweeps k = 0..20; default keeps a representative subset so
+    // the bench completes quickly (use --full + --fig for the exact sweep).
+    let ks: Vec<usize> = if args.full {
+        (0..=20).collect()
+    } else if args.quick {
+        vec![0, 2, 5, 11]
+    } else {
+        vec![0, 1, 2, 3, 5, 8, 11, 15, 20]
+    };
+
+    let backend = backend();
+    for fig in FIGS {
+        if let Some(w) = &which {
+            if w != fig.name {
+                continue;
+            }
+        }
+        println!(
+            "\n# {} — adjustableWriteandVerify sweep on {} ({}, {reps} reps)",
+            fig.name,
+            fig.matrix,
+            if fig.ec { "with EC" } else { "no EC" },
+        );
+        let source = registry::build(fig.matrix).unwrap();
+        let x = Vector::standard_normal(source.ncols(), 0x5eed);
+        let mut csv = String::from("k,device,eps_l2,eps_inf,ew_j,lw_s\n");
+        println!(
+            "{:>3}  {:<10} {:>12} {:>12} {:>12} {:>12}",
+            "k", "device", "eps_l2", "eps_inf", "E_w(J)", "L_w(s)"
+        );
+        for &k in &ks {
+            for material in Material::ALL {
+                let opts = SolveOptions::default()
+                    .with_device(material)
+                    .with_ec(fig.ec)
+                    .with_wv_iters(k);
+                let solver =
+                    Meliso::with_backend(SystemConfig::single_mca(128), opts, backend.clone());
+                let reports = solver.replicate(source.as_ref(), &x, reps).unwrap();
+                let s = ReplicationSummary::from_reports(&reports);
+                println!(
+                    "{k:>3}  {:<10} {:>12.4e} {:>12.4e} {:>12.4e} {:>12.4e}",
+                    material.name(),
+                    s.rel_err_l2,
+                    s.rel_err_inf,
+                    s.ew_mean,
+                    s.lw_mean
+                );
+                csv.push_str(&format!(
+                    "{k},{},{:.6e},{:.6e},{:.6e},{:.6e}\n",
+                    material.name(),
+                    s.rel_err_l2,
+                    s.rel_err_inf,
+                    s.ew_mean,
+                    s.lw_mean
+                ));
+            }
+        }
+        args.write_result(&format!("{}.csv", fig.name), &csv);
+    }
+}

@@ -1,0 +1,87 @@
+//! Regenerates **Figure 4 (weak scaling)**: fixed problem (add32, 4960²),
+//! fixed 8×8 MCA tile array, array cell size swept 32² → 1024².  Reports
+//! relative error norms and the mean-across-MCAs write energy/latency —
+//! small cells force virtualization reassignment (energy/latency blow up),
+//! large cells execute in a single pass.
+//!
+//! Usage: `cargo bench --bench fig4_weak_scaling [-- --reps N --quick]`
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::{registry, DenseSource, MatrixSource};
+use meliso::prelude::*;
+use meliso::solver::ReplicationSummary;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let reps = args.reps_or(1, 1, 10);
+    let backend = backend();
+    // Small cell sizes mean thousands of chunk encodes on one host; the
+    // default skips 32² unless --full is set (the trend is identical).
+    let cells: Vec<usize> = if args.full {
+        vec![32, 64, 128, 256, 512, 1024]
+    } else if args.quick {
+        vec![256, 512, 1024]
+    } else {
+        vec![64, 128, 256, 512, 1024]
+    };
+
+    // --dense replicates the paper's dense mapping (no sparsity-aware chunk
+    // skipping): every chunk is assigned, so small cells pay the full
+    // virtualization reassignment overhead — the paper's Fig 4 trend.  The
+    // default banded path shows our sparsity optimization on top of it.
+    let dense = args.rest.iter().any(|a| a == "--dense");
+    println!(
+        "# Fig 4 — weak scaling: add32 (4960²) on 8x8 tiles, cell size sweep ({reps} reps{})\n",
+        if dense { ", dense mapping" } else { ", sparsity-aware" }
+    );
+    let banded = registry::build("add32").unwrap();
+    let source: std::sync::Arc<dyn MatrixSource> = if dense {
+        std::sync::Arc::new(DenseSource::new(banded.block(0, 0, 4960, 4960)))
+    } else {
+        banded
+    };
+    let x = Vector::standard_normal(source.ncols(), 0x5eed);
+    let mut csv = String::from("cell,device,eps_l2,eps_inf,ew_j,lw_s,chunks,skipped,reassign\n");
+    println!(
+        "{:>5}  {:<10} {:>11} {:>11} {:>11} {:>11} {:>7} {:>8} {:>9}",
+        "cell", "device", "eps_l2", "eps_inf", "E_w(J)", "L_w(s)", "chunks", "skipped", "reassign"
+    );
+    for &cell in &cells {
+        for material in Material::ALL {
+            let opts = SolveOptions::default()
+                .with_device(material)
+                .with_ec(true)
+                .with_wv_iters(2)
+                .with_workers(4);
+            let solver =
+                Meliso::with_backend(SystemConfig::tiles_8x8(cell), opts, backend.clone());
+            let reports = solver.replicate(source.as_ref(), &x, reps).unwrap();
+            let s = ReplicationSummary::from_reports(&reports);
+            let last = reports.last().unwrap();
+            println!(
+                "{cell:>5}  {:<10} {:>11.4e} {:>11.4e} {:>11.4e} {:>11.4e} {:>7} {:>8} {:>9}",
+                material.name(),
+                s.rel_err_l2,
+                s.rel_err_inf,
+                s.ew_mean,
+                s.lw_mean,
+                last.chunks_total,
+                last.chunks_skipped,
+                last.row_reassignments,
+            );
+            csv.push_str(&format!(
+                "{cell},{},{:.6e},{:.6e},{:.6e},{:.6e},{},{},{}\n",
+                material.name(),
+                s.rel_err_l2,
+                s.rel_err_inf,
+                s.ew_mean,
+                s.lw_mean,
+                last.chunks_total,
+                last.chunks_skipped,
+                last.row_reassignments,
+            ));
+        }
+    }
+    args.write_result("fig4_weak_scaling.csv", &csv);
+}

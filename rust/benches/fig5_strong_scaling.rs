@@ -1,0 +1,112 @@
+//! Regenerates **Figure 5 (strong scaling)**: fixed hardware (8×8 tiles of
+//! 1024² cells), problem size swept across the SuiteSparse stand-ins from
+//! 66² (bcsstk02) to 65,025² (Dubcova2).  Reports error norms and
+//! mean-across-MCAs write energy/latency, both raw and divided by the
+//! virtualization normalization factor (the paper's dashed lines, applied
+//! from 16,129² up).
+//!
+//! Usage: `cargo bench --bench fig5_strong_scaling [-- --quick | --full]`
+//! `--quick` stops at add32 (4960²); the default stops at Dubcova1
+//! (16,129²); `--full` runs all seven sizes including Dubcova2 (65,025²).
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::prelude::*;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let reps = args.reps_or(1, 1, 3);
+    let backend = backend();
+    let cutoff = if args.full {
+        usize::MAX
+    } else if args.quick {
+        5_000
+    } else {
+        17_000
+    };
+
+    println!("# Fig 5 — strong scaling: 8x8 tiles x 1024² cells, problem-size sweep ({reps} reps)\n");
+    let mut csv = String::from(
+        "matrix,dim,device,eps_l2,eps_inf,ew_j,lw_s,ew_norm_j,lw_norm_s,reassign,chunks,skipped,wall_s\n",
+    );
+    println!(
+        "{:<10} {:>6}  {:<10} {:>11} {:>11} {:>11} {:>11} {:>9} {:>8}",
+        "matrix", "dim", "device", "eps_l2", "E_w(J)", "L_w(s)", "L_w/norm", "reassign", "wall(s)"
+    );
+    for name in registry::STRONG_SCALING_ORDER {
+        let info = registry::info(name).unwrap();
+        if info.dim > cutoff {
+            println!("[skipping {name} ({}²) — use --full]", info.dim);
+            continue;
+        }
+        let source = registry::build(name).unwrap();
+        let x = Vector::standard_normal(source.ncols(), 0x5eed);
+        for material in Material::ALL {
+            let opts = SolveOptions::default()
+                .with_device(material)
+                .with_ec(true)
+                .with_wv_iters(2)
+                .with_workers(4);
+            let solver =
+                Meliso::with_backend(SystemConfig::tiles_8x8(1024), opts, backend.clone());
+            let mut acc_l2 = 0.0;
+            let mut acc_inf = 0.0;
+            let mut acc_ew = 0.0;
+            let mut acc_lw = 0.0;
+            let mut last = None;
+            for r in 0..reps {
+                let opts_run = solver.options().clone().with_seed(42 + r as u64);
+                let solver_run = Meliso::with_backend(
+                    *solver.config(),
+                    opts_run,
+                    backend.clone(),
+                );
+                let report = solver_run.solve_source(source.as_ref(), &x).unwrap();
+                acc_l2 += report.rel_err_l2;
+                acc_inf += report.rel_err_inf;
+                acc_ew += report.ew_mean;
+                acc_lw += report.lw_mean;
+                last = Some(report);
+            }
+            let n = reps as f64;
+            let (l2, inf, ew, lw) = (acc_l2 / n, acc_inf / n, acc_ew / n, acc_lw / n);
+            let last = last.unwrap();
+            // The paper's normalization: divide by the per-MCA reassignment
+            // count, applied from 16,129² up.
+            let norm = if info.dim >= 16_129 {
+                last.row_reassignments as f64
+            } else {
+                1.0
+            };
+            println!(
+                "{:<10} {:>6}  {:<10} {:>11.4e} {:>11.4e} {:>11.4e} {:>11.4e} {:>9} {:>8.1}",
+                name,
+                info.dim,
+                material.name(),
+                l2,
+                ew,
+                lw,
+                lw / norm,
+                last.row_reassignments,
+                last.wall_seconds,
+            );
+            csv.push_str(&format!(
+                "{name},{},{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{},{},{},{:.2}\n",
+                info.dim,
+                material.name(),
+                l2,
+                inf,
+                ew,
+                lw,
+                ew / norm,
+                lw / norm,
+                last.row_reassignments,
+                last.chunks_total,
+                last.chunks_skipped,
+                last.wall_seconds,
+            ));
+        }
+    }
+    args.write_result("fig5_strong_scaling.csv", &csv);
+}

@@ -1,0 +1,239 @@
+//! §Perf hot-path microbenchmarks + ablations (DESIGN.md §6):
+//!
+//! * tile MVM / EC-MVM throughput per backend (PJRT artifact vs native),
+//! * encode (write–verify) cost per tile,
+//! * end-to-end distributed solve throughput vs worker count,
+//! * ablations: fused `ec_mvm` artifact vs 4 separate `mvm` calls,
+//!   in-memory vs digital denoise, sparsity-aware chunk skipping on/off.
+//!
+//! Usage: `cargo bench --bench hotpath [-- --quick]`
+
+use meliso::bench::{backend, BenchArgs, BenchRunner};
+use meliso::device::materials::Material;
+use meliso::ec::DenoiseMode;
+use meliso::matrices::registry;
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::runtime::{Backend, EcMvmRequest};
+use meliso::util::rng::Rng;
+use std::sync::Arc;
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+fn bench_backend_tiles(runner: &BenchRunner, name: &str, b: &Backend, sizes: &[usize]) {
+    for &n in sizes {
+        let a = rand_vec(n * n, 1);
+        let x = rand_vec(n, 2);
+        let stats = runner.run(&format!("{name}/mvm_{n}"), || {
+            let _ = b.mvm(n, a.clone(), x.clone()).unwrap();
+        });
+        // 2 n^2 flops per MVM.
+        println!("{}", stats.throughput_line(2.0 * (n * n) as f64, "flop"));
+
+        let minv = {
+            let mut m = vec![0.0f32; n * n];
+            for i in 0..n {
+                m[i * n + i] = 1.0;
+            }
+            m
+        };
+        let ones = vec![1.0f32; n];
+        let req = EcMvmRequest {
+            n,
+            a: a.clone(),
+            at: a.clone(),
+            x: x.clone(),
+            xt: x.clone(),
+            minv,
+            nv: ones.clone(),
+            nu: ones.clone(),
+            ny: ones,
+        };
+        let clone_req = || EcMvmRequest {
+            n: req.n,
+            a: req.a.clone(),
+            at: req.at.clone(),
+            x: req.x.clone(),
+            xt: req.xt.clone(),
+            minv: req.minv.clone(),
+            nv: req.nv.clone(),
+            nu: req.nu.clone(),
+            ny: req.ny.clone(),
+        };
+        let stats = runner.run(&format!("{name}/ec_mvm_{n}"), || {
+            let _ = b.ec_mvm(clone_req()).unwrap();
+        });
+        // 4 MVMs + combine.
+        println!("{}", stats.throughput_line(8.0 * (n * n) as f64, "flop"));
+    }
+}
+
+fn bench_fused_vs_separate(runner: &BenchRunner, b: &Backend, n: usize) {
+    println!("\n-- ablation: fused ec_mvm artifact vs 4 separate mvm calls (n={n}) --");
+    let a = rand_vec(n * n, 3);
+    let x = rand_vec(n, 4);
+    let mut minv = vec![0.0f32; n * n];
+    for i in 0..n {
+        minv[i * n + i] = 1.0;
+    }
+    let ones = vec![1.0f32; n];
+    let req = EcMvmRequest {
+        n,
+        a: a.clone(),
+        at: a.clone(),
+        x: x.clone(),
+        xt: x.clone(),
+        minv: minv.clone(),
+        nv: ones.clone(),
+        nu: ones.clone(),
+        ny: ones.clone(),
+    };
+    let clone_req = || EcMvmRequest {
+        n: req.n,
+        a: req.a.clone(),
+        at: req.at.clone(),
+        x: req.x.clone(),
+        xt: req.xt.clone(),
+        minv: req.minv.clone(),
+        nv: req.nv.clone(),
+        nu: req.nu.clone(),
+        ny: req.ny.clone(),
+    };
+    let fused = runner.run("fused/ec_mvm", || {
+        let _ = b.ec_mvm(clone_req()).unwrap();
+    });
+    println!("{}", fused.throughput_line(1.0, "ec-op"));
+    let separate = runner.run("separate/4x mvm + combine", || {
+        let v = b.mvm(n, a.clone(), x.clone()).unwrap();
+        let u = b.mvm(n, a.clone(), x.clone()).unwrap();
+        let y = b.mvm(n, a.clone(), x.clone()).unwrap();
+        let p: Vec<f32> = (0..n).map(|i| v[i] + u[i] - y[i]).collect();
+        let _ = b.mvm(n, minv.clone(), p).unwrap();
+    });
+    println!("{}", separate.throughput_line(1.0, "ec-op"));
+    println!(
+        "   fused speedup: {:.2}x",
+        separate.mean_s / fused.mean_s.max(1e-12)
+    );
+}
+
+fn bench_encode(runner: &BenchRunner) {
+    println!("\n-- encode (write-verify) cost per 128² tile --");
+    for k in [0usize, 2, 5] {
+        let stats = runner.run(&format!("encode/wv_k{k}"), || {
+            let mut mca = meliso::mca::Mca::new(Material::TaOxHfOx, 128, 128, 7);
+            let a = Matrix::standard_normal(128, 128, 5);
+            let opts = meliso::mca::WriteVerifyOpts {
+                max_iters: k,
+                rel_tol: 1e-9,
+                norm_inf: false,
+            };
+            let _ = mca.write_verify_matrix(&a, &opts);
+        });
+        println!("{}", stats.throughput_line(128.0 * 128.0, "cell"));
+    }
+}
+
+fn bench_solve_scaling(runner: &BenchRunner, b: &Backend) {
+    println!("\n-- end-to-end distributed solve (add32, 8x8x256, EC) vs workers --");
+    let source = registry::build("add32").unwrap();
+    let x = Vector::standard_normal(source.ncols(), 1);
+    let mut base = 0.0;
+    for workers in [1usize, 2, 4, 8] {
+        let opts = SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_workers(workers)
+            .with_wv_iters(1);
+        let solver = Meliso::with_backend(SystemConfig::tiles_8x8(256), opts, b.clone());
+        let stats = runner.run(&format!("solve/workers_{workers}"), || {
+            let _ = solver.solve_source(source.as_ref(), &x).unwrap();
+        });
+        println!("{}", stats.throughput_line(1.0, "solve"));
+        if workers == 1 {
+            base = stats.mean_s;
+        } else {
+            println!("   speedup vs 1 worker: {:.2}x", base / stats.mean_s.max(1e-12));
+        }
+    }
+}
+
+fn bench_denoise_modes(runner: &BenchRunner, b: &Backend) {
+    println!("\n-- ablation: denoise mode (iperturb66, TaOx, EC) --");
+    let source = registry::build("iperturb66").unwrap();
+    let x = Vector::standard_normal(66, 2);
+    for (label, mode) in [
+        ("in-memory", DenoiseMode::InMemory),
+        ("digital", DenoiseMode::Digital),
+        ("off", DenoiseMode::Off),
+    ] {
+        let opts = SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_denoise(mode)
+            .with_wv_iters(2);
+        let solver = Meliso::with_backend(SystemConfig::single_mca(128), opts, b.clone());
+        let report = solver.solve_source(source.as_ref(), &x).unwrap();
+        let stats = runner.run(&format!("denoise/{label}"), || {
+            let _ = solver.solve_source(source.as_ref(), &x).unwrap();
+        });
+        println!(
+            "{}   [eps_l2 {:.4e}]",
+            stats.throughput_line(1.0, "solve"),
+            report.rel_err_l2
+        );
+    }
+}
+
+fn bench_sparsity_skipping(runner: &BenchRunner, b: &Backend) {
+    println!("\n-- ablation: sparsity-aware chunk skipping (add32 banded vs dense view) --");
+    let banded = registry::build("add32").unwrap();
+    let x = Vector::standard_normal(banded.ncols(), 3);
+    let opts = SolveOptions::default()
+        .with_device(Material::TaOxHfOx)
+        .with_workers(4)
+        .with_wv_iters(0);
+    let solver = Meliso::with_backend(SystemConfig::tiles_8x8(512), opts, b.clone());
+    let skipping = runner.run("skip/banded-source", || {
+        let _ = solver.solve_source(banded.as_ref(), &x).unwrap();
+    });
+    println!("{}", skipping.throughput_line(1.0, "solve"));
+    // Dense view of the same operand: block_is_zero always false.
+    let dense = meliso::matrices::DenseSource::new(banded.block(0, 0, 4960, 4960));
+    let no_skipping = runner.run("skip/dense-view", || {
+        let _ = solver.solve_source(&dense, &x).unwrap();
+    });
+    println!("{}", no_skipping.throughput_line(1.0, "solve"));
+    println!(
+        "   skipping speedup: {:.2}x",
+        no_skipping.mean_s / skipping.mean_s.max(1e-12)
+    );
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let runner = if args.quick {
+        BenchRunner { warmup_iters: 1, sample_iters: 3 }
+    } else {
+        BenchRunner::default()
+    };
+    println!("# hotpath microbenchmarks + ablations\n");
+
+    let native: Backend = Arc::new(NativeBackend::new());
+    let primary = backend();
+    let sizes: &[usize] = if args.quick { &[128, 1024] } else { &[32, 128, 512, 1024] };
+
+    println!("-- tile kernels: native backend --");
+    bench_backend_tiles(&runner, "native", &native, sizes);
+    if primary.name() == "pjrt" {
+        println!("\n-- tile kernels: pjrt artifact backend --");
+        bench_backend_tiles(&runner, "pjrt", &primary, sizes);
+    }
+
+    bench_fused_vs_separate(&runner, &primary, 512);
+    bench_encode(&runner);
+    bench_solve_scaling(&runner, &primary);
+    bench_denoise_modes(&runner, &primary);
+    bench_sparsity_skipping(&runner, &primary);
+}

@@ -1,0 +1,93 @@
+//! Regenerates **Table 1**: device performance for MVM with and without the
+//! two-tier error correction, on M1 (bcsstk02, κ≈4325) and M2 (Iperturb,
+//! κ≈1.23), averaged over replications.
+//!
+//! Usage: `cargo bench --bench table1 [-- --reps N | --quick | --full]`
+//! (`--full` = the paper's 100 replications).
+
+use meliso::bench::{backend, BenchArgs, BenchRunner};
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::metrics::table::TableBuilder;
+use meliso::prelude::*;
+use meliso::solver::ReplicationSummary;
+use meliso::util::sci;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let reps = args.reps_or(3, 10, 100);
+    let backend = backend();
+    // EC columns use the converged write–verify protocol (supplementary:
+    // "k=5 is sufficient for optimal performance").
+    let ec_k = 5;
+
+    println!("# Table 1 — MVM with/without error correction ({reps} reps)\n");
+    let mut csv = String::from("matrix,device,ec,eps_l2,eps_inf,ew_j,lw_s\n");
+
+    for (label, matrix) in [("M1 (bcsstk02)", "bcsstk02"), ("M2 (Iperturb)", "iperturb66")] {
+        let source = registry::build(matrix).unwrap();
+        let x = Vector::standard_normal(source.ncols(), 0x5eed);
+        let mut t = TableBuilder::new(
+            &format!("{label}, {reps} replications"),
+            &["eps_l2", "eps_inf", "E_w (J)", "L_w (s)"],
+        );
+        for ec in [false, true] {
+            for material in Material::ALL {
+                // The paper benchmarks EpiRAM only without EC (it is the
+                // high-accuracy reference device).
+                if ec && material == Material::EpiRam {
+                    continue;
+                }
+                let opts = SolveOptions::default()
+                    .with_device(material)
+                    .with_ec(ec)
+                    .with_wv_iters(if ec { ec_k } else { 0 });
+                let solver =
+                    Meliso::with_backend(SystemConfig::single_mca(128), opts, backend.clone());
+                let reports = solver.replicate(source.as_ref(), &x, reps).unwrap();
+                let s = ReplicationSummary::from_reports(&reports);
+                let row = format!(
+                    "{} {}",
+                    material.name(),
+                    if ec { "[EC]" } else { "     " }
+                );
+                t.row(
+                    &row,
+                    vec![
+                        sci(s.rel_err_l2),
+                        sci(s.rel_err_inf),
+                        sci(s.ew_mean),
+                        sci(s.lw_mean),
+                    ],
+                );
+                csv.push_str(&format!(
+                    "{matrix},{},{},{:.6},{:.6},{:.6e},{:.6e}\n",
+                    material.name(),
+                    ec,
+                    s.rel_err_l2,
+                    s.rel_err_inf,
+                    s.ew_mean,
+                    s.lw_mean
+                ));
+            }
+        }
+        print!("{}", t.render());
+        println!();
+    }
+    args.write_result("table1.csv", &csv);
+
+    // Timing of the end-to-end Table 1 cell (criterion-style stats).
+    let source = registry::build("bcsstk02").unwrap();
+    let x = Vector::standard_normal(66, 1);
+    let solver = Meliso::with_backend(
+        SystemConfig::single_mca(128),
+        SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_wv_iters(ec_k),
+        backend,
+    );
+    let stats = BenchRunner::quick().run("table1/taox_ec_solve_66", || {
+        let _ = solver.solve_source(source.as_ref(), &x).unwrap();
+    });
+    println!("{}", stats.throughput_line(1.0, "solve"));
+}

@@ -1,0 +1,222 @@
+//! In-house benchmark harness (criterion stand-in, DESIGN.md S13).
+//!
+//! `harness = false` bench targets use [`BenchRunner`] for wall-clock
+//! measurement with warmup and robust statistics, plus the paper-table
+//! emitters in [`crate::metrics::table`].  Figures are emitted as aligned
+//! text series + CSV files under `bench_results/`.
+
+use crate::metrics::mean_std;
+use crate::runtime::Backend;
+use std::time::Instant;
+
+/// Backend for bench targets: the PJRT artifact path when available,
+/// otherwise the native twin (override with `MELISO_BENCH_BACKEND=native`).
+pub fn backend() -> Backend {
+    use crate::runtime::native::NativeBackend;
+    use crate::runtime::pjrt::default_artifact_dir;
+    use crate::runtime::service::PjrtBackend;
+    use std::sync::Arc;
+    let forced = std::env::var("MELISO_BENCH_BACKEND").unwrap_or_default();
+    if forced != "native" {
+        match PjrtBackend::start(&default_artifact_dir()) {
+            Ok(b) => {
+                eprintln!("[backend: pjrt artifacts]");
+                return Arc::new(b);
+            }
+            Err(e) => eprintln!("[backend: pjrt unavailable ({e}); using native]"),
+        }
+    } else {
+        eprintln!("[backend: native (forced)]");
+    }
+    Arc::new(NativeBackend::new())
+}
+
+/// Timing statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_line(&self, items_per_iter: f64, unit: &str) -> String {
+        format!(
+            "{:<38} {:>10.4} ms/iter  (±{:.3} ms, min {:.3} ms, p95 {:.3} ms)  {:>12.1} {unit}/s",
+            self.name,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.min_s * 1e3,
+            self.p95_s * 1e3,
+            items_per_iter / self.mean_s.max(1e-12),
+        )
+    }
+}
+
+/// Wall-clock bench runner with warmup.
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        // Modest defaults: full-fidelity experiment regeneration is the
+        // figure benches' job; timing benches keep run time bounded.
+        BenchRunner {
+            warmup_iters: 2,
+            sample_iters: 10,
+        }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        BenchRunner {
+            warmup_iters: 1,
+            sample_iters: 5,
+        }
+    }
+
+    /// Measure `f` and return stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters.max(1) {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (mean, std) = mean_std(&samples);
+        let pct = |q: f64| sorted[((sorted.len() - 1) as f64 * q).round() as usize];
+        BenchStats {
+            name: name.to_string(),
+            samples: samples.len(),
+            mean_s: mean,
+            std_s: std,
+            min_s: sorted[0],
+            p50_s: pct(0.5),
+            p95_s: pct(0.95),
+        }
+    }
+}
+
+/// Parse common bench CLI flags (`--quick`, `--full`, `--reps N`,
+/// `--out DIR`); bench targets share this tiny parser.
+pub struct BenchArgs {
+    pub quick: bool,
+    pub full: bool,
+    pub reps: usize,
+    pub out_dir: String,
+    /// Leftover free-form args (bench-specific).
+    pub rest: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn parse() -> BenchArgs {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> BenchArgs {
+        let mut out = BenchArgs {
+            quick: false,
+            full: false,
+            reps: 0,
+            out_dir: "bench_results".to_string(),
+            rest: Vec::new(),
+        };
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--quick" => out.quick = true,
+                "--full" => out.full = true,
+                "--reps" => {
+                    if let Some(v) = it.next() {
+                        out.reps = v.parse().unwrap_or(0);
+                    }
+                }
+                "--out" => {
+                    if let Some(v) = it.next() {
+                        out.out_dir = v;
+                    }
+                }
+                // `cargo bench` passes --bench; ignore harness plumbing.
+                "--bench" => {}
+                other => out.rest.push(other.to_string()),
+            }
+        }
+        out
+    }
+
+    /// Replication count: explicit `--reps`, else quick/full presets.
+    pub fn reps_or(&self, quick: usize, default: usize, full: usize) -> usize {
+        if self.reps > 0 {
+            self.reps
+        } else if self.quick {
+            quick
+        } else if self.full {
+            full
+        } else {
+            default
+        }
+    }
+
+    /// Write a result file under the output directory.
+    pub fn write_result(&self, filename: &str, content: &str) {
+        let dir = std::path::Path::new(&self.out_dir);
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(filename);
+            if std::fs::write(&path, content).is_ok() {
+                println!("[saved {}]", path.display());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_collects_samples() {
+        let r = BenchRunner::quick();
+        let mut count = 0;
+        let stats = r.run("noop", || count += 1);
+        assert_eq!(stats.samples, 5);
+        assert_eq!(count, 6); // warmup + samples
+        assert!(stats.mean_s >= 0.0);
+        assert!(stats.min_s <= stats.p95_s);
+    }
+
+    #[test]
+    fn args_parse_flags() {
+        let a = BenchArgs::parse_from(
+            ["--quick", "--reps", "7", "--out", "/tmp/x", "--fig", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert!(a.quick);
+        assert_eq!(a.reps, 7);
+        assert_eq!(a.out_dir, "/tmp/x");
+        assert_eq!(a.rest, vec!["--fig", "2"]);
+        assert_eq!(a.reps_or(1, 2, 3), 7);
+    }
+
+    #[test]
+    fn reps_presets() {
+        let q = BenchArgs::parse_from(["--quick".to_string()]);
+        assert_eq!(q.reps_or(1, 2, 3), 1);
+        let d = BenchArgs::parse_from(Vec::<String>::new());
+        assert_eq!(d.reps_or(1, 2, 3), 2);
+        let f = BenchArgs::parse_from(["--full".to_string()]);
+        assert_eq!(f.reps_or(1, 2, 3), 3);
+    }
+}

@@ -1,0 +1,234 @@
+//! Hand-rolled CLI (clap stand-in, DESIGN.md S15).
+//!
+//! ```text
+//! meliso run --matrix add32 --device taox-hfox --ec --k 5 --tiles 8x8 --cell 1024
+//! meliso matrices          # Table 2 stand-in summary
+//! meliso devices           # device parameter sheet
+//! meliso artifacts         # loaded-artifact inventory
+//! ```
+
+use crate::config::{from_toml, BackendKind, SolveOptions, SystemConfig};
+use crate::device::materials::Material;
+use crate::ec::DenoiseMode;
+
+#[derive(Debug)]
+pub enum Command {
+    Run(RunArgs),
+    Matrices,
+    Devices,
+    Artifacts,
+    Help,
+}
+
+#[derive(Debug)]
+pub struct RunArgs {
+    pub matrix: String,
+    pub system: SystemConfig,
+    pub opts: SolveOptions,
+    pub reps: usize,
+    pub json: bool,
+}
+
+pub fn usage() -> &'static str {
+    "MELISO+ — distributed RRAM in-memory linear solver with two-tier error correction
+
+USAGE:
+    meliso <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run         execute a distributed in-memory MVM benchmark
+    matrices    list the benchmark operands (paper Table 2 stand-ins)
+    devices     list the RRAM material parameter sets
+    artifacts   show the AOT artifact inventory
+    help        show this message
+
+RUN OPTIONS:
+    --matrix NAME      operand from the registry (default iperturb66)
+    --config FILE      load [system]/[solve] sections from a TOML file
+    --device NAME      ag-asi | alox-hfo2 | epiram | taox-hfox
+    --ec / --no-ec     two-tier error correction (default on)
+    --denoise MODE     in-memory | digital | off
+    --k N              write-verify iterations (default 0)
+    --lambda V         second-order regularization (default 1e-12)
+    --tiles RxC        MCA tile grid (default 8x8)
+    --cell N           cells per MCA edge: 32..1024 (default 1024)
+    --workers N        worker threads (default 4)
+    --reps N           replications to average (default 1)
+    --seed S           master seed (default 42)
+    --backend B        pjrt | native (default pjrt)
+    --json             emit a JSON report instead of text
+    -v / -vv           log verbosity
+"
+}
+
+/// Parse argv (without the program name).
+pub fn parse(args: &[String]) -> Result<Command, String> {
+    let mut it = args.iter().peekable();
+    let cmd = match it.next().map(|s| s.as_str()) {
+        None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
+        Some("matrices") => return Ok(Command::Matrices),
+        Some("devices") => return Ok(Command::Devices),
+        Some("artifacts") => return Ok(Command::Artifacts),
+        Some("run") => "run",
+        Some(other) => return Err(format!("unknown command {other:?}; try `meliso help`")),
+    };
+    debug_assert_eq!(cmd, "run");
+
+    let mut matrix = "iperturb66".to_string();
+    let mut system = SystemConfig::tiles_8x8(1024);
+    let mut opts = SolveOptions::default();
+    let mut reps = 1usize;
+    let mut json = false;
+
+    let next_value = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
+                          flag: &str|
+     -> Result<String, String> {
+        it.next()
+            .map(|s| s.to_string())
+            .ok_or_else(|| format!("{flag} requires a value"))
+    };
+
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--matrix" => matrix = next_value(&mut it, "--matrix")?,
+            "--config" => {
+                let path = next_value(&mut it, "--config")?;
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| format!("cannot read {path}: {e}"))?;
+                let (sys, o) = from_toml(&text)?;
+                system = sys;
+                opts = o;
+            }
+            "--device" => {
+                let name = next_value(&mut it, "--device")?;
+                opts.material = Material::parse(&name)
+                    .ok_or_else(|| format!("unknown device {name:?}"))?;
+            }
+            "--ec" => opts.ec = true,
+            "--no-ec" => opts.ec = false,
+            "--denoise" => {
+                let mode = next_value(&mut it, "--denoise")?;
+                opts.denoise = match mode.as_str() {
+                    "in-memory" | "inmemory" => DenoiseMode::InMemory,
+                    "digital" => DenoiseMode::Digital,
+                    "off" => DenoiseMode::Off,
+                    other => return Err(format!("unknown denoise mode {other:?}")),
+                };
+            }
+            "--k" => {
+                opts.wv_iters = next_value(&mut it, "--k")?
+                    .parse()
+                    .map_err(|e| format!("--k: {e}"))?
+            }
+            "--lambda" => {
+                opts.lambda = next_value(&mut it, "--lambda")?
+                    .parse()
+                    .map_err(|e| format!("--lambda: {e}"))?
+            }
+            "--tiles" => {
+                let spec = next_value(&mut it, "--tiles")?;
+                let (r, c) = spec
+                    .split_once('x')
+                    .ok_or_else(|| format!("--tiles expects RxC, got {spec:?}"))?;
+                system.tile_rows = r.parse().map_err(|e| format!("--tiles rows: {e}"))?;
+                system.tile_cols = c.parse().map_err(|e| format!("--tiles cols: {e}"))?;
+            }
+            "--cell" => {
+                system.cell_size = next_value(&mut it, "--cell")?
+                    .parse()
+                    .map_err(|e| format!("--cell: {e}"))?
+            }
+            "--workers" => {
+                opts.workers = next_value(&mut it, "--workers")?
+                    .parse()
+                    .map_err(|e| format!("--workers: {e}"))?
+            }
+            "--reps" => {
+                reps = next_value(&mut it, "--reps")?
+                    .parse()
+                    .map_err(|e| format!("--reps: {e}"))?
+            }
+            "--seed" => {
+                opts.seed = next_value(&mut it, "--seed")?
+                    .parse()
+                    .map_err(|e| format!("--seed: {e}"))?
+            }
+            "--backend" => {
+                let name = next_value(&mut it, "--backend")?;
+                opts.backend = BackendKind::parse(&name)
+                    .ok_or_else(|| format!("unknown backend {name:?}"))?;
+            }
+            "--json" => json = true,
+            "-v" => crate::util::log::set_level(crate::util::log::Level::Info),
+            "-vv" => crate::util::log::set_level(crate::util::log::Level::Debug),
+            other => return Err(format!("unknown option {other:?}; try `meliso help`")),
+        }
+    }
+
+    Ok(Command::Run(RunArgs {
+        matrix,
+        system,
+        opts,
+        reps,
+        json,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_help_variants() {
+        assert!(matches!(parse(&[]).unwrap(), Command::Help));
+        assert!(matches!(parse(&argv("help")).unwrap(), Command::Help));
+        assert!(matches!(parse(&argv("--help")).unwrap(), Command::Help));
+    }
+
+    #[test]
+    fn parses_run_with_options() {
+        let cmd = parse(&argv(
+            "run --matrix add32 --device epiram --no-ec --k 5 --tiles 4x2 --cell 256 \
+             --reps 3 --seed 7 --backend native --json",
+        ))
+        .unwrap();
+        match cmd {
+            Command::Run(r) => {
+                assert_eq!(r.matrix, "add32");
+                assert_eq!(r.opts.material, Material::EpiRam);
+                assert!(!r.opts.ec);
+                assert_eq!(r.opts.wv_iters, 5);
+                assert_eq!(r.system, SystemConfig::new(4, 2, 256));
+                assert_eq!(r.reps, 3);
+                assert_eq!(r.opts.seed, 7);
+                assert_eq!(r.opts.backend, BackendKind::Native);
+                assert!(r.json);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_flag() {
+        assert!(parse(&argv("run --frobnicate")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_tiles() {
+        assert!(parse(&argv("run --tiles 8by8")).is_err());
+    }
+
+    #[test]
+    fn subcommands() {
+        assert!(matches!(parse(&argv("matrices")).unwrap(), Command::Matrices));
+        assert!(matches!(parse(&argv("devices")).unwrap(), Command::Devices));
+        assert!(matches!(
+            parse(&argv("artifacts")).unwrap(),
+            Command::Artifacts
+        ));
+    }
+}

@@ -1,0 +1,305 @@
+//! Configuration system: system geometry + solve options, loadable from a
+//! minimal-TOML file with CLI overrides (DESIGN.md S15).
+
+use crate::device::materials::Material;
+use crate::device::nonideal::{AdcModel, DriftModel, IrDropModel, NonIdealExt};
+use crate::ec::{DenoiseMode, EcOptions};
+use crate::mca::WriteVerifyOpts;
+use crate::util::toml::TomlDoc;
+use crate::virtualization::SystemGeometry;
+
+/// Which execution backend runs the tile MVMs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts through the PJRT CPU client (production path).
+    Pjrt,
+    /// Pure-Rust reference (digital baseline / artifact-free fallback).
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => Some(BackendKind::Pjrt),
+            "native" | "rust" => Some(BackendKind::Native),
+            _ => None,
+        }
+    }
+}
+
+/// Physical system configuration (the paper's R×C tile of r×c-cell MCAs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SystemConfig {
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    pub cell_size: usize,
+}
+
+impl SystemConfig {
+    pub fn new(tile_rows: usize, tile_cols: usize, cell_size: usize) -> SystemConfig {
+        SystemConfig {
+            tile_rows,
+            tile_cols,
+            cell_size,
+        }
+    }
+
+    /// A single MCA (the Table 1 / Fig 2–3 setting).
+    pub fn single_mca(cell_size: usize) -> SystemConfig {
+        SystemConfig::new(1, 1, cell_size)
+    }
+
+    /// The paper's scaling testbed: 8×8 tiles.
+    pub fn tiles_8x8(cell_size: usize) -> SystemConfig {
+        SystemConfig::new(8, 8, cell_size)
+    }
+
+    pub fn geometry(&self) -> SystemGeometry {
+        SystemGeometry::new(self.tile_rows, self.tile_cols, self.cell_size)
+    }
+}
+
+/// Per-solve options.
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    pub material: Material,
+    /// Two-tier error correction on/off.
+    pub ec: bool,
+    pub denoise: DenoiseMode,
+    /// Regularization λ for the second-order stage.
+    pub lambda: f64,
+    /// Difference-matrix superdiagonal h.
+    pub h: f64,
+    /// Write–verify iteration budget `N` (k in the figures).
+    pub wv_iters: usize,
+    /// Relative tolerance ε of the write–verify loop.
+    pub wv_rel_tol: f64,
+    /// Use ℓ∞ for the verify norm (`p = ∞`), else ℓ2.
+    pub wv_norm_inf: bool,
+    /// Master seed (chunk/MCA streams fork from it).
+    pub seed: u64,
+    /// Worker threads (capped at the MCA count).
+    pub workers: usize,
+    pub backend: BackendKind,
+    /// Extended non-idealities (disabled by default).
+    pub nonideal: NonIdealExt,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            material: Material::TaOxHfOx,
+            ec: true,
+            denoise: DenoiseMode::InMemory,
+            lambda: 1e-12,
+            h: -1.0,
+            wv_iters: 0,
+            wv_rel_tol: 1e-4,
+            wv_norm_inf: false,
+            seed: 42,
+            workers: 4,
+            backend: BackendKind::Pjrt,
+            nonideal: NonIdealExt::default(),
+        }
+    }
+}
+
+impl SolveOptions {
+    pub fn with_device(mut self, m: Material) -> Self {
+        self.material = m;
+        self
+    }
+
+    pub fn with_ec(mut self, ec: bool) -> Self {
+        self.ec = ec;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_workers(mut self, w: usize) -> Self {
+        self.workers = w;
+        self
+    }
+
+    pub fn with_wv_iters(mut self, k: usize) -> Self {
+        self.wv_iters = k;
+        self
+    }
+
+    pub fn with_backend(mut self, b: BackendKind) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn with_denoise(mut self, d: DenoiseMode) -> Self {
+        self.denoise = d;
+        self
+    }
+
+    /// Assemble the per-tile EC options.
+    pub fn ec_options(&self) -> EcOptions {
+        EcOptions {
+            ec: self.ec,
+            lambda: self.lambda,
+            h: self.h,
+            denoise: self.denoise,
+            wv: WriteVerifyOpts {
+                max_iters: self.wv_iters,
+                rel_tol: self.wv_rel_tol,
+                norm_inf: self.wv_norm_inf,
+            },
+            nonideal: self.nonideal,
+        }
+    }
+
+    /// Enable extended non-idealities (ablations / robustness studies).
+    pub fn with_nonideal(mut self, ext: NonIdealExt) -> Self {
+        self.nonideal = ext;
+        self
+    }
+}
+
+/// Parse a config file into `(SystemConfig, SolveOptions)`, starting from
+/// defaults; unknown keys are rejected so typos fail fast.
+pub fn from_toml(text: &str) -> Result<(SystemConfig, SolveOptions), String> {
+    let doc = TomlDoc::parse(text)?;
+    let mut system = SystemConfig::tiles_8x8(1024);
+    let mut opts = SolveOptions::default();
+    for (key, value) in &doc.entries {
+        match key.as_str() {
+            "system.tile_rows" => {
+                system.tile_rows = value.as_usize().ok_or("tile_rows must be integer")?
+            }
+            "system.tile_cols" => {
+                system.tile_cols = value.as_usize().ok_or("tile_cols must be integer")?
+            }
+            "system.cell_size" => {
+                system.cell_size = value.as_usize().ok_or("cell_size must be integer")?
+            }
+            "solve.device" => {
+                let name = value.as_str().ok_or("device must be a string")?;
+                opts.material = Material::parse(name)
+                    .ok_or_else(|| format!("unknown device {name:?}"))?;
+            }
+            "solve.ec" => opts.ec = value.as_bool().ok_or("ec must be bool")?,
+            "solve.denoise" => {
+                let name = value.as_str().ok_or("denoise must be a string")?;
+                opts.denoise = match name {
+                    "in-memory" | "inmemory" => DenoiseMode::InMemory,
+                    "digital" => DenoiseMode::Digital,
+                    "off" => DenoiseMode::Off,
+                    _ => return Err(format!("unknown denoise mode {name:?}")),
+                };
+            }
+            "solve.lambda" => opts.lambda = value.as_f64().ok_or("lambda must be a number")?,
+            "solve.h" => opts.h = value.as_f64().ok_or("h must be a number")?,
+            "solve.wv_iters" => {
+                opts.wv_iters = value.as_usize().ok_or("wv_iters must be integer")?
+            }
+            "solve.wv_rel_tol" => {
+                opts.wv_rel_tol = value.as_f64().ok_or("wv_rel_tol must be a number")?
+            }
+            "solve.wv_norm_inf" => {
+                opts.wv_norm_inf = value.as_bool().ok_or("wv_norm_inf must be bool")?
+            }
+            "solve.seed" => opts.seed = value.as_i64().ok_or("seed must be integer")? as u64,
+            "solve.workers" => {
+                opts.workers = value.as_usize().ok_or("workers must be integer")?
+            }
+            "solve.adc_bits" => {
+                opts.nonideal.adc =
+                    AdcModel::new(value.as_usize().ok_or("adc_bits must be integer")? as u32)
+            }
+            "solve.drift_nu" => {
+                opts.nonideal.drift = DriftModel::new(
+                    value.as_f64().ok_or("drift_nu must be a number")?,
+                    opts.nonideal.drift.elapsed.max(1.0),
+                )
+            }
+            "solve.drift_elapsed" => {
+                opts.nonideal.drift = DriftModel::new(
+                    opts.nonideal.drift.nu,
+                    value.as_f64().ok_or("drift_elapsed must be a number")?,
+                )
+            }
+            "solve.irdrop_alpha" => {
+                opts.nonideal.ir_drop =
+                    IrDropModel::new(value.as_f64().ok_or("irdrop_alpha must be a number")?)
+            }
+            "solve.backend" => {
+                let name = value.as_str().ok_or("backend must be a string")?;
+                opts.backend = BackendKind::parse(name)
+                    .ok_or_else(|| format!("unknown backend {name:?}"))?;
+            }
+            other => return Err(format!("unknown config key {other:?}")),
+        }
+    }
+    Ok((system, opts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let o = SolveOptions::default();
+        assert!(o.ec);
+        assert_eq!(o.lambda, 1e-12);
+        let ec = o.ec_options();
+        assert_eq!(ec.wv.max_iters, 0);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let (sys, opts) = from_toml(
+            r#"
+            [system]
+            tile_rows = 4
+            tile_cols = 2
+            cell_size = 256
+
+            [solve]
+            device = "epiram"
+            ec = false
+            denoise = "digital"
+            lambda = 0.5
+            wv_iters = 7
+            seed = 123
+            workers = 2
+            backend = "native"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(sys, SystemConfig::new(4, 2, 256));
+        assert_eq!(opts.material, Material::EpiRam);
+        assert!(!opts.ec);
+        assert_eq!(opts.denoise, DenoiseMode::Digital);
+        assert_eq!(opts.wv_iters, 7);
+        assert_eq!(opts.seed, 123);
+        assert_eq!(opts.backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let err = from_toml("[solve]\nfoo = 1\n").unwrap_err();
+        assert!(err.contains("solve.foo"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_device() {
+        let err = from_toml("[solve]\ndevice = \"unobtanium\"\n").unwrap_err();
+        assert!(err.contains("unknown device"));
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(BackendKind::parse("PJRT"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+}

@@ -1,0 +1,21 @@
+//! Message types exchanged between the leader and workers.
+
+use crate::linalg::{Matrix, Vector};
+use crate::virtualization::ChunkSpec;
+
+/// One unit of work: an extracted, zero-padded chunk and its x slice.
+pub struct Job {
+    pub spec: ChunkSpec,
+    pub a_tile: Matrix,
+    pub x_chunk: Vector,
+}
+
+/// A worker's answer for one chunk.
+pub struct JobResult {
+    pub block_row: usize,
+    pub block_col: usize,
+    /// Partial product of length `cell_size` (padded rows included).
+    pub partial: Vector,
+    /// Write–verify iterations the matrix encode used.
+    pub encode_iters: usize,
+}

@@ -1,0 +1,289 @@
+//! Distributed coordinator: the leader/worker runtime that stands in for
+//! the paper's OpenMPI + mpi4py deployment (DESIGN.md S10).
+//!
+//! * The **leader** walks the [`ChunkPlan`] in deterministic row-major
+//!   order, extracts each chunk (zero-padded, per `zeroPadding`) from the
+//!   [`MatrixSource`], skips certainly-zero chunks (sparsity-aware
+//!   scheduling — an optimization the banded operands benefit from
+//!   enormously), and dispatches jobs over bounded channels
+//!   (backpressure).
+//! * Each **worker** thread owns the [`TileExecutor`]s of the MCAs
+//!   assigned to it (an MCA never migrates, so its RNG stream, its
+//!   fixed-pattern noise and its ledger stay consistent) and runs the
+//!   paper's `correctedMatVecMul` per chunk.
+//! * The leader gathers partial products and reduces them **in
+//!   deterministic chunk order**, so a solve is bit-reproducible for a
+//!   given seed regardless of thread scheduling.
+
+pub mod messages;
+pub mod worker;
+
+use crate::config::{SolveOptions, SystemConfig};
+use crate::linalg::Vector;
+use crate::matrices::MatrixSource;
+use crate::mca::EnergyLedger;
+use crate::metrics::SolveReport;
+use crate::runtime::Backend;
+use crate::virtualization::ChunkPlan;
+use messages::{Job, JobResult};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Bound on in-flight jobs per worker (backpressure).
+const JOB_QUEUE_DEPTH: usize = 4;
+
+/// Run one distributed MVM and return the full report.
+///
+/// `b_truth` is computed internally (exact f64 streaming matvec).
+pub fn solve_distributed(
+    source: &dyn MatrixSource,
+    x: &Vector,
+    config: &SystemConfig,
+    opts: &SolveOptions,
+    backend: Backend,
+) -> Result<SolveReport, String> {
+    let start = Instant::now();
+    let (m, n) = (source.nrows(), source.ncols());
+    if x.len() != n {
+        return Err(format!("x has length {} but A has {n} columns", x.len()));
+    }
+    let plan = ChunkPlan::new(config.geometry(), m, n);
+    let tile = config.geometry().cell_size;
+    if !backend.tile_sizes().contains(&tile) {
+        return Err(format!(
+            "cell size {tile} has no compiled artifact (available: {:?})",
+            backend.tile_sizes()
+        ));
+    }
+
+    // Spawn workers; MCAs are distributed round-robin over worker threads.
+    let workers = opts.workers.max(1).min(plan.geometry.mcas());
+    let mut senders: Vec<mpsc::SyncSender<Job>> = Vec::with_capacity(workers);
+    let (result_tx, result_rx) = mpsc::channel::<Result<JobResult, String>>();
+    let (ledger_tx, ledger_rx) = mpsc::channel::<Vec<(usize, EnergyLedger)>>();
+    let mut handles = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let (tx, rx) = mpsc::sync_channel::<Job>(JOB_QUEUE_DEPTH);
+        senders.push(tx);
+        let ctx = worker::WorkerContext {
+            worker_id: w,
+            workers,
+            config: *config,
+            opts: opts.clone(),
+            backend: backend.clone(),
+            jobs: rx,
+            results: result_tx.clone(),
+            ledgers: ledger_tx.clone(),
+        };
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("meliso-worker-{w}"))
+                .spawn(move || worker::run(ctx))
+                .map_err(|e| format!("spawn worker {w}: {e}"))?,
+        );
+    }
+    drop(result_tx);
+    drop(ledger_tx);
+
+    // Leader scatter: walk chunks, extract, dispatch.
+    let mut dispatched = 0usize;
+    let mut skipped = 0usize;
+    for spec in plan.chunks() {
+        if source.block_is_zero(spec.row0, spec.col0, tile, tile) {
+            skipped += 1;
+            continue;
+        }
+        let a_tile = source.block(spec.row0, spec.col0, tile, tile);
+        let x_chunk = x.slice_padded(spec.col0, tile);
+        let job = Job {
+            spec,
+            a_tile,
+            x_chunk,
+        };
+        let target = spec.mca_index % workers;
+        senders[target]
+            .send(job)
+            .map_err(|_| format!("worker {target} died"))?;
+        dispatched += 1;
+    }
+    // Close job channels so workers drain and report ledgers.
+    drop(senders);
+
+    // Gather: collect partials keyed by chunk coordinates, then reduce in
+    // deterministic order.
+    let mut partials: BTreeMap<(usize, usize), Vector> = BTreeMap::new();
+    let mut wv_iters_sum = 0.0f64;
+    for _ in 0..dispatched {
+        let jr = result_rx
+            .recv()
+            .map_err(|_| "workers exited before delivering all results".to_string())??;
+        wv_iters_sum += jr.encode_iters as f64;
+        partials.insert((jr.block_row, jr.block_col), jr.partial);
+    }
+    let mut y = Vector::zeros(m);
+    for ((bi, _bj), part) in &partials {
+        let row0 = bi * tile;
+        for (k, v) in part.data().iter().enumerate() {
+            let idx = row0 + k;
+            if idx < m {
+                y.set(idx, y.get(idx) + v);
+            }
+        }
+    }
+
+    // Collect per-MCA ledgers.
+    let mut ledgers = vec![EnergyLedger::default(); plan.geometry.mcas()];
+    while let Ok(batch) = ledger_rx.recv() {
+        for (idx, ledger) in batch {
+            ledgers[idx].merge(&ledger);
+        }
+    }
+    for h in handles {
+        h.join().map_err(|_| "worker panicked".to_string())?;
+    }
+
+    // Ground truth + report.
+    let b = source.matvec(x);
+    let mut report = SolveReport::empty(m);
+    report.rel_err_l2 = crate::metrics::rel_err_l2(&y, &b);
+    report.rel_err_inf = crate::metrics::rel_err_inf(&y, &b);
+    report.y = y;
+    report.chunks_total = plan.total_chunks();
+    report.chunks_skipped = skipped;
+    report.normalization_factor = plan.normalization_factor();
+    report.row_reassignments = plan.row_reassignments();
+    report.mean_wv_iters = if dispatched > 0 {
+        wv_iters_sum / dispatched as f64
+    } else {
+        0.0
+    };
+    report.fill_from_ledgers(&ledgers);
+    report.wall_seconds = start.elapsed().as_secs_f64();
+    crate::log_info!(
+        "coordinator",
+        "solve {}x{n}: {} chunks ({} skipped), eps_l2={:.4e}, wall={:.2}s",
+        m,
+        dispatched,
+        skipped,
+        report.rel_err_l2,
+        report.wall_seconds
+    );
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::materials::Material;
+    use crate::matrices::DenseSource;
+    use crate::linalg::Matrix;
+    use crate::runtime::native::NativeBackend;
+    use std::sync::Arc;
+
+    fn native() -> Backend {
+        Arc::new(NativeBackend::new())
+    }
+
+    #[test]
+    fn single_mca_solve_works() {
+        let a = Matrix::standard_normal(66, 66, 3);
+        let src = DenseSource::new(a);
+        let x = Vector::standard_normal(66, 4);
+        let config = SystemConfig::single_mca(128);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let report = solve_distributed(&src, &x, &config, &opts, native()).unwrap();
+        assert!(report.rel_err_l2 < 0.1, "{}", report.rel_err_l2);
+        assert_eq!(report.chunks_total, 1);
+        assert_eq!(report.mcas_used, 1);
+    }
+
+    #[test]
+    fn multi_mca_partition_correctness() {
+        // 100x100 operand on a 2x2 grid of 32² MCAs: 4x4 chunk grid.
+        let a = Matrix::standard_normal(100, 100, 5);
+        let src = DenseSource::new(a);
+        let x = Vector::standard_normal(100, 6);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default()
+            .with_device(Material::EpiRam)
+            .with_workers(3);
+        let report = solve_distributed(&src, &x, &config, &opts, native()).unwrap();
+        assert_eq!(report.chunks_total, 16);
+        assert!(report.rel_err_l2 < 0.12, "{}", report.rel_err_l2);
+        assert!(report.normalization_factor >= 4);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Matrix::standard_normal(64, 64, 7);
+        let x = Vector::standard_normal(64, 8);
+        let run = |workers: usize| {
+            let src = DenseSource::new(a.clone());
+            let config = SystemConfig::new(2, 2, 32);
+            let opts = SolveOptions::default()
+                .with_device(Material::TaOxHfOx)
+                .with_workers(workers)
+                .with_seed(99);
+            solve_distributed(&src, &x, &config, &opts, native()).unwrap()
+        };
+        let r1 = run(1);
+        let r2 = run(4); // different parallelism, same result
+        assert_eq!(r1.y, r2.y);
+        assert_eq!(r1.rel_err_l2, r2.rel_err_l2);
+    }
+
+    #[test]
+    fn sparsity_skipping_counts() {
+        use crate::matrices::BandedSource;
+        let src = BandedSource::new(256, 4, 1.0, 10.0, 0.2, 3);
+        let x = Vector::standard_normal(256, 9);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let report = solve_distributed(&src, &x, &config, &opts, native()).unwrap();
+        assert_eq!(report.chunks_total, 64);
+        assert!(report.chunks_skipped > 30, "{}", report.chunks_skipped);
+        assert!(report.rel_err_l2 < 0.1);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_error() {
+        let a = Matrix::standard_normal(16, 16, 1);
+        let src = DenseSource::new(a);
+        let x = Vector::standard_normal(8, 2);
+        let config = SystemConfig::single_mca(32);
+        let opts = SolveOptions::default();
+        assert!(solve_distributed(&src, &x, &config, &opts, native()).is_err());
+    }
+
+    #[test]
+    fn unsupported_cell_size_is_error() {
+        let a = Matrix::standard_normal(16, 16, 1);
+        let src = DenseSource::new(a);
+        let x = Vector::standard_normal(16, 2);
+        let config = SystemConfig::single_mca(48); // not an artifact size
+        let opts = SolveOptions::default();
+        let err = solve_distributed(&src, &x, &config, &opts, native()).unwrap_err();
+        assert!(err.contains("cell size 48"), "{err}");
+    }
+
+    #[test]
+    fn no_ec_is_less_accurate() {
+        let a = Matrix::standard_normal(128, 128, 11);
+        let src = DenseSource::new(a);
+        let x = Vector::standard_normal(128, 12);
+        let config = SystemConfig::single_mca(128);
+        let base = SolveOptions::default().with_device(Material::TaOxHfOx);
+        let with_ec =
+            solve_distributed(&src, &x, &config, &base.clone().with_ec(true), native()).unwrap();
+        let src = DenseSource::new(Matrix::standard_normal(128, 128, 11));
+        let no_ec =
+            solve_distributed(&src, &x, &config, &base.with_ec(false), native()).unwrap();
+        assert!(
+            with_ec.rel_err_l2 < no_ec.rel_err_l2 * 0.5,
+            "ec {} vs raw {}",
+            with_ec.rel_err_l2,
+            no_ec.rel_err_l2
+        );
+    }
+}

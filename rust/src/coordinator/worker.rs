@@ -1,0 +1,62 @@
+//! Worker thread: owns the [`TileExecutor`]s of its assigned MCAs.
+//!
+//! Determinism contract: MCA `i` is always served by worker
+//! `i % workers`, its simulator is seeded from `(master seed, i)`, and the
+//! leader dispatches that MCA's chunks in a fixed order over a FIFO
+//! channel — so every chunk sees the same RNG stream no matter how many
+//! workers run or how threads are scheduled.
+
+use super::messages::{Job, JobResult};
+use crate::config::{SolveOptions, SystemConfig};
+use crate::ec::TileExecutor;
+use crate::mca::{EnergyLedger, Mca};
+use crate::runtime::Backend;
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+pub struct WorkerContext {
+    pub worker_id: usize,
+    pub workers: usize,
+    pub config: SystemConfig,
+    pub opts: SolveOptions,
+    pub backend: Backend,
+    pub jobs: mpsc::Receiver<Job>,
+    pub results: mpsc::Sender<Result<JobResult, String>>,
+    pub ledgers: mpsc::Sender<Vec<(usize, EnergyLedger)>>,
+}
+
+/// Worker main loop: execute jobs until the leader closes the channel,
+/// then report per-MCA ledgers.
+pub fn run(ctx: WorkerContext) {
+    let mut executors: HashMap<usize, TileExecutor> = HashMap::new();
+    let cell = ctx.config.geometry().cell_size;
+    while let Ok(job) = ctx.jobs.recv() {
+        let mca_index = job.spec.mca_index;
+        debug_assert_eq!(mca_index % ctx.workers, ctx.worker_id);
+        let exec = executors.entry(mca_index).or_insert_with(|| {
+            let seed = ctx
+                .opts
+                .seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(mca_index as u64);
+            let mca = Mca::new(ctx.opts.material, cell, cell, seed);
+            TileExecutor::new(mca, ctx.backend.clone())
+        });
+        let outcome = exec
+            .run_tile(&job.a_tile, &job.x_chunk, &ctx.opts.ec_options())
+            .map(|r| JobResult {
+                block_row: job.spec.block_row,
+                block_col: job.spec.block_col,
+                partial: r.y,
+                encode_iters: r.encode.iters,
+            });
+        if ctx.results.send(outcome).is_err() {
+            break; // leader gone
+        }
+    }
+    let batch: Vec<(usize, EnergyLedger)> = executors
+        .into_iter()
+        .map(|(idx, exec)| (idx, exec.mca.ledger))
+        .collect();
+    let _ = ctx.ledgers.send(batch);
+}

@@ -1,0 +1,191 @@
+//! Calibrated material presets for the paper's four device systems.
+//!
+//! Sources for qualitative parameters: Ag-aSi (Jo et al., Nano Lett. 2010),
+//! AlOx/HfO2 (Woo et al., EDL 2016), EpiRAM (Choi et al., Nat. Mater. 2018),
+//! TaOx/HfOx (Wu et al., VLSI 2018).  Quantitative noise/pulse figures are
+//! calibrated so the *no-EC* Table 1 (M1) magnitudes and the Fig 2/3/S1/S2
+//! iteration shapes emerge from the simulator — see DESIGN.md §5.
+
+use super::DeviceParams;
+
+/// The four benchmarked material systems.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Material {
+    /// Ag-aSi — slow, strongly nonlinear (2.4 / −4.88), moderate noise.
+    AgASi,
+    /// AlOx-HfO2 bilayer — mid energy, noisiest of the four.
+    AlOxHfO2,
+    /// EpiRAM (SiGe epitaxial) — the high-accuracy, high-energy benchmark.
+    EpiRam,
+    /// TaOx-HfOx — low precision but ultra-low energy/latency.
+    TaOxHfOx,
+}
+
+impl Material {
+    pub const ALL: [Material; 4] = [
+        Material::AgASi,
+        Material::AlOxHfO2,
+        Material::EpiRam,
+        Material::TaOxHfOx,
+    ];
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<Material> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "ag-asi" | "agasi" | "ag" => Some(Material::AgASi),
+            "alox-hfo2" | "aloxhfo2" | "alox" => Some(Material::AlOxHfO2),
+            "epiram" | "epi" => Some(Material::EpiRam),
+            "taox-hfox" | "taoxhfox" | "taox" => Some(Material::TaOxHfOx),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.params().name
+    }
+
+    pub fn params(&self) -> DeviceParams {
+        match self {
+            // Lw target (66² matrix, no EC): 67 rows × 120 pulses × 125 µs ≈ 1.0 s
+            // Ew target: 4422 cells × 120 pulses × 7.1 pJ ≈ 3.8e-6 J
+            Material::AgASi => DeviceParams {
+                name: "Ag-aSi",
+                levels: 97,
+                sigma_prog: 0.135,
+                sigma_floor: 0.006,
+                sigma_d2d: 0.015,
+                sigma_read: 0.004,
+                alpha_ltp: 2.4,
+                alpha_ltd: -4.88,
+                gain_eta: 0.35,
+                pulses_write: 120.0,
+                e_pulse: 7.1e-12,
+                t_pulse: 1.25e-4,
+                e_read: 5.0e-14,
+                sigma_disturb: 1.0e-4,
+            },
+            // Lw target: 67 × 26 × 80 µs ≈ 0.14 s; Ew: 4422 × 26 × 0.48 nJ ≈ 5.5e-5 J
+            Material::AlOxHfO2 => DeviceParams {
+                name: "AlOx-HfO2",
+                levels: 40,
+                sigma_prog: 0.40,
+                sigma_floor: 0.008,
+                sigma_d2d: 0.035,
+                sigma_read: 0.004,
+                alpha_ltp: 1.94,
+                alpha_ltd: -0.61,
+                gain_eta: 0.22,
+                pulses_write: 26.0,
+                e_pulse: 4.8e-10,
+                t_pulse: 8.0e-5,
+                e_read: 1.0e-13,
+                sigma_disturb: 3.0e-4,
+            },
+            // Lw target: 67 × 50 × 13.5 µs ≈ 0.045 s; Ew: 4422 × 50 × 0.45 nJ ≈ 1.0e-4 J
+            Material::EpiRam => DeviceParams {
+                name: "EpiRAM",
+                levels: 512,
+                sigma_prog: 0.009,
+                sigma_floor: 0.0011,
+                sigma_d2d: 0.0012,
+                sigma_read: 0.004,
+                alpha_ltp: 0.5,
+                alpha_ltd: -0.5,
+                gain_eta: 0.18,
+                pulses_write: 50.0,
+                e_pulse: 4.5e-10,
+                t_pulse: 1.35e-5,
+                e_read: 1.0e-13,
+                sigma_disturb: 9.0e-4,
+            },
+            // Lw target: 67 × 8 × 0.5 µs ≈ 2.7e-4 s; Ew: 4422 × 8 × 1.5 pJ ≈ 5.3e-8 J
+            Material::TaOxHfOx => DeviceParams {
+                name: "TaOx-HfOx",
+                levels: 32,
+                sigma_prog: 0.27,
+                sigma_floor: 0.018,
+                sigma_d2d: 0.030,
+                sigma_read: 0.004,
+                alpha_ltp: 0.26,
+                alpha_ltd: -0.35,
+                gain_eta: 0.22,
+                pulses_write: 8.0,
+                e_pulse: 1.5e-12,
+                t_pulse: 5.0e-7,
+                e_read: 2.0e-14,
+                sigma_disturb: 3.0e-4,
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for Material {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Material::parse("TaOx-HfOx"), Some(Material::TaOxHfOx));
+        assert_eq!(Material::parse("taox_hfox"), Some(Material::TaOxHfOx));
+        assert_eq!(Material::parse("epiram"), Some(Material::EpiRam));
+        assert_eq!(Material::parse("AG-ASI"), Some(Material::AgASi));
+        assert_eq!(Material::parse("alox"), Some(Material::AlOxHfO2));
+        assert_eq!(Material::parse("??"), None);
+    }
+
+    #[test]
+    fn noise_ordering_matches_table1() {
+        // No-EC M1 error ordering: EpiRAM < Ag-aSi < TaOx < AlOx.
+        let sig = |m: Material| m.params().sigma_prog;
+        assert!(sig(Material::EpiRam) < sig(Material::AgASi));
+        assert!(sig(Material::AgASi) < sig(Material::TaOxHfOx));
+        assert!(sig(Material::TaOxHfOx) < sig(Material::AlOxHfO2));
+    }
+
+    #[test]
+    fn energy_ordering_matches_table1() {
+        // Per-write energy ordering: TaOx < Ag-aSi < AlOx < EpiRAM.
+        let e = |m: Material| {
+            let p = m.params();
+            p.pulses_write * p.e_pulse
+        };
+        assert!(e(Material::TaOxHfOx) < e(Material::AgASi));
+        assert!(e(Material::AgASi) < e(Material::AlOxHfO2));
+        assert!(e(Material::AlOxHfO2) < e(Material::EpiRam));
+        // 3+ orders of magnitude between TaOx and EpiRAM.
+        assert!(e(Material::EpiRam) / e(Material::TaOxHfOx) > 1e3);
+    }
+
+    #[test]
+    fn latency_ordering_matches_table1() {
+        // Per-row write latency: TaOx < EpiRAM < AlOx < Ag-aSi.
+        let l = |m: Material| {
+            let p = m.params();
+            p.pulses_write * p.t_pulse
+        };
+        assert!(l(Material::TaOxHfOx) < l(Material::EpiRam));
+        assert!(l(Material::EpiRam) < l(Material::AlOxHfO2));
+        assert!(l(Material::AlOxHfO2) < l(Material::AgASi));
+        // ≥2 orders between TaOx and EpiRAM.
+        assert!(l(Material::EpiRam) / l(Material::TaOxHfOx) > 1e2);
+    }
+
+    #[test]
+    fn epiram_disturb_comparable_to_floor() {
+        // What makes k>0 hurt EpiRAM on bcsstk02 (Fig S1).
+        let p = Material::EpiRam.params();
+        assert!(p.sigma_disturb > 0.5 * p.sigma_floor);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(Material::TaOxHfOx.to_string(), "TaOx-HfOx");
+        assert_eq!(Material::EpiRam.to_string(), "EpiRAM");
+    }
+}

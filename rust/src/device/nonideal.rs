@@ -1,0 +1,257 @@
+//! Extended device non-idealities (the paper's §1 scalability limiters and
+//! future-work items, DESIGN.md "extensions"):
+//!
+//! * [`AdcModel`] — peripheral ADC quantization of measured bitline
+//!   currents (readout resolution, in bits, over the tile's dynamic range);
+//! * [`DriftModel`] — conductance retention drift `G(t) = G0·(1+t/t0)^{−ν}`
+//!   between programming and read-out;
+//! * [`IrDropModel`] — sneak-path / line-resistance attenuation: cells far
+//!   from the drivers see degraded effective bias, modeled as a positional
+//!   first-order attenuation across the array.
+//!
+//! All three default to disabled so the core reproduction matches the
+//! paper's error model; the ablation benches and property tests switch
+//! them on.
+
+use crate::linalg::{Matrix, Vector};
+
+/// Peripheral ADC readout quantization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcModel {
+    /// Resolution in bits; 0 disables quantization.
+    pub bits: u32,
+}
+
+impl Default for AdcModel {
+    fn default() -> Self {
+        AdcModel { bits: 0 }
+    }
+}
+
+impl AdcModel {
+    pub fn new(bits: u32) -> AdcModel {
+        AdcModel { bits }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.bits > 0
+    }
+
+    /// Quantize a measured output vector to `bits` over its own dynamic
+    /// range (peripheral auto-ranging ADC).
+    pub fn quantize(&self, y: &mut Vector) {
+        if !self.enabled() {
+            return;
+        }
+        let max = y.max_abs();
+        if max == 0.0 {
+            return;
+        }
+        let levels = (1u64 << self.bits.min(52)) as f64;
+        let step = 2.0 * max / levels;
+        for v in y.data_mut() {
+            *v = (*v / step).round() * step;
+        }
+    }
+}
+
+/// Conductance retention drift.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftModel {
+    /// Drift exponent ν (0 disables; typical RRAM: 0.005–0.1).
+    pub nu: f64,
+    /// Normalized elapsed time t/t0 between write and read.
+    pub elapsed: f64,
+}
+
+impl Default for DriftModel {
+    fn default() -> Self {
+        DriftModel {
+            nu: 0.0,
+            elapsed: 0.0,
+        }
+    }
+}
+
+impl DriftModel {
+    pub fn new(nu: f64, elapsed: f64) -> DriftModel {
+        DriftModel { nu, elapsed }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.nu > 0.0 && self.elapsed > 0.0
+    }
+
+    /// Multiplicative retention factor applied to every conductance.
+    pub fn factor(&self) -> f64 {
+        if !self.enabled() {
+            return 1.0;
+        }
+        (1.0 + self.elapsed).powf(-self.nu)
+    }
+
+    /// Age an encoded (value-domain) tile in place.
+    pub fn apply(&self, encoded: &mut Matrix) {
+        let f = self.factor();
+        if f == 1.0 {
+            return;
+        }
+        for v in encoded.data_mut() {
+            *v *= f;
+        }
+    }
+}
+
+/// Line-resistance (IR-drop) attenuation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IrDropModel {
+    /// Worst-corner relative attenuation α (0 disables). The cell at the
+    /// far corner of the array sees `(1-α)` of its nominal bias.
+    pub alpha: f64,
+}
+
+impl Default for IrDropModel {
+    fn default() -> Self {
+        IrDropModel { alpha: 0.0 }
+    }
+}
+
+impl IrDropModel {
+    pub fn new(alpha: f64) -> IrDropModel {
+        IrDropModel { alpha }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.alpha > 0.0
+    }
+
+    /// Positional attenuation of cell (i, j) in a rows x cols array: the
+    /// voltage divider along word/bit lines grows with the distance from
+    /// the drivers (row driver at j=0, sense amp at i=0).
+    #[inline]
+    pub fn attenuation(&self, i: usize, j: usize, rows: usize, cols: usize) -> f64 {
+        if !self.enabled() {
+            return 1.0;
+        }
+        let fi = if rows > 1 { i as f64 / (rows - 1) as f64 } else { 0.0 };
+        let fj = if cols > 1 { j as f64 / (cols - 1) as f64 } else { 0.0 };
+        1.0 - self.alpha * 0.5 * (fi + fj)
+    }
+
+    /// Apply the positional attenuation across an encoded tile.
+    pub fn apply(&self, encoded: &mut Matrix) {
+        if !self.enabled() {
+            return;
+        }
+        let (rows, cols) = (encoded.nrows(), encoded.ncols());
+        for i in 0..rows {
+            for j in 0..cols {
+                let att = self.attenuation(i, j, rows, cols);
+                encoded.set(i, j, encoded.get(i, j) * att);
+            }
+        }
+    }
+}
+
+/// Bundle of the optional non-idealities.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NonIdealExt {
+    pub adc: AdcModel,
+    pub drift: DriftModel,
+    pub ir_drop: IrDropModel,
+}
+
+impl NonIdealExt {
+    pub fn any_enabled(&self) -> bool {
+        self.adc.enabled() || self.drift.enabled() || self.ir_drop.enabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adc_disabled_is_identity() {
+        let adc = AdcModel::default();
+        let mut y = Vector::from_vec(vec![0.1234, -0.777]);
+        let orig = y.clone();
+        adc.quantize(&mut y);
+        assert_eq!(y, orig);
+    }
+
+    #[test]
+    fn adc_quantizes_to_grid() {
+        let adc = AdcModel::new(4); // 16 levels over [-max, max]
+        let mut y = Vector::from_vec(vec![1.0, 0.49, 0.01, -0.77]);
+        adc.quantize(&mut y);
+        let step = 2.0 / 16.0;
+        for v in y.data() {
+            let k = v / step;
+            assert!((k - k.round()).abs() < 1e-9, "{v} not on grid");
+        }
+    }
+
+    #[test]
+    fn adc_error_shrinks_with_bits() {
+        let mk = |bits| {
+            let adc = AdcModel::new(bits);
+            let mut y = Vector::from_vec((0..100).map(|i| (i as f64 * 0.731).sin()).collect());
+            let orig = y.clone();
+            adc.quantize(&mut y);
+            y.sub(&orig).norm_l2()
+        };
+        assert!(mk(10) < mk(4));
+        assert!(mk(4) < mk(2));
+    }
+
+    #[test]
+    fn drift_factor_monotone_in_time() {
+        let d1 = DriftModel::new(0.05, 10.0);
+        let d2 = DriftModel::new(0.05, 1000.0);
+        assert!(d2.factor() < d1.factor());
+        assert!(d1.factor() < 1.0);
+        assert_eq!(DriftModel::default().factor(), 1.0);
+    }
+
+    #[test]
+    fn drift_applies_uniformly() {
+        let d = DriftModel::new(0.1, 100.0);
+        let mut m = Matrix::from_vec(1, 3, vec![1.0, -2.0, 0.5]);
+        d.apply(&mut m);
+        let f = d.factor();
+        assert!((m.get(0, 0) - f).abs() < 1e-12);
+        assert!((m.get(0, 1) + 2.0 * f).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ir_drop_attenuates_far_corner_most() {
+        let ir = IrDropModel::new(0.2);
+        let near = ir.attenuation(0, 0, 64, 64);
+        let far = ir.attenuation(63, 63, 64, 64);
+        assert_eq!(near, 1.0);
+        assert!((far - 0.8).abs() < 1e-12);
+        // Monotone along each axis.
+        assert!(ir.attenuation(10, 0, 64, 64) > ir.attenuation(20, 0, 64, 64));
+    }
+
+    #[test]
+    fn ir_drop_apply_matches_pointwise() {
+        let ir = IrDropModel::new(0.3);
+        let mut m = Matrix::from_fn(8, 8, |_, _| 1.0);
+        ir.apply(&mut m);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((m.get(i, j) - ir.attenuation(i, j, 8, 8)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn bundle_reports_enabled() {
+        let mut ext = NonIdealExt::default();
+        assert!(!ext.any_enabled());
+        ext.adc = AdcModel::new(8);
+        assert!(ext.any_enabled());
+    }
+}

@@ -1,0 +1,393 @@
+//! Two-tier error correction: the paper's `correctedMatVecMul`
+//! (Supplementary Alg. 6) executed per tile (DESIGN.md S8).
+//!
+//! A [`TileExecutor`] bundles one MCA simulator with an execution backend
+//! and runs the full per-tile pipeline:
+//!
+//! 1. `adjustableMatWriteandVerify(A)`, `adjustableVecWriteandVerify(x)`;
+//! 2. the `Xᵀ` broadcast write needed for the `Ax̃` product (one physical
+//!    row programmed, replayed by the row driver — all rows are identical);
+//! 3. encode the denoiser `(I + λLᵀL)⁻¹` onto the crossbar (cached per
+//!    tile size, so its write cost naturally amortizes across every tile
+//!    the worker processes — the paper's M̃inv is likewise written once);
+//! 4. the fused L2/L1 artifact: three crossbar products, first-order
+//!    combine with read noise, in-memory denoise;
+//! 5. a final measured read of the corrected output.
+
+use crate::device::nonideal::NonIdealExt;
+use crate::linalg::tridiag::Tridiag;
+use crate::linalg::{Matrix, Vector};
+use crate::mca::{EncodeStats, Mca, WriteVerifyOpts};
+use crate::runtime::{Backend, EcMvmRequest};
+use std::collections::HashMap;
+
+/// How the second-order correction is applied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DenoiseMode {
+    /// Paper mode: the inverse is encoded on a crossbar and applied as an
+    /// in-memory MVM (noise included).
+    InMemory,
+    /// Ablation: exact digital Thomas solve on the first-order output.
+    Digital,
+    /// Ablation: first-order correction only.
+    Off,
+}
+
+/// Error-correction options for a solve.
+#[derive(Clone, Copy, Debug)]
+pub struct EcOptions {
+    /// Master switch: `false` = raw `Ãx̃` (no-EC baseline).
+    pub ec: bool,
+    /// Regularization λ (paper default 1e-12).
+    pub lambda: f64,
+    /// Difference-matrix superdiagonal h (paper default −1).
+    pub h: f64,
+    pub denoise: DenoiseMode,
+    /// Write–verify protocol settings (`ε`, `N`, `p`).
+    pub wv: WriteVerifyOpts,
+    /// Optional extended non-idealities (ADC, drift, IR drop) — all
+    /// disabled by default to match the paper's error model.
+    pub nonideal: NonIdealExt,
+}
+
+impl Default for EcOptions {
+    fn default() -> Self {
+        EcOptions {
+            ec: true,
+            lambda: 1e-12,
+            h: -1.0,
+            denoise: DenoiseMode::InMemory,
+            wv: WriteVerifyOpts::default(),
+            nonideal: NonIdealExt::default(),
+        }
+    }
+}
+
+/// Result of one tile execution.
+#[derive(Clone, Debug)]
+pub struct TileResult {
+    /// The tile's measured output (f64 for downstream aggregation).
+    pub y: Vector,
+    /// Matrix encode statistics (iterations, rewrites, final delta).
+    pub encode: EncodeStats,
+}
+
+/// Per-worker tile pipeline: one MCA + one backend + denoiser caches.
+pub struct TileExecutor {
+    pub mca: Mca,
+    backend: Backend,
+    /// Encoded (noisy) denoiser per (tile size, λ-bits) — in-memory mode.
+    minv_encoded: HashMap<(usize, u64), Vec<f32>>,
+    /// Exact operator per (tile size, λ-bits) — digital mode.
+    operators: HashMap<(usize, u64), Tridiag>,
+}
+
+impl TileExecutor {
+    pub fn new(mca: Mca, backend: Backend) -> TileExecutor {
+        TileExecutor {
+            mca,
+            backend,
+            minv_encoded: HashMap::new(),
+            operators: HashMap::new(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn lambda_key(lambda: f64) -> u64 {
+        lambda.to_bits()
+    }
+
+    /// Encoded denoiser for tile size `n` (writes it on first use; the
+    /// ledger records that one-time cost, amortized across later tiles).
+    fn encoded_minv(&mut self, n: usize, lambda: f64, h: f64) -> Vec<f32> {
+        let key = (n, Self::lambda_key(lambda));
+        if let Some(m) = self.minv_encoded.get(&key) {
+            return m.clone();
+        }
+        let op = Tridiag::denoise_operator(n, lambda, h);
+        let mut inv = op.inverse();
+        // Entries below a quarter of the conductance quantization step
+        // encode to zero conductance anyway — drop them before programming
+        // so the denoiser write costs only its resolvable support (for the
+        // paper's λ=1e-12 that is just the diagonal).
+        let rel_cutoff = 0.25 / self.mca.params.levels as f64;
+        crate::matrices::generators::sparsify(&mut inv, rel_cutoff);
+        // The denoiser is setup state, programmed once and carefully: give
+        // it a deep verify budget (its encoding noise otherwise floors the
+        // whole EC pipeline, since Minv ~ I multiplies p directly).
+        let (encoded, _) = self
+            .mca
+            .write_verify_matrix(&inv, &WriteVerifyOpts::default().with_iters(12));
+        let f32s = encoded.to_f32();
+        self.minv_encoded.insert(key, f32s.clone());
+        f32s
+    }
+
+    fn operator(&mut self, n: usize, lambda: f64, h: f64) -> &Tridiag {
+        let key = (n, Self::lambda_key(lambda));
+        self.operators
+            .entry(key)
+            .or_insert_with(|| Tridiag::denoise_operator(n, lambda, h))
+    }
+
+    /// Execute one (already padded, square) tile: the paper's
+    /// `correctedMatVecMul` when `opts.ec`, the raw product otherwise.
+    pub fn run_tile(
+        &mut self,
+        a: &Matrix,
+        x: &Vector,
+        opts: &EcOptions,
+    ) -> Result<TileResult, String> {
+        let n = a.nrows();
+        if a.ncols() != n || x.len() != n {
+            return Err(format!(
+                "run_tile expects a square padded tile: A is {}x{}, x is {}",
+                a.nrows(),
+                a.ncols(),
+                x.len()
+            ));
+        }
+        if !self.backend.tile_sizes().contains(&n) {
+            return Err(format!(
+                "tile size {n} has no artifact (available: {:?})",
+                self.backend.tile_sizes()
+            ));
+        }
+
+        // Step 0: assignment overhead — virtualization reassigns this MCA
+        // to a new chunk, which costs a tile reconfiguration scan (address
+        // decoder walk + bias settling + pre-use verify read).  This is the
+        // per-assignment cost that makes small cell sizes expensive in the
+        // paper's Fig 4 weak-scaling study.
+        self.mca.ledger.record_write(crate::device::pulse::PassCost {
+            energy_j: (n * n) as f64 * self.mca.params.e_read,
+            latency_s: n as f64 * self.mca.params.t_pulse * 0.25,
+            cells: 0,
+            pulses: n as f64 * 0.25,
+        });
+
+        // Step 1: encode operands through write–verify.
+        let (mut at, encode_stats) = self.mca.write_verify_matrix(a, &opts.wv);
+        let (xt, _) = self.mca.write_verify_vector(x, &opts.wv);
+
+        // Extended non-idealities on the stored image (retention drift and
+        // line-resistance attenuation act between write and read).
+        if opts.nonideal.drift.enabled() {
+            opts.nonideal.drift.apply(&mut at);
+        }
+        if opts.nonideal.ir_drop.enabled() {
+            opts.nonideal.ir_drop.apply(&mut at);
+        }
+
+        if !opts.ec {
+            // Raw path: one crossbar product, measured with read noise.
+            let y = self.backend.mvm(n, at.to_f32(), xt.to_f32())?;
+            self.mca.record_read(n, n);
+            let noise = self.mca.read_noise_vec(n);
+            let mut y = Vector::from_vec(
+                y.iter()
+                    .zip(&noise)
+                    .map(|(v, r)| (*v as f64) * (*r as f64))
+                    .collect(),
+            );
+            opts.nonideal.adc.quantize(&mut y);
+            return Ok(TileResult {
+                y,
+                encode: encode_stats,
+            });
+        }
+
+        // Step 2: Xᵀ broadcast write (one physical row, replayed n times).
+        self.mca.ledger.record_write(crate::device::pulse::full_write_cost(
+            &self.mca.params,
+            1,
+            n,
+        ));
+
+        // Step 3: denoiser (cached; one-time write cost).
+        let minv = self.encoded_minv(n, opts.lambda, opts.h);
+
+        // Step 4: fused artifact — three products + combine + denoise.
+        let req = EcMvmRequest {
+            n,
+            a: a.to_f32(),
+            at: at.to_f32(),
+            x: x.to_f32(),
+            xt: xt.to_f32(),
+            minv,
+            nv: self.mca.read_noise_vec(n),
+            nu: self.mca.read_noise_vec(n),
+            ny: self.mca.read_noise_vec(n),
+        };
+        let resp = self.backend.ec_mvm(req)?;
+        // Four tile activations: Ãx, Ax̃, Ãx̃, M̃inv·p.
+        for _ in 0..4 {
+            self.mca.record_read(n, n);
+        }
+
+        // Step 5: final measurement / denoise-mode selection.
+        let mut y = match opts.denoise {
+            DenoiseMode::InMemory => {
+                let noise = self.mca.read_noise_vec(n);
+                Vector::from_vec(
+                    resp.y_corr
+                        .iter()
+                        .zip(&noise)
+                        .map(|(v, r)| (*v as f64) * (*r as f64))
+                        .collect(),
+                )
+            }
+            DenoiseMode::Digital => {
+                let p = Vector::from_vec(resp.p.iter().map(|&v| v as f64).collect());
+                self.operator(n, opts.lambda, opts.h).denoise(&p)
+            }
+            DenoiseMode::Off => Vector::from_vec(resp.p.iter().map(|&v| v as f64).collect()),
+        };
+        opts.nonideal.adc.quantize(&mut y);
+        Ok(TileResult {
+            y,
+            encode: encode_stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::materials::Material;
+    use crate::runtime::native::NativeBackend;
+    use std::sync::Arc;
+
+    fn executor(material: Material, seed: u64) -> TileExecutor {
+        let mca = Mca::new(material, 128, 128, seed);
+        TileExecutor::new(mca, Arc::new(NativeBackend::new()))
+    }
+
+    fn rel_err(y: &Vector, b: &Vector) -> f64 {
+        y.sub(b).norm_l2() / b.norm_l2()
+    }
+
+    #[test]
+    fn ec_beats_raw_by_an_order() {
+        let n = 64;
+        let a = Matrix::standard_normal(n, n, 21);
+        let x = Vector::standard_normal(n, 22);
+        let b = a.matvec(&x);
+
+        let mut raw_errs = 0.0;
+        let mut ec_errs = 0.0;
+        let reps = 6;
+        for s in 0..reps {
+            let mut te = executor(Material::TaOxHfOx, 100 + s);
+            let raw = te
+                .run_tile(&a, &x, &EcOptions {
+                    ec: false,
+                    ..EcOptions::default()
+                })
+                .unwrap();
+            raw_errs += rel_err(&raw.y, &b);
+
+            let mut te = executor(Material::TaOxHfOx, 200 + s);
+            let ec = te.run_tile(&a, &x, &EcOptions::default()).unwrap();
+            ec_errs += rel_err(&ec.y, &b);
+        }
+        let (raw, ec) = (raw_errs / reps as f64, ec_errs / reps as f64);
+        // On a low-κ random operand the raw error is already small, so the
+        // reduction here is ~85-90%; the paper's >90% headline (validated on
+        // the bcsstk02 workload in benches/table1) amplifies through κ.
+        assert!(
+            ec < raw * 0.2,
+            "large reduction expected: raw {raw:.4}, ec {ec:.4}"
+        );
+    }
+
+    #[test]
+    fn rejects_non_artifact_tile() {
+        let mut te = executor(Material::EpiRam, 1);
+        let a = Matrix::standard_normal(66, 66, 1);
+        let x = Vector::standard_normal(66, 2);
+        let err = te.run_tile(&a, &x, &EcOptions::default()).unwrap_err();
+        assert!(err.contains("tile size 66"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        let mut te = executor(Material::EpiRam, 1);
+        let a = Matrix::standard_normal(64, 32, 1);
+        let x = Vector::standard_normal(32, 2);
+        assert!(te.run_tile(&a, &x, &EcOptions::default()).is_err());
+    }
+
+    #[test]
+    fn minv_write_cost_amortizes() {
+        let n = 32;
+        let mut te = executor(Material::AlOxHfO2, 5);
+        let a = Matrix::standard_normal(n, n, 3);
+        let x = Vector::standard_normal(n, 4);
+        te.run_tile(&a, &x, &EcOptions::default()).unwrap();
+        let first = te.mca.ledger;
+        te.run_tile(&a, &x, &EcOptions::default()).unwrap();
+        // Second tile skips the denoiser write: strictly fewer cells and
+        // strictly less energy than the first (which paid the Minv setup).
+        let second_delta_cells = te.mca.ledger.cells_written - first.cells_written;
+        let second_delta_e = te.mca.ledger.write_energy_j - first.write_energy_j;
+        assert!(second_delta_cells < first.cells_written, "{second_delta_cells} vs {}", first.cells_written);
+        assert!(second_delta_e < first.write_energy_j);
+    }
+
+    #[test]
+    fn denoise_modes_all_run() {
+        let n = 32;
+        let a = Matrix::standard_normal(n, n, 7);
+        let x = Vector::standard_normal(n, 8);
+        let b = a.matvec(&x);
+        for mode in [DenoiseMode::InMemory, DenoiseMode::Digital, DenoiseMode::Off] {
+            let mut te = executor(Material::EpiRam, 31);
+            let opts = EcOptions {
+                denoise: mode,
+                ..EcOptions::default()
+            };
+            let r = te.run_tile(&a, &x, &opts).unwrap();
+            assert!(rel_err(&r.y, &b) < 0.2, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn ec_costs_more_energy_than_raw() {
+        let n = 64;
+        let a = Matrix::standard_normal(n, n, 9);
+        let x = Vector::standard_normal(n, 10);
+        let mut raw_te = executor(Material::TaOxHfOx, 41);
+        raw_te
+            .run_tile(&a, &x, &EcOptions {
+                ec: false,
+                ..EcOptions::default()
+            })
+            .unwrap();
+        let mut ec_te = executor(Material::TaOxHfOx, 41);
+        ec_te.run_tile(&a, &x, &EcOptions::default()).unwrap();
+        assert!(ec_te.mca.ledger.write_energy_j > raw_te.mca.ledger.write_energy_j);
+        assert!(ec_te.mca.ledger.write_latency_s > raw_te.mca.ledger.write_latency_s);
+    }
+
+    #[test]
+    fn write_verify_iterations_propagate() {
+        let n = 32;
+        let a = Matrix::standard_normal(n, n, 11);
+        let x = Vector::standard_normal(n, 12);
+        let mut te = executor(Material::AgASi, 55);
+        let opts = EcOptions {
+            wv: WriteVerifyOpts {
+                max_iters: 5,
+                rel_tol: 1e-9,
+                norm_inf: false,
+            },
+            ..EcOptions::default()
+        };
+        let r = te.run_tile(&a, &x, &opts).unwrap();
+        assert_eq!(r.encode.iters, 5);
+    }
+}

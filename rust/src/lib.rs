@@ -1,0 +1,58 @@
+//! # MELISO+ — In-Memory Linear Solver
+//!
+//! A full-stack, distributed framework for energy-efficient RRAM in-memory
+//! computing with integrated two-tier error correction, reproducing
+//! *"Harnessing the Full Potential of RRAMs through Scalable and Distributed
+//! In-Memory Computing with Integrated Error Correction"* (CS.DC 2025).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: RRAM device & crossbar (MCA)
+//!   simulation, `adjustableWriteandVerify` programming protocols, the
+//!   virtualization layer (zero-padding / block partitioning / chunk
+//!   scheduling / address mapping), a leader–worker distributed runtime,
+//!   energy & latency accounting, metrics, CLI and config.
+//! * **L2/L1 (python/compile, build-time only)** — the JAX compute graph and
+//!   Pallas crossbar kernels, AOT-lowered to HLO-text artifacts.
+//! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` through the
+//!   PJRT CPU client (`xla` crate) and executes them on the request path.
+//!   Python never runs at request time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use meliso::prelude::*;
+//!
+//! let matrix = meliso::matrices::registry::build("iperturb66").unwrap();
+//! let x = Vector::standard_normal(matrix.ncols(), 7);
+//! let cfg = SolveOptions::default().with_device(Material::TaOxHfOx).with_ec(true);
+//! let report = Meliso::new(SystemConfig::single_mca(128), cfg).unwrap()
+//!     .solve_source(matrix.as_ref(), &x).unwrap();
+//! println!("rel l2 error: {:.4}", report.rel_err_l2);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod ec;
+pub mod linalg;
+pub mod matrices;
+pub mod mca;
+pub mod metrics;
+pub mod runtime;
+pub mod solver;
+pub mod testing;
+pub mod util;
+pub mod virtualization;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::config::{BackendKind, SolveOptions, SystemConfig};
+    pub use crate::device::materials::Material;
+    pub use crate::ec::DenoiseMode;
+    pub use crate::linalg::{Matrix, Vector};
+    pub use crate::metrics::SolveReport;
+    pub use crate::solver::Meliso;
+}

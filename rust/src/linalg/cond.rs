@@ -1,0 +1,126 @@
+//! Spectral-norm and condition-number estimation.
+//!
+//! Power iteration on `AᵀA` gives `σ_max = ‖A‖₂`; inverse iteration through
+//! an LU solve gives `σ_min`; their ratio is `κ(A)`.  Used to validate that
+//! the synthetic SuiteSparse stand-ins hit the paper's Table 2 targets.
+
+use crate::linalg::lu::Lu;
+use crate::linalg::{Matrix, Vector};
+use crate::util::rng::Rng;
+
+/// Estimate the spectral norm `‖A‖₂` via power iteration on `AᵀA`.
+pub fn spectral_norm(a: &Matrix, iters: usize, seed: u64) -> f64 {
+    let n = a.ncols();
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v);
+    let mut v = Vector::from_vec(v);
+    normalize(&mut v);
+    let at = a.transpose();
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let av = a.matvec(&v);
+        sigma = av.norm_l2();
+        let mut w = at.matvec(&av);
+        if w.norm_l2() == 0.0 {
+            return 0.0;
+        }
+        normalize(&mut w);
+        v = w;
+    }
+    sigma
+}
+
+/// Estimate the smallest singular value via inverse power iteration
+/// (`(AᵀA)⁻¹` applied through two LU solves per step).
+pub fn smallest_singular(a: &Matrix, iters: usize, seed: u64) -> Option<f64> {
+    let n = a.ncols();
+    assert_eq!(a.nrows(), n, "σ_min estimation expects square A");
+    let lu = Lu::factor(a).ok()?;
+    let at = a.transpose();
+    let lut = Lu::factor(&at).ok()?;
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v);
+    let mut v = Vector::from_vec(v);
+    normalize(&mut v);
+    let mut sigma_inv = 0.0;
+    for _ in 0..iters {
+        // w = A⁻ᵀ A⁻¹ v  (inverse of AᵀA applied to v)
+        let w1 = lu.solve(&v);
+        let mut w = lut.solve(&w1);
+        sigma_inv = w.norm_l2().sqrt();
+        if w.norm_l2() == 0.0 {
+            return None;
+        }
+        normalize(&mut w);
+        v = w;
+    }
+    // After convergence ‖(AᵀA)⁻¹ v‖ ≈ 1/σ_min².
+    Some(1.0 / sigma_inv)
+}
+
+/// Estimate the 2-norm condition number κ(A) = σ_max / σ_min.
+pub fn condition_number(a: &Matrix, iters: usize, seed: u64) -> Option<f64> {
+    let smax = spectral_norm(a, iters, seed);
+    let smin = smallest_singular(a, iters, seed.wrapping_add(1))?;
+    if smin == 0.0 {
+        return None;
+    }
+    Some(smax / smin)
+}
+
+fn normalize(v: &mut Vector) {
+    let n = v.norm_l2();
+    if n > 0.0 {
+        for x in v.data_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, s) in [3.0, 1.0, 0.5, 2.0].iter().enumerate() {
+            a.set(i, i, *s);
+        }
+        let got = spectral_norm(&a, 200, 1);
+        assert!((got - 3.0).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn smallest_singular_of_diagonal() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, s) in [3.0, 1.0, 0.5, 2.0].iter().enumerate() {
+            a.set(i, i, *s);
+        }
+        let got = smallest_singular(&a, 200, 2).unwrap();
+        assert!((got - 0.5).abs() < 1e-6, "{got}");
+    }
+
+    #[test]
+    fn condition_number_of_identity() {
+        let a = Matrix::identity(8);
+        let k = condition_number(&a, 100, 3).unwrap();
+        assert!((k - 1.0).abs() < 1e-6, "{k}");
+    }
+
+    #[test]
+    fn condition_number_scales() {
+        let mut a = Matrix::identity(6);
+        a.set(0, 0, 100.0);
+        let k = condition_number(&a, 300, 4).unwrap();
+        assert!((k - 100.0).abs() / 100.0 < 1e-4, "{k}");
+    }
+
+    #[test]
+    fn singular_matrix_returns_none() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(smallest_singular(&a, 10, 5).is_none());
+    }
+}

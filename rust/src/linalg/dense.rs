@@ -1,0 +1,420 @@
+//! Row-major dense matrix/vector types.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "data length {} != {rows}x{cols}",
+            data.len()
+        );
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. standard-normal entries (deterministic in `seed`).
+    pub fn standard_normal(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0; rows * cols];
+        rng.fill_normal(&mut data);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Matrix–vector product (exact, f64).
+    pub fn matvec(&self, x: &Vector) -> Vector {
+        assert_eq!(self.cols, x.len(), "matvec dim mismatch");
+        let mut out = vec![0.0; self.rows];
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x.data()) {
+                acc += a * b;
+            }
+            *o = acc;
+        }
+        Vector::from_vec(out)
+    }
+
+    /// Matrix–matrix product (exact, f64; O(n^3), for small/setup use only).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k).to_vec();
+                let out_row = out.row_mut(i);
+                for (j, &okj) in orow.iter().enumerate() {
+                    out_row[j] += aik * okj;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Extract the sub-block `[r0..r0+h, c0..c0+w)`, zero-padded if it
+    /// overruns the matrix bounds (virtualization's dimension matching).
+    pub fn block_padded(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+        let mut out = Matrix::zeros(h, w);
+        if r0 >= self.rows || c0 >= self.cols {
+            return out;
+        }
+        let hh = h.min(self.rows - r0);
+        let ww = w.min(self.cols - c0);
+        for i in 0..hh {
+            let src = &self.row(r0 + i)[c0..c0 + ww];
+            out.row_mut(i)[..ww].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Max |a_ij| (the per-tile conductance scale).
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, v| m.max(v.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Entry-wise p-norm distance used by the write–verify tolerance test
+    /// (`p ∈ {2, ∞}`, paper Algorithms 1–2).
+    pub fn delta_norm(&self, other: &Matrix, p_inf: bool) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        if p_inf {
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max)
+        } else {
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+        }
+    }
+
+    /// Fraction of exactly-zero entries (Table 2's `nzeros`).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|v| **v == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+
+    /// Round-trip through f32 (what the PJRT boundary does).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+}
+
+/// Dense `f64` vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Vector {
+    data: Vec<f64>,
+}
+
+impl Vector {
+    pub fn zeros(n: usize) -> Vector {
+        Vector { data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f64>) -> Vector {
+        Vector { data }
+    }
+
+    /// Single observation from N(0, I_n) — the paper's input construction.
+    pub fn standard_normal(n: usize, seed: u64) -> Vector {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0; n];
+        rng.fill_normal(&mut data);
+        Vector { data }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        self.data[i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: f64) {
+        self.data[i] = v;
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn slice_padded(&self, start: usize, len: usize) -> Vector {
+        let mut out = vec![0.0; len];
+        if start < self.data.len() {
+            let take = len.min(self.data.len() - start);
+            out[..take].copy_from_slice(&self.data[start..start + take]);
+        }
+        Vector::from_vec(out)
+    }
+
+    pub fn add_assign(&mut self, other: &Vector) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Vector) -> Vector {
+        assert_eq!(self.len(), other.len());
+        Vector::from_vec(
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        )
+    }
+
+    pub fn norm_l2(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    pub fn norm_inf(&self) -> f64 {
+        self.data.iter().map(|v| v.abs()).fold(0.0, f64::max)
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.norm_inf()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn from_f32(data: &[f32]) -> Vector {
+        Vector {
+            data: data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_identity() {
+        let a = Matrix::identity(5);
+        let x = Vector::standard_normal(5, 3);
+        let y = a.matvec(&x);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = Vector::from_vec(vec![1.0, 0.0, -1.0]);
+        let y = a.matvec(&x);
+        assert_eq!(y.data(), &[-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::standard_normal(4, 4, 1);
+        let i = Matrix::identity(4);
+        let prod = a.matmul(&i);
+        for (x, y) in prod.data().iter().zip(a.data()) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::standard_normal(3, 5, 2);
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn block_padded_interior_and_edge() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let b = a.block_padded(1, 1, 2, 2);
+        assert_eq!(b.data(), &[5.0, 6.0, 9.0, 10.0]);
+        // Overhanging block zero-pads.
+        let e = a.block_padded(3, 3, 2, 2);
+        assert_eq!(e.data(), &[15.0, 0.0, 0.0, 0.0]);
+        // Fully out of range.
+        let z = a.block_padded(10, 10, 2, 2);
+        assert!(z.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn norms() {
+        let v = Vector::from_vec(vec![3.0, -4.0]);
+        assert!((v.norm_l2() - 5.0).abs() < 1e-12);
+        assert_eq!(v.norm_inf(), 4.0);
+    }
+
+    #[test]
+    fn delta_norm_l2_and_inf() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_vec(1, 2, vec![4.0, 6.0]);
+        assert!((a.delta_norm(&b, false) - 5.0).abs() < 1e-12);
+        assert_eq!(a.delta_norm(&b, true), 4.0);
+    }
+
+    #[test]
+    fn zero_fraction_counts() {
+        let a = Matrix::from_vec(2, 2, vec![0.0, 1.0, 0.0, 2.0]);
+        assert!((a.zero_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_roundtrip_precision() {
+        let a = Matrix::standard_normal(8, 8, 5);
+        let b = Matrix::from_f32(8, 8, &a.to_f32());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-6 * x.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn vector_slice_padded() {
+        let v = Vector::from_vec(vec![1.0, 2.0, 3.0]);
+        let s = v.slice_padded(2, 3);
+        assert_eq!(s.data(), &[3.0, 0.0, 0.0]);
+        let o = v.slice_padded(5, 2);
+        assert_eq!(o.data(), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn standard_normal_deterministic() {
+        assert_eq!(
+            Matrix::standard_normal(3, 3, 9).data(),
+            Matrix::standard_normal(3, 3, 9).data()
+        );
+        assert_ne!(
+            Matrix::standard_normal(3, 3, 9).data(),
+            Matrix::standard_normal(3, 3, 10).data()
+        );
+    }
+}

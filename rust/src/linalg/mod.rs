@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate (BLAS/LAPACK stand-in, DESIGN.md S3).
+//!
+//! * [`Matrix`] / [`Vector`] — row-major `f64` dense containers used for
+//!   operands, ground truth and encoded images.  Device simulation rounds
+//!   through `f32` at the PJRT boundary (the artifacts are f32), while all
+//!   error norms are evaluated in `f64` against an exact `f64` product.
+//! * [`tridiag`] — Thomas solver for the SPD tridiagonal `(I + λLᵀL)`
+//!   systems behind the second-order denoiser.
+//! * [`lu`] — dense partial-pivot LU (ground-truth solves, κ estimation).
+//! * [`cond`] — power/inverse iteration spectral-norm and condition-number
+//!   estimators used to validate the synthetic matrix generators.
+
+pub mod cond;
+pub mod lu;
+pub mod tridiag;
+
+mod dense;
+
+pub use dense::{Matrix, Vector};

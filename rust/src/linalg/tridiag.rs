@@ -1,0 +1,184 @@
+//! Thomas-algorithm solver for the denoiser's SPD tridiagonal systems.
+//!
+//! The second-order error-correction operator is `(I + λLᵀL)⁻¹` with `L`
+//! bidiagonal (diag 1, superdiag h).  `LᵀL` is tridiagonal, so both the
+//! digital denoise path and the construction of the explicit inverse (for
+//! the paper's in-memory denoise, which encodes the inverse onto a crossbar)
+//! reduce to O(n) tridiagonal solves.
+
+use crate::linalg::{Matrix, Vector};
+
+/// A symmetric tridiagonal system `T = diag(d) + offdiag(e)`.
+#[derive(Clone, Debug)]
+pub struct Tridiag {
+    /// Main diagonal, length n.
+    pub d: Vec<f64>,
+    /// Off diagonal (sub == super by symmetry), length n-1.
+    pub e: Vec<f64>,
+}
+
+impl Tridiag {
+    /// Build `I + λ LᵀL` for the paper's first-order difference matrix
+    /// (Eq. 9): `L = I + h·superdiag`, default `h = -1`.
+    ///
+    /// `LᵀL` has diagonal `[1, 1+h², ..., 1+h²]` and off-diagonal `h`.
+    pub fn denoise_operator(n: usize, lambda: f64, h: f64) -> Tridiag {
+        assert!(n > 0);
+        let mut d = vec![1.0 + lambda * (1.0 + h * h); n];
+        d[0] = 1.0 + lambda; // first column of L has no h above it
+        let e = vec![lambda * h; n.saturating_sub(1)];
+        Tridiag { d, e }
+    }
+
+    pub fn n(&self) -> usize {
+        self.d.len()
+    }
+
+    /// Multiply `T x` (used by tests to verify solves).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut acc = self.d[i] * x[i];
+            if i > 0 {
+                acc += self.e[i - 1] * x[i - 1];
+            }
+            if i + 1 < n {
+                acc += self.e[i] * x[i + 1];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// Solve `T y = b` with the Thomas algorithm (no pivoting; valid for the
+    /// strictly diagonally dominant SPD operators we build).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        if n == 1 {
+            return vec![b[0] / self.d[0]];
+        }
+        let mut c = vec![0.0; n - 1]; // modified superdiagonal
+        let mut y = vec![0.0; n]; // modified rhs
+        c[0] = self.e[0] / self.d[0];
+        y[0] = b[0] / self.d[0];
+        for i in 1..n {
+            let m = self.d[i] - self.e[i - 1] * c[i - 1];
+            if i < n - 1 {
+                c[i] = self.e[i] / m;
+            }
+            y[i] = (b[i] - self.e[i - 1] * y[i - 1]) / m;
+        }
+        for i in (0..n - 1).rev() {
+            y[i] -= c[i] * y[i + 1];
+        }
+        y
+    }
+
+    /// Materialize the explicit inverse `T⁻¹` column by column (O(n²) total).
+    ///
+    /// This is the matrix the paper *encodes onto the crossbar* for the
+    /// in-memory second-order correction; it is cached per tile size.
+    pub fn inverse(&self) -> Matrix {
+        let n = self.n();
+        let mut inv = Matrix::zeros(n, n);
+        let mut unit = vec![0.0; n];
+        for j in 0..n {
+            unit[j] = 1.0;
+            let col = self.solve(&unit);
+            unit[j] = 0.0;
+            for (i, v) in col.iter().enumerate() {
+                inv.set(i, j, *v);
+            }
+        }
+        inv
+    }
+
+    /// Digital denoise: `y = T⁻¹ p` without materializing the inverse.
+    pub fn denoise(&self, p: &Vector) -> Vector {
+        Vector::from_vec(self.solve(p.data()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn solve_inverts_matvec() {
+        let t = Tridiag::denoise_operator(64, 0.25, -1.0);
+        let x: Vec<f64> = (0..64).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b = t.matvec(&x);
+        let got = t.solve(&b);
+        assert!(max_abs_diff(&got, &x) < 1e-10);
+    }
+
+    #[test]
+    fn tiny_lambda_is_near_identity() {
+        let t = Tridiag::denoise_operator(16, 1e-12, -1.0);
+        let b: Vec<f64> = (0..16).map(|i| i as f64).collect();
+        let y = t.solve(&b);
+        assert!(max_abs_diff(&y, &b) < 1e-9);
+    }
+
+    #[test]
+    fn inverse_matches_solve() {
+        let t = Tridiag::denoise_operator(12, 0.1, -1.0);
+        let inv = t.inverse();
+        let b = Vector::standard_normal(12, 4);
+        let via_solve = t.solve(b.data());
+        let via_inv = inv.matvec(&b);
+        assert!(max_abs_diff(&via_solve, via_inv.data()) < 1e-10);
+    }
+
+    #[test]
+    fn inverse_times_operator_is_identity() {
+        let n = 10;
+        let t = Tridiag::denoise_operator(n, 0.3, -1.0);
+        let inv = t.inverse();
+        // T_dense from matvec on unit vectors.
+        let mut unit = vec![0.0; n];
+        for j in 0..n {
+            unit[j] = 1.0;
+            let t_col = t.matvec(&unit);
+            unit[j] = 0.0;
+            let e_j = inv.matvec(&Vector::from_vec(t_col));
+            for (i, v) in e_j.data().iter().enumerate() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((v - want).abs() < 1e-10, "({i},{j}) -> {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn n1_edge_case() {
+        let t = Tridiag::denoise_operator(1, 0.5, -1.0);
+        let y = t.solve(&[3.0]);
+        assert!((y[0] - 3.0 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn denoise_operator_spd() {
+        // Gershgorin: diag > |offdiag sum| for every row when |h| = 1, λ>0.
+        let t = Tridiag::denoise_operator(32, 0.7, -1.0);
+        for i in 0..32 {
+            let mut off = 0.0;
+            if i > 0 {
+                off += t.e[i - 1].abs();
+            }
+            if i + 1 < 32 {
+                off += t.e[i].abs();
+            }
+            assert!(t.d[i] > off - 1e-12, "row {i} not dominant");
+        }
+    }
+}

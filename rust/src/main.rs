@@ -1,0 +1,166 @@
+//! `meliso` — leader entrypoint / CLI for the MELISO+ framework.
+
+use meliso::cli::{parse, usage, Command, RunArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::metrics::table::TableBuilder;
+use meliso::prelude::*;
+use meliso::solver::ReplicationSummary;
+use meliso::util::sci;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match parse(&args) {
+        Ok(Command::Help) => {
+            print!("{}", usage());
+            0
+        }
+        Ok(Command::Matrices) => cmd_matrices(),
+        Ok(Command::Devices) => cmd_devices(),
+        Ok(Command::Artifacts) => cmd_artifacts(),
+        Ok(Command::Run(run)) => match cmd_run(run) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_matrices() -> i32 {
+    let mut t = TableBuilder::new(
+        "Benchmark operands (synthetic SuiteSparse stand-ins, paper Table 2)",
+        &["dim", "kappa", "||A||2", "used in"],
+    );
+    for m in registry::CATALOG {
+        t.row(
+            m.name,
+            vec![
+                format!("{}", m.dim),
+                sci(m.kappa),
+                sci(m.norm2),
+                m.used_in.to_string(),
+            ],
+        );
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_devices() -> i32 {
+    let mut t = TableBuilder::new(
+        "RRAM material systems (DESIGN.md §5 calibration)",
+        &[
+            "levels", "σ_prog", "σ_floor", "σ_read", "α_p/α_d", "pulses", "E_pulse(J)",
+            "t_pulse(s)",
+        ],
+    );
+    for m in Material::ALL {
+        let p = m.params();
+        t.row(
+            p.name,
+            vec![
+                format!("{}", p.levels),
+                format!("{}", p.sigma_prog),
+                format!("{}", p.sigma_floor),
+                format!("{}", p.sigma_read),
+                format!("{}/{}", p.alpha_ltp, p.alpha_ltd),
+                format!("{}", p.pulses_write),
+                sci(p.e_pulse),
+                sci(p.t_pulse),
+            ],
+        );
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_artifacts() -> i32 {
+    let dir = meliso::runtime::pjrt::default_artifact_dir();
+    let manifest = dir.join("manifest.json");
+    match std::fs::read_to_string(&manifest) {
+        Ok(text) => match meliso::util::json::Json::parse(&text) {
+            Ok(j) => {
+                println!("artifact dir: {}", dir.display());
+                if let Some(arts) = j.get("artifacts").and_then(|a| a.as_obj()) {
+                    for (name, meta) in arts {
+                        println!(
+                            "  {name:<14} {:>9} bytes  sha256 {}…",
+                            meta.get("bytes").and_then(|b| b.as_usize()).unwrap_or(0),
+                            meta.get("sha256")
+                                .and_then(|s| s.as_str())
+                                .map(|s| &s[..12])
+                                .unwrap_or("?")
+                        );
+                    }
+                }
+                0
+            }
+            Err(e) => {
+                eprintln!("bad manifest: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!(
+                "no artifacts at {} ({e}); run `make artifacts`",
+                manifest.display()
+            );
+            1
+        }
+    }
+}
+
+fn cmd_run(run: RunArgs) -> Result<(), String> {
+    let source = registry::build(&run.matrix)?;
+    let x = Vector::standard_normal(source.ncols(), run.opts.seed ^ 0x5eed);
+    let solver = Meliso::new(run.system, run.opts.clone())?;
+    eprintln!(
+        "# {} ({}x{}), device {}, EC {}, k={}, system {}x{} tiles of {}², backend {}",
+        run.matrix,
+        source.nrows(),
+        source.ncols(),
+        run.opts.material,
+        if run.opts.ec { "on" } else { "off" },
+        run.opts.wv_iters,
+        run.system.tile_rows,
+        run.system.tile_cols,
+        run.system.cell_size,
+        solver.backend_name(),
+    );
+    let reports = solver.replicate(source.as_ref(), &x, run.reps.max(1))?;
+    if run.json {
+        let mut arr = Vec::new();
+        for r in &reports {
+            arr.push(r.to_json());
+        }
+        println!("{}", meliso::util::json::Json::Arr(arr).pretty());
+    } else {
+        let s = ReplicationSummary::from_reports(&reports);
+        let last = reports.last().unwrap();
+        let mut t = TableBuilder::new(
+            &format!("{} x {} reps", run.matrix, s.reps),
+            &["value"],
+        );
+        t.row("rel l2 error", vec![sci(s.rel_err_l2)]);
+        t.row("rel linf error", vec![sci(s.rel_err_inf)]);
+        t.row("E_w mean (J)", vec![sci(s.ew_mean)]);
+        t.row("L_w mean (s)", vec![sci(s.lw_mean)]);
+        t.row("chunks", vec![format!("{}", last.chunks_total)]);
+        t.row("chunks skipped", vec![format!("{}", last.chunks_skipped)]);
+        t.row("MCAs used", vec![format!("{}", last.mcas_used)]);
+        t.row(
+            "norm. factor",
+            vec![format!("{}", last.row_reassignments)],
+        );
+        t.row("wall (s)", vec![format!("{:.3}", last.wall_seconds)]);
+        print!("{}", t.render());
+    }
+    Ok(())
+}

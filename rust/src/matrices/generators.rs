@@ -1,0 +1,193 @@
+//! Synthetic matrix generators: SuiteSparse stand-ins (DESIGN.md §3,
+//! substitution 1).
+//!
+//! Dense generators give *exact* spectra: `A = Q D Qᵀ` where `D` carries a
+//! geometric singular-value profile from `σ_max` down to `σ_max/κ` and `Q`
+//! is a product of Householder reflections (exactly orthogonal for any
+//! number of reflections).  Procedural banded generators (for ≥8127²) put
+//! the same geometric profile on the diagonal with decaying random
+//! off-diagonals, which tracks the target condition number to within a
+//! small factor — validated by `linalg::cond` in the tests.
+
+use crate::linalg::{Matrix, Vector};
+use crate::util::rng::Rng;
+
+/// Dense symmetric matrix with exact spectrum: geometric eigenvalues from
+/// `sigma_max` down to `sigma_max / kappa`, conjugated by `reflections`
+/// random Householder reflections.
+pub fn dense_spd_with_condition(
+    n: usize,
+    sigma_max: f64,
+    kappa: f64,
+    reflections: usize,
+    seed: u64,
+) -> Matrix {
+    assert!(n > 1 && sigma_max > 0.0 && kappa >= 1.0);
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        let t = i as f64 / (n - 1) as f64;
+        a.set(i, i, sigma_max * kappa.powf(-t));
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..reflections {
+        let u = random_unit(n, &mut rng);
+        apply_householder_two_sided(&mut a, &u);
+    }
+    a
+}
+
+/// The paper's `Iperturb`: a slightly perturbed identity.  The symmetric
+/// perturbation is scaled so κ(A) ≈ `kappa_target` (for the paper's value
+/// 1.2342, the spectral half-width is ≈ 0.105).
+pub fn iperturb(n: usize, kappa_target: f64, seed: u64) -> Matrix {
+    assert!(kappa_target >= 1.0);
+    // Eigenvalues in [1-e, 1+e]  =>  kappa = (1+e)/(1-e)  =>
+    // e = (kappa-1)/(kappa+1).
+    let e = (kappa_target - 1.0) / (kappa_target + 1.0);
+    let mut a = Matrix::zeros(n, n);
+    for i in 0..n {
+        let t = i as f64 / (n - 1) as f64;
+        a.set(i, i, (1.0 - e) + 2.0 * e * t);
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..4 {
+        let u = random_unit(n, &mut rng);
+        apply_householder_two_sided(&mut a, &u);
+    }
+    a
+}
+
+/// Random unit vector.
+fn random_unit(n: usize, rng: &mut Rng) -> Vector {
+    let mut v = vec![0.0; n];
+    rng.fill_normal(&mut v);
+    let mut v = Vector::from_vec(v);
+    let norm = v.norm_l2();
+    for x in v.data_mut() {
+        *x /= norm;
+    }
+    v
+}
+
+/// A <- H A H with H = I - 2 u uᵀ (exactly orthogonal similarity).
+fn apply_householder_two_sided(a: &mut Matrix, u: &Vector) {
+    let n = a.nrows();
+    debug_assert_eq!(n, a.ncols());
+    debug_assert_eq!(n, u.len());
+    // Left: A <- A - 2 u (uᵀ A)
+    let mut uta = vec![0.0; n];
+    for i in 0..n {
+        let ui = u.get(i);
+        if ui == 0.0 {
+            continue;
+        }
+        let row = a.row(i);
+        for (j, r) in row.iter().enumerate() {
+            uta[j] += ui * r;
+        }
+    }
+    for i in 0..n {
+        let ui = 2.0 * u.get(i);
+        let row = a.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r -= ui * uta[j];
+        }
+    }
+    // Right: A <- A - 2 (A u) uᵀ
+    let mut au = vec![0.0; n];
+    for (i, slot) in au.iter_mut().enumerate() {
+        let row = a.row(i);
+        let mut acc = 0.0;
+        for (j, r) in row.iter().enumerate() {
+            acc += r * u.get(j);
+        }
+        *slot = acc;
+    }
+    for i in 0..n {
+        let s = 2.0 * au[i];
+        let row = a.row_mut(i);
+        for (j, r) in row.iter_mut().enumerate() {
+            *r -= s * u.get(j);
+        }
+    }
+}
+
+/// Sparsify a dense matrix by zeroing entries below `threshold * max_abs`
+/// (used to hit Table 2's `nzeros` fractions when needed).
+pub fn sparsify(a: &mut Matrix, threshold: f64) {
+    let cutoff = threshold * a.max_abs();
+    for v in a.data_mut() {
+        if v.abs() < cutoff {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cond;
+
+    #[test]
+    fn dense_spd_hits_spectrum() {
+        let a = dense_spd_with_condition(48, 100.0, 1000.0, 6, 7);
+        let smax = cond::spectral_norm(&a, 300, 1);
+        assert!((smax - 100.0).abs() / 100.0 < 1e-3, "smax={smax}");
+        let k = cond::condition_number(&a, 300, 2).unwrap();
+        assert!((k - 1000.0).abs() / 1000.0 < 1e-2, "kappa={k}");
+    }
+
+    #[test]
+    fn dense_spd_is_symmetric() {
+        let a = dense_spd_with_condition(24, 5.0, 40.0, 5, 3);
+        for i in 0..24 {
+            for j in 0..24 {
+                assert!((a.get(i, j) - a.get(j, i)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn iperturb_condition() {
+        let a = iperturb(66, 1.2342, 11);
+        let k = cond::condition_number(&a, 400, 5).unwrap();
+        assert!((k - 1.2342).abs() < 0.01, "kappa={k}");
+        // Near identity: diagonal close to 1, off-diagonal small.
+        let mut off_max = 0.0f64;
+        for i in 0..66 {
+            assert!((a.get(i, i) - 1.0).abs() < 0.25);
+            for j in 0..66 {
+                if i != j {
+                    off_max = off_max.max(a.get(i, j).abs());
+                }
+            }
+        }
+        assert!(off_max < 0.2, "off_max={off_max}");
+    }
+
+    #[test]
+    fn householder_preserves_frobenius() {
+        let mut a = dense_spd_with_condition(20, 3.0, 9.0, 0, 1);
+        let before = a.fro_norm();
+        let mut rng = Rng::new(2);
+        let u = random_unit(20, &mut rng);
+        apply_householder_two_sided(&mut a, &u);
+        assert!((a.fro_norm() - before).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparsify_zeroes_small_entries() {
+        let mut a = Matrix::from_vec(2, 2, vec![1.0, 1e-4, -1e-4, -1.0]);
+        sparsify(&mut a, 1e-2);
+        assert_eq!(a.get(0, 1), 0.0);
+        assert_eq!(a.get(1, 0), 0.0);
+        assert_eq!(a.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = dense_spd_with_condition(16, 2.0, 8.0, 4, 42);
+        let b = dense_spd_with_condition(16, 2.0, 8.0, 4, 42);
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,0 +1,254 @@
+//! MatrixMarket (.mtx) reader/writer.
+//!
+//! If a user drops the *real* SuiteSparse files into `data/`, the CLI loads
+//! them instead of the synthetic stand-ins; the writer lets us cache
+//! generated operands for inspection.  Supports the `matrix coordinate
+//! real {general|symmetric}` and `matrix array real general` flavors.
+
+use crate::linalg::Matrix;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum MarketError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for MarketError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MarketError::Io(e) => write!(f, "io error: {e}"),
+            MarketError::Format(m) => write!(f, "matrixmarket format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for MarketError {}
+
+impl From<std::io::Error> for MarketError {
+    fn from(e: std::io::Error) -> Self {
+        MarketError::Io(e)
+    }
+}
+
+fn ferr(msg: impl Into<String>) -> MarketError {
+    MarketError::Format(msg.into())
+}
+
+/// Read a `.mtx` file into a dense [`Matrix`].
+pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
+    let file = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(file).lines();
+
+    let header = lines
+        .next()
+        .ok_or_else(|| ferr("empty file"))??
+        .to_lowercase();
+    if !header.starts_with("%%matrixmarket") {
+        return Err(ferr("missing %%MatrixMarket header"));
+    }
+    let tokens: Vec<&str> = header.split_whitespace().collect();
+    let coordinate = match tokens.get(2) {
+        Some(&"coordinate") => true,
+        Some(&"array") => false,
+        other => return Err(ferr(format!("unsupported format {other:?}"))),
+    };
+    if tokens.get(3) != Some(&"real") && tokens.get(3) != Some(&"integer") {
+        return Err(ferr("only real/integer fields supported"));
+    }
+    let symmetric = match tokens.get(4) {
+        Some(&"general") | None => false,
+        Some(&"symmetric") => true,
+        other => return Err(ferr(format!("unsupported symmetry {other:?}"))),
+    };
+
+    // Skip comments, read the size line.
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| ferr("missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().map_err(|e| ferr(format!("bad size: {e}"))))
+        .collect::<Result<_, _>>()?;
+
+    if coordinate {
+        let (&rows, &cols, &nnz) = match dims.as_slice() {
+            [r, c, n] => (r, c, n),
+            _ => return Err(ferr("coordinate size line must be `rows cols nnz`")),
+        };
+        let mut m = Matrix::zeros(rows, cols);
+        let mut seen = 0usize;
+        for line in lines {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let i: usize = it
+                .next()
+                .ok_or_else(|| ferr("truncated entry"))?
+                .parse()
+                .map_err(|e| ferr(format!("bad row index: {e}")))?;
+            let j: usize = it
+                .next()
+                .ok_or_else(|| ferr("truncated entry"))?
+                .parse()
+                .map_err(|e| ferr(format!("bad col index: {e}")))?;
+            let v: f64 = it
+                .next()
+                .map(|s| s.parse())
+                .transpose()
+                .map_err(|e| ferr(format!("bad value: {e}")))?
+                .unwrap_or(1.0); // pattern matrices default to 1
+            if i == 0 || j == 0 || i > rows || j > cols {
+                return Err(ferr(format!("index ({i},{j}) out of range")));
+            }
+            m.set(i - 1, j - 1, v);
+            if symmetric {
+                m.set(j - 1, i - 1, v);
+            }
+            seen += 1;
+        }
+        if seen != nnz {
+            return Err(ferr(format!("expected {nnz} entries, found {seen}")));
+        }
+        Ok(m)
+    } else {
+        let (&rows, &cols) = match dims.as_slice() {
+            [r, c] => (r, c),
+            _ => return Err(ferr("array size line must be `rows cols`")),
+        };
+        let mut values = Vec::with_capacity(rows * cols);
+        for line in lines {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            for tok in t.split_whitespace() {
+                values.push(
+                    tok.parse::<f64>()
+                        .map_err(|e| ferr(format!("bad value: {e}")))?,
+                );
+            }
+        }
+        if values.len() != rows * cols {
+            return Err(ferr(format!(
+                "expected {} values, found {}",
+                rows * cols,
+                values.len()
+            )));
+        }
+        // Array format is column-major.
+        let mut m = Matrix::zeros(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                m.set(i, j, values[j * rows + i]);
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// Write a dense matrix as `coordinate real general` (zeros omitted).
+pub fn write_mtx(path: &Path, m: &Matrix) -> Result<(), MarketError> {
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(out, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(out, "% generated by MELISO+ (synthetic stand-in)")?;
+    let nnz = m.data().iter().filter(|v| **v != 0.0).count();
+    writeln!(out, "{} {} {}", m.nrows(), m.ncols(), nnz)?;
+    for i in 0..m.nrows() {
+        for j in 0..m.ncols() {
+            let v = m.get(i, j);
+            if v != 0.0 {
+                writeln!(out, "{} {} {:e}", i + 1, j + 1, v)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("meliso_mtx_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_coordinate() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 0.0, -2.5, 0.0, 3.25, 0.0]);
+        let p = tmpfile("rt");
+        write_mtx(&p, &m).unwrap();
+        let back = read_mtx(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn reads_symmetric() {
+        let p = tmpfile("sym");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 4.0\n2 1 -1.0\n",
+        )
+        .unwrap();
+        let m = read_mtx(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(m.get(0, 1), -1.0);
+        assert_eq!(m.get(1, 0), -1.0);
+        assert_eq!(m.get(0, 0), 4.0);
+    }
+
+    #[test]
+    fn reads_array_format() {
+        let p = tmpfile("arr");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix array real general\n2 2\n1.0\n2.0\n3.0\n4.0\n",
+        )
+        .unwrap();
+        let m = read_mtx(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        // column-major: [1 3; 2 4]
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 0), 2.0);
+        assert_eq!(m.get(0, 1), 3.0);
+        assert_eq!(m.get(1, 1), 4.0);
+    }
+
+    #[test]
+    fn rejects_bad_header() {
+        let p = tmpfile("bad");
+        std::fs::write(&p, "not a matrix\n").unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert!(matches!(e, MarketError::Format(_)));
+    }
+
+    #[test]
+    fn rejects_wrong_nnz() {
+        let p = tmpfile("nnz");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n",
+        )
+        .unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert!(matches!(e, MarketError::Format(_)));
+    }
+}

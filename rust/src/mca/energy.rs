@@ -1,0 +1,93 @@
+//! Energy/latency accounting for one MCA (the paper's `E_w` / `L_w`).
+
+use crate::device::pulse::PassCost;
+
+/// Running totals for one MCA.  Write quantities are what Table 1 and the
+/// figures report; read energy is tracked separately (the paper's metrics
+/// are write-dominated, but the ablation benches expose reads too).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyLedger {
+    pub write_energy_j: f64,
+    pub write_latency_s: f64,
+    pub read_energy_j: f64,
+    pub write_passes: usize,
+    pub cells_written: usize,
+    pub pulses: f64,
+    pub reads: usize,
+}
+
+impl EnergyLedger {
+    pub fn record_write(&mut self, cost: PassCost) {
+        self.write_energy_j += cost.energy_j;
+        self.write_latency_s += cost.latency_s;
+        self.cells_written += cost.cells;
+        self.pulses += cost.pulses;
+        self.write_passes += 1;
+    }
+
+    pub fn record_read(&mut self, energy_j: f64) {
+        self.read_energy_j += energy_j;
+        self.reads += 1;
+    }
+
+    /// Merge another ledger (gather across MCAs / chunks).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        self.write_energy_j += other.write_energy_j;
+        self.write_latency_s += other.write_latency_s;
+        self.read_energy_j += other.read_energy_j;
+        self.write_passes += other.write_passes;
+        self.cells_written += other.cells_written;
+        self.pulses += other.pulses;
+        self.reads += other.reads;
+    }
+
+    pub fn reset(&mut self) {
+        *self = EnergyLedger::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(e: f64, l: f64) -> PassCost {
+        PassCost {
+            energy_j: e,
+            latency_s: l,
+            cells: 10,
+            pulses: 100.0,
+        }
+    }
+
+    #[test]
+    fn record_accumulates() {
+        let mut led = EnergyLedger::default();
+        led.record_write(cost(1e-6, 1e-3));
+        led.record_write(cost(2e-6, 3e-3));
+        assert!((led.write_energy_j - 3e-6).abs() < 1e-18);
+        assert!((led.write_latency_s - 4e-3).abs() < 1e-15);
+        assert_eq!(led.write_passes, 2);
+        assert_eq!(led.cells_written, 20);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = EnergyLedger::default();
+        a.record_write(cost(1.0, 1.0));
+        a.record_read(0.5);
+        let mut b = EnergyLedger::default();
+        b.record_write(cost(2.0, 2.0));
+        b.merge(&a);
+        assert!((b.write_energy_j - 3.0).abs() < 1e-12);
+        assert!((b.read_energy_j - 0.5).abs() < 1e-12);
+        assert_eq!(b.reads, 1);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut a = EnergyLedger::default();
+        a.record_write(cost(1.0, 1.0));
+        a.reset();
+        assert_eq!(a, EnergyLedger::default());
+    }
+}

@@ -1,0 +1,144 @@
+//! Value ↔ conductance mapping.
+//!
+//! Signed values map onto a *differential pair* of conductances
+//! (`w = (G⁺ − G⁻) · scale`), each side quantized to the device's level
+//! grid within the normalized window [0, 1].  The per-tile scale is the
+//! tile's max-|value| (peripheral DAC ranging), so quantization error is
+//! relative to the tile's dynamic range — which is exactly why matrices
+//! with wide dynamic range (bcsstk02) suffer more than near-identity ones.
+
+use crate::device::DeviceParams;
+use crate::linalg::Matrix;
+
+/// Per-tile conductance scale (max-abs ranging, paper's NeuroSim+ default).
+pub fn tile_scale(tile: &Matrix) -> f64 {
+    let m = tile.max_abs();
+    if m == 0.0 {
+        1.0
+    } else {
+        m
+    }
+}
+
+/// Quantize a normalized conductance `g ∈ [0, 1]` to the device level grid.
+#[inline]
+pub fn quantize(g: f64, levels: u32) -> f64 {
+    let l = levels as f64;
+    (g.clamp(0.0, 1.0) * l).round() / l
+}
+
+/// Encode one signed value through the differential pair with programming
+/// error `eps` (relative, supplied by the caller's noise model).
+///
+/// Returns the value-domain encoded weight.
+#[inline]
+pub fn encode_value(w: f64, scale: f64, params: &DeviceParams, eps: f64) -> f64 {
+    if w == 0.0 {
+        // Both sides at G_min: differential zero survives exactly (the
+        // common-mode leakage cancels in the differential readout).
+        return 0.0;
+    }
+    let g = (w / scale).clamp(-1.0, 1.0);
+    let (gp, gn) = if g >= 0.0 { (g, 0.0) } else { (0.0, -g) };
+    // Quantize each side, then apply the (shared-step) programming error —
+    // the pair is programmed in one closed-loop step, so the error is
+    // common to the differential value, matching the paper's Eq. 2/3
+    // multiplicative model.
+    let qp = quantize(gp, params.levels);
+    let qn = quantize(gn, params.levels);
+    (qp - qn) * scale * (1.0 + eps)
+}
+
+/// Decompose a signed normalized value into its differential sides
+/// (used by tests and the energy model's pulse accounting).
+#[inline]
+pub fn differential_sides(g: f64) -> (f64, f64) {
+    if g >= 0.0 {
+        (g, 0.0)
+    } else {
+        (0.0, -g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::materials::Material;
+
+    #[test]
+    fn quantize_snaps_to_grid() {
+        assert_eq!(quantize(0.5, 2), 0.5);
+        assert_eq!(quantize(0.26, 2), 0.5);
+        assert_eq!(quantize(0.24, 2), 0.0);
+        assert_eq!(quantize(1.2, 4), 1.0);
+        assert_eq!(quantize(-0.3, 4), 0.0);
+    }
+
+    #[test]
+    fn quantize_error_bounded_by_half_step() {
+        let levels = 32;
+        for k in 0..1000 {
+            let g = k as f64 / 1000.0;
+            let q = quantize(g, levels);
+            assert!((q - g).abs() <= 0.5 / levels as f64 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn encode_zero_is_exact() {
+        let p = Material::TaOxHfOx.params();
+        assert_eq!(encode_value(0.0, 5.0, &p, 0.1), 0.0);
+    }
+
+    #[test]
+    fn encode_noise_free_error_is_quantization_only() {
+        let p = Material::EpiRam.params();
+        let scale = 2.0;
+        for k in 1..100 {
+            let w = scale * (k as f64 / 100.0);
+            let enc = encode_value(w, scale, &p, 0.0);
+            assert!(
+                (enc - w).abs() <= scale * 0.5 / p.levels as f64 + 1e-12,
+                "w={w}, enc={enc}"
+            );
+        }
+    }
+
+    #[test]
+    fn encode_respects_sign() {
+        let p = Material::AgASi.params();
+        assert!(encode_value(1.0, 2.0, &p, 0.0) > 0.0);
+        assert!(encode_value(-1.0, 2.0, &p, 0.0) < 0.0);
+    }
+
+    #[test]
+    fn encode_saturates_out_of_range() {
+        let p = Material::TaOxHfOx.params();
+        // |w| > scale clamps to full-scale.
+        let enc = encode_value(10.0, 2.0, &p, 0.0);
+        assert!((enc - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_levels_mean_coarser_grid() {
+        let hi = Material::EpiRam.params(); // 512 levels
+        let lo = Material::TaOxHfOx.params(); // 32 levels
+        let scale = 1.0;
+        let w = 0.3171;
+        let err_hi = (encode_value(w, scale, &hi, 0.0) - w).abs();
+        let err_lo = (encode_value(w, scale, &lo, 0.0) - w).abs();
+        assert!(err_lo >= err_hi);
+    }
+
+    #[test]
+    fn differential_sides_cover_signs() {
+        assert_eq!(differential_sides(0.7), (0.7, 0.0));
+        assert_eq!(differential_sides(-0.7), (0.0, 0.7));
+        assert_eq!(differential_sides(0.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn tile_scale_of_zero_tile_is_one() {
+        assert_eq!(tile_scale(&Matrix::zeros(4, 4)), 1.0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Memory crossbar array (MCA) simulator (NeuroSim+ array-layer stand-in,
+//! DESIGN.md S6).
+//!
+//! An [`Mca`] owns one physical crossbar: its device parameters, its
+//! persistent device-to-device fixed-pattern noise, an RNG stream, and an
+//! [`EnergyLedger`].  It implements the paper's programming protocols:
+//!
+//! * `MCAsetWeights`       -> [`Mca::set_weights`]
+//! * `adjustableMatWriteandVerify` -> [`Mca::write_verify_matrix`]
+//! * `adjustableVecWriteandVerify` -> [`Mca::write_verify_vector`]
+//!
+//! Values are mapped through [`mapping`] (differential conductance pairs +
+//! level quantization) so every encode returns the *value-domain* noisy
+//! image `Ã` that the runtime backends multiply with.
+
+pub mod energy;
+pub mod mapping;
+pub mod write_verify;
+
+use crate::device::materials::Material;
+use crate::device::{pulse, DeviceParams};
+use crate::linalg::{Matrix, Vector};
+use crate::util::rng::Rng;
+pub use energy::EnergyLedger;
+pub use write_verify::{EncodeStats, WriteVerifyOpts};
+
+/// One simulated memory crossbar array.
+pub struct Mca {
+    pub material: Material,
+    pub params: DeviceParams,
+    /// Physical geometry (cells).
+    pub rows: usize,
+    pub cols: usize,
+    /// Persistent device-to-device relative offsets, one per cell
+    /// (fixed-pattern noise survives reprogramming).
+    d2d: Vec<f64>,
+    rng: Rng,
+    pub ledger: EnergyLedger,
+}
+
+impl Mca {
+    /// Build an MCA with a deterministic per-array RNG stream.
+    pub fn new(material: Material, rows: usize, cols: usize, seed: u64) -> Mca {
+        let params = material.params();
+        let mut rng = Rng::new(seed);
+        let mut d2d = vec![0.0; rows * cols];
+        for v in &mut d2d {
+            *v = params.sigma_d2d * rng.normal();
+        }
+        Mca {
+            material,
+            params,
+            rows,
+            cols,
+            d2d,
+            rng,
+            ledger: EnergyLedger::default(),
+        }
+    }
+
+    #[inline]
+    pub fn rng_mut(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    #[inline]
+    fn d2d_at(&self, i: usize, j: usize) -> f64 {
+        self.d2d[(i % self.rows) * self.cols + j % self.cols]
+    }
+
+    /// `MCAsetWeights`: single-shot programming of a value-domain tile.
+    ///
+    /// Returns the encoded (noisy, quantized) value-domain image.  The tile
+    /// may be smaller than the array; larger tiles wrap the fixed-pattern
+    /// noise (virtualization reuses the same physical cells).
+    pub fn set_weights(&mut self, target: &Matrix) -> Matrix {
+        let scale = mapping::tile_scale(target);
+        let mut out = Matrix::zeros(target.nrows(), target.ncols());
+        // Zero cells stay at G_min (differential pair parked) — they cost no
+        // programming pulses, so zero padding and sparsity are free, exactly
+        // as on hardware.
+        let mut nnz = 0usize;
+        let mut rows_touched = 0usize;
+        for i in 0..target.nrows() {
+            let mut row_dirty = false;
+            for j in 0..target.ncols() {
+                let w = target.get(i, j);
+                if w == 0.0 {
+                    continue;
+                }
+                nnz += 1;
+                row_dirty = true;
+                let eps = self.params.sigma_prog * self.rng.normal() + self.d2d_at(i, j);
+                let enc = mapping::encode_value(w, scale, &self.params, eps);
+                out.set(i, j, enc);
+            }
+            if row_dirty {
+                rows_touched += 1;
+            }
+        }
+        self.ledger
+            .record_write(pulse::nnz_write_cost(&self.params, nnz, rows_touched));
+        out
+    }
+
+    /// Vector variant of `MCAsetWeights` (one wordline).
+    pub fn set_weights_vec(&mut self, target: &Vector) -> Vector {
+        let m = Matrix::from_vec(1, target.len(), target.data().to_vec());
+        let enc = self.set_weights(&m);
+        Vector::from_vec(enc.row(0).to_vec())
+    }
+
+    /// `adjustableMatWriteandVerify` (paper Algorithm 1).
+    pub fn write_verify_matrix(
+        &mut self,
+        target: &Matrix,
+        opts: &WriteVerifyOpts,
+    ) -> (Matrix, EncodeStats) {
+        write_verify::write_verify_matrix(self, target, opts)
+    }
+
+    /// `adjustableVecWriteandVerify` (paper Algorithm 2).
+    pub fn write_verify_vector(
+        &mut self,
+        target: &Vector,
+        opts: &WriteVerifyOpts,
+    ) -> (Vector, EncodeStats) {
+        let m = Matrix::from_vec(1, target.len(), target.data().to_vec());
+        let (enc, stats) = write_verify::write_verify_matrix(self, &m, opts);
+        (Vector::from_vec(enc.row(0).to_vec()), stats)
+    }
+
+    /// Multiplicative read-noise multipliers for one measured MVM output.
+    pub fn read_noise_vec(&mut self, n: usize) -> Vec<f32> {
+        let sigma = self.params.sigma_read;
+        (0..n)
+            .map(|_| (1.0 + sigma * self.rng.normal()) as f32)
+            .collect()
+    }
+
+    /// Account the read energy of one tile activation.
+    pub fn record_read(&mut self, rows: usize, cols: usize) {
+        self.ledger
+            .record_read(pulse::read_cost(&self.params, rows, cols));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(material: Material) -> Mca {
+        Mca::new(material, 64, 64, 42)
+    }
+
+    #[test]
+    fn set_weights_error_tracks_sigma_prog() {
+        for material in Material::ALL {
+            let mut mca = mk(material);
+            let a = Matrix::standard_normal(64, 64, 7);
+            let enc = mca.set_weights(&a);
+            // Median relative error of large-magnitude entries ~ sigma_prog.
+            let mut errs: Vec<f64> = (0..64 * 64)
+                .filter_map(|k| {
+                    let (i, j) = (k / 64, k % 64);
+                    let w = a.get(i, j);
+                    (w.abs() > 0.5).then(|| ((enc.get(i, j) - w) / w).abs())
+                })
+                .collect();
+            errs.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            let med = errs[errs.len() / 2];
+            let p = material.params();
+            let sigma = (p.sigma_prog.powi(2) + p.sigma_d2d.powi(2)).sqrt();
+            let floor = p.level_step() / 2.0;
+            let expect = sigma.max(floor * 0.5);
+            assert!(
+                med > expect * 0.2 && med < (sigma + floor) * 4.0,
+                "{material}: median rel err {med:.5}, sigma {sigma:.5}, floor {floor:.5}"
+            );
+        }
+    }
+
+    #[test]
+    fn set_weights_preserves_zero() {
+        let mut mca = mk(Material::TaOxHfOx);
+        let a = Matrix::zeros(8, 8);
+        let enc = mca.set_weights(&a);
+        assert!(enc.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn set_weights_records_energy() {
+        let mut mca = mk(Material::EpiRam);
+        let a = Matrix::standard_normal(32, 32, 1);
+        mca.set_weights(&a);
+        assert!(mca.ledger.write_energy_j > 0.0);
+        assert!(mca.ledger.write_latency_s > 0.0);
+    }
+
+    #[test]
+    fn d2d_noise_is_persistent() {
+        // Average many rewrites: C2C noise averages out, the fixed-pattern
+        // offset survives, so two independent averages stay correlated.
+        let mut mca = mk(Material::AlOxHfO2);
+        let a = Matrix::from_fn(16, 16, |_, _| 1.0);
+        let avg = |mca: &mut Mca| {
+            let mut acc = vec![0.0f64; 16 * 16];
+            let reps = 40;
+            for _ in 0..reps {
+                let e = mca.set_weights(&a);
+                for (s, v) in acc.iter_mut().zip(e.data()) {
+                    *s += v - 1.0;
+                }
+            }
+            for s in &mut acc {
+                *s /= reps as f64;
+            }
+            acc
+        };
+        let m1 = avg(&mut mca);
+        let m2 = avg(&mut mca);
+        let (mut dot, mut n1, mut n2) = (0.0, 0.0, 0.0);
+        for k in 0..16 * 16 {
+            dot += m1[k] * m2[k];
+            n1 += m1[k] * m1[k];
+            n2 += m2[k] * m2[k];
+        }
+        let corr = dot / (n1.sqrt() * n2.sqrt());
+        assert!(corr > 0.2, "correlation {corr}");
+    }
+
+    #[test]
+    fn epiram_more_accurate_than_taox() {
+        let rel_err = |material| {
+            let mut mca = mk(material);
+            let a = Matrix::standard_normal(64, 64, 3);
+            let enc = mca.set_weights(&a);
+            enc.delta_norm(&a, false) / a.fro_norm()
+        };
+        assert!(rel_err(Material::EpiRam) * 5.0 < rel_err(Material::TaOxHfOx));
+    }
+
+    #[test]
+    fn read_noise_vec_near_one() {
+        let mut mca = mk(Material::EpiRam);
+        let nv = mca.read_noise_vec(1000);
+        let mean: f32 = nv.iter().sum::<f32>() / 1000.0;
+        assert!((mean - 1.0).abs() < 0.01);
+        assert!(nv.iter().all(|v| (*v - 1.0).abs() < 0.05));
+    }
+
+    #[test]
+    fn vector_encode_roundtrip_shape() {
+        let mut mca = mk(Material::AgASi);
+        let x = Vector::standard_normal(66, 5);
+        let enc = mca.set_weights_vec(&x);
+        assert_eq!(enc.len(), 66);
+    }
+}

@@ -1,0 +1,260 @@
+//! The `adjustableWriteandVerify` protocols (paper Algorithms 1–2).
+//!
+//! Closed-loop programming: after the initial `MCAsetWeights` pass, each
+//! verify iteration reads the array back (with read noise), and — while the
+//! tile-level delta norm exceeds the tolerance and the iteration budget
+//! lasts — reprograms the out-of-tolerance cells with a partial correction
+//! step.  The correction realizes only `verify_gain` of the requested
+//! delta (LTP/LTD nonlinearity), carries closed-loop gain noise `η`, lands
+//! on the quantized level grid, and cannot beat the device's programming
+//! floor.  Every pass also injects write disturb into *all* cells, which is
+//! what makes extra iterations counterproductive for EpiRAM (Fig S1).
+
+use crate::device::pulse;
+use crate::linalg::Matrix;
+use crate::mca::{mapping, Mca};
+
+/// Options for a write–verify encode (paper: `ε`, `N`, `p`).
+#[derive(Clone, Copy, Debug)]
+pub struct WriteVerifyOpts {
+    /// Maximum verify iterations `N` (0 = single-shot `MCAsetWeights`).
+    pub max_iters: usize,
+    /// Relative tolerance on the tile delta norm (`ε = rel_tol · ‖A‖_p`).
+    pub rel_tol: f64,
+    /// Use the ∞-norm (`true`) or 2-norm (`false`) for `δ(A, Ã)`.
+    pub norm_inf: bool,
+}
+
+impl Default for WriteVerifyOpts {
+    fn default() -> Self {
+        WriteVerifyOpts {
+            max_iters: 0,
+            rel_tol: 1e-4,
+            norm_inf: false,
+        }
+    }
+}
+
+impl WriteVerifyOpts {
+    pub fn with_iters(mut self, k: usize) -> Self {
+        self.max_iters = k;
+        self
+    }
+}
+
+/// Outcome statistics of one encode.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EncodeStats {
+    /// Verify iterations actually executed.
+    pub iters: usize,
+    /// Final relative delta norm `δ(A, Ã) / ‖A‖`.
+    pub final_rel_delta: f64,
+    /// Cells rewritten across all verify passes.
+    pub rewrites: usize,
+}
+
+/// `adjustableMatWriteandVerify` over a value-domain tile.
+pub fn write_verify_matrix(
+    mca: &mut Mca,
+    target: &Matrix,
+    opts: &WriteVerifyOpts,
+) -> (Matrix, EncodeStats) {
+    let scale = mapping::tile_scale(target);
+    let params = mca.params;
+    let norm = target_norm(target, opts.norm_inf).max(f64::MIN_POSITIVE);
+    let tol = opts.rel_tol * norm;
+
+    // Initial MCAsetWeights pass (records its own energy).
+    let mut encoded = mca.set_weights(target);
+    let mut stats = EncodeStats::default();
+
+    for _ in 0..opts.max_iters {
+        let delta = encoded.delta_norm(target, opts.norm_inf);
+        if delta <= tol {
+            break;
+        }
+        stats.iters += 1;
+
+        // One verify pass: read back with read noise, correct
+        // out-of-tolerance cells with a partial closed-loop step.
+        let gain = params.verify_gain();
+        // Per-cell acceptance band: a cell is "done" once its error is
+        // within the device's achievable precision (programming floor or
+        // half a quantization step, whichever is coarser).  Converged cells
+        // are not rewritten again, which is what keeps the steady-state
+        // verify-pass cost at the paper's ~1.4x EC energy overhead.
+        let cell_tol = scale * 1.5 * params.sigma_floor.max(params.level_step() / 2.0);
+        let mut rewrites = 0usize;
+        let mut rows_touched = 0usize;
+        for i in 0..target.nrows() {
+            let mut row_dirty = false;
+            for j in 0..target.ncols() {
+                let w = target.get(i, j);
+                let cur = encoded.get(i, j);
+                let meas = cur * (1.0 + params.sigma_read * mca.rng_mut().normal());
+                let err = w - meas;
+                if err.abs() <= cell_tol {
+                    continue;
+                }
+                // Partial correction with gain noise; re-quantized; floored
+                // by programming noise proportional to the device floor.
+                let eta = params.gain_eta * mca.rng_mut().normal();
+                let step = gain * err * (1.0 + eta);
+                let ideal = cur + step;
+                let g = (ideal / scale).clamp(-1.0, 1.0);
+                let (gp, gn) = mapping::differential_sides(g);
+                let q = (mapping::quantize(gp, params.levels)
+                    - mapping::quantize(gn, params.levels))
+                    * scale;
+                let floor_noise = scale * params.sigma_floor * mca.rng_mut().normal();
+                encoded.set(i, j, q + floor_noise * 0.2);
+                rewrites += 1;
+                row_dirty = true;
+            }
+            if row_dirty {
+                rows_touched += 1;
+            }
+        }
+
+        // Disturb: every pass stresses the whole array.
+        if params.sigma_disturb > 0.0 {
+            for v in encoded.data_mut() {
+                if *v != 0.0 {
+                    *v *= 1.0 + params.sigma_disturb * mca.rng_mut().normal();
+                }
+            }
+        }
+
+        stats.rewrites += rewrites;
+        mca.ledger
+            .record_write(pulse::verify_pass_cost(&params, rewrites, rows_touched));
+        if rewrites == 0 {
+            break;
+        }
+    }
+
+    stats.final_rel_delta = encoded.delta_norm(target, opts.norm_inf) / norm;
+    (encoded, stats)
+}
+
+fn target_norm(m: &Matrix, inf: bool) -> f64 {
+    if inf {
+        m.max_abs()
+    } else {
+        m.fro_norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::materials::Material;
+
+    fn encode_err(material: Material, k: usize, seed: u64) -> f64 {
+        let mut mca = Mca::new(material, 66, 66, seed);
+        let a = Matrix::standard_normal(66, 66, 123);
+        let opts = WriteVerifyOpts::default().with_iters(k);
+        let (enc, _) = mca.write_verify_matrix(&a, &opts);
+        enc.delta_norm(&a, false) / a.fro_norm()
+    }
+
+    #[test]
+    fn verify_iterations_reduce_error() {
+        for material in [Material::TaOxHfOx, Material::AlOxHfO2, Material::AgASi] {
+            let e0: f64 = (0..5).map(|s| encode_err(material, 0, s)).sum::<f64>() / 5.0;
+            let e5: f64 = (0..5).map(|s| encode_err(material, 5, s)).sum::<f64>() / 5.0;
+            assert!(
+                e5 < e0 * 0.8,
+                "{material}: k=0 err {e0:.4}, k=5 err {e5:.4}"
+            );
+        }
+    }
+
+    #[test]
+    fn taox_converges_fast_agasi_slow() {
+        // TaOx stabilizes by k≈2; Ag-aSi needs ~11 (paper Fig 2).
+        let avg = |m: Material, k: usize| {
+            (0..6).map(|s| encode_err(m, k, s * 7 + 1)).sum::<f64>() / 6.0
+        };
+        let ta2 = avg(Material::TaOxHfOx, 2);
+        let ta12 = avg(Material::TaOxHfOx, 12);
+        // TaOx: k=2 already within 40% of k=12.
+        assert!(ta2 < ta12 * 1.9, "ta2={ta2:.4} ta12={ta12:.4}");
+
+        let ag2 = avg(Material::AgASi, 2);
+        let ag12 = avg(Material::AgASi, 12);
+        // Ag-aSi: k=2 still far from converged.
+        assert!(ag2 > ag12 * 1.35, "ag2={ag2:.4} ag12={ag12:.4}");
+    }
+
+    #[test]
+    fn epiram_extra_iterations_can_hurt() {
+        // Disturb ~ floor: error at k=8 should NOT be much better than k=1,
+        // and is often worse (Fig S1's EpiRAM trend).
+        let avg = |k: usize| {
+            (0..8)
+                .map(|s| encode_err(Material::EpiRam, k, s * 13 + 3))
+                .sum::<f64>()
+                / 8.0
+        };
+        let e1 = avg(1);
+        let e8 = avg(8);
+        assert!(e8 > e1 * 0.7, "e1={e1:.5} e8={e8:.5}");
+    }
+
+    #[test]
+    fn stats_count_iterations() {
+        let mut mca = Mca::new(Material::AlOxHfO2, 32, 32, 9);
+        let a = Matrix::standard_normal(32, 32, 5);
+        let opts = WriteVerifyOpts {
+            max_iters: 4,
+            rel_tol: 1e-9, // unreachable -> run all iterations
+            norm_inf: false,
+        };
+        let (_, stats) = mca.write_verify_matrix(&a, &opts);
+        assert_eq!(stats.iters, 4);
+        assert!(stats.rewrites > 0);
+        assert!(stats.final_rel_delta > 0.0);
+    }
+
+    #[test]
+    fn loose_tolerance_stops_early() {
+        let mut mca = Mca::new(Material::EpiRam, 32, 32, 11);
+        let a = Matrix::standard_normal(32, 32, 6);
+        let opts = WriteVerifyOpts {
+            max_iters: 20,
+            rel_tol: 10.0, // immediately satisfied
+            norm_inf: false,
+        };
+        let (_, stats) = mca.write_verify_matrix(&a, &opts);
+        assert_eq!(stats.iters, 0);
+    }
+
+    #[test]
+    fn verify_costs_accumulate_in_ledger() {
+        let mut mca = Mca::new(Material::TaOxHfOx, 32, 32, 13);
+        let a = Matrix::standard_normal(32, 32, 8);
+        let before = mca.ledger;
+        let opts = WriteVerifyOpts {
+            max_iters: 3,
+            rel_tol: 1e-9,
+            norm_inf: false,
+        };
+        mca.write_verify_matrix(&a, &opts);
+        assert!(mca.ledger.write_energy_j > before.write_energy_j);
+        assert!(mca.ledger.write_passes >= 2); // initial + >=1 verify
+    }
+
+    #[test]
+    fn inf_norm_option_respected() {
+        let mut mca = Mca::new(Material::AgASi, 16, 16, 17);
+        let a = Matrix::standard_normal(16, 16, 9);
+        let opts = WriteVerifyOpts {
+            max_iters: 2,
+            rel_tol: 1e-9,
+            norm_inf: true,
+        };
+        let (_, stats) = mca.write_verify_matrix(&a, &opts);
+        assert!(stats.final_rel_delta > 0.0);
+    }
+}

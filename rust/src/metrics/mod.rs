@@ -1,0 +1,186 @@
+//! Metrics and reporting (the paper's "backward pass" — DESIGN.md S12).
+//!
+//! Relative ℓ2/ℓ∞ error norms (paper Eq. in §2.1), energy/latency
+//! aggregation across MCAs (figures report the *mean across all MCAs*),
+//! and table/CSV/JSON emitters for the benches.
+
+pub mod table;
+
+use crate::linalg::Vector;
+use crate::mca::EnergyLedger;
+use crate::util::json::Json;
+
+/// Relative error `‖y − b‖_p / ‖b‖_p` for p ∈ {2, ∞}.
+pub fn rel_err_l2(y: &Vector, b: &Vector) -> f64 {
+    y.sub(b).norm_l2() / b.norm_l2().max(f64::MIN_POSITIVE)
+}
+
+pub fn rel_err_inf(y: &Vector, b: &Vector) -> f64 {
+    y.sub(b).norm_inf() / b.norm_inf().max(f64::MIN_POSITIVE)
+}
+
+/// Full report of one distributed solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// The in-memory result `y`.
+    pub y: Vector,
+    /// Relative error norms vs the exact f64 ground truth.
+    pub rel_err_l2: f64,
+    pub rel_err_inf: f64,
+    /// Write energy / latency: mean across MCAs (paper Figs 4/5 caption).
+    pub ew_mean: f64,
+    pub lw_mean: f64,
+    /// Totals / maxima across MCAs (wall-clock latency follows the max).
+    pub ew_total: f64,
+    pub lw_max: f64,
+    pub read_energy_total: f64,
+    /// Virtualization accounting.
+    pub chunks_total: usize,
+    pub chunks_skipped: usize,
+    pub mcas_used: usize,
+    pub normalization_factor: usize,
+    pub row_reassignments: usize,
+    /// Encode statistics (averaged over chunks).
+    pub mean_wv_iters: f64,
+    /// Wall-clock of the whole solve (simulation time, not device time).
+    pub wall_seconds: f64,
+}
+
+impl SolveReport {
+    /// Aggregate per-MCA ledgers into the report's energy/latency fields.
+    pub fn fill_from_ledgers(&mut self, ledgers: &[EnergyLedger]) {
+        let used: Vec<&EnergyLedger> = ledgers.iter().filter(|l| l.write_passes > 0).collect();
+        let n = used.len().max(1) as f64;
+        self.mcas_used = used.len();
+        self.ew_total = used.iter().map(|l| l.write_energy_j).sum();
+        self.ew_mean = self.ew_total / n;
+        self.lw_max = used.iter().map(|l| l.write_latency_s).fold(0.0, f64::max);
+        self.lw_mean = used.iter().map(|l| l.write_latency_s).sum::<f64>() / n;
+        self.read_energy_total = used.iter().map(|l| l.read_energy_j).sum();
+    }
+
+    /// Machine-readable JSON (for EXPERIMENTS.md tooling and the CLI).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("rel_err_l2", Json::Num(self.rel_err_l2))
+            .set("rel_err_inf", Json::Num(self.rel_err_inf))
+            .set("ew_mean_j", Json::Num(self.ew_mean))
+            .set("lw_mean_s", Json::Num(self.lw_mean))
+            .set("ew_total_j", Json::Num(self.ew_total))
+            .set("lw_max_s", Json::Num(self.lw_max))
+            .set("read_energy_total_j", Json::Num(self.read_energy_total))
+            .set("chunks_total", Json::Num(self.chunks_total as f64))
+            .set("chunks_skipped", Json::Num(self.chunks_skipped as f64))
+            .set("mcas_used", Json::Num(self.mcas_used as f64))
+            .set(
+                "normalization_factor",
+                Json::Num(self.normalization_factor as f64),
+            )
+            .set(
+                "row_reassignments",
+                Json::Num(self.row_reassignments as f64),
+            )
+            .set("mean_wv_iters", Json::Num(self.mean_wv_iters))
+            .set("wall_seconds", Json::Num(self.wall_seconds));
+        j
+    }
+
+    pub fn empty(y_len: usize) -> SolveReport {
+        SolveReport {
+            y: Vector::zeros(y_len),
+            rel_err_l2: 0.0,
+            rel_err_inf: 0.0,
+            ew_mean: 0.0,
+            lw_mean: 0.0,
+            ew_total: 0.0,
+            lw_max: 0.0,
+            read_energy_total: 0.0,
+            chunks_total: 0,
+            chunks_skipped: 0,
+            mcas_used: 0,
+            normalization_factor: 1,
+            row_reassignments: 1,
+            mean_wv_iters: 0.0,
+            wall_seconds: 0.0,
+        }
+    }
+}
+
+/// Mean and sample standard deviation of a series (bench statistics).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::pulse::PassCost;
+
+    #[test]
+    fn rel_errors() {
+        let b = Vector::from_vec(vec![3.0, 4.0]);
+        let y = Vector::from_vec(vec![3.0, 5.0]);
+        assert!((rel_err_l2(&y, &b) - 1.0 / 5.0).abs() < 1e-12);
+        assert!((rel_err_inf(&y, &b) - 1.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_truth_does_not_divide_by_zero() {
+        let b = Vector::zeros(3);
+        let y = Vector::from_vec(vec![1.0, 0.0, 0.0]);
+        assert!(rel_err_l2(&y, &b).is_finite());
+    }
+
+    #[test]
+    fn ledger_aggregation_means_over_used_mcas() {
+        let mut report = SolveReport::empty(4);
+        let mut l1 = EnergyLedger::default();
+        l1.record_write(PassCost {
+            energy_j: 2.0,
+            latency_s: 1.0,
+            cells: 1,
+            pulses: 1.0,
+        });
+        let mut l2 = EnergyLedger::default();
+        l2.record_write(PassCost {
+            energy_j: 4.0,
+            latency_s: 3.0,
+            cells: 1,
+            pulses: 1.0,
+        });
+        let idle = EnergyLedger::default(); // unused MCA is excluded
+        report.fill_from_ledgers(&[l1, l2, idle]);
+        assert_eq!(report.mcas_used, 2);
+        assert!((report.ew_mean - 3.0).abs() < 1e-12);
+        assert!((report.ew_total - 6.0).abs() < 1e-12);
+        assert!((report.lw_mean - 2.0).abs() < 1e-12);
+        assert!((report.lw_max - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_contains_fields() {
+        let mut report = SolveReport::empty(2);
+        report.rel_err_l2 = 0.0123;
+        let j = report.to_json();
+        assert_eq!(j.get("rel_err_l2").unwrap().as_f64(), Some(0.0123));
+        assert!(j.get("normalization_factor").is_some());
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+        assert_eq!(mean_std(&[5.0]).1, 0.0);
+    }
+}

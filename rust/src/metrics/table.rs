@@ -1,0 +1,134 @@
+//! Plain-text table and CSV emitters for the bench harnesses
+//! (paper-table-shaped output).
+
+/// A simple left-header table: rows of labelled numeric cells.
+pub struct TableBuilder {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<(String, Vec<String>)>,
+}
+
+impl TableBuilder {
+    pub fn new(title: &str, headers: &[&str]) -> TableBuilder {
+        TableBuilder {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row {label:?} has wrong arity"
+        );
+        self.rows.push((label.to_string(), cells));
+        self
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths = vec![0usize; self.headers.len() + 1];
+        widths[0] = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.chars().count())
+            .max()
+            .unwrap_or(0);
+        for (k, h) in self.headers.iter().enumerate() {
+            widths[k + 1] = h.chars().count();
+        }
+        for (_, cells) in &self.rows {
+            for (k, c) in cells.iter().enumerate() {
+                widths[k + 1] = widths[k + 1].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let pad = |s: &str, w: usize| {
+            let extra = w.saturating_sub(s.chars().count());
+            format!("{s}{}", " ".repeat(extra))
+        };
+        out.push_str(&pad("", widths[0]));
+        for (k, h) in self.headers.iter().enumerate() {
+            out.push_str("  ");
+            out.push_str(&pad(h, widths[k + 1]));
+        }
+        out.push('\n');
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&pad(label, widths[0]));
+            for (k, c) in cells.iter().enumerate() {
+                out.push_str("  ");
+                out.push_str(&pad(c, widths[k + 1]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (label column first).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str("label");
+        for h in &self.headers {
+            out.push(',');
+            out.push_str(&esc(h));
+        }
+        out.push('\n');
+        for (label, cells) in &self.rows {
+            out.push_str(&esc(label));
+            for c in cells {
+                out.push(',');
+                out.push_str(&esc(c));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableBuilder::new("Demo", &["a", "long-header"]);
+        t.row("first", vec!["1".into(), "2".into()]);
+        t.row("second-longer", vec!["3.25".into(), "4".into()]);
+        let s = t.render();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("first"));
+        assert!(s.contains("long-header"));
+        // Every data line has the same width.
+        let lines: Vec<&str> = s.lines().skip(1).collect();
+        assert!(lines.len() >= 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = TableBuilder::new("x", &["v"]);
+        t.row("with,comma", vec!["say \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"with,comma\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        let mut t = TableBuilder::new("x", &["a", "b"]);
+        t.row("r", vec!["1".into()]);
+    }
+}

@@ -1,0 +1,98 @@
+//! Execution runtime: the bridge between the Rust coordinator and the
+//! AOT-compiled L2/L1 artifacts (DESIGN.md S7).
+//!
+//! * [`ExecBackend`] — the per-tile compute contract (plain MVM and the
+//!   fused two-tier-EC MVM).
+//! * [`native`] — pure-Rust f32 implementation mirroring the Pallas/jnp
+//!   oracle semantics exactly; used as the digital baseline, as a fallback
+//!   when artifacts are absent, and to cross-check PJRT numerics.
+//! * [`pjrt`] — loads `artifacts/*.hlo.txt` through the `xla` crate's PJRT
+//!   CPU client and executes them.  PJRT handles are not `Send`, so a
+//!   dedicated **runtime-service thread** owns the client and executables
+//!   and serves requests over a channel ([`service`]).
+
+pub mod native;
+pub mod pjrt;
+pub mod service;
+
+use std::sync::Arc;
+
+/// Inputs to a fused EC MVM over one tile (all row-major f32, square n).
+pub struct EcMvmRequest {
+    pub n: usize,
+    /// True operand `A` (n*n).
+    pub a: Vec<f32>,
+    /// Encoded `Ã` (n*n).
+    pub at: Vec<f32>,
+    /// True input `x` (n).
+    pub x: Vec<f32>,
+    /// Encoded `x̃` (n).
+    pub xt: Vec<f32>,
+    /// Encoded denoiser `M̃inv` (n*n).
+    pub minv: Vec<f32>,
+    /// Read-noise multipliers for the three measured products (n each).
+    pub nv: Vec<f32>,
+    pub nu: Vec<f32>,
+    pub ny: Vec<f32>,
+}
+
+/// Outputs of a fused EC MVM.
+#[derive(Clone, Debug)]
+pub struct EcMvmResponse {
+    /// Uncorrected measured product `Ãx̃ ∘ ny`.
+    pub y_raw: Vec<f32>,
+    /// First-order corrected `p`.
+    pub p: Vec<f32>,
+    /// Second-order denoised `y_corr`.
+    pub y_corr: Vec<f32>,
+}
+
+/// Per-tile compute backend.  `n` is always one of the artifact tile sizes;
+/// the virtualization layer pads to guarantee it.
+pub trait ExecBackend: Send + Sync {
+    /// Plain (no-EC) tile MVM: `y = Ã x̃`.  Operands are taken by value —
+    /// the hot path hands buffers straight to the runtime service with no
+    /// intermediate clone (EXPERIMENTS.md §Perf).
+    fn mvm(&self, n: usize, at: Vec<f32>, xt: Vec<f32>) -> Result<Vec<f32>, String>;
+
+    /// Fused two-tier EC MVM (see [`EcMvmRequest`]); request by value.
+    fn ec_mvm(&self, req: EcMvmRequest) -> Result<EcMvmResponse, String>;
+
+    /// Tile sizes this backend can execute.
+    fn tile_sizes(&self) -> Vec<usize>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pick the smallest supported tile size that fits `n` (or the largest
+/// available if `n` exceeds them all — the virtualization layer will then
+/// block-partition down to it).
+pub fn fit_tile(sizes: &[usize], n: usize) -> usize {
+    let mut sorted = sizes.to_vec();
+    sorted.sort_unstable();
+    for &s in &sorted {
+        if s >= n {
+            return s;
+        }
+    }
+    *sorted.last().expect("backend advertises no tile sizes")
+}
+
+/// Shared handle type used across the coordinator.
+pub type Backend = Arc<dyn ExecBackend>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_tile_picks_smallest_fitting() {
+        let sizes = vec![512, 32, 128, 64, 256, 1024];
+        assert_eq!(fit_tile(&sizes, 1), 32);
+        assert_eq!(fit_tile(&sizes, 32), 32);
+        assert_eq!(fit_tile(&sizes, 33), 64);
+        assert_eq!(fit_tile(&sizes, 66), 128);
+        assert_eq!(fit_tile(&sizes, 1024), 1024);
+        assert_eq!(fit_tile(&sizes, 5000), 1024);
+    }
+}

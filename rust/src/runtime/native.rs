@@ -1,0 +1,246 @@
+//! Pure-Rust f32 backend mirroring the L1/L2 artifact semantics.
+//!
+//! This is the *specification twin* of `python/compile/kernels/ref.py`: the
+//! same products, the same combine, the same f32 arithmetic.  It serves as
+//! the digital baseline in ablations, the fallback when `artifacts/` is
+//! absent, and the oracle the PJRT path is cross-checked against in
+//! integration tests.
+
+use super::{EcMvmRequest, EcMvmResponse, ExecBackend};
+
+/// Pure-Rust backend; supports any tile size.
+pub struct NativeBackend {
+    sizes: Vec<usize>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        // Advertise the standard artifact ladder so scheduling decisions are
+        // identical whichever backend runs.
+        NativeBackend {
+            sizes: vec![32, 64, 128, 256, 512, 1024],
+        }
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Row-major f32 matvec: `y[m] = a[m,n] @ x[n]`.
+///
+/// The inner loop is written over 4-wide accumulators so the compiler can
+/// keep independent dependency chains in registers (see EXPERIMENTS.md
+/// §Perf — this is the hot path for every tile MVM on the native backend).
+pub fn matvec_f32(m: usize, n: usize, a: &[f32], x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(x.len(), n);
+    debug_assert_eq!(y.len(), m);
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = &a[i * n..(i + 1) * n];
+        let mut acc = [0.0f32; 4];
+        let chunks = n / 4;
+        for k in 0..chunks {
+            let b = k * 4;
+            acc[0] += row[b] * x[b];
+            acc[1] += row[b + 1] * x[b + 1];
+            acc[2] += row[b + 2] * x[b + 2];
+            acc[3] += row[b + 3] * x[b + 3];
+        }
+        let mut tail = 0.0f32;
+        for k in chunks * 4..n {
+            tail += row[k] * x[k];
+        }
+        *yi = acc[0] + acc[1] + acc[2] + acc[3] + tail;
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn mvm(&self, n: usize, at: Vec<f32>, xt: Vec<f32>) -> Result<Vec<f32>, String> {
+        if at.len() != n * n || xt.len() != n {
+            return Err(format!(
+                "mvm shape mismatch: n={n}, |A|={}, |x|={}",
+                at.len(),
+                xt.len()
+            ));
+        }
+        let mut y = vec![0.0f32; n];
+        matvec_f32(n, n, &at, &xt, &mut y);
+        Ok(y)
+    }
+
+    fn ec_mvm(&self, req: EcMvmRequest) -> Result<EcMvmResponse, String> {
+        let n = req.n;
+        if req.a.len() != n * n
+            || req.at.len() != n * n
+            || req.minv.len() != n * n
+            || req.x.len() != n
+            || req.xt.len() != n
+            || req.nv.len() != n
+            || req.nu.len() != n
+            || req.ny.len() != n
+        {
+            return Err(format!("ec_mvm shape mismatch at n={n}"));
+        }
+        let mut v = vec![0.0f32; n]; // Ãx
+        let mut u = vec![0.0f32; n]; // Ax̃
+        let mut y = vec![0.0f32; n]; // Ãx̃
+        matvec_f32(n, n, &req.at, &req.x, &mut v);
+        matvec_f32(n, n, &req.a, &req.xt, &mut u);
+        matvec_f32(n, n, &req.at, &req.xt, &mut y);
+
+        // First-order combine with read noise (ec_combine kernel semantics).
+        let mut p = vec![0.0f32; n];
+        for i in 0..n {
+            p[i] = v[i] * req.nv[i] + u[i] * req.nu[i] - y[i] * req.ny[i];
+        }
+        // Second-order denoise: y_corr = M̃inv p.
+        let mut y_corr = vec![0.0f32; n];
+        matvec_f32(n, n, &req.minv, &p, &mut y_corr);
+        // Measured raw output.
+        let y_raw: Vec<f32> = y.iter().zip(&req.ny).map(|(a, b)| a * b).collect();
+        Ok(EcMvmResponse { y_raw, p, y_corr })
+    }
+
+    fn tile_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let n = 8;
+        let mut a = vec![0.0f32; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let x = rand_vec(n, 1);
+        let mut y = vec![0.0f32; n];
+        matvec_f32(n, n, &a, &x, &mut y);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn matvec_matches_naive() {
+        let (m, n) = (13, 29); // deliberately not multiples of 4
+        let a = rand_vec(m * n, 2);
+        let x = rand_vec(n, 3);
+        let mut y = vec![0.0f32; m];
+        matvec_f32(m, n, &a, &x, &mut y);
+        for i in 0..m {
+            let want: f32 = (0..n).map(|j| a[i * n + j] * x[j]).sum();
+            assert!((y[i] - want).abs() < 1e-4, "row {i}: {} vs {want}", y[i]);
+        }
+    }
+
+    #[test]
+    fn ec_mvm_zero_noise_reduces_to_exact() {
+        let n = 16;
+        let backend = NativeBackend::new();
+        let a = rand_vec(n * n, 4);
+        let x = rand_vec(n, 5);
+        let mut minv = vec![0.0f32; n * n];
+        for i in 0..n {
+            minv[i * n + i] = 1.0;
+        }
+        let ones = vec![1.0f32; n];
+        let req = EcMvmRequest {
+            n,
+            a: a.clone(),
+            at: a.clone(),
+            x: x.clone(),
+            xt: x.clone(),
+            minv,
+            nv: ones.clone(),
+            nu: ones.clone(),
+            ny: ones,
+        };
+        let resp = backend.ec_mvm(req).unwrap();
+        let want = backend.mvm(n, a.clone(), x.clone()).unwrap();
+        for i in 0..n {
+            assert!((resp.y_raw[i] - want[i]).abs() < 1e-5);
+            assert!((resp.p[i] - want[i]).abs() < 1e-4);
+            assert!((resp.y_corr[i] - want[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn ec_mvm_cancels_first_order() {
+        let n = 64;
+        let backend = NativeBackend::new();
+        let a = rand_vec(n * n, 6);
+        let x = rand_vec(n, 7);
+        let eps = 0.01f32;
+        // Distinct error magnitudes so the first-order terms do not cancel
+        // by construction (eps_a + eps_x != 0).
+        let at: Vec<f32> = a.iter().map(|v| v * (1.0 + eps)).collect();
+        let xt: Vec<f32> = x.iter().map(|v| v * (1.0 + 2.0 * eps)).collect();
+        let mut minv = vec![0.0f32; n * n];
+        for i in 0..n {
+            minv[i * n + i] = 1.0;
+        }
+        let ones = vec![1.0f32; n];
+        let req = EcMvmRequest {
+            n,
+            a: a.clone(),
+            at,
+            x: x.clone(),
+            xt,
+            minv,
+            nv: ones.clone(),
+            nu: ones.clone(),
+            ny: ones,
+        };
+        let resp = backend.ec_mvm(req).unwrap();
+        let b = backend.mvm(n, a.clone(), x.clone()).unwrap();
+        let rel = |got: &[f32]| {
+            let num: f32 = got
+                .iter()
+                .zip(&b)
+                .map(|(g, w)| (g - w) * (g - w))
+                .sum::<f32>()
+                .sqrt();
+            let den: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt();
+            num / den
+        };
+        let raw_err = rel(&resp.y_raw);
+        let p_err = rel(&resp.p);
+        // p = Ax(1 - eps^2): error ~1e-4 vs raw ~eps.
+        assert!(raw_err > 5e-3, "raw {raw_err}");
+        assert!(p_err < raw_err * 0.1, "p {p_err} raw {raw_err}");
+    }
+
+    #[test]
+    fn shape_errors_reported() {
+        let backend = NativeBackend::new();
+        assert!(backend.mvm(4, vec![0.0; 7], vec![0.0; 4]).is_err());
+        let req = EcMvmRequest {
+            n: 4,
+            a: vec![0.0; 16],
+            at: vec![0.0; 16],
+            x: vec![0.0; 3], // wrong
+            xt: vec![0.0; 4],
+            minv: vec![0.0; 16],
+            nv: vec![0.0; 4],
+            nu: vec![0.0; 4],
+            ny: vec![0.0; 4],
+        };
+        assert!(backend.ec_mvm(req).is_err());
+    }
+}

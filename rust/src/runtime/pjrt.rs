@@ -1,0 +1,200 @@
+//! PJRT engine: loads the AOT HLO-text artifacts and executes them on the
+//! `xla` crate's CPU client.
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit instruction
+//! ids that xla_extension 0.5.1's proto path rejects; the text parser
+//! reassigns ids — see python/compile/aot.py and /opt/xla-example).
+//!
+//! PJRT handles are not `Send`/`Sync`, so [`PjrtEngine`] must stay on one
+//! thread; [`super::service`] wraps it in the runtime-service thread that
+//! the rest of the system talks to.
+
+use super::{EcMvmRequest, EcMvmResponse};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Artifact kinds produced by `make artifacts`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    Mvm,
+    EcMvm,
+}
+
+impl ArtifactKind {
+    fn prefix(self) -> &'static str {
+        match self {
+            ArtifactKind::Mvm => "mvm",
+            ArtifactKind::EcMvm => "ec_mvm",
+        }
+    }
+}
+
+/// Single-threaded PJRT execution engine.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    exes: HashMap<(ArtifactKind, usize), xla::PjRtLoadedExecutable>,
+    sizes: Vec<usize>,
+}
+
+impl PjrtEngine {
+    /// Load every artifact listed in `<dir>/manifest.json`, compiling each
+    /// on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<PjrtEngine, String> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| format!("cannot read {}: {e}", manifest_path.display()))?;
+        let manifest = Json::parse(&text).map_err(|e| format!("bad manifest: {e}"))?;
+        let sizes: Vec<usize> = manifest
+            .get("tile_sizes")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing tile_sizes")?
+            .iter()
+            .filter_map(|v| v.as_usize())
+            .collect();
+        if sizes.is_empty() {
+            return Err("manifest lists no tile sizes".into());
+        }
+
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        let mut exes = HashMap::new();
+        let artifacts = manifest
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .ok_or("manifest missing artifacts")?;
+        for (key, meta) in artifacts {
+            let file = meta
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| format!("artifact {key} missing file"))?;
+            let tile = meta
+                .get("tile")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| format!("artifact {key} missing tile"))?;
+            let kind = if key.starts_with("ec_mvm") {
+                ArtifactKind::EcMvm
+            } else if key.starts_with("mvm") {
+                ArtifactKind::Mvm
+            } else {
+                continue; // unknown artifact kinds are ignored
+            };
+            let path: PathBuf = dir.join(file);
+            let exe = compile_hlo_text(&client, &path)?;
+            exes.insert((kind, tile), exe);
+        }
+        crate::log_info!(
+            "runtime",
+            "loaded {} artifacts from {} (tiles {:?})",
+            exes.len(),
+            dir.display(),
+            sizes
+        );
+        Ok(PjrtEngine {
+            client,
+            exes,
+            sizes,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn tile_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    fn exe(&self, kind: ArtifactKind, n: usize) -> Result<&xla::PjRtLoadedExecutable, String> {
+        self.exes.get(&(kind, n)).ok_or_else(|| {
+            format!(
+                "no {}_{n} artifact loaded (available tiles: {:?})",
+                kind.prefix(),
+                self.sizes
+            )
+        })
+    }
+
+    /// Execute the plain `mvm_{n}` artifact.
+    pub fn mvm(&self, n: usize, at: &[f32], xt: &[f32]) -> Result<Vec<f32>, String> {
+        if at.len() != n * n || xt.len() != n {
+            return Err(format!("mvm shape mismatch at n={n}"));
+        }
+        let exe = self.exe(ArtifactKind::Mvm, n)?;
+        let a_lit = mat_literal(at, n, n)?;
+        let x_lit = mat_literal(xt, n, 1)?;
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit, x_lit])
+            .map_err(|e| format!("mvm_{n} execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("mvm_{n} fetch: {e}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| format!("mvm_{n} untuple: {e}"))?;
+        out.to_vec::<f32>().map_err(|e| format!("mvm_{n} read: {e}"))
+    }
+
+    /// Execute the fused `ec_mvm_{n}` artifact.
+    pub fn ec_mvm(&self, req: &EcMvmRequest) -> Result<EcMvmResponse, String> {
+        let n = req.n;
+        let exe = self.exe(ArtifactKind::EcMvm, n)?;
+        let args = [
+            mat_literal(&req.a, n, n)?,
+            mat_literal(&req.at, n, n)?,
+            mat_literal(&req.x, n, 1)?,
+            mat_literal(&req.xt, n, 1)?,
+            mat_literal(&req.minv, n, n)?,
+            mat_literal(&req.nv, n, 1)?,
+            mat_literal(&req.nu, n, 1)?,
+            mat_literal(&req.ny, n, 1)?,
+        ];
+        let result = exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| format!("ec_mvm_{n} execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("ec_mvm_{n} fetch: {e}"))?;
+        let (y_raw, p, y_corr) = result
+            .to_tuple3()
+            .map_err(|e| format!("ec_mvm_{n} untuple: {e}"))?;
+        Ok(EcMvmResponse {
+            y_raw: y_raw
+                .to_vec::<f32>()
+                .map_err(|e| format!("ec_mvm_{n} read y_raw: {e}"))?,
+            p: p.to_vec::<f32>()
+                .map_err(|e| format!("ec_mvm_{n} read p: {e}"))?,
+            y_corr: y_corr
+                .to_vec::<f32>()
+                .map_err(|e| format!("ec_mvm_{n} read y_corr: {e}"))?,
+        })
+    }
+}
+
+fn compile_hlo_text(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable, String> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| format!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| format!("compile {}: {e}", path.display()))
+}
+
+fn mat_literal(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal, String> {
+    if data.len() != rows * cols {
+        return Err(format!(
+            "literal shape mismatch: {} elements for {rows}x{cols}",
+            data.len()
+        ));
+    }
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| format!("reshape literal: {e}"))
+}
+
+/// Default artifact directory: `$MELISO_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("MELISO_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,126 @@
+//! Runtime-service thread: makes the single-threaded [`PjrtEngine`]
+//! available behind the `Send + Sync` [`ExecBackend`] interface.
+//!
+//! PJRT client/executable handles are `!Send`, so a dedicated thread owns
+//! the engine and serves requests over an mpsc channel; callers block on a
+//! per-request reply channel.  On a multi-core host this serializes tile
+//! executions per service — matching the paper's model of an MCA executing
+//! one analog MVM at a time — while the coordinator's worker pool still
+//! overlaps encode (Rust) with execute (PJRT).
+
+use super::pjrt::PjrtEngine;
+use super::{EcMvmRequest, EcMvmResponse, ExecBackend};
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+enum Request {
+    Mvm {
+        n: usize,
+        at: Vec<f32>,
+        xt: Vec<f32>,
+        reply: mpsc::Sender<Result<Vec<f32>, String>>,
+    },
+    EcMvm {
+        req: Box<EcMvmRequest>,
+        reply: mpsc::Sender<Result<EcMvmResponse, String>>,
+    },
+    Shutdown,
+}
+
+/// `ExecBackend` implementation backed by the runtime-service thread.
+pub struct PjrtBackend {
+    tx: Mutex<mpsc::Sender<Request>>,
+    sizes: Vec<usize>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl PjrtBackend {
+    /// Start the service thread and load artifacts from `dir`.
+    pub fn start(dir: &Path) -> Result<PjrtBackend, String> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<Vec<usize>, String>>();
+        let dir = dir.to_path_buf();
+        let handle = std::thread::Builder::new()
+            .name("meliso-runtime".into())
+            .spawn(move || {
+                let engine = match PjrtEngine::load(&dir) {
+                    Ok(engine) => {
+                        let _ = init_tx.send(Ok(engine.tile_sizes()));
+                        engine
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Mvm { n, at, xt, reply } => {
+                            let _ = reply.send(engine.mvm(n, &at, &xt));
+                        }
+                        Request::EcMvm { req, reply } => {
+                            let _ = reply.send(engine.ec_mvm(&req));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| format!("spawn runtime service: {e}"))?;
+        let sizes = init_rx
+            .recv()
+            .map_err(|_| "runtime service died during init".to_string())??;
+        Ok(PjrtBackend {
+            tx: Mutex::new(tx),
+            sizes,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+
+    fn send(&self, req: Request) -> Result<(), String> {
+        self.tx
+            .lock()
+            .map_err(|_| "runtime service mutex poisoned".to_string())?
+            .send(req)
+            .map_err(|_| "runtime service gone".to_string())
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn mvm(&self, n: usize, at: Vec<f32>, xt: Vec<f32>) -> Result<Vec<f32>, String> {
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::Mvm { n, at, xt, reply })?;
+        rx.recv().map_err(|_| "runtime service dropped reply".to_string())?
+    }
+
+    fn ec_mvm(&self, req: EcMvmRequest) -> Result<EcMvmResponse, String> {
+        // Zero-copy handoff: the request buffers move straight into the
+        // service thread (boxed so the channel payload stays small).
+        let (reply, rx) = mpsc::channel();
+        self.send(Request::EcMvm {
+            req: Box::new(req),
+            reply,
+        })?;
+        rx.recv().map_err(|_| "runtime service dropped reply".to_string())?
+    }
+
+    fn tile_sizes(&self) -> Vec<usize> {
+        self.sizes.clone()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        let _ = self.send(Request::Shutdown);
+        if let Ok(mut h) = self.handle.lock() {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}

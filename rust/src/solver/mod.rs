@@ -1,0 +1,200 @@
+//! Public solver API (the MelisoPy-equivalent front door, DESIGN.md S11).
+//!
+//! ```no_run
+//! use meliso::prelude::*;
+//!
+//! let a = meliso::matrices::registry::build("add32").unwrap();
+//! let x = meliso::linalg::Vector::standard_normal(a.ncols(), 1);
+//! let solver = Meliso::new(SystemConfig::tiles_8x8(1024),
+//!                          SolveOptions::default()).unwrap();
+//! let report = solver.solve_source(a.as_ref(), &x).unwrap();
+//! println!("{}", report.to_json().pretty());
+//! ```
+
+use crate::config::{BackendKind, SolveOptions, SystemConfig};
+use crate::coordinator;
+use crate::linalg::{Matrix, Vector};
+use crate::matrices::{DenseSource, MatrixSource};
+use crate::metrics::SolveReport;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::pjrt::default_artifact_dir;
+use crate::runtime::service::PjrtBackend;
+use crate::runtime::Backend;
+use std::sync::Arc;
+
+/// The MELISO+ solver: a configured multi-MCA system plus solve options.
+pub struct Meliso {
+    config: SystemConfig,
+    opts: SolveOptions,
+    backend: Backend,
+}
+
+impl Meliso {
+    /// Build a solver; starts the PJRT runtime service when requested
+    /// (set `MELISO_ARTIFACTS` to point elsewhere than `./artifacts`).
+    pub fn new(config: SystemConfig, opts: SolveOptions) -> Result<Meliso, String> {
+        let backend: Backend = match opts.backend {
+            BackendKind::Native => Arc::new(NativeBackend::new()),
+            BackendKind::Pjrt => {
+                let dir = default_artifact_dir();
+                match PjrtBackend::start(&dir) {
+                    Ok(b) => Arc::new(b),
+                    Err(e) => {
+                        return Err(format!(
+                            "failed to start PJRT runtime from {} ({e}); run `make artifacts` \
+                             or use the native backend",
+                            dir.display()
+                        ))
+                    }
+                }
+            }
+        };
+        Ok(Meliso {
+            config,
+            opts,
+            backend,
+        })
+    }
+
+    /// Build with an explicit backend (tests, ablations).
+    pub fn with_backend(config: SystemConfig, opts: SolveOptions, backend: Backend) -> Meliso {
+        Meliso {
+            config,
+            opts,
+            backend,
+        }
+    }
+
+    pub fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    pub fn config(&self) -> &SystemConfig {
+        &self.config
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Override solve options (builder style).
+    pub fn reconfigure(mut self, opts: SolveOptions) -> Meliso {
+        self.opts = opts;
+        self
+    }
+
+    /// Solve `Ax = b` in-memory for a streamable operand.
+    pub fn solve_source(
+        &self,
+        source: &dyn MatrixSource,
+        x: &Vector,
+    ) -> Result<SolveReport, String> {
+        coordinator::solve_distributed(source, x, &self.config, &self.opts, self.backend.clone())
+    }
+
+    /// Convenience for dense in-memory operands.
+    pub fn solve(&self, a: &Matrix, x: &Vector) -> Result<SolveReport, String> {
+        let src = DenseSource::new(a.clone());
+        self.solve_source(&src, x)
+    }
+
+    /// Run `reps` independent replications (fresh seeds) and return all
+    /// reports — the paper averages 100 replications per cell of Table 1.
+    pub fn replicate(
+        &self,
+        source: &dyn MatrixSource,
+        x: &Vector,
+        reps: usize,
+    ) -> Result<Vec<SolveReport>, String> {
+        let mut reports = Vec::with_capacity(reps);
+        for r in 0..reps {
+            let mut opts = self.opts.clone();
+            opts.seed = self
+                .opts
+                .seed
+                .wrapping_add((r as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let report = coordinator::solve_distributed(
+                source,
+                x,
+                &self.config,
+                &opts,
+                self.backend.clone(),
+            )?;
+            reports.push(report);
+        }
+        Ok(reports)
+    }
+}
+
+/// Summary statistics over replications (mean of each reported metric).
+pub struct ReplicationSummary {
+    pub reps: usize,
+    pub rel_err_l2: f64,
+    pub rel_err_inf: f64,
+    pub ew_mean: f64,
+    pub lw_mean: f64,
+}
+
+impl ReplicationSummary {
+    pub fn from_reports(reports: &[SolveReport]) -> ReplicationSummary {
+        let n = reports.len().max(1) as f64;
+        ReplicationSummary {
+            reps: reports.len(),
+            rel_err_l2: reports.iter().map(|r| r.rel_err_l2).sum::<f64>() / n,
+            rel_err_inf: reports.iter().map(|r| r.rel_err_inf).sum::<f64>() / n,
+            ew_mean: reports.iter().map(|r| r.ew_mean).sum::<f64>() / n,
+            lw_mean: reports.iter().map(|r| r.lw_mean).sum::<f64>() / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::materials::Material;
+
+    fn native_solver(config: SystemConfig, opts: SolveOptions) -> Meliso {
+        Meliso::with_backend(config, opts, Arc::new(NativeBackend::new()))
+    }
+
+    #[test]
+    fn solve_dense_roundtrip() {
+        let a = Matrix::standard_normal(64, 64, 1);
+        let x = Vector::standard_normal(64, 2);
+        let solver = native_solver(
+            SystemConfig::single_mca(64),
+            SolveOptions::default().with_device(Material::EpiRam),
+        );
+        let report = solver.solve(&a, &x).unwrap();
+        assert!(report.rel_err_l2 < 0.1);
+        assert_eq!(report.y.len(), 64);
+    }
+
+    #[test]
+    fn replicate_varies_seeds() {
+        let a = Matrix::standard_normal(32, 32, 3);
+        let x = Vector::standard_normal(32, 4);
+        let solver = native_solver(
+            SystemConfig::single_mca(32),
+            SolveOptions::default().with_device(Material::TaOxHfOx),
+        );
+        let src = DenseSource::new(a);
+        let reports = solver.replicate(&src, &x, 3).unwrap();
+        assert_eq!(reports.len(), 3);
+        // Different seeds -> different noise draws -> different errors.
+        assert_ne!(reports[0].rel_err_l2, reports[1].rel_err_l2);
+        let summary = ReplicationSummary::from_reports(&reports);
+        assert!(summary.rel_err_l2 > 0.0);
+        assert_eq!(summary.reps, 3);
+    }
+
+    #[test]
+    fn pjrt_missing_artifacts_is_clean_error() {
+        std::env::set_var("MELISO_ARTIFACTS", "/nonexistent-dir");
+        let r = Meliso::new(SystemConfig::single_mca(32), SolveOptions::default());
+        std::env::remove_var("MELISO_ARTIFACTS");
+        assert!(r.is_err());
+        let msg = r.err().unwrap();
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Mini property-based testing framework (proptest stand-in, DESIGN.md S14).
+//!
+//! A [`PropRunner`] drives a closure over many generated cases from a
+//! deterministic seed; on failure it reports the case index and seed so the
+//! exact case replays.  Generation helpers cover the domains the MELISO+
+//! invariants quantify over (dims, scales, materials, geometries).
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+pub struct PropRunner {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropRunner {
+    fn default() -> Self {
+        PropRunner {
+            cases: 32,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl PropRunner {
+    pub fn new(cases: usize, seed: u64) -> PropRunner {
+        PropRunner { cases, seed }
+    }
+
+    /// Run `property` over `cases` generated inputs.  The closure receives
+    /// a per-case RNG and the case index; it returns `Err(msg)` to fail.
+    ///
+    /// Panics with a replayable diagnostic on the first failure.
+    pub fn run<F>(&self, name: &str, mut property: F)
+    where
+        F: FnMut(&mut Rng, usize) -> Result<(), String>,
+    {
+        let mut root = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let mut case_rng = root.fork(case as u64);
+            if let Err(msg) = property(&mut case_rng, case) {
+                panic!(
+                    "property {name:?} failed at case {case}/{} (seed {:#x}): {msg}",
+                    self.cases, self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Generation helpers.
+pub mod gen {
+    use crate::device::materials::Material;
+    use crate::linalg::{Matrix, Vector};
+    use crate::util::rng::Rng;
+
+    /// Uniform choice from a slice.
+    pub fn choice<'a, T>(rng: &mut Rng, items: &'a [T]) -> &'a T {
+        &items[rng.below(items.len())]
+    }
+
+    /// Dimension that is a multiple of `step`, in `[step, max]`.
+    pub fn dim_multiple(rng: &mut Rng, step: usize, max: usize) -> usize {
+        let k = 1 + rng.below(max / step);
+        k * step
+    }
+
+    /// Random material.
+    pub fn material(rng: &mut Rng) -> Material {
+        *choice(rng, &Material::ALL)
+    }
+
+    /// Matrix with entries scaled by a magnitude drawn from a log-uniform
+    /// range (exercises the conductance-scaling logic).
+    pub fn scaled_matrix(rng: &mut Rng, n: usize) -> Matrix {
+        let log_scale = rng.uniform_range(-3.0, 4.0);
+        let scale = 10f64.powf(log_scale);
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                m.set(i, j, scale * rng.normal());
+            }
+        }
+        m
+    }
+
+    /// Standard-normal vector.
+    pub fn vector(rng: &mut Rng, n: usize) -> Vector {
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v);
+        Vector::from_vec(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_passes_trivial_property() {
+        PropRunner::new(16, 1).run("trivial", |rng, _| {
+            let u = rng.uniform();
+            if (0.0..1.0).contains(&u) {
+                Ok(())
+            } else {
+                Err(format!("uniform out of range: {u}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed at case 0")]
+    fn runner_reports_failures() {
+        PropRunner::new(4, 2).run("always-fails", |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let collect = |seed| {
+            let mut root = Rng::new(seed);
+            let mut rng = root.fork(0);
+            gen::scaled_matrix(&mut rng, 4).data().to_vec()
+        };
+        assert_eq!(collect(5), collect(5));
+        assert_ne!(collect(5), collect(6));
+    }
+
+    #[test]
+    fn dim_multiple_in_range() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let d = gen::dim_multiple(&mut rng, 8, 64);
+            assert!(d % 8 == 0 && (8..=64).contains(&d));
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Tiny leveled logger (stderr), controlled by `MELISO_LOG` (error|warn|info|debug|trace).
+//!
+//! Replaces the unvendored `log`/`tracing` stacks; the coordinator's event
+//! loop and runtime service use it for operational visibility without ever
+//! touching the hot path when the level is disabled.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_env(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+
+fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != u8::MAX {
+        // SAFETY-free decode: values are only ever stored from Level.
+        return match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        };
+    }
+    let lv = std::env::var("MELISO_LOG")
+        .map(|s| Level::from_env(&s))
+        .unwrap_or(Level::Warn);
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+    lv
+}
+
+/// Override the level programmatically (CLI `-v` flags).
+pub fn set_level(lv: Level) {
+    LEVEL.store(lv as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lv: Level) -> bool {
+    lv <= level()
+}
+
+pub fn log(lv: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lv) {
+        return;
+    }
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    eprintln!(
+        "[{:>10}.{:03} {} {}] {}",
+        t.as_secs(),
+        t.subsec_millis(),
+        lv.tag(),
+        target,
+        msg
+    );
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Error);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Debug);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Warn);
+    }
+
+    #[test]
+    fn from_env_parses() {
+        assert_eq!(Level::from_env("TRACE"), Level::Trace);
+        assert_eq!(Level::from_env("warning"), Level::Warn);
+        assert_eq!(Level::from_env("bogus"), Level::Info);
+    }
+}

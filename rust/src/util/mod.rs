@@ -1,0 +1,63 @@
+//! In-house substrate utilities.
+//!
+//! The deployment image vendors only the `xla` crate closure, so the usual
+//! ecosystem crates (`rand`, `serde_json`, `toml`, `log`) are reimplemented
+//! here as small, well-tested substrates (DESIGN.md §3, S1/S2).
+
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod toml;
+
+/// Format a float in short scientific notation, matching the paper's tables
+/// (e.g. `5.36E-08`).
+pub fn sci(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if (1e-3..1e4).contains(&a) {
+        format!("{v:.4}")
+    } else {
+        format!("{v:.2E}")
+    }
+}
+
+/// Integer ceil-div.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    assert!(b > 0, "ceil_div by zero");
+    a.div_ceil(b)
+}
+
+/// Round `n` up to the next multiple of `m`.
+pub fn round_up(n: usize, m: usize) -> usize {
+    ceil_div(n, m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(66, 128), 128);
+        assert_eq!(round_up(128, 128), 128);
+        assert_eq!(round_up(129, 128), 256);
+        assert_eq!(round_up(0, 32), 0);
+    }
+
+    #[test]
+    fn sci_formats() {
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(0.0223), "0.0223");
+        assert_eq!(sci(5.36e-8), "5.36E-8");
+    }
+}

@@ -1,0 +1,219 @@
+//! Minimal TOML substrate for run configuration files.
+//!
+//! Supports the subset MELISO+ configs need: `[section]` / `[a.b]` headers,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays.
+//! Keys are flattened to `section.key` dotted paths.
+
+use std::collections::BTreeMap;
+
+/// A TOML scalar/array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+}
+
+/// A parsed TOML document: dotted-path -> value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    /// Parse a document; returns dotted-path entries.
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let header = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if header.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                prefix = header.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            let path = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            doc.entries.insert(path, value);
+        }
+        Ok(doc)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str) -> Result<TomlValue, String> {
+    let t = text.trim();
+    if t.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = t.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(
+            inner.replace("\\\"", "\"").replace("\\\\", "\\"),
+        ));
+    }
+    if let Some(rest) = t.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                if part.trim().is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match t {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = t.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = t.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(format!("unrecognized value {t:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let doc = TomlDoc::parse(
+            r#"
+            # MELISO+ run config
+            seed = 42
+            device = "taox-hfox"   # material
+            ec = true
+            lambda = 1e-12
+
+            [system]
+            tile_rows = 8
+            tile_cols = 8
+            cell_size = 1024
+            sizes = [32, 64, 128]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("seed").unwrap().as_i64(), Some(42));
+        assert_eq!(doc.get("device").unwrap().as_str(), Some("taox-hfox"));
+        assert_eq!(doc.get("ec").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("lambda").unwrap().as_f64(), Some(1e-12));
+        assert_eq!(doc.get("system.cell_size").unwrap().as_usize(), Some(1024));
+        let arr = match doc.get("system.sizes").unwrap() {
+            TomlValue::Arr(a) => a,
+            _ => panic!(),
+        };
+        assert_eq!(arr.len(), 3);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.5\n").unwrap();
+        assert_eq!(doc.get("a").unwrap(), &TomlValue::Int(3));
+        assert_eq!(doc.get("b").unwrap(), &TomlValue::Float(3.5));
+        assert_eq!(doc.get("a").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(doc.get("name").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        let err = TomlDoc::parse("x = 1\noops\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn empty_and_comment_only() {
+        let doc = TomlDoc::parse("\n# nothing\n\n").unwrap();
+        assert!(doc.entries.is_empty());
+    }
+}

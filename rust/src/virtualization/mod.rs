@@ -1,0 +1,247 @@
+//! Virtualization layer (paper §4.4, Algorithms 3/7/8/9 — DESIGN.md S9).
+//!
+//! Maps an arbitrarily-sized operand onto a fixed `R×C` array of MCAs with
+//! `r×c` cells each:
+//!
+//! * **Dimension matching** — `zeroPadding` semantics: every chunk is
+//!   extracted zero-padded to the full cell geometry (ideal, non-ideal and
+//!   large-scale cases fall out of the same path).
+//! * **Chunk partitioning** — `blockPartition` + `generateMatChunksSet`:
+//!   the operand is cut into an `⌈m/r⌉ × ⌈n/c⌉` grid of chunks; chunk
+//!   `(i, j)` is assigned to MCA `(i mod R, j mod C)`.  When the problem
+//!   exceeds the physical capacity, MCAs are *reassigned* — the
+//!   reassignment count is the paper's Fig 5 normalization factor.
+//! * `generateVecChunksSet`: the input vector splits along the same column
+//!   grid.
+
+use crate::util::ceil_div;
+
+/// Physical geometry of the multi-MCA system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SystemGeometry {
+    /// MCA tile grid (the paper's R × C, R ≥ C).
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    /// Cells per MCA (the paper's r × c; artifacts require square r = c).
+    pub cell_size: usize,
+}
+
+impl SystemGeometry {
+    pub fn new(tile_rows: usize, tile_cols: usize, cell_size: usize) -> SystemGeometry {
+        assert!(tile_rows > 0 && tile_cols > 0 && cell_size > 0);
+        SystemGeometry {
+            tile_rows,
+            tile_cols,
+            cell_size,
+        }
+    }
+
+    /// Total MCA count.
+    pub fn mcas(&self) -> usize {
+        self.tile_rows * self.tile_cols
+    }
+
+    /// Physical capacity (rows, cols) = (R·r, C·c).
+    pub fn capacity(&self) -> (usize, usize) {
+        (
+            self.tile_rows * self.cell_size,
+            self.tile_cols * self.cell_size,
+        )
+    }
+}
+
+/// One chunk of the partitioned operand and its physical assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkSpec {
+    /// Chunk grid coordinates.
+    pub block_row: usize,
+    pub block_col: usize,
+    /// Operand coordinates of the chunk origin.
+    pub row0: usize,
+    pub col0: usize,
+    /// Assigned MCA (tile coordinates and flat index).
+    pub mca_row: usize,
+    pub mca_col: usize,
+    pub mca_index: usize,
+}
+
+/// The full partition/assignment plan for one operand.
+#[derive(Clone, Debug)]
+pub struct ChunkPlan {
+    pub geometry: SystemGeometry,
+    /// Operand dimensions.
+    pub m: usize,
+    pub n: usize,
+    /// Chunk grid dimensions.
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+}
+
+impl ChunkPlan {
+    /// Plan the partition of an `m × n` operand.
+    pub fn new(geometry: SystemGeometry, m: usize, n: usize) -> ChunkPlan {
+        assert!(m > 0 && n > 0);
+        let r = geometry.cell_size;
+        ChunkPlan {
+            geometry,
+            m,
+            n,
+            grid_rows: ceil_div(m, r),
+            grid_cols: ceil_div(n, r),
+        }
+    }
+
+    pub fn total_chunks(&self) -> usize {
+        self.grid_rows * self.grid_cols
+    }
+
+    /// The chunk at grid position (i, j).
+    pub fn chunk(&self, i: usize, j: usize) -> ChunkSpec {
+        debug_assert!(i < self.grid_rows && j < self.grid_cols);
+        let (rr, cc) = (self.geometry.tile_rows, self.geometry.tile_cols);
+        let (mi, mj) = (i % rr, j % cc);
+        ChunkSpec {
+            block_row: i,
+            block_col: j,
+            row0: i * self.geometry.cell_size,
+            col0: j * self.geometry.cell_size,
+            mca_row: mi,
+            mca_col: mj,
+            mca_index: mi * cc + mj,
+        }
+    }
+
+    /// Iterate chunks in deterministic row-major order.
+    pub fn chunks(&self) -> impl Iterator<Item = ChunkSpec> + '_ {
+        (0..self.grid_rows)
+            .flat_map(move |i| (0..self.grid_cols).map(move |j| self.chunk(i, j)))
+    }
+
+    /// Number of chunk assignments each MCA receives.
+    pub fn assignments_per_mca(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.geometry.mcas()];
+        for c in self.chunks() {
+            counts[c.mca_index] += 1;
+        }
+        counts
+    }
+
+    /// The paper's Fig 5 normalization factor: the (max) number of times a
+    /// single MCA must be reassigned to cover the operand.
+    pub fn normalization_factor(&self) -> usize {
+        self.assignments_per_mca().into_iter().max().unwrap_or(1).max(1)
+    }
+
+    /// `true` when the operand fits the physical capacity without
+    /// reassignment (the paper's "ideal"/"non-ideal" cases).
+    pub fn fits_physically(&self) -> bool {
+        self.normalization_factor() == 1
+    }
+
+    /// Per-dimension reassignment count — the paper's Fig 5 normalization
+    /// constant ("each MCA is assigned approximately two (2) times" for
+    /// Dubcova1 on an 8×1024 system counts the row direction).
+    pub fn row_reassignments(&self) -> usize {
+        ceil_div(self.grid_rows, self.geometry.tile_rows).max(1)
+    }
+
+    /// Padded operand dimensions after `zeroPadding` (Alg. 7).
+    pub fn padded_dims(&self) -> (usize, usize) {
+        (
+            self.grid_rows * self.geometry.cell_size,
+            self.grid_cols * self.geometry.cell_size,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_case_one_chunk_per_mca() {
+        // 8x8 tiles of 1024² cells, operand exactly 8192².
+        let g = SystemGeometry::new(8, 8, 1024);
+        let plan = ChunkPlan::new(g, 8192, 8192);
+        assert_eq!(plan.total_chunks(), 64);
+        assert!(plan.fits_physically());
+        assert_eq!(plan.normalization_factor(), 1);
+        let counts = plan.assignments_per_mca();
+        assert!(counts.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn non_ideal_case_pads() {
+        // 66² on one 128² MCA: single chunk, zero-padded.
+        let g = SystemGeometry::new(1, 1, 128);
+        let plan = ChunkPlan::new(g, 66, 66);
+        assert_eq!(plan.total_chunks(), 1);
+        assert_eq!(plan.padded_dims(), (128, 128));
+        assert!(plan.fits_physically());
+    }
+
+    #[test]
+    fn large_scale_reassigns() {
+        // The paper's example: Dubcova1 (16129²) on 8×8×1024² ->
+        // each MCA assigned ~2 times -> normalization factor 2.
+        let g = SystemGeometry::new(8, 8, 1024);
+        let plan = ChunkPlan::new(g, 16129, 16129);
+        assert_eq!(plan.grid_rows, 16);
+        assert_eq!(plan.normalization_factor(), 4); // 16x16 grid on 8x8 tiles
+                                                    // NOTE: the paper counts row-direction reassignment (~2); both are
+                                                    // exposed — benches use the row factor, see `row_reassignments`.
+    }
+
+    #[test]
+    fn weak_scaling_reassignment_counts() {
+        // add32 (4960²), 8×8 tiles, cell 32² -> 155² chunks over 64 MCAs.
+        let g = SystemGeometry::new(8, 8, 32);
+        let plan = ChunkPlan::new(g, 4960, 4960);
+        assert_eq!(plan.grid_rows, 155);
+        assert!(!plan.fits_physically());
+        // With cell 1024 the same operand fits physically (5x5 grid <= 8x8).
+        let g = SystemGeometry::new(8, 8, 1024);
+        let plan = ChunkPlan::new(g, 4960, 4960);
+        assert!(plan.fits_physically());
+    }
+
+    #[test]
+    fn chunk_assignment_round_robin() {
+        let g = SystemGeometry::new(2, 2, 32);
+        let plan = ChunkPlan::new(g, 128, 128); // 4x4 grid on 2x2 tiles
+        let c = plan.chunk(3, 2);
+        assert_eq!((c.mca_row, c.mca_col), (1, 0));
+        assert_eq!(c.mca_index, 2);
+        assert_eq!((c.row0, c.col0), (96, 64));
+        let counts = plan.assignments_per_mca();
+        assert_eq!(counts, vec![4, 4, 4, 4]);
+    }
+
+    #[test]
+    fn chunks_iterate_in_row_major_order() {
+        let g = SystemGeometry::new(2, 2, 16);
+        let plan = ChunkPlan::new(g, 40, 40);
+        let order: Vec<(usize, usize)> = plan.chunks().map(|c| (c.block_row, c.block_col)).collect();
+        assert_eq!(
+            order,
+            vec![
+                (0, 0),
+                (0, 1),
+                (0, 2),
+                (1, 0),
+                (1, 1),
+                (1, 2),
+                (2, 0),
+                (2, 1),
+                (2, 2)
+            ]
+        );
+    }
+
+    #[test]
+    fn capacity_math() {
+        let g = SystemGeometry::new(8, 8, 1024);
+        assert_eq!(g.capacity(), (8192, 8192));
+        assert_eq!(g.mcas(), 64);
+    }
+}

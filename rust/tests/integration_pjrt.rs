@@ -1,0 +1,137 @@
+//! PJRT integration: the artifact path must agree with the native twin.
+//!
+//! These tests require `artifacts/` (run `make artifacts` first); they
+//! skip gracefully when artifacts are missing so `cargo test` works in a
+//! fresh checkout.
+
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::runtime::pjrt::default_artifact_dir;
+use meliso::runtime::service::PjrtBackend;
+use meliso::runtime::{Backend, EcMvmRequest, ExecBackend};
+use meliso::util::rng::Rng;
+use std::sync::Arc;
+
+fn pjrt() -> Option<Arc<PjrtBackend>> {
+    match PjrtBackend::start(&default_artifact_dir()) {
+        Ok(b) => Some(Arc::new(b)),
+        Err(e) => {
+            eprintln!("skipping PJRT test: {e}");
+            None
+        }
+    }
+}
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn pjrt_mvm_matches_native() {
+    let Some(backend) = pjrt() else { return };
+    let native = NativeBackend::new();
+    for n in [32usize, 64, 128, 256] {
+        let a = rand_vec(n * n, n as u64);
+        let x = rand_vec(n, n as u64 + 1);
+        let got = backend.mvm(n, a.clone(), x.clone()).unwrap();
+        let want = native.mvm(n, a, x).unwrap();
+        for i in 0..n {
+            let tol = 1e-3 * (1.0 + want[i].abs());
+            assert!(
+                (got[i] - want[i]).abs() < tol,
+                "n={n} i={i}: pjrt {} vs native {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_ec_mvm_matches_native() {
+    let Some(backend) = pjrt() else { return };
+    let native = NativeBackend::new();
+    let n = 128;
+    let a = rand_vec(n * n, 1);
+    let at: Vec<f32> = a.iter().map(|v| v * 1.013).collect();
+    let x = rand_vec(n, 2);
+    let xt: Vec<f32> = x.iter().map(|v| v * 0.984).collect();
+    let mut minv = vec![0.0f32; n * n];
+    for i in 0..n {
+        minv[i * n + i] = 1.0;
+    }
+    let nv = rand_vec(n, 3).iter().map(|v| 1.0 + 0.001 * v).collect::<Vec<_>>();
+    let nu = rand_vec(n, 4).iter().map(|v| 1.0 + 0.001 * v).collect::<Vec<_>>();
+    let ny = rand_vec(n, 5).iter().map(|v| 1.0 + 0.001 * v).collect::<Vec<_>>();
+    let req = EcMvmRequest {
+        n,
+        a,
+        at,
+        x,
+        xt,
+        minv,
+        nv,
+        nu,
+        ny,
+    };
+    let req2 = EcMvmRequest {
+        n: req.n,
+        a: req.a.clone(),
+        at: req.at.clone(),
+        x: req.x.clone(),
+        xt: req.xt.clone(),
+        minv: req.minv.clone(),
+        nv: req.nv.clone(),
+        nu: req.nu.clone(),
+        ny: req.ny.clone(),
+    };
+    let got = backend.ec_mvm(req).unwrap();
+    let want = native.ec_mvm(req2).unwrap();
+    for (g, w) in [(&got.y_raw, &want.y_raw), (&got.p, &want.p), (&got.y_corr, &want.y_corr)] {
+        for i in 0..n {
+            let tol = 2e-3 * (1.0 + w[i].abs());
+            assert!((g[i] - w[i]).abs() < tol, "i={i}: {} vs {}", g[i], w[i]);
+        }
+    }
+}
+
+#[test]
+fn pjrt_full_solve_matches_native_statistically() {
+    let Some(backend) = pjrt() else { return };
+    let source = registry::build("iperturb66").unwrap();
+    let x = Vector::standard_normal(66, 6);
+    let run = |b: Backend| {
+        let solver = Meliso::with_backend(
+            SystemConfig::single_mca(128),
+            SolveOptions::default()
+                .with_device(Material::TaOxHfOx)
+                .with_wv_iters(2)
+                .with_seed(77),
+            b,
+        );
+        solver.solve_source(source.as_ref(), &x).unwrap()
+    };
+    let p = run(backend);
+    let n = run(Arc::new(NativeBackend::new()));
+    // Same seeds, same noise draws; only the MVM arithmetic differs (both
+    // f32), so the reports must agree tightly.
+    assert!(
+        (p.rel_err_l2 - n.rel_err_l2).abs() < 0.2 * n.rel_err_l2.max(1e-6),
+        "pjrt {} vs native {}",
+        p.rel_err_l2,
+        n.rel_err_l2
+    );
+    assert_eq!(p.chunks_total, n.chunks_total);
+    assert!((p.ew_mean - n.ew_mean).abs() < 1e-12);
+}
+
+#[test]
+fn pjrt_rejects_unknown_tile() {
+    let Some(backend) = pjrt() else { return };
+    let a = vec![0.0f32; 48 * 48];
+    let x = vec![0.0f32; 48];
+    assert!(backend.mvm(48, a, x).is_err());
+}

@@ -1,0 +1,102 @@
+//! Robustness study: the two-tier EC under the extended non-idealities
+//! (ADC quantization, retention drift, IR drop) — the paper's §1 motivation
+//! ("sneak paths and parasitic interconnect resistances") exercised as
+//! failure injection on the full pipeline.
+
+use meliso::device::materials::Material;
+use meliso::device::nonideal::{AdcModel, DriftModel, IrDropModel, NonIdealExt};
+use meliso::matrices::registry;
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use std::sync::Arc;
+
+fn run(ext: NonIdealExt, ec: bool, seed: u64) -> f64 {
+    let source = registry::build("iperturb66").unwrap();
+    let x = Vector::standard_normal(66, 21);
+    let solver = Meliso::with_backend(
+        SystemConfig::single_mca(128),
+        SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_ec(ec)
+            .with_wv_iters(2)
+            .with_seed(seed)
+            .with_nonideal(ext),
+        Arc::new(NativeBackend::new()),
+    );
+    let reps = 4;
+    (0..reps)
+        .map(|r| {
+            let s = Meliso::with_backend(
+                *solver.config(),
+                solver.options().clone().with_seed(seed + r),
+                Arc::new(NativeBackend::new()),
+            );
+            s.solve_source(source.as_ref(), &x).unwrap().rel_err_l2
+        })
+        .sum::<f64>()
+        / reps as f64
+}
+
+#[test]
+fn adc_quantization_floors_accuracy() {
+    let coarse = run(
+        NonIdealExt {
+            adc: AdcModel::new(4),
+            ..Default::default()
+        },
+        true,
+        100,
+    );
+    let fine = run(
+        NonIdealExt {
+            adc: AdcModel::new(12),
+            ..Default::default()
+        },
+        true,
+        100,
+    );
+    let none = run(NonIdealExt::default(), true, 100);
+    assert!(coarse > fine, "coarse {coarse:.4} fine {fine:.4}");
+    assert!(fine < none * 3.0, "12-bit ADC should be near-transparent");
+    // 4-bit ADC floors around 1/2^4 ~ 6%.
+    assert!(coarse > 0.01, "{coarse:.4}");
+}
+
+#[test]
+fn drift_degrades_raw_more_than_ec_corrects() {
+    // Uniform drift is a *common-mode* multiplicative error on Ã — exactly
+    // the structure the first-order EC cancels. EC must recover most of it.
+    let ext = NonIdealExt {
+        drift: DriftModel::new(0.05, 1e4),
+        ..Default::default()
+    };
+    let raw = run(ext, false, 200);
+    let ec = run(ext, true, 200);
+    let raw_clean = run(NonIdealExt::default(), false, 200);
+    assert!(raw > raw_clean * 1.05, "drift should hurt raw: {raw:.4} vs {raw_clean:.4}");
+    assert!(ec < raw * 0.3, "EC should absorb drift: ec {ec:.4} raw {raw:.4}");
+}
+
+#[test]
+fn ir_drop_hurts_and_ec_partially_recovers() {
+    let ext = NonIdealExt {
+        ir_drop: IrDropModel::new(0.1),
+        ..Default::default()
+    };
+    let raw = run(ext, false, 300);
+    let ec = run(ext, true, 300);
+    let raw_clean = run(NonIdealExt::default(), false, 300);
+    assert!(raw > raw_clean, "IR drop should hurt raw accuracy");
+    assert!(ec < raw, "EC should recover part of the IR-drop error");
+}
+
+#[test]
+fn stacked_nonidealities_still_converge_with_ec() {
+    let ext = NonIdealExt {
+        adc: AdcModel::new(10),
+        drift: DriftModel::new(0.02, 1e3),
+        ir_drop: IrDropModel::new(0.05),
+    };
+    let ec = run(ext, true, 400);
+    assert!(ec < 0.1, "stacked non-idealities with EC: {ec:.4}");
+}

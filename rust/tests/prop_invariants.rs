@@ -1,0 +1,224 @@
+//! Property-based tests over coordinator/EC/virtualization invariants,
+//! driven by the in-house mini-framework (`meliso::testing`).
+
+use meliso::device::materials::Material;
+use meliso::ec::{EcOptions, TileExecutor};
+use meliso::linalg::tridiag::Tridiag;
+use meliso::linalg::{Matrix, Vector};
+use meliso::matrices::{DenseSource, MatrixSource};
+use meliso::mca::{Mca, WriteVerifyOpts};
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::testing::{gen, PropRunner};
+use meliso::virtualization::{ChunkPlan, SystemGeometry};
+use std::sync::Arc;
+
+#[test]
+fn prop_chunk_plan_covers_operand_exactly_once() {
+    PropRunner::new(64, 101).run("chunk-coverage", |rng, _| {
+        let tile_rows = 1 + rng.below(6);
+        let tile_cols = 1 + rng.below(6);
+        let cell = *gen::choice(rng, &[16usize, 32, 64]);
+        let m = 1 + rng.below(1200);
+        let n = 1 + rng.below(1200);
+        let plan = ChunkPlan::new(SystemGeometry::new(tile_rows, tile_cols, cell), m, n);
+        // Every operand coordinate is covered by exactly one chunk.
+        let mut cover = vec![0u8; plan.grid_rows * plan.grid_cols];
+        for c in plan.chunks() {
+            let idx = c.block_row * plan.grid_cols + c.block_col;
+            cover[idx] += 1;
+            if c.row0 % cell != 0 || c.col0 % cell != 0 {
+                return Err(format!("misaligned chunk at ({}, {})", c.row0, c.col0));
+            }
+            if c.mca_index >= tile_rows * tile_cols {
+                return Err("MCA index out of range".into());
+            }
+        }
+        if cover.iter().any(|&c| c != 1) {
+            return Err("chunk grid not covered exactly once".into());
+        }
+        // Padded dims fit capacity times reassignments.
+        let (pm, pn) = plan.padded_dims();
+        if pm < m || pn < n {
+            return Err("padding smaller than operand".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assignments_balanced_round_robin() {
+    PropRunner::new(48, 102).run("assignment-balance", |rng, _| {
+        let r = 1 + rng.below(8);
+        let c = 1 + rng.below(8);
+        let cell = 32;
+        let m = 1 + rng.below(2000);
+        let plan = ChunkPlan::new(SystemGeometry::new(r, c, cell), m, m);
+        let counts = plan.assignments_per_mca();
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        // Round-robin balance: the spread between any two MCAs is bounded
+        // by the per-dimension remainder (max load <= ceil products).
+        let bound = plan.row_reassignments()
+            * meliso::util::ceil_div(plan.grid_cols, c);
+        if max > bound {
+            return Err(format!("max load {max} exceeds bound {bound}"));
+        }
+        if max > 0 && min + 2 * bound < max {
+            return Err(format!("unbalanced: min {min}, max {max}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_denoise_operator_solve_inverts() {
+    PropRunner::new(32, 103).run("tridiag-inverse", |rng, _| {
+        let n = 2 + rng.below(120);
+        let lambda = 10f64.powf(rng.uniform_range(-12.0, 0.0));
+        let t = Tridiag::denoise_operator(n, lambda, -1.0);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let b = t.matvec(&x);
+        let got = t.solve(&b);
+        for i in 0..n {
+            if (got[i] - x[i]).abs() > 1e-8 * (1.0 + x[i].abs()) {
+                return Err(format!("solve mismatch at {i}: {} vs {}", got[i], x[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_encode_error_bounded_and_sign_preserving() {
+    PropRunner::new(24, 104).run("encode-bounds", |rng, case| {
+        let material = gen::material(rng);
+        let n = *gen::choice(rng, &[16usize, 32, 64]);
+        let a = gen::scaled_matrix(rng, n);
+        let mut mca = Mca::new(material, n, n, 900 + case as u64);
+        let enc = mca.set_weights(&a);
+        let p = material.params();
+        let scale = a.max_abs();
+        let band = scale * (4.0 * (p.sigma_prog + p.sigma_d2d) + p.level_step());
+        for (w, e) in a.data().iter().zip(enc.data()) {
+            if (w - e).abs() > band * (1.0 + w.abs() / scale) {
+                return Err(format!("encode error too large: w={w}, enc={e}"));
+            }
+            // Zero stays exactly zero (differential pair parked).
+            if *w == 0.0 && *e != 0.0 {
+                return Err("zero cell perturbed".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_first_order_correction_never_worse_than_raw() {
+    // Across materials / scales / sizes, the EC output must beat the raw
+    // product (with margin, since both are stochastic).
+    PropRunner::new(10, 105).run("ec-dominates-raw", |rng, case| {
+        let material = gen::material(rng);
+        let n = *gen::choice(rng, &[32usize, 64]);
+        let a = gen::scaled_matrix(rng, n);
+        let x = gen::vector(rng, n);
+        let b = a.matvec(&x);
+        let backend = Arc::new(NativeBackend::new());
+        let seed = 7000 + case as u64;
+
+        let raw = {
+            let mut te = TileExecutor::new(Mca::new(material, n, n, seed), backend.clone());
+            let opts = EcOptions {
+                ec: false,
+                ..EcOptions::default()
+            };
+            te.run_tile(&a, &x, &opts).unwrap().y
+        };
+        let ec = {
+            let mut te = TileExecutor::new(Mca::new(material, n, n, seed + 1), backend.clone());
+            let mut opts = EcOptions::default();
+            opts.wv = WriteVerifyOpts::default().with_iters(2);
+            te.run_tile(&a, &x, &opts).unwrap().y
+        };
+        let rel = |y: &Vector| y.sub(&b).norm_l2() / b.norm_l2();
+        let (r_raw, r_ec) = (rel(&raw), rel(&ec));
+        if r_ec > r_raw * 0.9 {
+            return Err(format!(
+                "{material} n={n}: ec {r_ec:.4} not better than raw {r_raw:.4}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solve_report_metrics_consistent() {
+    PropRunner::new(8, 106).run("report-consistency", |rng, case| {
+        let n = *gen::choice(rng, &[48usize, 96]);
+        let a = Matrix::standard_normal(n, n, 300 + case as u64);
+        let x = gen::vector(rng, n);
+        let tiles = 1 + rng.below(2);
+        let solver = Meliso::with_backend(
+            SystemConfig::new(tiles, tiles, 32),
+            SolveOptions::default()
+                .with_device(gen::material(rng))
+                .with_workers(1 + rng.below(4))
+                .with_seed(case as u64),
+            Arc::new(NativeBackend::new()),
+        );
+        let report = solver.solve(&a, &x).map_err(|e| e.to_string())?;
+        if report.y.len() != n {
+            return Err("result length mismatch".into());
+        }
+        if report.chunks_skipped > report.chunks_total {
+            return Err("skipped > total".into());
+        }
+        if report.mcas_used > tiles * tiles {
+            return Err("more MCAs used than exist".into());
+        }
+        if report.ew_total + 1e-18 < report.ew_mean * report.mcas_used as f64 * 0.999 {
+            return Err("energy mean/total inconsistent".into());
+        }
+        if report.lw_max + 1e-18 < report.lw_mean * 0.999 {
+            return Err("latency max < mean".into());
+        }
+        if !report.rel_err_l2.is_finite() || report.rel_err_l2 < 0.0 {
+            return Err("bad error metric".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparsity_skipping_never_changes_results_much() {
+    // Skipping all-zero chunks must be output-equivalent to processing
+    // them (zero tiles contribute exactly zero current).
+    PropRunner::new(6, 107).run("skip-equivalence", |rng, case| {
+        let n = 128;
+        let band = 4 + rng.below(8);
+        let src = meliso::matrices::BandedSource::new(n, band, 1.0, 10.0, 0.2, case as u64);
+        let dense = DenseSource::new(src.block(0, 0, n, n));
+        let x = gen::vector(rng, n);
+        let mk = || {
+            Meliso::with_backend(
+                SystemConfig::new(2, 2, 32),
+                SolveOptions::default()
+                    .with_device(Material::EpiRam)
+                    .with_seed(4242 + case as u64),
+                Arc::new(NativeBackend::new()),
+            )
+        };
+        let with_skip = mk().solve_source(&src, &x).map_err(|e| e.to_string())?;
+        let without = mk().solve_source(&dense, &x).map_err(|e| e.to_string())?;
+        if with_skip.chunks_skipped == 0 {
+            return Err("expected some skipped chunks".into());
+        }
+        let diff = with_skip.y.sub(&without.y).norm_l2() / without.y.norm_l2().max(1e-9);
+        // Not bit-identical (different RNG consumption order) but both are
+        // valid device-noise draws of the same computation.
+        if diff > 0.2 {
+            return Err(format!("skip changed result by {diff}"));
+        }
+        Ok(())
+    });
+}
