@@ -1,0 +1,71 @@
+//! Serving quickstart: keep an operand resident on the crossbar grid and
+//! serve many solves against it (program once / solve many), then share
+//! the grid between tenants through the LRU operand cache.
+//!
+//! ```sh
+//! cargo run --release --example serving
+//! ```
+
+use meliso::prelude::*;
+use meliso::server::OperandCache;
+
+fn main() -> Result<(), String> {
+    // 1. A solver configured like the quickstart example; fall back to the
+    //    native backend when the PJRT artifacts are absent.
+    let system = SystemConfig::single_mca(128);
+    let opts = SolveOptions::default()
+        .with_device(Material::TaOxHfOx)
+        .with_wv_iters(2);
+    let solver = match Meliso::new(system, opts.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("note: {e}\nfalling back to the native backend");
+            Meliso::with_backend(
+                system,
+                opts.with_backend(BackendKind::Native),
+                std::sync::Arc::new(meliso::runtime::native::NativeBackend::new()),
+            )
+        }
+    };
+
+    // 2. Program the operand once.  This is the expensive step: the full
+    //    adjustableWriteandVerify pass over every non-zero chunk.
+    let a = meliso::matrices::registry::build("iperturb66")?;
+    let session = solver.open_session(a.clone())?;
+    let p = session.program_report();
+    println!(
+        "programmed {}x{} ({} resident chunks) in {:.3}s for {:.3e} J",
+        p.m, p.n, p.chunks_resident, p.wall_seconds, p.write_energy_j
+    );
+
+    // 3. Serve: each solve pays only the input-vector encode and the
+    //    crossbar reads.  Batches amortize dispatch over one chunk walk.
+    let xs: Vec<Vector> = (0..32)
+        .map(|i| Vector::standard_normal(a.ncols(), 100 + i))
+        .collect();
+    for chunk in xs.chunks(8) {
+        session.solve_batch(chunk)?;
+    }
+    let one = session.solve(&xs[0])?;
+    let b = a.matvec(&xs[0]);
+    let rel = one.y.sub(&b).norm_l2() / b.norm_l2();
+    println!("solve #{}: rel l2 error {:.3e}", one.solve_index, rel);
+    println!("{}", session.report().render());
+
+    // 4. Multi-tenant residency: an LRU cache keyed by operand content.
+    //    The second lookup of bcsstk02 skips programming entirely.
+    let mut cache = OperandCache::new(2);
+    let tenant = meliso::matrices::registry::build("bcsstk02")?;
+    let s1 = cache.get_or_open(&solver, &tenant)?;
+    let s2 = cache.get_or_open(&solver, &tenant)?;
+    let x = Vector::standard_normal(tenant.ncols(), 7);
+    s2.solve(&x)?;
+    println!(
+        "cache: {} hits / {} misses, tenants resident: {}, shared: {}",
+        cache.hits,
+        cache.misses,
+        cache.len(),
+        std::sync::Arc::ptr_eq(&s1, &s2)
+    );
+    Ok(())
+}

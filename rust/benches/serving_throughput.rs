@@ -1,0 +1,124 @@
+//! Serving-path benchmark: resident crossbar sessions vs repeated
+//! one-shot solves.
+//!
+//! Quantifies the program-once / solve-many amortization that the serving
+//! subsystem (`meliso::server`) exists for:
+//!
+//! * **wall-clock** — one-shot re-runs `adjustableWriteandVerify` for the
+//!   operand (and the denoiser) on every call; a resident session pays
+//!   only the input-vector encode and the crossbar reads,
+//! * **write energy** — the matrix write (n² cells) is paid once; each
+//!   served solve writes only vector-scale cell counts,
+//! * **determinism** — for a fixed seed, a batch of N vectors is
+//!   bit-identical to N sequential solves on an identically-programmed
+//!   session (counter-based execution streams).
+//!
+//! Exits non-zero unless the 2nd..Nth-solve speedup and per-solve
+//! write-energy reduction are both >= 10x.
+//!
+//! Usage: `cargo bench --bench serving_throughput [-- --quick]`
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::prelude::*;
+use std::time::Instant;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let solves = args.reps_or(8, 24, 96);
+    let batch = 4usize;
+
+    let source = registry::build("iperturb66").unwrap();
+    let n = source.ncols();
+    let opts = SolveOptions::default()
+        .with_device(Material::TaOxHfOx)
+        .with_wv_iters(2)
+        .with_workers(2)
+        .with_seed(42);
+    let solver = Meliso::with_backend(SystemConfig::single_mca(128), opts, backend());
+    let xs: Vec<Vector> = (0..solves)
+        .map(|i| Vector::standard_normal(n, 1000 + i as u64))
+        .collect();
+
+    println!("# serving throughput: resident session vs one-shot ({solves} solves)\n");
+
+    // --- one-shot reference: every solve re-programs the operand -------
+    let t0 = Instant::now();
+    let mut oneshot_write_j = 0.0;
+    for x in &xs {
+        let r = solver.solve_source(source.as_ref(), x).unwrap();
+        oneshot_write_j += r.ew_total;
+    }
+    let oneshot_s = t0.elapsed().as_secs_f64() / solves as f64;
+    let oneshot_j = oneshot_write_j / solves as f64;
+    println!(
+        "one-shot : {:>9.3} ms/solve   write {:.3e} J/solve",
+        oneshot_s * 1e3,
+        oneshot_j
+    );
+
+    // --- resident session: program once, then serve --------------------
+    let t1 = Instant::now();
+    let session = solver.open_session(source.clone()).unwrap();
+    let program_s = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    for chunk in xs.chunks(batch) {
+        session.solve_batch(chunk).unwrap();
+    }
+    let resident_s = t2.elapsed().as_secs_f64() / solves as f64;
+    let report = session.report();
+    let resident_j = report.write_energy_per_solve_j;
+    println!(
+        "resident : {:>9.3} ms/solve   write {:.3e} J/solve   (program once: {:.3} s, {:.3e} J)",
+        resident_s * 1e3,
+        resident_j,
+        program_s,
+        session.program_report().write_energy_j
+    );
+    println!(
+        "           p50 {:.3} ms, p99 {:.3} ms, {:.1} solves/s, write amortization {:.0}x",
+        report.latency_p50_ms,
+        report.latency_p99_ms,
+        report.throughput_sps,
+        report.write_amortization
+    );
+
+    // --- determinism: batch == sequential, bit for bit ------------------
+    let k = solves.min(4);
+    let session_seq = solver.open_session(source.clone()).unwrap();
+    let seq: Vec<Vector> = xs[..k]
+        .iter()
+        .map(|x| session_seq.solve(x).unwrap().y)
+        .collect();
+    let session_batch = solver.open_session(source.clone()).unwrap();
+    let bat: Vec<Vector> = session_batch
+        .solve_batch(&xs[..k])
+        .unwrap()
+        .into_iter()
+        .map(|r| r.y)
+        .collect();
+    let identical = seq == bat;
+    println!(
+        "\ndeterminism: batch-of-{k} vs {k} sequential solves bit-identical: {identical}"
+    );
+
+    let speedup = oneshot_s / resident_s.max(1e-12);
+    let energy_ratio = oneshot_j / resident_j.max(f64::MIN_POSITIVE);
+    println!("wall speedup       : {speedup:.1}x   (target >= 10x)");
+    println!("write energy ratio : {energy_ratio:.1}x   (target >= 10x)");
+
+    assert!(
+        identical,
+        "batched and sequential resident solves must be bit-identical"
+    );
+    assert!(speedup >= 10.0, "wall speedup {speedup:.1}x < 10x");
+    assert!(
+        energy_ratio >= 10.0,
+        "write-energy ratio {energy_ratio:.1}x < 10x"
+    );
+    println!(
+        "\nPASS: resident serving is {speedup:.1}x faster and {energy_ratio:.1}x cheaper in \
+         write energy per solve"
+    );
+}

@@ -14,6 +14,7 @@ use crate::ec::DenoiseMode;
 #[derive(Debug)]
 pub enum Command {
     Run(RunArgs),
+    ServeBench(ServeBenchArgs),
     Matrices,
     Devices,
     Artifacts,
@@ -29,6 +30,20 @@ pub struct RunArgs {
     pub json: bool,
 }
 
+#[derive(Debug)]
+pub struct ServeBenchArgs {
+    pub matrix: String,
+    pub system: SystemConfig,
+    pub opts: SolveOptions,
+    /// Solves served against the resident session.
+    pub solves: usize,
+    /// Batch size for `solve_batch` (1 = sequential).
+    pub batch: usize,
+    /// One-shot reference solves (0 = auto: min(solves, 5)).
+    pub baseline: usize,
+    pub json: bool,
+}
+
 pub fn usage() -> &'static str {
     "MELISO+ — distributed RRAM in-memory linear solver with two-tier error correction
 
@@ -37,10 +52,16 @@ USAGE:
 
 COMMANDS:
     run         execute a distributed in-memory MVM benchmark
+    serve-bench compare resident-session serving vs repeated one-shot solves
     matrices    list the benchmark operands (paper Table 2 stand-ins)
     devices     list the RRAM material parameter sets
     artifacts   show the AOT artifact inventory
     help        show this message
+
+SERVE-BENCH OPTIONS (plus the applicable RUN options below):
+    --solves N         solves to serve against the resident session (default 32)
+    --batch B          solve_batch size, 1 = sequential (default 8)
+    --baseline N       one-shot reference solves (default min(solves, 5))
 
 RUN OPTIONS:
     --matrix NAME      operand from the registry (default iperturb66)
@@ -64,103 +85,125 @@ RUN OPTIONS:
 /// Parse argv (without the program name).
 pub fn parse(args: &[String]) -> Result<Command, String> {
     let mut it = args.iter().peekable();
-    let cmd = match it.next().map(|s| s.as_str()) {
-        None | Some("help") | Some("--help") | Some("-h") => return Ok(Command::Help),
-        Some("matrices") => return Ok(Command::Matrices),
-        Some("devices") => return Ok(Command::Devices),
-        Some("artifacts") => return Ok(Command::Artifacts),
-        Some("run") => "run",
-        Some(other) => return Err(format!("unknown command {other:?}; try `meliso help`")),
-    };
-    debug_assert_eq!(cmd, "run");
+    match it.next().map(|s| s.as_str()) {
+        None | Some("help") | Some("--help") | Some("-h") => Ok(Command::Help),
+        Some("matrices") => Ok(Command::Matrices),
+        Some("devices") => Ok(Command::Devices),
+        Some("artifacts") => Ok(Command::Artifacts),
+        Some("run") => parse_run(&mut it),
+        Some("serve-bench") => parse_serve_bench(&mut it),
+        Some(other) => Err(format!("unknown command {other:?}; try `meliso help`")),
+    }
+}
 
+type ArgIter<'a> = std::iter::Peekable<std::slice::Iter<'a, String>>;
+
+fn next_value(it: &mut ArgIter<'_>, flag: &str) -> Result<String, String> {
+    it.next()
+        .map(|s| s.to_string())
+        .ok_or_else(|| format!("{flag} requires a value"))
+}
+
+/// Handle one flag shared by `run` and `serve-bench`.  Returns `Ok(true)`
+/// when the flag was consumed, `Ok(false)` when the caller should try its
+/// command-specific flags.
+fn parse_common_flag(
+    arg: &str,
+    it: &mut ArgIter<'_>,
+    matrix: &mut String,
+    system: &mut SystemConfig,
+    opts: &mut SolveOptions,
+    json: &mut bool,
+) -> Result<bool, String> {
+    match arg {
+        "--matrix" => *matrix = next_value(it, "--matrix")?,
+        "--config" => {
+            let path = next_value(it, "--config")?;
+            let text =
+                std::fs::read_to_string(&path).map_err(|e| format!("cannot read {path}: {e}"))?;
+            let (sys, o) = from_toml(&text)?;
+            *system = sys;
+            *opts = o;
+        }
+        "--device" => {
+            let name = next_value(it, "--device")?;
+            opts.material =
+                Material::parse(&name).ok_or_else(|| format!("unknown device {name:?}"))?;
+        }
+        "--ec" => opts.ec = true,
+        "--no-ec" => opts.ec = false,
+        "--denoise" => {
+            let mode = next_value(it, "--denoise")?;
+            opts.denoise = match mode.as_str() {
+                "in-memory" | "inmemory" => DenoiseMode::InMemory,
+                "digital" => DenoiseMode::Digital,
+                "off" => DenoiseMode::Off,
+                other => return Err(format!("unknown denoise mode {other:?}")),
+            };
+        }
+        "--k" => {
+            opts.wv_iters = next_value(it, "--k")?
+                .parse()
+                .map_err(|e| format!("--k: {e}"))?
+        }
+        "--lambda" => {
+            opts.lambda = next_value(it, "--lambda")?
+                .parse()
+                .map_err(|e| format!("--lambda: {e}"))?
+        }
+        "--tiles" => {
+            let spec = next_value(it, "--tiles")?;
+            let (r, c) = spec
+                .split_once('x')
+                .ok_or_else(|| format!("--tiles expects RxC, got {spec:?}"))?;
+            system.tile_rows = r.parse().map_err(|e| format!("--tiles rows: {e}"))?;
+            system.tile_cols = c.parse().map_err(|e| format!("--tiles cols: {e}"))?;
+        }
+        "--cell" => {
+            system.cell_size = next_value(it, "--cell")?
+                .parse()
+                .map_err(|e| format!("--cell: {e}"))?
+        }
+        "--workers" => {
+            opts.workers = next_value(it, "--workers")?
+                .parse()
+                .map_err(|e| format!("--workers: {e}"))?
+        }
+        "--seed" => {
+            opts.seed = next_value(it, "--seed")?
+                .parse()
+                .map_err(|e| format!("--seed: {e}"))?
+        }
+        "--backend" => {
+            let name = next_value(it, "--backend")?;
+            opts.backend =
+                BackendKind::parse(&name).ok_or_else(|| format!("unknown backend {name:?}"))?;
+        }
+        "--json" => *json = true,
+        "-v" => crate::util::log::set_level(crate::util::log::Level::Info),
+        "-vv" => crate::util::log::set_level(crate::util::log::Level::Debug),
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+fn parse_run(it: &mut ArgIter<'_>) -> Result<Command, String> {
     let mut matrix = "iperturb66".to_string();
     let mut system = SystemConfig::tiles_8x8(1024);
     let mut opts = SolveOptions::default();
     let mut reps = 1usize;
     let mut json = false;
 
-    let next_value = |it: &mut std::iter::Peekable<std::slice::Iter<String>>,
-                          flag: &str|
-     -> Result<String, String> {
-        it.next()
-            .map(|s| s.to_string())
-            .ok_or_else(|| format!("{flag} requires a value"))
-    };
-
     while let Some(arg) = it.next() {
+        if parse_common_flag(arg.as_str(), it, &mut matrix, &mut system, &mut opts, &mut json)? {
+            continue;
+        }
         match arg.as_str() {
-            "--matrix" => matrix = next_value(&mut it, "--matrix")?,
-            "--config" => {
-                let path = next_value(&mut it, "--config")?;
-                let text = std::fs::read_to_string(&path)
-                    .map_err(|e| format!("cannot read {path}: {e}"))?;
-                let (sys, o) = from_toml(&text)?;
-                system = sys;
-                opts = o;
-            }
-            "--device" => {
-                let name = next_value(&mut it, "--device")?;
-                opts.material = Material::parse(&name)
-                    .ok_or_else(|| format!("unknown device {name:?}"))?;
-            }
-            "--ec" => opts.ec = true,
-            "--no-ec" => opts.ec = false,
-            "--denoise" => {
-                let mode = next_value(&mut it, "--denoise")?;
-                opts.denoise = match mode.as_str() {
-                    "in-memory" | "inmemory" => DenoiseMode::InMemory,
-                    "digital" => DenoiseMode::Digital,
-                    "off" => DenoiseMode::Off,
-                    other => return Err(format!("unknown denoise mode {other:?}")),
-                };
-            }
-            "--k" => {
-                opts.wv_iters = next_value(&mut it, "--k")?
-                    .parse()
-                    .map_err(|e| format!("--k: {e}"))?
-            }
-            "--lambda" => {
-                opts.lambda = next_value(&mut it, "--lambda")?
-                    .parse()
-                    .map_err(|e| format!("--lambda: {e}"))?
-            }
-            "--tiles" => {
-                let spec = next_value(&mut it, "--tiles")?;
-                let (r, c) = spec
-                    .split_once('x')
-                    .ok_or_else(|| format!("--tiles expects RxC, got {spec:?}"))?;
-                system.tile_rows = r.parse().map_err(|e| format!("--tiles rows: {e}"))?;
-                system.tile_cols = c.parse().map_err(|e| format!("--tiles cols: {e}"))?;
-            }
-            "--cell" => {
-                system.cell_size = next_value(&mut it, "--cell")?
-                    .parse()
-                    .map_err(|e| format!("--cell: {e}"))?
-            }
-            "--workers" => {
-                opts.workers = next_value(&mut it, "--workers")?
-                    .parse()
-                    .map_err(|e| format!("--workers: {e}"))?
-            }
             "--reps" => {
-                reps = next_value(&mut it, "--reps")?
+                reps = next_value(it, "--reps")?
                     .parse()
                     .map_err(|e| format!("--reps: {e}"))?
             }
-            "--seed" => {
-                opts.seed = next_value(&mut it, "--seed")?
-                    .parse()
-                    .map_err(|e| format!("--seed: {e}"))?
-            }
-            "--backend" => {
-                let name = next_value(&mut it, "--backend")?;
-                opts.backend = BackendKind::parse(&name)
-                    .ok_or_else(|| format!("unknown backend {name:?}"))?;
-            }
-            "--json" => json = true,
-            "-v" => crate::util::log::set_level(crate::util::log::Level::Info),
-            "-vv" => crate::util::log::set_level(crate::util::log::Level::Debug),
             other => return Err(format!("unknown option {other:?}; try `meliso help`")),
         }
     }
@@ -170,6 +213,52 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
         system,
         opts,
         reps,
+        json,
+    }))
+}
+
+fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
+    let mut matrix = "iperturb66".to_string();
+    let mut system = SystemConfig::single_mca(128);
+    let mut opts = SolveOptions::default();
+    let mut solves = 32usize;
+    let mut batch = 8usize;
+    let mut baseline = 0usize;
+    let mut json = false;
+
+    while let Some(arg) = it.next() {
+        if parse_common_flag(arg.as_str(), it, &mut matrix, &mut system, &mut opts, &mut json)? {
+            continue;
+        }
+        match arg.as_str() {
+            "--solves" => {
+                solves = next_value(it, "--solves")?
+                    .parse()
+                    .map_err(|e| format!("--solves: {e}"))?
+            }
+            "--batch" => {
+                batch = next_value(it, "--batch")?
+                    .parse()
+                    .map_err(|e| format!("--batch: {e}"))?
+            }
+            "--baseline" => {
+                baseline = next_value(it, "--baseline")?
+                    .parse()
+                    .map_err(|e| format!("--baseline: {e}"))?
+            }
+            other => return Err(format!("unknown option {other:?}; try `meliso help`")),
+        }
+    }
+    if solves == 0 {
+        return Err("--solves must be at least 1".to_string());
+    }
+    Ok(Command::ServeBench(ServeBenchArgs {
+        matrix,
+        system,
+        opts,
+        solves,
+        batch: batch.max(1),
+        baseline,
         json,
     }))
 }
@@ -210,6 +299,49 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_serve_bench_with_options() {
+        let cmd = parse(&argv(
+            "serve-bench --matrix add32 --device epiram --solves 64 --batch 16 \
+             --baseline 3 --cell 256 --tiles 2x2 --seed 11 --backend native --json",
+        ))
+        .unwrap();
+        match cmd {
+            Command::ServeBench(s) => {
+                assert_eq!(s.matrix, "add32");
+                assert_eq!(s.opts.material, Material::EpiRam);
+                assert_eq!(s.solves, 64);
+                assert_eq!(s.batch, 16);
+                assert_eq!(s.baseline, 3);
+                assert_eq!(s.system, SystemConfig::new(2, 2, 256));
+                assert_eq!(s.opts.seed, 11);
+                assert_eq!(s.opts.backend, BackendKind::Native);
+                assert!(s.json);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_bench_defaults() {
+        match parse(&argv("serve-bench")).unwrap() {
+            Command::ServeBench(s) => {
+                assert_eq!(s.matrix, "iperturb66");
+                assert_eq!(s.solves, 32);
+                assert_eq!(s.batch, 8);
+                assert_eq!(s.baseline, 0);
+                assert!(!s.json);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_bench_rejects_zero_solves() {
+        assert!(parse(&argv("serve-bench --solves 0")).is_err());
+        assert!(parse(&argv("serve-bench --frobnicate")).is_err());
     }
 
     #[test]

@@ -31,7 +31,29 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 /// Bound on in-flight jobs per worker (backpressure).
-const JOB_QUEUE_DEPTH: usize = 4;
+pub(crate) const JOB_QUEUE_DEPTH: usize = 4;
+
+/// Reduce gathered per-chunk partial products into the output vector in
+/// deterministic `(block_row, block_col)` order, so the sum is
+/// bit-reproducible regardless of worker scheduling.  Shared with the
+/// resident serving sessions (`crate::server`).
+pub fn reduce_partials(
+    m: usize,
+    tile: usize,
+    partials: &BTreeMap<(usize, usize), Vector>,
+) -> Vector {
+    let mut y = Vector::zeros(m);
+    for ((bi, _bj), part) in partials {
+        let row0 = bi * tile;
+        for (k, v) in part.data().iter().enumerate() {
+            let idx = row0 + k;
+            if idx < m {
+                y.set(idx, y.get(idx) + v);
+            }
+        }
+    }
+    y
+}
 
 /// Run one distributed MVM and return the full report.
 ///
@@ -121,16 +143,7 @@ pub fn solve_distributed(
         wv_iters_sum += jr.encode_iters as f64;
         partials.insert((jr.block_row, jr.block_col), jr.partial);
     }
-    let mut y = Vector::zeros(m);
-    for ((bi, _bj), part) in &partials {
-        let row0 = bi * tile;
-        for (k, v) in part.data().iter().enumerate() {
-            let idx = row0 + k;
-            if idx < m {
-                y.set(idx, y.get(idx) + v);
-            }
-        }
-    }
+    let y = reduce_partials(m, tile, &partials);
 
     // Collect per-MCA ledgers.
     let mut ledgers = vec![EnergyLedger::default(); plan.geometry.mcas()];
@@ -231,6 +244,20 @@ mod tests {
         let r2 = run(4); // different parallelism, same result
         assert_eq!(r1.y, r2.y);
         assert_eq!(r1.rel_err_l2, r2.rel_err_l2);
+    }
+
+    #[test]
+    fn non_square_operand_solve() {
+        // 48x80 on a 2x2 grid of 32² MCAs: 2x3 chunk grid, y of length 48.
+        let a = Matrix::standard_normal(48, 80, 13);
+        let src = DenseSource::new(a);
+        let x = Vector::standard_normal(80, 14);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let report = solve_distributed(&src, &x, &config, &opts, native()).unwrap();
+        assert_eq!(report.y.len(), 48);
+        assert_eq!(report.chunks_total, 6);
+        assert!(report.rel_err_l2 < 0.1, "{}", report.rel_err_l2);
     }
 
     #[test]

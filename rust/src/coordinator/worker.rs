@@ -25,6 +25,27 @@ pub struct WorkerContext {
     pub ledgers: mpsc::Sender<Vec<(usize, EnergyLedger)>>,
 }
 
+/// Deterministic per-MCA seed derivation: MCA `i`'s simulator stream is a
+/// pure function of the master seed, independent of worker count.
+pub fn mca_seed(master: u64, mca_index: usize) -> u64 {
+    master
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(mca_index as u64)
+}
+
+/// Build the persistent executor for one MCA.  Shared by the one-shot
+/// worker pool and the resident serving sessions (`crate::server`), so
+/// both paths see identical device state for a given seed.
+pub fn new_executor(
+    opts: &SolveOptions,
+    cell: usize,
+    backend: &Backend,
+    mca_index: usize,
+) -> TileExecutor {
+    let mca = Mca::new(opts.material, cell, cell, mca_seed(opts.seed, mca_index));
+    TileExecutor::new(mca, backend.clone())
+}
+
 /// Worker main loop: execute jobs until the leader closes the channel,
 /// then report per-MCA ledgers.
 pub fn run(ctx: WorkerContext) {
@@ -33,15 +54,9 @@ pub fn run(ctx: WorkerContext) {
     while let Ok(job) = ctx.jobs.recv() {
         let mca_index = job.spec.mca_index;
         debug_assert_eq!(mca_index % ctx.workers, ctx.worker_id);
-        let exec = executors.entry(mca_index).or_insert_with(|| {
-            let seed = ctx
-                .opts
-                .seed
-                .wrapping_mul(0x9E3779B97F4A7C15)
-                .wrapping_add(mca_index as u64);
-            let mca = Mca::new(ctx.opts.material, cell, cell, seed);
-            TileExecutor::new(mca, ctx.backend.clone())
-        });
+        let exec = executors
+            .entry(mca_index)
+            .or_insert_with(|| new_executor(&ctx.opts, cell, &ctx.backend, mca_index));
         let outcome = exec
             .run_tile(&job.a_tile, &job.x_chunk, &ctx.opts.ec_options())
             .map(|r| JobResult {

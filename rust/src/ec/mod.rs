@@ -72,6 +72,26 @@ pub struct TileResult {
     pub encode: EncodeStats,
 }
 
+/// A tile operand resident on the crossbar after one write–verify pass.
+///
+/// Produced by [`TileExecutor::program_tile`] and consumed by any number of
+/// [`TileExecutor::execute_tile`] calls: the expensive conductance write is
+/// paid once, every subsequent solve only re-encodes the (cheap) input
+/// vector and performs reads — the program-once / solve-many contract the
+/// serving layer ([`crate::server`]) is built on.
+#[derive(Clone, Debug)]
+pub struct ProgrammedTile {
+    /// Tile size (square, one of the artifact sizes).
+    pub n: usize,
+    /// True operand image `A` (f32 row-major; the EC combine needs it).
+    pub a: Vec<f32>,
+    /// Encoded value-domain image `Ã` (noise, quantization and any
+    /// extended non-idealities applied at programming time).
+    pub at: Vec<f32>,
+    /// Write–verify statistics of the matrix encode.
+    pub encode: EncodeStats,
+}
+
 /// Per-worker tile pipeline: one MCA + one backend + denoiser caches.
 pub struct TileExecutor {
     pub mca: Mca,
@@ -133,21 +153,21 @@ impl TileExecutor {
             .or_insert_with(|| Tridiag::denoise_operator(n, lambda, h))
     }
 
-    /// Execute one (already padded, square) tile: the paper's
-    /// `correctedMatVecMul` when `opts.ec`, the raw product otherwise.
-    pub fn run_tile(
-        &mut self,
-        a: &Matrix,
-        x: &Vector,
-        opts: &EcOptions,
-    ) -> Result<TileResult, String> {
+    /// **Programming phase**: write one (already padded, square) tile onto
+    /// the crossbar through write–verify and return its resident image.
+    ///
+    /// This is the expensive half of the paper's `correctedMatVecMul`: the
+    /// assignment scan, the `adjustableMatWriteandVerify(A)` encode, the
+    /// extended non-idealities on the stored image, and (with EC on) the
+    /// one-time denoiser write.  The returned [`ProgrammedTile`] can then
+    /// serve unlimited [`execute_tile`](Self::execute_tile) calls.
+    pub fn program_tile(&mut self, a: &Matrix, opts: &EcOptions) -> Result<ProgrammedTile, String> {
         let n = a.nrows();
-        if a.ncols() != n || x.len() != n {
+        if a.ncols() != n {
             return Err(format!(
-                "run_tile expects a square padded tile: A is {}x{}, x is {}",
+                "program_tile expects a square padded tile: A is {}x{}",
                 a.nrows(),
                 a.ncols(),
-                x.len()
             ));
         }
         if !self.backend.tile_sizes().contains(&n) {
@@ -157,9 +177,9 @@ impl TileExecutor {
             ));
         }
 
-        // Step 0: assignment overhead — virtualization reassigns this MCA
-        // to a new chunk, which costs a tile reconfiguration scan (address
-        // decoder walk + bias settling + pre-use verify read).  This is the
+        // Assignment overhead — virtualization assigns this MCA to a new
+        // chunk, which costs a tile reconfiguration scan (address decoder
+        // walk + bias settling + pre-use verify read).  This is the
         // per-assignment cost that makes small cell sizes expensive in the
         // paper's Fig 4 weak-scaling study.
         self.mca.ledger.record_write(crate::device::pulse::PassCost {
@@ -169,9 +189,8 @@ impl TileExecutor {
             pulses: n as f64 * 0.25,
         });
 
-        // Step 1: encode operands through write–verify.
-        let (mut at, encode_stats) = self.mca.write_verify_matrix(a, &opts.wv);
-        let (xt, _) = self.mca.write_verify_vector(x, &opts.wv);
+        // Encode the operand through write–verify.
+        let (mut at, encode) = self.mca.write_verify_matrix(a, &opts.wv);
 
         // Extended non-idealities on the stored image (retention drift and
         // line-resistance attenuation act between write and read).
@@ -182,9 +201,46 @@ impl TileExecutor {
             opts.nonideal.ir_drop.apply(&mut at);
         }
 
+        // With EC on, the denoiser is setup state too: program it now so a
+        // resident tile pays *all* its write energy up front (cached per
+        // tile size, so later tiles on this executor reuse it).
+        if opts.ec {
+            let _ = self.encoded_minv(n, opts.lambda, opts.h);
+        }
+
+        Ok(ProgrammedTile {
+            n,
+            a: a.to_f32(),
+            at: at.to_f32(),
+            encode,
+        })
+    }
+
+    /// **Execution phase**: run one input vector against a resident tile —
+    /// the paper's `correctedMatVecMul` when `opts.ec`, the raw product
+    /// otherwise.  Only the input-vector encode and the crossbar reads are
+    /// paid here; the matrix write happened in
+    /// [`program_tile`](Self::program_tile).
+    pub fn execute_tile(
+        &mut self,
+        tile: &ProgrammedTile,
+        x: &Vector,
+        opts: &EcOptions,
+    ) -> Result<TileResult, String> {
+        let n = tile.n;
+        if x.len() != n {
+            return Err(format!(
+                "execute_tile expects x of length {n}, got {}",
+                x.len()
+            ));
+        }
+
+        // Encode the input vector through write–verify (per-solve cost).
+        let (xt, _) = self.mca.write_verify_vector(x, &opts.wv);
+
         if !opts.ec {
             // Raw path: one crossbar product, measured with read noise.
-            let y = self.backend.mvm(n, at.to_f32(), xt.to_f32())?;
+            let y = self.backend.mvm(n, tile.at.clone(), xt.to_f32())?;
             self.mca.record_read(n, n);
             let noise = self.mca.read_noise_vec(n);
             let mut y = Vector::from_vec(
@@ -196,25 +252,25 @@ impl TileExecutor {
             opts.nonideal.adc.quantize(&mut y);
             return Ok(TileResult {
                 y,
-                encode: encode_stats,
+                encode: tile.encode,
             });
         }
 
-        // Step 2: Xᵀ broadcast write (one physical row, replayed n times).
+        // Xᵀ broadcast write (one physical row, replayed n times).
         self.mca.ledger.record_write(crate::device::pulse::full_write_cost(
             &self.mca.params,
             1,
             n,
         ));
 
-        // Step 3: denoiser (cached; one-time write cost).
+        // Denoiser (cached; programmed during program_tile).
         let minv = self.encoded_minv(n, opts.lambda, opts.h);
 
-        // Step 4: fused artifact — three products + combine + denoise.
+        // Fused artifact — three products + combine + denoise.
         let req = EcMvmRequest {
             n,
-            a: a.to_f32(),
-            at: at.to_f32(),
+            a: tile.a.clone(),
+            at: tile.at.clone(),
             x: x.to_f32(),
             xt: xt.to_f32(),
             minv,
@@ -228,7 +284,7 @@ impl TileExecutor {
             self.mca.record_read(n, n);
         }
 
-        // Step 5: final measurement / denoise-mode selection.
+        // Final measurement / denoise-mode selection.
         let mut y = match opts.denoise {
             DenoiseMode::InMemory => {
                 let noise = self.mca.read_noise_vec(n);
@@ -249,8 +305,20 @@ impl TileExecutor {
         opts.nonideal.adc.quantize(&mut y);
         Ok(TileResult {
             y,
-            encode: encode_stats,
+            encode: tile.encode,
         })
+    }
+
+    /// One-shot path: program then execute (the original
+    /// `correctedMatVecMul` shape, used by the per-solve coordinator).
+    pub fn run_tile(
+        &mut self,
+        a: &Matrix,
+        x: &Vector,
+        opts: &EcOptions,
+    ) -> Result<TileResult, String> {
+        let tile = self.program_tile(a, opts)?;
+        self.execute_tile(&tile, x, opts)
     }
 }
 
@@ -371,6 +439,60 @@ mod tests {
         ec_te.run_tile(&a, &x, &EcOptions::default()).unwrap();
         assert!(ec_te.mca.ledger.write_energy_j > raw_te.mca.ledger.write_energy_j);
         assert!(ec_te.mca.ledger.write_latency_s > raw_te.mca.ledger.write_latency_s);
+    }
+
+    #[test]
+    fn run_tile_equals_program_plus_execute() {
+        // The one-shot path is literally program+execute, so two executors
+        // with the same seed must agree bit-for-bit.
+        let n = 32;
+        let a = Matrix::standard_normal(n, n, 17);
+        let x = Vector::standard_normal(n, 18);
+        let mut one_shot = executor(Material::TaOxHfOx, 77);
+        let r1 = one_shot.run_tile(&a, &x, &EcOptions::default()).unwrap();
+        let mut split = executor(Material::TaOxHfOx, 77);
+        let tile = split.program_tile(&a, &EcOptions::default()).unwrap();
+        let r2 = split.execute_tile(&tile, &x, &EcOptions::default()).unwrap();
+        assert_eq!(r1.y, r2.y);
+        assert_eq!(one_shot.mca.ledger, split.mca.ledger);
+    }
+
+    #[test]
+    fn program_once_execute_many_amortizes_writes() {
+        let n = 64;
+        let a = Matrix::standard_normal(n, n, 19);
+        let x1 = Vector::standard_normal(n, 20);
+        let x2 = Vector::standard_normal(n, 21);
+        let mut te = executor(Material::TaOxHfOx, 91);
+        let tile = te.program_tile(&a, &EcOptions::default()).unwrap();
+        let program_cells = te.mca.ledger.cells_written;
+        assert!(program_cells >= n * n, "{program_cells}");
+
+        let before = te.mca.ledger;
+        let y1 = te.execute_tile(&tile, &x1, &EcOptions::default()).unwrap();
+        let delta = te.mca.ledger.minus(&before);
+        // Per-solve writes touch only vector-scale cell counts (x encode +
+        // the Xᵀ broadcast row), never the n² matrix.
+        assert!(delta.cells_written < 8 * n, "{}", delta.cells_written);
+        assert!(delta.write_energy_j < before.write_energy_j * 0.1);
+        assert!(delta.read_energy_j > 0.0);
+
+        // Fresh read/encode noise per solve: same input, different output.
+        let y2 = te.execute_tile(&tile, &x1, &EcOptions::default()).unwrap();
+        assert_ne!(y1.y, y2.y);
+        let y3 = te.execute_tile(&tile, &x2, &EcOptions::default()).unwrap();
+        let b = a.matvec(&x2);
+        assert!(rel_err(&y3.y, &b) < 0.2);
+    }
+
+    #[test]
+    fn execute_tile_rejects_wrong_x_len() {
+        let n = 32;
+        let a = Matrix::standard_normal(n, n, 23);
+        let mut te = executor(Material::EpiRam, 3);
+        let tile = te.program_tile(&a, &EcOptions::default()).unwrap();
+        let x = Vector::standard_normal(16, 4);
+        assert!(te.execute_tile(&tile, &x, &EcOptions::default()).is_err());
     }
 
     #[test]

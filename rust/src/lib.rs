@@ -5,20 +5,27 @@
 //! *"Harnessing the Full Potential of RRAMs through Scalable and Distributed
 //! In-Memory Computing with Integrated Error Correction"* (CS.DC 2025).
 //!
-//! ## Architecture (three layers)
+//! ## Architecture (four layers)
 //!
 //! * **L3 (this crate)** — the coordinator: RRAM device & crossbar (MCA)
 //!   simulation, `adjustableWriteandVerify` programming protocols, the
 //!   virtualization layer (zero-padding / block partitioning / chunk
 //!   scheduling / address mapping), a leader–worker distributed runtime,
 //!   energy & latency accounting, metrics, CLI and config.
+//! * **Serving layer** — [`server`]: program-once / solve-many resident
+//!   crossbar sessions ([`server::Session`]) with batched MVM, long-lived
+//!   worker pools, an LRU operand cache for multi-tenant residency
+//!   ([`server::OperandCache`]), and throughput/latency/energy serving
+//!   metrics ([`metrics::serving`]).  This is the request path for
+//!   repeated solves against the same operand — the conductance write is
+//!   paid once, each solve costs only input encodes and reads.
 //! * **L2/L1 (python/compile, build-time only)** — the JAX compute graph and
 //!   Pallas crossbar kernels, AOT-lowered to HLO-text artifacts.
 //! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` through the
-//!   PJRT CPU client (`xla` crate) and executes them on the request path.
-//!   Python never runs at request time.
+//!   PJRT CPU client (`xla` crate, behind the `pjrt` feature) and executes
+//!   them on the request path.  Python never runs at request time.
 //!
-//! ## Quickstart
+//! ## Quickstart (one-shot)
 //!
 //! ```no_run
 //! use meliso::prelude::*;
@@ -29,6 +36,22 @@
 //! let report = Meliso::new(SystemConfig::single_mca(128), cfg).unwrap()
 //!     .solve_source(matrix.as_ref(), &x).unwrap();
 //! println!("rel l2 error: {:.4}", report.rel_err_l2);
+//! ```
+//!
+//! ## Quickstart (resident session, program once / solve many)
+//!
+//! ```no_run
+//! use meliso::prelude::*;
+//!
+//! let matrix = meliso::matrices::registry::build("iperturb66").unwrap();
+//! let solver = Meliso::new(SystemConfig::single_mca(128), SolveOptions::default()).unwrap();
+//! let session = solver.open_session(matrix.clone()).unwrap();   // write-verify once
+//! for seed in 0..1000 {
+//!     let x = Vector::standard_normal(matrix.ncols(), seed);
+//!     let out = session.solve(&x).unwrap();                     // reads only
+//!     assert_eq!(out.y.len(), matrix.nrows());
+//! }
+//! println!("{}", session.report().render());
 //! ```
 
 pub mod bench;
@@ -42,6 +65,7 @@ pub mod matrices;
 pub mod mca;
 pub mod metrics;
 pub mod runtime;
+pub mod server;
 pub mod solver;
 pub mod testing;
 pub mod util;
@@ -54,5 +78,6 @@ pub mod prelude {
     pub use crate::ec::DenoiseMode;
     pub use crate::linalg::{Matrix, Vector};
     pub use crate::metrics::SolveReport;
+    pub use crate::server::Session;
     pub use crate::solver::Meliso;
 }

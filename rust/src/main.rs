@@ -1,12 +1,14 @@
 //! `meliso` — leader entrypoint / CLI for the MELISO+ framework.
 
-use meliso::cli::{parse, usage, Command, RunArgs};
+use meliso::cli::{parse, usage, Command, RunArgs, ServeBenchArgs};
 use meliso::device::materials::Material;
 use meliso::matrices::registry;
 use meliso::metrics::table::TableBuilder;
 use meliso::prelude::*;
 use meliso::solver::ReplicationSummary;
+use meliso::util::json::Json;
 use meliso::util::sci;
+use std::time::Instant;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -19,6 +21,13 @@ fn main() {
         Ok(Command::Devices) => cmd_devices(),
         Ok(Command::Artifacts) => cmd_artifacts(),
         Ok(Command::Run(run)) => match cmd_run(run) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        Ok(Command::ServeBench(sb)) => match cmd_serve_bench(sb) {
             Ok(()) => 0,
             Err(e) => {
                 eprintln!("error: {e}");
@@ -115,6 +124,114 @@ fn cmd_artifacts() -> i32 {
             1
         }
     }
+}
+
+/// Build the configured solver, falling back to the native backend with a
+/// note when the PJRT artifacts are unavailable.
+fn solver_or_native(system: SystemConfig, opts: SolveOptions) -> Meliso {
+    match Meliso::new(system, opts.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("note: {e}\nfalling back to the native backend");
+            Meliso::with_backend(
+                system,
+                opts.with_backend(BackendKind::Native),
+                std::sync::Arc::new(meliso::runtime::native::NativeBackend::new()),
+            )
+        }
+    }
+}
+
+fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
+    let source = registry::build(&args.matrix)?;
+    let n = source.ncols();
+    let solver = solver_or_native(args.system, args.opts.clone());
+    let xs: Vec<Vector> = (0..args.solves)
+        .map(|i| Vector::standard_normal(n, args.opts.seed ^ (0xB0B0 + i as u64)))
+        .collect();
+    eprintln!(
+        "# serve-bench {} ({}x{}), device {}, EC {}, system {}x{} tiles of {}², backend {}",
+        args.matrix,
+        source.nrows(),
+        n,
+        args.opts.material,
+        if args.opts.ec { "on" } else { "off" },
+        args.system.tile_rows,
+        args.system.tile_cols,
+        args.system.cell_size,
+        solver.backend_name(),
+    );
+
+    // One-shot reference: every solve re-programs the operand.
+    let baseline = if args.baseline > 0 {
+        args.baseline.min(args.solves)
+    } else {
+        args.solves.min(5)
+    };
+    let t = Instant::now();
+    let mut oneshot_write_j = 0.0;
+    for x in xs.iter().take(baseline) {
+        let r = solver.solve_source(source.as_ref(), x)?;
+        oneshot_write_j += r.ew_total;
+    }
+    let oneshot_s = t.elapsed().as_secs_f64() / baseline as f64;
+    let oneshot_j = oneshot_write_j / baseline as f64;
+
+    // Resident session: program once, then serve.
+    let session = solver.open_session(source.clone())?;
+    let program = session.program_report().clone();
+    for chunk in xs.chunks(args.batch) {
+        session.solve_batch(chunk)?;
+    }
+    let serving = session.report();
+
+    let speedup = oneshot_s / (serving.latency_mean_ms / 1e3).max(1e-12);
+    let energy_ratio = oneshot_j / serving.write_energy_per_solve_j.max(f64::MIN_POSITIVE);
+
+    if args.json {
+        let mut j = Json::obj();
+        j.set("matrix", Json::Str(args.matrix.clone()))
+            .set("oneshot_solves", Json::Num(baseline as f64))
+            .set("oneshot_per_solve_s", Json::Num(oneshot_s))
+            .set("oneshot_write_j_per_solve", Json::Num(oneshot_j))
+            .set("program_wall_s", Json::Num(program.wall_seconds))
+            .set("program_write_j", Json::Num(program.write_energy_j))
+            .set("serving", serving.to_json())
+            .set("wall_speedup", Json::Num(speedup))
+            .set("write_energy_ratio", Json::Num(energy_ratio));
+        println!("{}", j.pretty());
+    } else {
+        let mut t = TableBuilder::new(
+            &format!("serve-bench {} — one-shot vs resident session", args.matrix),
+            &["value"],
+        );
+        t.row("one-shot solves", vec![format!("{baseline}")]);
+        t.row("one-shot per-solve (ms)", vec![format!("{:.3}", oneshot_s * 1e3)]);
+        t.row("one-shot write J/solve", vec![sci(oneshot_j)]);
+        t.row("program wall (s)", vec![format!("{:.3}", program.wall_seconds)]);
+        t.row("program write (J)", vec![sci(program.write_energy_j)]);
+        t.row("resident chunks", vec![format!("{}", program.chunks_resident)]);
+        t.row("resident solves", vec![format!("{}", serving.solves)]);
+        t.row(
+            "resident per-solve (ms)",
+            vec![format!("{:.3}", serving.latency_mean_ms)],
+        );
+        t.row("resident p50 (ms)", vec![format!("{:.3}", serving.latency_p50_ms)]);
+        t.row("resident p99 (ms)", vec![format!("{:.3}", serving.latency_p99_ms)]);
+        t.row(
+            "resident write J/solve",
+            vec![sci(serving.write_energy_per_solve_j)],
+        );
+        t.row(
+            "resident read J/solve",
+            vec![sci(serving.read_energy_per_solve_j)],
+        );
+        t.row("throughput (solve/s)", vec![format!("{:.1}", serving.throughput_sps)]);
+        t.row("wall speedup", vec![format!("{speedup:.1}x")]);
+        t.row("write energy ratio", vec![format!("{energy_ratio:.1}x")]);
+        print!("{}", t.render());
+    }
+    Ok(())
 }
 
 fn cmd_run(run: RunArgs) -> Result<(), String> {

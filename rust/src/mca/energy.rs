@@ -44,6 +44,20 @@ impl EnergyLedger {
     pub fn reset(&mut self) {
         *self = EnergyLedger::default();
     }
+
+    /// Field-wise difference against an earlier snapshot (the serving layer
+    /// uses this for per-solve energy deltas on a long-lived MCA).
+    pub fn minus(&self, baseline: &EnergyLedger) -> EnergyLedger {
+        EnergyLedger {
+            write_energy_j: self.write_energy_j - baseline.write_energy_j,
+            write_latency_s: self.write_latency_s - baseline.write_latency_s,
+            read_energy_j: self.read_energy_j - baseline.read_energy_j,
+            write_passes: self.write_passes.saturating_sub(baseline.write_passes),
+            cells_written: self.cells_written.saturating_sub(baseline.cells_written),
+            pulses: self.pulses - baseline.pulses,
+            reads: self.reads.saturating_sub(baseline.reads),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -81,6 +95,22 @@ mod tests {
         assert!((b.write_energy_j - 3.0).abs() < 1e-12);
         assert!((b.read_energy_j - 0.5).abs() < 1e-12);
         assert_eq!(b.reads, 1);
+    }
+
+    #[test]
+    fn minus_gives_deltas() {
+        let mut a = EnergyLedger::default();
+        a.record_write(cost(1.0, 1.0));
+        let snapshot = a;
+        a.record_write(cost(2.0, 3.0));
+        a.record_read(0.25);
+        let d = a.minus(&snapshot);
+        assert!((d.write_energy_j - 2.0).abs() < 1e-12);
+        assert!((d.write_latency_s - 3.0).abs() < 1e-12);
+        assert!((d.read_energy_j - 0.25).abs() < 1e-12);
+        assert_eq!(d.write_passes, 1);
+        assert_eq!(d.cells_written, 10);
+        assert_eq!(d.reads, 1);
     }
 
     #[test]

@@ -63,6 +63,16 @@ impl Mca {
         &mut self.rng
     }
 
+    /// Swap in a different RNG stream, returning the previous one.
+    ///
+    /// The serving layer derives a counter-based stream per (solve, chunk)
+    /// so resident-session results are independent of batching and worker
+    /// scheduling (see `server::session::exec_stream_seed`); the persistent
+    /// programming stream is restored afterwards.
+    pub fn replace_rng(&mut self, rng: Rng) -> Rng {
+        std::mem::replace(&mut self.rng, rng)
+    }
+
     #[inline]
     fn d2d_at(&self, i: usize, j: usize) -> f64 {
         self.d2d[(i % self.rows) * self.cols + j % self.cols]

@@ -2,8 +2,11 @@
 //!
 //! Relative ℓ2/ℓ∞ error norms (paper Eq. in §2.1), energy/latency
 //! aggregation across MCAs (figures report the *mean across all MCAs*),
-//! and table/CSV/JSON emitters for the benches.
+//! table/CSV/JSON emitters for the benches, and [`serving`] statistics
+//! (throughput, latency percentiles, write-vs-read energy split) for the
+//! resident-session serving layer.
 
+pub mod serving;
 pub mod table;
 
 use crate::linalg::Vector;

@@ -1,0 +1,258 @@
+//! Serving-path metrics: throughput, per-solve latency percentiles, and
+//! the write-once / read-per-solve energy split for resident crossbar
+//! sessions (`crate::server`).
+//!
+//! The whole point of program-once / solve-many serving is that the
+//! conductance write is paid once while reads are nearly free — so the
+//! report keeps programming energy and per-solve energy in separate
+//! columns and exposes their ratio (`write_amortization`) directly.
+
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// Bound on retained per-solve latency samples (ring buffer beyond this).
+const MAX_LATENCY_SAMPLES: usize = 65_536;
+
+/// Mutable per-session counters, owned by the session behind its lock.
+#[derive(Clone, Debug)]
+pub struct ServingStats {
+    started: Instant,
+    solves: u64,
+    batches: u64,
+    errors: u64,
+    latencies_s: Vec<f64>,
+    sample_cursor: usize,
+    program_energy_j: f64,
+    program_latency_s: f64,
+    solve_write_energy_j: f64,
+    solve_read_energy_j: f64,
+}
+
+impl ServingStats {
+    pub fn new() -> ServingStats {
+        ServingStats {
+            started: Instant::now(),
+            solves: 0,
+            batches: 0,
+            errors: 0,
+            latencies_s: Vec::new(),
+            sample_cursor: 0,
+            program_energy_j: 0.0,
+            program_latency_s: 0.0,
+            solve_write_energy_j: 0.0,
+            solve_read_energy_j: 0.0,
+        }
+    }
+
+    /// Record the one-time programming cost (write–verify of the operand).
+    pub fn record_program(&mut self, energy_j: f64, latency_s: f64) {
+        self.program_energy_j += energy_j;
+        self.program_latency_s += latency_s;
+    }
+
+    /// Record one served batch: `vectors` solves in `wall_s` seconds, with
+    /// the given energy deltas accumulated across all MCAs.
+    pub fn record_batch(&mut self, vectors: usize, wall_s: f64, write_j: f64, read_j: f64) {
+        let vectors = vectors.max(1);
+        self.batches += 1;
+        self.solves += vectors as u64;
+        self.solve_write_energy_j += write_j;
+        self.solve_read_energy_j += read_j;
+        let per_vector = wall_s / vectors as f64;
+        for _ in 0..vectors {
+            if self.latencies_s.len() < MAX_LATENCY_SAMPLES {
+                self.latencies_s.push(per_vector);
+            } else {
+                self.latencies_s[self.sample_cursor] = per_vector;
+                self.sample_cursor = (self.sample_cursor + 1) % MAX_LATENCY_SAMPLES;
+            }
+        }
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// Snapshot the counters into an immutable report.
+    pub fn report(&self) -> ServingReport {
+        let mut sorted = self.latencies_s.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len().max(1) as f64;
+        let mean_s = sorted.iter().sum::<f64>() / n;
+        let uptime_s = self.started.elapsed().as_secs_f64();
+        let per_solve = |total: f64| total / self.solves.max(1) as f64;
+        let write_per_solve = per_solve(self.solve_write_energy_j);
+        ServingReport {
+            solves: self.solves,
+            batches: self.batches,
+            errors: self.errors,
+            uptime_s,
+            throughput_sps: self.solves as f64 / uptime_s.max(1e-9),
+            latency_mean_ms: mean_s * 1e3,
+            latency_p50_ms: percentile(&sorted, 0.50) * 1e3,
+            latency_p99_ms: percentile(&sorted, 0.99) * 1e3,
+            program_energy_j: self.program_energy_j,
+            program_latency_s: self.program_latency_s,
+            solve_write_energy_j: self.solve_write_energy_j,
+            solve_read_energy_j: self.solve_read_energy_j,
+            write_energy_per_solve_j: write_per_solve,
+            read_energy_per_solve_j: per_solve(self.solve_read_energy_j),
+            write_amortization: self.program_energy_j / write_per_solve.max(f64::MIN_POSITIVE),
+        }
+    }
+}
+
+impl Default for ServingStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Nearest-rank percentile of a sorted series, `q` in `[0, 1]`.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+    sorted[idx]
+}
+
+/// Immutable snapshot of a session's serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServingReport {
+    pub solves: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub uptime_s: f64,
+    /// Served vectors per second over the session lifetime.
+    pub throughput_sps: f64,
+    pub latency_mean_ms: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    /// One-time programming (write) cost of the resident operand.
+    pub program_energy_j: f64,
+    pub program_latency_s: f64,
+    /// Cumulative per-solve costs (input-vector encodes + reads).
+    pub solve_write_energy_j: f64,
+    pub solve_read_energy_j: f64,
+    pub write_energy_per_solve_j: f64,
+    pub read_energy_per_solve_j: f64,
+    /// Programming energy over per-solve write energy: how many solves the
+    /// resident write amortizes across.
+    pub write_amortization: f64,
+}
+
+impl ServingReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("solves", Json::Num(self.solves as f64))
+            .set("batches", Json::Num(self.batches as f64))
+            .set("errors", Json::Num(self.errors as f64))
+            .set("uptime_s", Json::Num(self.uptime_s))
+            .set("throughput_sps", Json::Num(self.throughput_sps))
+            .set("latency_mean_ms", Json::Num(self.latency_mean_ms))
+            .set("latency_p50_ms", Json::Num(self.latency_p50_ms))
+            .set("latency_p99_ms", Json::Num(self.latency_p99_ms))
+            .set("program_energy_j", Json::Num(self.program_energy_j))
+            .set("program_latency_s", Json::Num(self.program_latency_s))
+            .set(
+                "solve_write_energy_j",
+                Json::Num(self.solve_write_energy_j),
+            )
+            .set("solve_read_energy_j", Json::Num(self.solve_read_energy_j))
+            .set(
+                "write_energy_per_solve_j",
+                Json::Num(self.write_energy_per_solve_j),
+            )
+            .set(
+                "read_energy_per_solve_j",
+                Json::Num(self.read_energy_per_solve_j),
+            )
+            .set("write_amortization", Json::Num(self.write_amortization));
+        j
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "solves {} (batches {}, errors {}) over {:.2}s -> {:.1} solves/s\n\
+             latency ms: mean {:.3}, p50 {:.3}, p99 {:.3}\n\
+             energy J: program {:.3e} (once), write/solve {:.3e}, read/solve {:.3e}\n\
+             write amortization: {:.1}x",
+            self.solves,
+            self.batches,
+            self.errors,
+            self.uptime_s,
+            self.throughput_sps,
+            self.latency_mean_ms,
+            self.latency_p50_ms,
+            self.latency_p99_ms,
+            self.program_energy_j,
+            self.write_energy_per_solve_j,
+            self.read_energy_per_solve_j,
+            self.write_amortization,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0); // round(99 * 0.5) = 50
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn batches_accumulate() {
+        let mut s = ServingStats::new();
+        s.record_program(10.0, 0.5);
+        s.record_batch(4, 0.08, 1.0, 2.0);
+        s.record_batch(1, 0.01, 0.25, 0.5);
+        let r = s.report();
+        assert_eq!(r.solves, 5);
+        assert_eq!(r.batches, 2);
+        assert!((r.solve_write_energy_j - 1.25).abs() < 1e-12);
+        assert!((r.solve_read_energy_j - 2.5).abs() < 1e-12);
+        assert!((r.write_energy_per_solve_j - 0.25).abs() < 1e-12);
+        assert!((r.program_energy_j - 10.0).abs() < 1e-12);
+        assert!((r.write_amortization - 40.0).abs() < 1e-9);
+        assert!(r.throughput_sps > 0.0);
+        // 4 samples at 20ms, 1 at 10ms.
+        assert!((r.latency_p50_ms - 20.0).abs() < 1e-9, "{}", r.latency_p50_ms);
+    }
+
+    #[test]
+    fn latency_samples_are_bounded() {
+        let mut s = ServingStats::new();
+        for _ in 0..3 {
+            s.record_batch(40_000, 1.0, 0.0, 0.0);
+        }
+        assert_eq!(s.report().solves, 120_000);
+        assert!(s.latencies_s.len() <= 65_536);
+    }
+
+    #[test]
+    fn errors_counted() {
+        let mut s = ServingStats::new();
+        s.record_error();
+        s.record_error();
+        assert_eq!(s.report().errors, 2);
+    }
+
+    #[test]
+    fn json_has_serving_fields() {
+        let mut s = ServingStats::new();
+        s.record_batch(2, 0.02, 0.5, 1.0);
+        let j = s.report().to_json();
+        assert_eq!(j.get("solves").unwrap().as_f64(), Some(2.0));
+        assert!(j.get("latency_p99_ms").is_some());
+        assert!(j.get("write_amortization").is_some());
+    }
+}

@@ -12,8 +12,25 @@
 //!   and serves requests over a channel ([`service`]).
 
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod service;
+
+/// Stub `pjrt` module when the feature (and its vendored `xla` crate) is
+/// absent; keeps the `runtime::pjrt::default_artifact_dir` path alive for
+/// the CLI `artifacts` command and the solver's error path.
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt {
+    pub use super::default_artifact_dir;
+}
+
+/// Default artifact directory: `$MELISO_ARTIFACTS` or `./artifacts`.
+/// Feature-independent — both the PJRT engine and its stub re-export it.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("MELISO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
 
 use std::sync::Arc;
 

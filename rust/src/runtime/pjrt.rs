@@ -192,9 +192,4 @@ fn mat_literal(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal, S
         .map_err(|e| format!("reshape literal: {e}"))
 }
 
-/// Default artifact directory: `$MELISO_ARTIFACTS` or `./artifacts`.
-pub fn default_artifact_dir() -> PathBuf {
-    std::env::var("MELISO_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
-}
+pub use super::default_artifact_dir;

@@ -8,13 +8,57 @@
 //! one analog MVM at a time — while the coordinator's worker pool still
 //! overlaps encode (Rust) with execute (PJRT).
 
+#[cfg(feature = "pjrt")]
 use super::pjrt::PjrtEngine;
 use super::{EcMvmRequest, EcMvmResponse, ExecBackend};
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::sync::mpsc;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
 use std::thread::JoinHandle;
 
+/// Placeholder backend when the `pjrt` feature (and its vendored `xla`
+/// dependency) is absent: [`PjrtBackend::start`] always fails with a clear
+/// message, so callers fall back to the native twin.  The type cannot be
+/// constructed, making the trait methods unreachable by construction.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtBackend {
+    unconstructible: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtBackend {
+    pub fn start(dir: &Path) -> Result<PjrtBackend, String> {
+        Err(format!(
+            "PJRT runtime support is not compiled in (build with `--features pjrt` and the \
+             vendored `xla` crate); artifact dir {}",
+            dir.display()
+        ))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ExecBackend for PjrtBackend {
+    fn mvm(&self, _n: usize, _at: Vec<f32>, _xt: Vec<f32>) -> Result<Vec<f32>, String> {
+        match self.unconstructible {}
+    }
+
+    fn ec_mvm(&self, _req: EcMvmRequest) -> Result<EcMvmResponse, String> {
+        match self.unconstructible {}
+    }
+
+    fn tile_sizes(&self) -> Vec<usize> {
+        match self.unconstructible {}
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(feature = "pjrt")]
 enum Request {
     Mvm {
         n: usize,
@@ -30,12 +74,14 @@ enum Request {
 }
 
 /// `ExecBackend` implementation backed by the runtime-service thread.
+#[cfg(feature = "pjrt")]
 pub struct PjrtBackend {
     tx: Mutex<mpsc::Sender<Request>>,
     sizes: Vec<usize>,
     handle: Mutex<Option<JoinHandle<()>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtBackend {
     /// Start the service thread and load artifacts from `dir`.
     pub fn start(dir: &Path) -> Result<PjrtBackend, String> {
@@ -87,6 +133,7 @@ impl PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl ExecBackend for PjrtBackend {
     fn mvm(&self, n: usize, at: Vec<f32>, xt: Vec<f32>) -> Result<Vec<f32>, String> {
         let (reply, rx) = mpsc::channel();
@@ -114,6 +161,7 @@ impl ExecBackend for PjrtBackend {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Drop for PjrtBackend {
     fn drop(&mut self) {
         let _ = self.send(Request::Shutdown);

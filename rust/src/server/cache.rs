@@ -1,0 +1,358 @@
+//! Multi-tenant operand residency: an LRU cache of resident [`Session`]s
+//! keyed by matrix fingerprint.
+//!
+//! A serving deployment holds many operands but only so much crossbar
+//! real estate.  [`OperandCache`] keeps the `capacity` most-recently-used
+//! sessions resident; a repeated solve against a cached operand skips the
+//! whole write–verify programming pass (the expensive part), and the
+//! least-recently-used session is dropped (its worker pool shut down) when
+//! a new tenant needs the space.
+//!
+//! Keys combine a content [`fingerprint`] of the operand with every option
+//! that shapes the resident state (material, geometry, seed, EC settings),
+//! so two tenants only share a session when they would get bit-identical
+//! results from it.
+
+use super::session::Session;
+use crate::config::{SolveOptions, SystemConfig};
+use crate::ec::DenoiseMode;
+use crate::matrices::MatrixSource;
+use crate::solver::Meliso;
+use std::sync::Arc;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+/// Independent offset for the second hash lane (collision probability of
+/// the pair is ~2⁻¹²⁸ for accidental collisions).
+const FNV_OFFSET_2: u64 = FNV_OFFSET ^ 0x9E37_79B9_7F4A_7C15;
+
+#[inline]
+fn mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// A 128-bit content hash pair, advanced together over the same stream.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+struct HashPair(u64, u64);
+
+impl HashPair {
+    fn new(offset: u64) -> HashPair {
+        HashPair(offset, FNV_OFFSET_2 ^ offset)
+    }
+
+    #[inline]
+    fn mix(&mut self, v: u64) {
+        self.0 = mix(self.0, v);
+        self.1 = mix(self.1, v.rotate_left(31) ^ 0xA076_1D64_78BD_642F);
+    }
+}
+
+/// Entry budget above which the fingerprint samples a deterministic probe
+/// grid instead of hashing every entry (procedural 65k² operands would
+/// otherwise cost a full O(mn) sweep per lookup).
+const EXACT_FINGERPRINT_LIMIT: usize = 1 << 22;
+
+/// Hash the operand content: dims plus entries.  Returns the pair and
+/// whether every entry was covered (`false` = probe-sampled, so equal
+/// hashes do not prove equal content).
+fn content_hash(source: &dyn MatrixSource) -> (HashPair, bool) {
+    let (m, n) = (source.nrows(), source.ncols());
+    let mut h = HashPair::new(FNV_OFFSET);
+    h.mix(m as u64);
+    h.mix(n as u64);
+    let exact = m.saturating_mul(n) <= EXACT_FINGERPRINT_LIMIT;
+    if exact {
+        let rows_per = (EXACT_FINGERPRINT_LIMIT / n.max(1)).clamp(1, 256);
+        let mut r0 = 0;
+        while r0 < m {
+            let rows = rows_per.min(m - r0);
+            let block = source.block(r0, 0, rows, n);
+            for &v in block.data() {
+                h.mix(v.to_bits());
+            }
+            r0 += rows;
+        }
+    } else {
+        h.mix(source.max_abs().to_bits());
+        let step_r = (m / 16).max(1);
+        let step_c = (n / 16).max(1);
+        let mut r0 = 0;
+        while r0 < m {
+            let mut c0 = 0;
+            while c0 < n {
+                let block = source.block(r0, c0, 8.min(m - r0), 8.min(n - c0));
+                for &v in block.data() {
+                    h.mix(v.to_bits());
+                }
+                c0 += step_c;
+            }
+            r0 += step_r;
+        }
+    }
+    (h, exact)
+}
+
+/// Content fingerprint of an operand (primary hash lane): dimensions plus
+/// entries — exact for small operands, a deterministic probe grid for
+/// large ones.
+pub fn fingerprint(source: &dyn MatrixSource) -> u64 {
+    content_hash(source).0 .0
+}
+
+/// Cache key: operand content hash folded with everything that shapes the
+/// resident state.  Worker count is deliberately excluded — session
+/// results are worker-count independent, so those lookups may share.
+/// For probe-sampled (large) operands `exact` is `false` and the cache
+/// additionally requires source *identity* to share a session — equal
+/// probes cannot prove equal content.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct SessionKey {
+    hash: HashPair,
+    exact: bool,
+}
+
+pub fn session_key(
+    source: &dyn MatrixSource,
+    config: &SystemConfig,
+    opts: &SolveOptions,
+) -> SessionKey {
+    let (mut h, exact) = content_hash(source);
+    h.mix(config.tile_rows as u64);
+    h.mix(config.tile_cols as u64);
+    h.mix(config.cell_size as u64);
+    let material = crate::device::materials::Material::ALL
+        .iter()
+        .position(|m| *m == opts.material)
+        .unwrap_or(0) as u64;
+    h.mix(material);
+    h.mix(opts.seed);
+    h.mix(opts.ec as u64);
+    let denoise = match opts.denoise {
+        DenoiseMode::InMemory => 0u64,
+        DenoiseMode::Digital => 1,
+        DenoiseMode::Off => 2,
+    };
+    h.mix(denoise);
+    h.mix(opts.lambda.to_bits());
+    h.mix(opts.h.to_bits());
+    h.mix(opts.wv_iters as u64);
+    h.mix(opts.wv_rel_tol.to_bits());
+    h.mix(opts.wv_norm_inf as u64);
+    // Extended non-idealities shape both the resident image (drift and IR
+    // drop bake in at program time) and every read-out (ADC), so they must
+    // split keys too.
+    h.mix(opts.nonideal.adc.bits as u64);
+    h.mix(opts.nonideal.drift.nu.to_bits());
+    h.mix(opts.nonideal.drift.elapsed.to_bits());
+    h.mix(opts.nonideal.ir_drop.alpha.to_bits());
+    SessionKey { hash: h, exact }
+}
+
+struct CacheEntry {
+    key: SessionKey,
+    source: Arc<dyn MatrixSource>,
+    last_used: u64,
+    session: Arc<Session>,
+}
+
+impl CacheEntry {
+    /// Content-hash equality, plus source identity when the hash was
+    /// probe-sampled (a sampled hash cannot prove equal content).
+    fn matches(&self, key: &SessionKey, source: &Arc<dyn MatrixSource>) -> bool {
+        self.key == *key && (key.exact || Arc::ptr_eq(&self.source, source))
+    }
+}
+
+/// LRU cache of resident sessions (multi-tenant serving).
+pub struct OperandCache {
+    capacity: usize,
+    entries: Vec<CacheEntry>,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl OperandCache {
+    /// A cache keeping at most `capacity` operands resident.
+    pub fn new(capacity: usize) -> OperandCache {
+        assert!(capacity > 0, "cache capacity must be positive");
+        OperandCache {
+            capacity,
+            entries: Vec::new(),
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Return the resident session for `source` under the solver's
+    /// configuration, programming it (and evicting the LRU tenant) on miss.
+    pub fn get_or_open(
+        &mut self,
+        solver: &Meliso,
+        source: &Arc<dyn MatrixSource>,
+    ) -> Result<Arc<Session>, String> {
+        let key = session_key(source.as_ref(), solver.config(), solver.options());
+        self.clock += 1;
+        if let Some(entry) = self.entries.iter_mut().find(|e| e.matches(&key, source)) {
+            entry.last_used = self.clock;
+            self.hits += 1;
+            return Ok(entry.session.clone());
+        }
+        self.misses += 1;
+        let session = Arc::new(solver.open_session(source.clone())?);
+        if self.entries.len() >= self.capacity {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("non-empty cache");
+            self.entries.swap_remove(lru);
+            self.evictions += 1;
+        }
+        self.entries.push(CacheEntry {
+            key,
+            source: source.clone(),
+            last_used: self.clock,
+            session: session.clone(),
+        });
+        Ok(session)
+    }
+
+    /// Whether an operand is currently resident (does not touch LRU order).
+    pub fn contains(&self, solver: &Meliso, source: &Arc<dyn MatrixSource>) -> bool {
+        let key = session_key(source.as_ref(), solver.config(), solver.options());
+        self.entries.iter().any(|e| e.matches(&key, source))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::materials::Material;
+    use crate::linalg::{Matrix, Vector};
+    use crate::matrices::DenseSource;
+    use crate::runtime::native::NativeBackend;
+
+    fn solver() -> Meliso {
+        Meliso::with_backend(
+            SystemConfig::single_mca(32),
+            SolveOptions::default().with_device(Material::EpiRam),
+            Arc::new(NativeBackend::new()),
+        )
+    }
+
+    fn operand(seed: u64) -> Arc<dyn MatrixSource> {
+        Arc::new(DenseSource::new(Matrix::standard_normal(16, 16, seed)))
+    }
+
+    #[test]
+    fn fingerprint_tracks_content() {
+        let a = operand(1);
+        let same = operand(1);
+        let other = operand(2);
+        assert_eq!(fingerprint(a.as_ref()), fingerprint(same.as_ref()));
+        assert_ne!(fingerprint(a.as_ref()), fingerprint(other.as_ref()));
+    }
+
+    #[test]
+    fn session_key_tracks_options() {
+        let a = operand(3);
+        let cfg = SystemConfig::single_mca(32);
+        let base = SolveOptions::default();
+        let k = session_key(a.as_ref(), &cfg, &base);
+        assert_eq!(k, session_key(a.as_ref(), &cfg, &base.clone()));
+        assert_ne!(k, session_key(a.as_ref(), &cfg, &base.clone().with_seed(9)));
+        assert_ne!(
+            k,
+            session_key(a.as_ref(), &cfg, &base.clone().with_ec(false))
+        );
+        assert_ne!(
+            k,
+            session_key(a.as_ref(), &cfg, &base.clone().with_device(Material::AgASi))
+        );
+        // Non-idealities shape the resident image and read-outs.
+        use crate::device::nonideal::{AdcModel, NonIdealExt};
+        let quantized = base.clone().with_nonideal(NonIdealExt {
+            adc: AdcModel::new(4),
+            ..NonIdealExt::default()
+        });
+        assert_ne!(k, session_key(a.as_ref(), &cfg, &quantized));
+        // Worker count does not change results, so it must not split keys.
+        assert_eq!(k, session_key(a.as_ref(), &cfg, &base.with_workers(9)));
+    }
+
+    #[test]
+    fn sampled_fingerprints_require_identity() {
+        use crate::matrices::BandedSource;
+        let cfg = SystemConfig::single_mca(32);
+        let opts = SolveOptions::default();
+        // Small operands hash every entry: content equality is proven.
+        assert!(session_key(operand(1).as_ref(), &cfg, &opts).exact);
+        // Large operands are probe-sampled: hashes agree but `exact` is
+        // false, so CacheEntry::matches additionally demands identity.
+        let big_a: Arc<dyn MatrixSource> =
+            Arc::new(BandedSource::new(4096, 4, 1.0, 10.0, 0.2, 3));
+        let big_b: Arc<dyn MatrixSource> =
+            Arc::new(BandedSource::new(4096, 4, 1.0, 10.0, 0.2, 3));
+        let ka = session_key(big_a.as_ref(), &cfg, &opts);
+        let kb = session_key(big_b.as_ref(), &cfg, &opts);
+        assert_eq!(ka, kb);
+        assert!(!ka.exact);
+        let entry = CacheEntry {
+            key: ka,
+            source: big_a.clone(),
+            last_used: 0,
+            session: Arc::new(
+                solver()
+                    .open_session(operand(1))
+                    .expect("session for entry"),
+            ),
+        };
+        assert!(entry.matches(&ka, &big_a));
+        assert!(!entry.matches(&kb, &big_b));
+    }
+
+    #[test]
+    fn cache_hits_and_reuses_sessions() {
+        let solver = solver();
+        let mut cache = OperandCache::new(2);
+        let a = operand(5);
+        let s1 = cache.get_or_open(&solver, &a).unwrap();
+        let s2 = cache.get_or_open(&solver, &a).unwrap();
+        assert!(Arc::ptr_eq(&s1, &s2));
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        // The cached session actually serves.
+        let x = Vector::standard_normal(16, 6);
+        assert!(s2.solve(&x).is_ok());
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let solver = solver();
+        let mut cache = OperandCache::new(2);
+        let (a, b, c) = (operand(7), operand(8), operand(9));
+        cache.get_or_open(&solver, &a).unwrap();
+        cache.get_or_open(&solver, &b).unwrap();
+        // Touch `a` so `b` becomes LRU, then insert `c`.
+        cache.get_or_open(&solver, &a).unwrap();
+        cache.get_or_open(&solver, &c).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions, 1);
+        assert!(cache.contains(&solver, &a));
+        assert!(!cache.contains(&solver, &b));
+        assert!(cache.contains(&solver, &c));
+    }
+}

@@ -1,0 +1,29 @@
+//! Serving layer: program-once / solve-many resident crossbar sessions.
+//!
+//! Writing conductances is the expensive operation on RRAM; reading them
+//! is nearly free.  The one-shot [`crate::coordinator`] re-programs the
+//! whole operand on every call — correct for benchmarking a single MVM,
+//! but orders of magnitude wasteful for the dominant serving pattern of
+//! many solves against the same operand.  This module keeps operands
+//! *resident*:
+//!
+//! * [`Session`] — one operand programmed onto the MCA grid through a
+//!   single write–verify pass, held by a pool of long-lived workers whose
+//!   [`crate::ec::TileExecutor`]s (fixed-pattern noise, energy ledgers)
+//!   persist across calls; [`Session::solve`] and [`Session::solve_batch`]
+//!   then pay only input-vector encodes and crossbar reads.
+//! * [`OperandCache`] — multi-tenant residency: an LRU cache of sessions
+//!   keyed by operand [`fingerprint`] + programming options.
+//! * Serving metrics — throughput, p50/p99 latency, and the
+//!   write-once/read-per-solve energy split, in
+//!   [`crate::metrics::serving`].
+//!
+//! Entry point: [`crate::solver::Meliso::open_session`].  The CLI exposes
+//! `meliso serve-bench`, and `benches/serving_throughput.rs` quantifies
+//! the amortization against repeated one-shot solves.
+
+pub mod cache;
+pub mod session;
+
+pub use cache::{fingerprint, session_key, OperandCache, SessionKey};
+pub use session::{exec_stream_seed, ProgramReport, ServeSolve, Session};

@@ -20,6 +20,8 @@ use crate::runtime::native::NativeBackend;
 use crate::runtime::pjrt::default_artifact_dir;
 use crate::runtime::service::PjrtBackend;
 use crate::runtime::Backend;
+use crate::server::Session;
+use std::path::Path;
 use std::sync::Arc;
 
 /// The MELISO+ solver: a configured multi-MCA system plus solve options.
@@ -33,21 +35,29 @@ impl Meliso {
     /// Build a solver; starts the PJRT runtime service when requested
     /// (set `MELISO_ARTIFACTS` to point elsewhere than `./artifacts`).
     pub fn new(config: SystemConfig, opts: SolveOptions) -> Result<Meliso, String> {
+        let dir = default_artifact_dir();
+        Meliso::new_with_artifacts(config, opts, &dir)
+    }
+
+    /// Build a solver with an explicit artifact directory (no environment
+    /// lookup — embedders and tests pass the path directly).
+    pub fn new_with_artifacts(
+        config: SystemConfig,
+        opts: SolveOptions,
+        dir: &Path,
+    ) -> Result<Meliso, String> {
         let backend: Backend = match opts.backend {
             BackendKind::Native => Arc::new(NativeBackend::new()),
-            BackendKind::Pjrt => {
-                let dir = default_artifact_dir();
-                match PjrtBackend::start(&dir) {
-                    Ok(b) => Arc::new(b),
-                    Err(e) => {
-                        return Err(format!(
-                            "failed to start PJRT runtime from {} ({e}); run `make artifacts` \
-                             or use the native backend",
-                            dir.display()
-                        ))
-                    }
+            BackendKind::Pjrt => match PjrtBackend::start(dir) {
+                Ok(b) => Arc::new(b),
+                Err(e) => {
+                    return Err(format!(
+                        "failed to start PJRT runtime from {} ({e}); run `make artifacts` \
+                         or use the native backend",
+                        dir.display()
+                    ))
                 }
-            }
+            },
         };
         Ok(Meliso {
             config,
@@ -98,29 +108,87 @@ impl Meliso {
         self.solve_source(&src, x)
     }
 
+    /// Open a resident serving session: program `source` onto the grid
+    /// once, then serve unlimited `solve` / `solve_batch` calls against it
+    /// (see [`crate::server`]).  The expensive write–verify pass is paid
+    /// here; per-solve cost drops to input-vector encodes plus reads.
+    pub fn open_session(&self, source: Arc<dyn MatrixSource>) -> Result<Session, String> {
+        Session::open(source, self.config, self.opts.clone(), self.backend.clone())
+    }
+
+    /// Per-replication seed: the same derivation whether replications run
+    /// serially or in parallel.
+    fn replication_seed(&self, r: usize) -> u64 {
+        self.opts
+            .seed
+            .wrapping_add((r as u64).wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
     /// Run `reps` independent replications (fresh seeds) and return all
     /// reports — the paper averages 100 replications per cell of Table 1.
+    ///
+    /// Replications are embarrassingly parallel, so they fan out over up
+    /// to `opts.workers` scoped threads; each replication's seed is a pure
+    /// function of its index, so the returned reports are identical to a
+    /// serial run.
     pub fn replicate(
         &self,
         source: &dyn MatrixSource,
         x: &Vector,
         reps: usize,
     ) -> Result<Vec<SolveReport>, String> {
-        let mut reports = Vec::with_capacity(reps);
-        for r in 0..reps {
+        if reps == 0 {
+            return Ok(Vec::new());
+        }
+        let lanes = self.opts.workers.max(1).min(reps);
+        // Keep the total thread budget at ~opts.workers: each lane's inner
+        // coordinator gets a proportional share (results are worker-count
+        // independent, so this cannot change any report).
+        let inner_workers = (self.opts.workers.max(1) / lanes).max(1);
+        let solve_rep = |r: usize, workers: usize| {
             let mut opts = self.opts.clone();
-            opts.seed = self
-                .opts
-                .seed
-                .wrapping_add((r as u64).wrapping_mul(0x9E3779B97F4A7C15));
-            let report = coordinator::solve_distributed(
-                source,
-                x,
-                &self.config,
-                &opts,
-                self.backend.clone(),
-            )?;
-            reports.push(report);
+            opts.seed = self.replication_seed(r);
+            opts.workers = workers;
+            coordinator::solve_distributed(source, x, &self.config, &opts, self.backend.clone())
+        };
+        if lanes <= 1 {
+            let mut reports = Vec::with_capacity(reps);
+            for r in 0..reps {
+                reports.push(solve_rep(r, self.opts.workers)?);
+            }
+            return Ok(reports);
+        }
+        let mut slots: Vec<Option<Result<SolveReport, String>>> =
+            std::iter::repeat_with(|| None).take(reps).collect();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(lanes);
+            for lane in 0..lanes {
+                let solve_rep = &solve_rep;
+                handles.push(scope.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut r = lane;
+                    while r < reps {
+                        out.push((r, solve_rep(r, inner_workers)));
+                        r += lanes;
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                if let Ok(pairs) = h.join() {
+                    for (r, res) in pairs {
+                        slots[r] = Some(res);
+                    }
+                }
+            }
+        });
+        let mut reports = Vec::with_capacity(reps);
+        for (r, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Some(Ok(report)) => reports.push(report),
+                Some(Err(e)) => return Err(format!("replication {r}: {e}")),
+                None => return Err(format!("replication {r} worker panicked")),
+            }
         }
         Ok(reports)
     }
@@ -190,11 +258,63 @@ mod tests {
 
     #[test]
     fn pjrt_missing_artifacts_is_clean_error() {
-        std::env::set_var("MELISO_ARTIFACTS", "/nonexistent-dir");
-        let r = Meliso::new(SystemConfig::single_mca(32), SolveOptions::default());
-        std::env::remove_var("MELISO_ARTIFACTS");
+        // Pass the artifact dir explicitly: mutating MELISO_ARTIFACTS via
+        // set_var/remove_var under the parallel test runner races with any
+        // concurrent test that reads the environment.
+        let r = Meliso::new_with_artifacts(
+            SystemConfig::single_mca(32),
+            SolveOptions::default(),
+            Path::new("/nonexistent-dir"),
+        );
         assert!(r.is_err());
         let msg = r.err().unwrap();
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn open_session_front_door() {
+        let a = Matrix::standard_normal(32, 32, 5);
+        let x = Vector::standard_normal(32, 6);
+        let solver = native_solver(
+            SystemConfig::single_mca(32),
+            SolveOptions::default().with_device(Material::EpiRam),
+        );
+        let src: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(a.clone()));
+        let session = solver.open_session(src).unwrap();
+        let out = session.solve(&x).unwrap();
+        let b = a.matvec(&x);
+        let err = out.y.sub(&b).norm_l2() / b.norm_l2();
+        assert!(err < 0.1, "{err}");
+        assert_eq!(session.report().solves, 1);
+    }
+
+    #[test]
+    fn parallel_replicate_matches_serial() {
+        let a = Matrix::standard_normal(32, 32, 7);
+        let x = Vector::standard_normal(32, 8);
+        let src = DenseSource::new(a);
+        // workers=1 forces the serial path; workers=4 fans out — the
+        // per-replication seeds are index-derived, so reports must agree.
+        let serial = native_solver(
+            SystemConfig::single_mca(32),
+            SolveOptions::default()
+                .with_device(Material::TaOxHfOx)
+                .with_workers(1),
+        )
+        .replicate(&src, &x, 4)
+        .unwrap();
+        let parallel = native_solver(
+            SystemConfig::single_mca(32),
+            SolveOptions::default()
+                .with_device(Material::TaOxHfOx)
+                .with_workers(4),
+        )
+        .replicate(&src, &x, 4)
+        .unwrap();
+        assert_eq!(serial.len(), 4);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.y, p.y);
+            assert_eq!(s.rel_err_l2, p.rel_err_l2);
+        }
     }
 }

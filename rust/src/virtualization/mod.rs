@@ -206,6 +206,56 @@ mod tests {
     }
 
     #[test]
+    fn non_square_operand_plan() {
+        // 100x40 on 2x2 tiles of 32²: 4x2 chunk grid, rows reassign.
+        let g = SystemGeometry::new(2, 2, 32);
+        let plan = ChunkPlan::new(g, 100, 40);
+        assert_eq!((plan.grid_rows, plan.grid_cols), (4, 2));
+        assert_eq!(plan.total_chunks(), 8);
+        assert_eq!(plan.padded_dims(), (128, 64));
+        assert_eq!(plan.row_reassignments(), 2);
+        assert!(!plan.fits_physically());
+        let last = plan.chunk(3, 1);
+        assert_eq!((last.row0, last.col0), (96, 32));
+        assert_eq!((last.mca_row, last.mca_col), (1, 1));
+        assert_eq!(last.mca_index, 3);
+    }
+
+    #[test]
+    fn operand_smaller_than_cell() {
+        // 20x7 on 4x4 tiles of 128²: one zero-padded chunk on MCA 0.
+        let g = SystemGeometry::new(4, 4, 128);
+        let plan = ChunkPlan::new(g, 20, 7);
+        assert_eq!(plan.total_chunks(), 1);
+        assert_eq!(plan.padded_dims(), (128, 128));
+        assert!(plan.fits_physically());
+        assert_eq!(plan.normalization_factor(), 1);
+        assert_eq!(plan.row_reassignments(), 1);
+        let c = plan.chunk(0, 0);
+        assert_eq!((c.row0, c.col0, c.mca_index), (0, 0, 0));
+        let counts = plan.assignments_per_mca();
+        assert_eq!(counts.iter().sum::<usize>(), 1);
+        assert_eq!(counts[0], 1);
+    }
+
+    #[test]
+    fn short_wide_operand_m_below_cell() {
+        // m < cell_size but n spans several columns of chunks.
+        let g = SystemGeometry::new(2, 2, 32);
+        let plan = ChunkPlan::new(g, 20, 100);
+        assert_eq!((plan.grid_rows, plan.grid_cols), (1, 4));
+        assert_eq!(plan.total_chunks(), 4);
+        assert_eq!(plan.padded_dims(), (32, 128));
+        let c = plan.chunk(0, 3);
+        assert_eq!((c.row0, c.col0), (0, 96));
+        assert_eq!((c.mca_row, c.mca_col), (0, 1));
+        assert_eq!(c.mca_index, 1);
+        // Only the first tile row of MCAs is ever used.
+        let counts = plan.assignments_per_mca();
+        assert_eq!(counts, vec![2, 2, 0, 0]);
+    }
+
+    #[test]
     fn chunk_assignment_round_robin() {
         let g = SystemGeometry::new(2, 2, 32);
         let plan = ChunkPlan::new(g, 128, 128); // 4x4 grid on 2x2 tiles
