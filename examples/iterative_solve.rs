@@ -1,0 +1,68 @@
+//! Iterative Ax = b quickstart: solve a linear system where every Krylov
+//! iteration is an in-memory MVM against a resident crossbar session —
+//! the operand is write–verified once, every iteration afterwards is
+//! read-only, and exact f64 host-side refinement drives the residual far
+//! below the device's per-MVM error floor.
+//!
+//! ```sh
+//! cargo run --release --example iterative_solve
+//! ```
+
+use meliso::prelude::*;
+
+fn main() -> Result<(), String> {
+    // 1. A solver on one 64² MCA; fall back to the native backend when
+    //    the PJRT artifacts are absent.
+    let system = SystemConfig::single_mca(64);
+    let opts = SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_wv_iters(3)
+        .with_seed(42);
+    let solver = match Meliso::new(system, opts.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("note: {e}\nfalling back to the native backend");
+            Meliso::with_backend(
+                system,
+                opts.with_backend(BackendKind::Native),
+                std::sync::Arc::new(meliso::runtime::native::NativeBackend::new()),
+            )
+        }
+    };
+
+    // 2. CG on a well-conditioned SPD registry operand.  The right-hand
+    //    side comes from a known solution so the true error is visible.
+    let a = meliso::matrices::registry::build("spd64")?;
+    let x_star = Vector::standard_normal(a.ncols(), 7);
+    let b = a.matvec(&x_star);
+    let cg = IterOptions::default()
+        .with_method(Method::Cg)
+        .with_tol(1e-6)
+        .with_max_iters(40)
+        .with_refinements(50);
+    let report = solver.solve_system(a, &b, &cg)?;
+    println!("{}", report.render());
+    let err = report.x.sub(&x_star).norm_l2() / x_star.norm_l2();
+    println!("true solution error: {err:.3e}");
+    println!(
+        "residual trajectory (outer): {:?}",
+        report
+            .residual_history
+            .iter()
+            .map(|r| format!("{r:.1e}"))
+            .collect::<Vec<_>>()
+    );
+
+    // 3. GMRES(m) handles the nonsymmetric operands the same way.
+    let a = meliso::matrices::registry::build("nonsym64")?;
+    let b = a.matvec(&Vector::standard_normal(a.ncols(), 9));
+    let gmres = IterOptions::default()
+        .with_method(Method::Gmres)
+        .with_restart(24)
+        .with_tol(1e-5)
+        .with_max_iters(48)
+        .with_refinements(50);
+    let report = solver.solve_system(a, &b, &gmres)?;
+    println!("\n{}", report.render());
+    Ok(())
+}

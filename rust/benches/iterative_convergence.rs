@@ -1,0 +1,107 @@
+//! Iterative-solver convergence benchmark: CG / GMRES / Jacobi on
+//! resident crossbar sessions.
+//!
+//! The headline claim of the iterative subsystem, asserted here:
+//!
+//! * **CG on a registry SPD operand converges to relative residual
+//!   ≤ 1e-6** through a resident session — analog MVMs plus exact f64
+//!   host-side iterative refinement — with **exactly one** write–verify
+//!   programming pass for the whole solve.  Every iteration after the
+//!   open is read-only, so the conductance write amortizes across the
+//!   full Krylov trajectory (`write_amortization` in the output).
+//!
+//! All noise streams are seeded, so the trajectory is deterministic and
+//! the assertions are stable across machines (no wall-clock thresholds).
+//!
+//! Usage: `cargo bench --bench iterative_convergence [-- --quick]`
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::registry;
+use meliso::prelude::*;
+use meliso::util::json::Json;
+
+fn solve_one(
+    solver: &Meliso,
+    matrix: &str,
+    seed: u64,
+    iter: &IterOptions,
+) -> Result<ConvergenceReport, String> {
+    let source = registry::build(matrix)?;
+    let x_star = Vector::standard_normal(source.ncols(), seed);
+    let b = source.matvec(&x_star);
+    solver.solve_system(source, &b, iter)
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let refinements = args.reps_or(30, 50, 80);
+    let opts = SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_wv_iters(4)
+        .with_workers(2)
+        .with_seed(42);
+    let solver = Meliso::with_backend(SystemConfig::single_mca(64), opts, backend());
+
+    println!("# iterative convergence on resident sessions (EpiRAM, 64² MCA)\n");
+
+    // --- the asserted case: CG on a registry SPD operand ---------------
+    let cg = IterOptions::default()
+        .with_method(Method::Cg)
+        .with_tol(1e-6)
+        .with_max_iters(40)
+        .with_inner_tol(1e-2)
+        .with_refinements(refinements);
+    let report = solve_one(&solver, "spd64", 7, &cg).unwrap();
+    println!("{}\n", report.render());
+
+    // --- companion methods (reported, not asserted) ---------------------
+    let gmres = IterOptions::default()
+        .with_method(Method::Gmres)
+        .with_restart(24)
+        .with_tol(1e-6)
+        .with_max_iters(48)
+        .with_inner_tol(1e-2)
+        .with_refinements(refinements);
+    let gmres_report = solve_one(&solver, "nonsym64", 9, &gmres).unwrap();
+    println!("{}\n", gmres_report.render());
+
+    let jacobi = IterOptions::default()
+        .with_method(Method::Jacobi)
+        .with_tol(1e-6)
+        .with_max_iters(60)
+        .with_inner_tol(1e-2)
+        .with_refinements(refinements);
+    let jacobi_report = solve_one(&solver, "iperturb66", 11, &jacobi).unwrap();
+    println!("{}\n", jacobi_report.render());
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("iterative_convergence".to_string()))
+        .set("refinements_budget", Json::Num(refinements as f64))
+        .set("cg_spd64", report.to_json())
+        .set("gmres_nonsym64", gmres_report.to_json())
+        .set("jacobi_iperturb66", jacobi_report.to_json());
+    args.write_result("BENCH_iterative_convergence.json", &j.pretty());
+
+    assert!(
+        report.converged && report.rel_residual <= 1e-6,
+        "CG on spd64 must reach 1e-6, got {:.3e} (converged: {})",
+        report.rel_residual,
+        report.converged
+    );
+    assert_eq!(
+        report.programming_passes, 1,
+        "the whole solve must pay exactly one write-verify programming pass"
+    );
+    assert!(
+        report.mvms as usize >= report.iterations,
+        "every inner iteration is one served MVM"
+    );
+    println!(
+        "PASS: CG reached {:.3e} with one programming pass over {} MVMs \
+         (write amortization {:.0}x)",
+        report.rel_residual,
+        report.mvms,
+        report.write_amortization()
+    );
+}

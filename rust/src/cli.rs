@@ -10,11 +10,13 @@
 use crate::config::{from_toml, BackendKind, SolveOptions, SystemConfig};
 use crate::device::materials::Material;
 use crate::ec::DenoiseMode;
+use crate::iterative::{IterOptions, Method};
 
 #[derive(Debug)]
 pub enum Command {
     Run(RunArgs),
     ServeBench(ServeBenchArgs),
+    SolveSystem(SolveSystemArgs),
     Matrices,
     Devices,
     Artifacts,
@@ -27,6 +29,15 @@ pub struct RunArgs {
     pub system: SystemConfig,
     pub opts: SolveOptions,
     pub reps: usize,
+    pub json: bool,
+}
+
+#[derive(Debug)]
+pub struct SolveSystemArgs {
+    pub matrix: String,
+    pub system: SystemConfig,
+    pub opts: SolveOptions,
+    pub iter: IterOptions,
     pub json: bool,
 }
 
@@ -51,12 +62,22 @@ USAGE:
     meliso <COMMAND> [OPTIONS]
 
 COMMANDS:
-    run         execute a distributed in-memory MVM benchmark
-    serve-bench compare resident-session serving vs repeated one-shot solves
-    matrices    list the benchmark operands (paper Table 2 stand-ins)
-    devices     list the RRAM material parameter sets
-    artifacts   show the AOT artifact inventory
-    help        show this message
+    run          execute a distributed in-memory MVM benchmark
+    solve-system solve Ax=b iteratively on a resident crossbar session
+    serve-bench  compare resident-session serving vs repeated one-shot solves
+    matrices     list the benchmark operands (paper Table 2 stand-ins)
+    devices      list the RRAM material parameter sets
+    artifacts    show the AOT artifact inventory
+    help         show this message
+
+SOLVE-SYSTEM OPTIONS (plus the applicable RUN options below):
+    --method M         jacobi | richardson | cg | gmres (default cg)
+    --tol T            target relative residual (default 1e-6)
+    --maxiter N        MVM budget per inner solve (default 200)
+    --restart M        GMRES restart length (default 32)
+    --omega W          Richardson relaxation (default 1.0)
+    --refinements N    outer refinement steps, 0 = off (default 40)
+    --inner-tol T      inner-solve tolerance under refinement (default 1e-2)
 
 SERVE-BENCH OPTIONS (plus the applicable RUN options below):
     --solves N         solves to serve against the resident session (default 32)
@@ -91,6 +112,7 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
         Some("devices") => Ok(Command::Devices),
         Some("artifacts") => Ok(Command::Artifacts),
         Some("run") => parse_run(&mut it),
+        Some("solve-system") => parse_solve_system(&mut it),
         Some("serve-bench") => parse_serve_bench(&mut it),
         Some(other) => Err(format!("unknown command {other:?}; try `meliso help`")),
     }
@@ -217,6 +239,74 @@ fn parse_run(it: &mut ArgIter<'_>) -> Result<Command, String> {
     }))
 }
 
+fn parse_solve_system(it: &mut ArgIter<'_>) -> Result<Command, String> {
+    let mut matrix = "spd64".to_string();
+    let mut system = SystemConfig::single_mca(128);
+    let mut opts = SolveOptions::default();
+    let mut iter = IterOptions::default();
+    let mut json = false;
+
+    while let Some(arg) = it.next() {
+        if parse_common_flag(arg.as_str(), it, &mut matrix, &mut system, &mut opts, &mut json)? {
+            continue;
+        }
+        match arg.as_str() {
+            "--method" => {
+                let name = next_value(it, "--method")?;
+                iter.method = Method::parse(&name)
+                    .ok_or_else(|| format!("unknown method {name:?}"))?;
+            }
+            "--tol" => {
+                iter.tol = next_value(it, "--tol")?
+                    .parse()
+                    .map_err(|e| format!("--tol: {e}"))?
+            }
+            "--maxiter" => {
+                iter.max_iters = next_value(it, "--maxiter")?
+                    .parse()
+                    .map_err(|e| format!("--maxiter: {e}"))?
+            }
+            "--restart" => {
+                iter.restart = next_value(it, "--restart")?
+                    .parse()
+                    .map_err(|e| format!("--restart: {e}"))?
+            }
+            "--omega" => {
+                iter.omega = next_value(it, "--omega")?
+                    .parse()
+                    .map_err(|e| format!("--omega: {e}"))?
+            }
+            "--refinements" => {
+                iter.max_refinements = next_value(it, "--refinements")?
+                    .parse()
+                    .map_err(|e| format!("--refinements: {e}"))?
+            }
+            "--inner-tol" => {
+                iter.inner_tol = next_value(it, "--inner-tol")?
+                    .parse()
+                    .map_err(|e| format!("--inner-tol: {e}"))?
+            }
+            other => return Err(format!("unknown option {other:?}; try `meliso help`")),
+        }
+    }
+    if iter.tol <= 0.0 || !iter.tol.is_finite() {
+        return Err("--tol must be a positive number".to_string());
+    }
+    if iter.inner_tol <= 0.0 || !iter.inner_tol.is_finite() {
+        return Err("--inner-tol must be a positive number".to_string());
+    }
+    if iter.max_iters == 0 {
+        return Err("--maxiter must be at least 1".to_string());
+    }
+    Ok(Command::SolveSystem(SolveSystemArgs {
+        matrix,
+        system,
+        opts,
+        iter,
+        json,
+    }))
+}
+
 fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
     let mut matrix = "iperturb66".to_string();
     let mut system = SystemConfig::single_mca(128);
@@ -299,6 +389,54 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn parses_solve_system_with_options() {
+        let cmd = parse(&argv(
+            "solve-system --matrix nonsym64 --method gmres --tol 1e-8 --maxiter 120 \
+             --restart 16 --refinements 12 --inner-tol 5e-3 --device epiram --cell 64 \
+             --backend native --json",
+        ))
+        .unwrap();
+        match cmd {
+            Command::SolveSystem(s) => {
+                assert_eq!(s.matrix, "nonsym64");
+                assert_eq!(s.iter.method, Method::Gmres);
+                assert_eq!(s.iter.tol, 1e-8);
+                assert_eq!(s.iter.max_iters, 120);
+                assert_eq!(s.iter.restart, 16);
+                assert_eq!(s.iter.max_refinements, 12);
+                assert_eq!(s.iter.inner_tol, 5e-3);
+                assert_eq!(s.opts.material, Material::EpiRam);
+                assert_eq!(s.system, SystemConfig::single_mca(64));
+                assert_eq!(s.opts.backend, BackendKind::Native);
+                assert!(s.json);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_system_defaults() {
+        match parse(&argv("solve-system")).unwrap() {
+            Command::SolveSystem(s) => {
+                assert_eq!(s.matrix, "spd64");
+                assert_eq!(s.iter.method, Method::Cg);
+                assert_eq!(s.iter.tol, 1e-6);
+                assert!(!s.json);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_system_rejects_bad_inputs() {
+        assert!(parse(&argv("solve-system --method sor")).is_err());
+        assert!(parse(&argv("solve-system --tol 0")).is_err());
+        assert!(parse(&argv("solve-system --inner-tol 0")).is_err());
+        assert!(parse(&argv("solve-system --maxiter 0")).is_err());
+        assert!(parse(&argv("solve-system --frobnicate")).is_err());
     }
 
     #[test]

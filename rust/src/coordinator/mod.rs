@@ -7,7 +7,7 @@
 //!   scheduling — an optimization the banded operands benefit from
 //!   enormously), and dispatches jobs over bounded channels
 //!   (backpressure).
-//! * Each **worker** thread owns the [`TileExecutor`]s of the MCAs
+//! * Each **worker** thread owns the [`crate::ec::TileExecutor`]s of the MCAs
 //!   assigned to it (an MCA never migrates, so its RNG stream, its
 //!   fixed-pattern noise and its ledger stay consistent) and runs the
 //!   paper's `correctedMatVecMul` per chunk.

@@ -1,0 +1,154 @@
+//! Conjugate gradient for SPD operands.
+//!
+//! Textbook Hestenes–Stiefel with every scalar (α, β, residual norms)
+//! computed f64 host-side; the only device work is the one `A·p` product
+//! per iteration.  On a noisy operator the recurrence residual keeps
+//! contracting while the *true* residual floors at the device error —
+//! which is exactly what the refinement loop in [`crate::iterative`]
+//! exploits: it only needs each inner CG run to beat relative error one.
+
+use super::{IterationOutcome, MvmOperator};
+use crate::linalg::Vector;
+
+/// Solve `Ax = b` from `x₀ = 0` to relative (recurrence) residual `tol`
+/// within `max_iters` MVMs.
+///
+/// Breakdown guard: a non-positive or non-finite curvature `pᵀAp` —
+/// indefinite operand or noise swamping the search direction — stops the
+/// iteration at the best iterate so far instead of stepping on garbage.
+pub fn solve(
+    op: &dyn MvmOperator,
+    b: &Vector,
+    tol: f64,
+    max_iters: usize,
+) -> Result<IterationOutcome, String> {
+    let n = b.len();
+    let bnorm = b.norm_l2();
+    let mut x = Vector::zeros(n);
+    let mut history = Vec::new();
+    if bnorm == 0.0 {
+        history.push(0.0);
+        return Ok(IterationOutcome {
+            x,
+            iterations: 0,
+            converged: true,
+            rel_residual: 0.0,
+            history,
+        });
+    }
+    let mut r = b.clone();
+    let mut p = r.clone();
+    let mut rs = r.dot(&r);
+    let mut rel = rs.sqrt() / bnorm;
+    history.push(rel);
+    let mut converged = rel <= tol;
+    let mut iterations = 0;
+    while !converged && iterations < max_iters {
+        let ap = op.apply(&p)?;
+        iterations += 1;
+        let pap = p.dot(&ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            break;
+        }
+        let alpha = rs / pap;
+        x.axpy(alpha, &p);
+        r.axpy(-alpha, &ap);
+        let rs_new = r.dot(&r);
+        rel = rs_new.sqrt() / bnorm;
+        history.push(rel);
+        if rel <= tol {
+            converged = true;
+            break;
+        }
+        let beta = rs_new / rs;
+        rs = rs_new;
+        p.scale(beta);
+        p.add_assign(&r);
+    }
+    Ok(IterationOutcome {
+        x,
+        iterations,
+        converged,
+        rel_residual: rel,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::ExactOperator;
+    use crate::linalg::Matrix;
+    use crate::matrices::generators;
+    use crate::matrices::DenseSource;
+
+    #[test]
+    fn converges_on_spd_to_machine_precision() {
+        let n = 40;
+        let src = DenseSource::new(generators::dense_spd_with_condition(n, 5.0, 200.0, 6, 3));
+        let x_star = Vector::standard_normal(n, 4);
+        let b = src.matvec(&x_star);
+        let op = ExactOperator::new(&src);
+        let out = solve(&op, &b, 1e-12, 400).unwrap();
+        assert!(out.converged, "rel {}", out.rel_residual);
+        let err = out.x.sub(&x_star).norm_l2() / x_star.norm_l2();
+        assert!(err < 1e-8, "{err}");
+        // History is recorded per iteration and ends under tolerance.
+        assert_eq!(out.history.len(), out.iterations + 1);
+        assert!(*out.history.last().unwrap() <= 1e-12);
+    }
+
+    #[test]
+    fn iteration_count_scales_with_sqrt_kappa() {
+        let n = 48;
+        let easy = DenseSource::new(generators::dense_spd_with_condition(n, 5.0, 4.0, 6, 5));
+        let hard = DenseSource::new(generators::dense_spd_with_condition(n, 5.0, 4000.0, 6, 5));
+        let b = Vector::standard_normal(n, 6);
+        let easy_out = solve(&ExactOperator::new(&easy), &b, 1e-8, 400).unwrap();
+        let hard_out = solve(&ExactOperator::new(&hard), &b, 1e-8, 400).unwrap();
+        assert!(easy_out.converged && hard_out.converged);
+        assert!(
+            easy_out.iterations < hard_out.iterations,
+            "{} vs {}",
+            easy_out.iterations,
+            hard_out.iterations
+        );
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        let src = DenseSource::new(Matrix::identity(8));
+        let op = ExactOperator::new(&src);
+        let out = solve(&op, &Vector::zeros(8), 1e-10, 10).unwrap();
+        assert!(out.converged);
+        assert_eq!(out.iterations, 0);
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_not_converged() {
+        let n = 32;
+        let src = DenseSource::new(generators::dense_spd_with_condition(n, 5.0, 1e4, 6, 7));
+        let b = Vector::standard_normal(n, 8);
+        let op = ExactOperator::new(&src);
+        let out = solve(&op, &b, 1e-14, 3).unwrap();
+        assert!(!out.converged);
+        assert_eq!(out.iterations, 3);
+        assert!(out.rel_residual > 0.0);
+    }
+
+    #[test]
+    fn indefinite_operand_breaks_down_cleanly() {
+        // A negative-definite operand flips the curvature sign on the
+        // first step; the guard must stop rather than diverge.
+        let mut a = Matrix::identity(6);
+        for i in 0..6 {
+            a.set(i, i, -1.0);
+        }
+        let src = DenseSource::new(a);
+        let b = Vector::standard_normal(6, 9);
+        let op = ExactOperator::new(&src);
+        let out = solve(&op, &b, 1e-10, 50).unwrap();
+        assert!(!out.converged);
+        assert!(out.iterations <= 1);
+    }
+}

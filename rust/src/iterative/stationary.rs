@@ -1,0 +1,177 @@
+//! Stationary iterations: Jacobi and damped Richardson.
+//!
+//! One MVM per sweep, f64 host-side update.  These converge only for
+//! contractive iteration matrices (diagonally dominant operands for
+//! Jacobi, spectrum inside the ω-disc for Richardson) — the registry's
+//! `iperturb66` and the banded operands qualify — but where they apply
+//! they are the cheapest possible use of a resident crossbar: no inner
+//! products, no basis storage, just repeated reads.
+
+use super::{IterationOutcome, MvmOperator};
+use crate::linalg::Vector;
+
+/// Jacobi sweeps `x ← x + D⁻¹(b − Ax)` from `x₀ = 0`.
+pub fn jacobi(
+    op: &dyn MvmOperator,
+    diag: &Vector,
+    b: &Vector,
+    tol: f64,
+    max_iters: usize,
+) -> Result<IterationOutcome, String> {
+    let n = b.len();
+    if diag.len() != n {
+        return Err(format!(
+            "diagonal has length {}, b has length {n}",
+            diag.len()
+        ));
+    }
+    if let Some(i) = diag.data().iter().position(|v| *v == 0.0) {
+        return Err(format!("jacobi needs a nonzero diagonal (row {i} is zero)"));
+    }
+    sweep(op, b, tol, max_iters, |x, r| {
+        for ((xi, ri), di) in x.data_mut().iter_mut().zip(r.data()).zip(diag.data()) {
+            *xi += ri / di;
+        }
+    })
+}
+
+/// Damped Richardson sweeps `x ← x + ω(b − Ax)` from `x₀ = 0`.
+pub fn richardson(
+    op: &dyn MvmOperator,
+    omega: f64,
+    b: &Vector,
+    tol: f64,
+    max_iters: usize,
+) -> Result<IterationOutcome, String> {
+    if omega <= 0.0 || !omega.is_finite() {
+        return Err(format!("richardson needs a positive omega, got {omega}"));
+    }
+    sweep(op, b, tol, max_iters, |x, r| x.axpy(omega, r))
+}
+
+/// Shared sweep driver: `update` folds the current residual into `x`.
+fn sweep(
+    op: &dyn MvmOperator,
+    b: &Vector,
+    tol: f64,
+    max_iters: usize,
+    mut update: impl FnMut(&mut Vector, &Vector),
+) -> Result<IterationOutcome, String> {
+    let n = b.len();
+    let bnorm = b.norm_l2();
+    let mut x = Vector::zeros(n);
+    let mut history = Vec::new();
+    if bnorm == 0.0 {
+        history.push(0.0);
+        return Ok(IterationOutcome {
+            x,
+            iterations: 0,
+            converged: true,
+            rel_residual: 0.0,
+            history,
+        });
+    }
+    let mut r = b.clone();
+    let mut rel = 1.0;
+    history.push(rel);
+    let mut converged = rel <= tol;
+    let mut iterations = 0;
+    let mut prev = f64::INFINITY;
+    while !converged && iterations < max_iters {
+        update(&mut x, &r);
+        let ax = op.apply(&x)?;
+        iterations += 1;
+        r = b.sub(&ax);
+        rel = r.norm_l2() / bnorm;
+        history.push(rel);
+        if rel <= tol {
+            converged = true;
+            break;
+        }
+        // Divergence guard: stationary methods on the wrong operand blow
+        // up geometrically — stop before the iterate overflows.
+        if !rel.is_finite() || rel > 1e3 || (rel > prev * 4.0 && rel > 1.0) {
+            break;
+        }
+        prev = rel;
+    }
+    Ok(IterationOutcome {
+        x,
+        iterations,
+        converged,
+        rel_residual: rel,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iterative::{diagonal, ExactOperator};
+    use crate::linalg::Matrix;
+    use crate::matrices::registry;
+    use crate::matrices::DenseSource;
+
+    #[test]
+    fn jacobi_converges_on_iperturb() {
+        // Iperturb is a perturbed identity: the Jacobi iteration matrix
+        // has spectral radius ≈ 0.1, so convergence is geometric.
+        let src = registry::build("iperturb66").unwrap();
+        let x_star = Vector::standard_normal(66, 3);
+        let b = src.matvec(&x_star);
+        let d = diagonal(src.as_ref());
+        let op = ExactOperator::new(src.as_ref());
+        let out = jacobi(&op, &d, &b, 1e-9, 200).unwrap();
+        assert!(out.converged, "rel {}", out.rel_residual);
+        let err = out.x.sub(&x_star).norm_l2() / x_star.norm_l2();
+        assert!(err < 1e-6, "{err}");
+        assert!(out.iterations < 100, "{}", out.iterations);
+    }
+
+    #[test]
+    fn richardson_converges_on_iperturb() {
+        let src = registry::build("iperturb66").unwrap();
+        let x_star = Vector::standard_normal(66, 5);
+        let b = src.matvec(&x_star);
+        let op = ExactOperator::new(src.as_ref());
+        let out = richardson(&op, 1.0, &b, 1e-9, 200).unwrap();
+        assert!(out.converged, "rel {}", out.rel_residual);
+        let err = out.x.sub(&x_star).norm_l2() / x_star.norm_l2();
+        assert!(err < 1e-6, "{err}");
+    }
+
+    #[test]
+    fn divergence_is_cut_short() {
+        // Richardson with a large ω on a spectrum ≫ 1 diverges; the guard
+        // must stop the sweep long before max_iters.
+        let mut a = Matrix::identity(8);
+        for i in 0..8 {
+            a.set(i, i, 10.0);
+        }
+        let src = DenseSource::new(a);
+        let b = Vector::standard_normal(8, 7);
+        let op = ExactOperator::new(&src);
+        let out = richardson(&op, 1.0, &b, 1e-9, 10_000).unwrap();
+        assert!(!out.converged);
+        assert!(out.iterations < 100, "{}", out.iterations);
+        assert!(out.x.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn jacobi_rejects_zero_diagonal() {
+        let src = DenseSource::new(Matrix::identity(4));
+        let op = ExactOperator::new(&src);
+        let d = Vector::zeros(4);
+        let b = Vector::standard_normal(4, 9);
+        assert!(jacobi(&op, &d, &b, 1e-6, 10).is_err());
+    }
+
+    #[test]
+    fn richardson_rejects_bad_omega() {
+        let src = DenseSource::new(Matrix::identity(4));
+        let op = ExactOperator::new(&src);
+        let b = Vector::standard_normal(4, 11);
+        assert!(richardson(&op, 0.0, &b, 1e-6, 10).is_err());
+        assert!(richardson(&op, f64::NAN, &b, 1e-6, 10).is_err());
+    }
+}

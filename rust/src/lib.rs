@@ -19,6 +19,11 @@
 //!   metrics ([`metrics::serving`]).  This is the request path for
 //!   repeated solves against the same operand — the conductance write is
 //!   paid once, each solve costs only input encodes and reads.
+//! * **Solver layer** — [`iterative`]: Jacobi/Richardson, CG and
+//!   GMRES(m) solvers for `Ax = b` whose every MVM is served by a
+//!   resident session through the backend-agnostic
+//!   [`server::MvmOperator`] trait, with exact f64 residual bookkeeping
+//!   and iterative refinement ([`solver::Meliso::solve_system`]).
 //! * **L2/L1 (python/compile, build-time only)** — the JAX compute graph and
 //!   Pallas crossbar kernels, AOT-lowered to HLO-text artifacts.
 //! * **Runtime bridge** — [`runtime`] loads `artifacts/*.hlo.txt` through the
@@ -53,6 +58,25 @@
 //! }
 //! println!("{}", session.report().render());
 //! ```
+//!
+//! ## Quickstart (solving Ax = b iteratively)
+//!
+//! Every Krylov iteration is one in-memory MVM against the resident
+//! operand — the write–verify pass is paid once for the whole solve, and
+//! exact f64 host-side refinement drives the residual far below the
+//! device's per-MVM error floor (see [`iterative`]):
+//!
+//! ```no_run
+//! use meliso::prelude::*;
+//!
+//! let a = meliso::matrices::registry::build("spd64").unwrap();
+//! let b = a.matvec(&Vector::standard_normal(a.ncols(), 7));
+//! let solver = Meliso::new(SystemConfig::single_mca(64), SolveOptions::default()).unwrap();
+//! let report = solver
+//!     .solve_system(a, &b, &IterOptions::default().with_method(Method::Cg))
+//!     .unwrap();
+//! println!("{}", report.render());   // residual trajectory + energy split
+//! ```
 
 pub mod bench;
 pub mod cli;
@@ -60,6 +84,7 @@ pub mod config;
 pub mod coordinator;
 pub mod device;
 pub mod ec;
+pub mod iterative;
 pub mod linalg;
 pub mod matrices;
 pub mod mca;
@@ -76,8 +101,9 @@ pub mod prelude {
     pub use crate::config::{BackendKind, SolveOptions, SystemConfig};
     pub use crate::device::materials::Material;
     pub use crate::ec::DenoiseMode;
+    pub use crate::iterative::{IterOptions, Method, MvmOperator};
     pub use crate::linalg::{Matrix, Vector};
-    pub use crate::metrics::SolveReport;
+    pub use crate::metrics::{ConvergenceReport, SolveReport};
     pub use crate::server::Session;
     pub use crate::solver::Meliso;
 }

@@ -283,6 +283,28 @@ impl Vector {
         }
     }
 
+    /// Dot product `selfᵀ · other` (f64 host-side — the iterative solvers'
+    /// scalar bookkeeping never rounds through the device).
+    pub fn dot(&self, other: &Vector) -> f64 {
+        assert_eq!(self.len(), other.len(), "dot dim mismatch");
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// `self += alpha * x` (the BLAS axpy).
+    pub fn axpy(&mut self, alpha: f64, x: &Vector) {
+        assert_eq!(self.len(), x.len(), "axpy dim mismatch");
+        for (a, b) in self.data.iter_mut().zip(&x.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
     pub fn sub(&self, other: &Vector) -> Vector {
         assert_eq!(self.len(), other.len());
         Vector::from_vec(
@@ -395,6 +417,17 @@ mod tests {
         for (x, y) in a.data().iter().zip(b.data()) {
             assert!((x - y).abs() < 1e-6 * x.abs().max(1.0));
         }
+    }
+
+    #[test]
+    fn dot_axpy_scale() {
+        let mut y = Vector::from_vec(vec![1.0, 2.0, 3.0]);
+        let x = Vector::from_vec(vec![4.0, 5.0, 6.0]);
+        assert!((y.dot(&x) - 32.0).abs() < 1e-12);
+        y.axpy(2.0, &x);
+        assert_eq!(y.data(), &[9.0, 12.0, 15.0]);
+        y.scale(-1.0);
+        assert_eq!(y.data(), &[-9.0, -12.0, -15.0]);
     }
 
     #[test]

@@ -1,0 +1,257 @@
+//! Krylov-subspace workspace: the Arnoldi process with on-the-fly Givens
+//! QR of the Hessenberg matrix, as used by restarted GMRES.
+//!
+//! The workspace is backend-agnostic pure `f64` host math — the caller
+//! supplies `w = A·v` for the newest basis vector, whether `A` is an exact
+//! matrix or a resident crossbar session.  After each [`expand`] the
+//! least-squares residual `min‖βe₁ − H̄y‖` is available without forming a
+//! solution, so an iterative solver can stop the moment the estimate drops
+//! under tolerance and only then pay the back substitution in
+//! [`solution`].
+//!
+//! [`expand`]: KrylovWorkspace::expand
+//! [`solution`]: KrylovWorkspace::solution
+
+use crate::linalg::Vector;
+
+/// Relative threshold under which the Arnoldi normalization step declares
+/// a (lucky) breakdown: the Krylov space is exhausted and the current
+/// least-squares solution is exact.
+const BREAKDOWN_RTOL: f64 = 1e-12;
+
+/// Givens rotation `(c, s)` annihilating `b` against `a`.
+fn givens(a: f64, b: f64) -> (f64, f64) {
+    if b == 0.0 {
+        (1.0, 0.0)
+    } else {
+        let t = a.hypot(b);
+        (a / t, b / t)
+    }
+}
+
+/// Arnoldi basis + rotated Hessenberg factors for one GMRES cycle.
+pub struct KrylovWorkspace {
+    max_dim: usize,
+    /// Orthonormal basis `v₀ … v_k` (modified Gram–Schmidt).
+    basis: Vec<Vector>,
+    /// Columns of the upper-triangular `R` (column `j` holds `j+1` rows).
+    r_cols: Vec<Vec<f64>>,
+    /// Accumulated Givens rotations.
+    cs: Vec<f64>,
+    sn: Vec<f64>,
+    /// Rotated right-hand side `βe₁`.
+    g: Vec<f64>,
+    happy: bool,
+}
+
+impl KrylovWorkspace {
+    /// A workspace for at most `max_dim` Arnoldi steps per cycle.
+    pub fn new(max_dim: usize) -> KrylovWorkspace {
+        assert!(max_dim >= 1, "krylov dimension must be at least 1");
+        KrylovWorkspace {
+            max_dim,
+            basis: Vec::new(),
+            r_cols: Vec::new(),
+            cs: Vec::new(),
+            sn: Vec::new(),
+            g: Vec::new(),
+            happy: false,
+        }
+    }
+
+    /// Start a cycle from residual `r0`; returns `β = ‖r0‖` (zero means
+    /// the residual is already exact and the workspace stays empty).
+    pub fn reset(&mut self, r0: &Vector) -> f64 {
+        self.basis.clear();
+        self.r_cols.clear();
+        self.cs.clear();
+        self.sn.clear();
+        self.g.clear();
+        self.happy = false;
+        let beta = r0.norm_l2();
+        if beta > 0.0 {
+            let mut v = r0.clone();
+            v.scale(1.0 / beta);
+            self.basis.push(v);
+            self.g.push(beta);
+        }
+        beta
+    }
+
+    /// Completed Arnoldi steps this cycle.
+    pub fn size(&self) -> usize {
+        self.r_cols.len()
+    }
+
+    /// Whether another [`expand`](Self::expand) is admissible.
+    pub fn can_expand(&self) -> bool {
+        !self.happy && !self.basis.is_empty() && self.r_cols.len() < self.max_dim
+    }
+
+    /// The newest basis vector — multiply it by `A` and feed the product
+    /// to [`expand`](Self::expand).
+    pub fn last(&self) -> &Vector {
+        self.basis.last().expect("reset with a nonzero residual first")
+    }
+
+    /// Lucky breakdown: the span is invariant and the least-squares
+    /// solution solves the system exactly (up to the products' accuracy).
+    pub fn breakdown(&self) -> bool {
+        self.happy
+    }
+
+    /// One Arnoldi step with `w = A · last()`: modified Gram–Schmidt
+    /// orthogonalization, Givens update of the new Hessenberg column, and
+    /// the updated least-squares residual norm as return value.
+    pub fn expand(&mut self, mut w: Vector) -> f64 {
+        assert!(self.can_expand(), "workspace cannot expand");
+        let j = self.r_cols.len();
+        let mut h = vec![0.0; j + 2];
+        for (i, hi) in h.iter_mut().enumerate().take(j + 1) {
+            let hij = w.dot(&self.basis[i]);
+            *hi = hij;
+            w.axpy(-hij, &self.basis[i]);
+        }
+        let hnorm = w.norm_l2();
+        h[j + 1] = hnorm;
+        // Previously accumulated rotations on the new column.
+        for i in 0..j {
+            let (c, s) = (self.cs[i], self.sn[i]);
+            let t = c * h[i] + s * h[i + 1];
+            h[i + 1] = -s * h[i] + c * h[i + 1];
+            h[i] = t;
+        }
+        let col_scale = h.iter().take(j + 1).fold(hnorm, |m, v| m.max(v.abs()));
+        // New rotation annihilating the subdiagonal.
+        let (c, s) = givens(h[j], h[j + 1]);
+        let rjj = c * h[j] + s * h[j + 1];
+        self.cs.push(c);
+        self.sn.push(s);
+        let gj = self.g[j];
+        self.g[j] = c * gj;
+        self.g.push(-s * gj);
+        let mut col = h[..j].to_vec();
+        col.push(rjj);
+        self.r_cols.push(col);
+        if hnorm <= col_scale * BREAKDOWN_RTOL {
+            self.happy = true;
+        } else {
+            w.scale(1.0 / hnorm);
+            self.basis.push(w);
+        }
+        self.g[j + 1].abs()
+    }
+
+    /// Back-substitute `Ry = g` and assemble the update `Σ yⱼ vⱼ`.
+    /// Requires at least one completed step ([`size`](Self::size) > 0).
+    pub fn solution(&self) -> Vector {
+        let k = self.r_cols.len();
+        assert!(k > 0, "no Arnoldi steps completed");
+        let mut y: Vec<f64> = self.g[..k].to_vec();
+        for j in (0..k).rev() {
+            let rjj = self.r_cols[j][j];
+            if rjj == 0.0 {
+                y[j] = 0.0;
+            } else {
+                y[j] /= rjj;
+            }
+            for i in 0..j {
+                y[i] -= self.r_cols[j][i] * y[j];
+            }
+        }
+        let mut x = Vector::zeros(self.basis[0].len());
+        for (j, yj) in y.iter().enumerate() {
+            x.axpy(*yj, &self.basis[j]);
+        }
+        x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::lu::Lu;
+    use crate::linalg::Matrix;
+
+    /// Full (unrestarted) GMRES on an exact matrix via the workspace.
+    fn gmres_exact(a: &Matrix, b: &Vector, steps: usize) -> (Vector, f64) {
+        let mut ws = KrylovWorkspace::new(steps);
+        ws.reset(b);
+        let mut est = b.norm_l2();
+        while ws.can_expand() {
+            let w = a.matvec(ws.last());
+            est = ws.expand(w);
+        }
+        (ws.solution(), est)
+    }
+
+    #[test]
+    fn identity_breaks_down_immediately() {
+        let a = Matrix::identity(6);
+        let b = Vector::standard_normal(6, 3);
+        let mut ws = KrylovWorkspace::new(6);
+        let beta = ws.reset(&b);
+        assert!(beta > 0.0);
+        let est = ws.expand(a.matvec(ws.last()));
+        assert!(ws.breakdown());
+        assert!(est < 1e-12 * beta, "{est}");
+        // x = b solves Ix = b.
+        let x = ws.solution();
+        let err = x.sub(&b).norm_l2() / b.norm_l2();
+        assert!(err < 1e-12, "{err}");
+    }
+
+    #[test]
+    fn full_cycle_matches_lu_solve() {
+        let n = 24;
+        let a = crate::matrices::generators::dense_spd_with_condition(n, 3.0, 50.0, 6, 11);
+        let x_star = Vector::standard_normal(n, 12);
+        let b = a.matvec(&x_star);
+        let (x, est) = gmres_exact(&a, &b, n);
+        let exact = Lu::factor(&a).unwrap().solve(&b);
+        let err = x.sub(&exact).norm_l2() / exact.norm_l2();
+        assert!(err < 1e-8, "err {err}, estimate {est}");
+    }
+
+    #[test]
+    fn residual_estimate_is_monotone_nonincreasing() {
+        let n = 16;
+        let a = Matrix::standard_normal(n, n, 21);
+        let b = Vector::standard_normal(n, 22);
+        let mut ws = KrylovWorkspace::new(n);
+        let mut prev = ws.reset(&b);
+        while ws.can_expand() {
+            let est = ws.expand(a.matvec(ws.last()));
+            assert!(est <= prev + 1e-12, "{est} > {prev}");
+            prev = est;
+        }
+    }
+
+    #[test]
+    fn zero_residual_stays_empty() {
+        let mut ws = KrylovWorkspace::new(4);
+        let beta = ws.reset(&Vector::zeros(5));
+        assert_eq!(beta, 0.0);
+        assert_eq!(ws.size(), 0);
+        assert!(!ws.can_expand());
+    }
+
+    #[test]
+    fn basis_stays_orthonormal() {
+        let n = 20;
+        let a = Matrix::standard_normal(n, n, 31);
+        let b = Vector::standard_normal(n, 32);
+        let mut ws = KrylovWorkspace::new(8);
+        ws.reset(&b);
+        while ws.can_expand() {
+            ws.expand(a.matvec(ws.last()));
+        }
+        for i in 0..ws.basis.len() {
+            for j in 0..ws.basis.len() {
+                let d = ws.basis[i].dot(&ws.basis[j]);
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-10, "({i},{j}): {d}");
+            }
+        }
+    }
+}

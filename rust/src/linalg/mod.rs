@@ -9,8 +9,11 @@
 //! * [`lu`] — dense partial-pivot LU (ground-truth solves, κ estimation).
 //! * [`cond`] — power/inverse iteration spectral-norm and condition-number
 //!   estimators used to validate the synthetic matrix generators.
+//! * [`krylov`] — the Arnoldi/Givens workspace behind restarted GMRES
+//!   (`crate::iterative::gmres`); pure f64 host math, backend-agnostic.
 
 pub mod cond;
+pub mod krylov;
 pub mod lu;
 pub mod tridiag;
 

@@ -1,6 +1,6 @@
 //! `meliso` — leader entrypoint / CLI for the MELISO+ framework.
 
-use meliso::cli::{parse, usage, Command, RunArgs, ServeBenchArgs};
+use meliso::cli::{parse, usage, Command, RunArgs, ServeBenchArgs, SolveSystemArgs};
 use meliso::device::materials::Material;
 use meliso::matrices::registry;
 use meliso::metrics::table::TableBuilder;
@@ -28,6 +28,13 @@ fn main() {
             }
         },
         Ok(Command::ServeBench(sb)) => match cmd_serve_bench(sb) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        Ok(Command::SolveSystem(ss)) => match cmd_solve_system(ss) {
             Ok(()) => 0,
             Err(e) => {
                 eprintln!("error: {e}");
@@ -229,6 +236,70 @@ fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
         t.row("throughput (solve/s)", vec![format!("{:.1}", serving.throughput_sps)]);
         t.row("wall speedup", vec![format!("{speedup:.1}x")]);
         t.row("write energy ratio", vec![format!("{energy_ratio:.1}x")]);
+        print!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_solve_system(args: SolveSystemArgs) -> Result<(), String> {
+    let source = registry::build(&args.matrix)?;
+    if source.nrows() != source.ncols() {
+        return Err(format!(
+            "solve-system needs a square operand, {} is {}x{}",
+            args.matrix,
+            source.nrows(),
+            source.ncols()
+        ));
+    }
+    let n = source.ncols();
+    // Right-hand side from a hidden ground-truth solution so the actual
+    // solution error is reportable alongside the residual.
+    let x_star = Vector::standard_normal(n, args.opts.seed ^ 0xA11CE);
+    let b = source.matvec(&x_star);
+    let solver = solver_or_native(args.system, args.opts.clone());
+    eprintln!(
+        "# solve-system {} ({n}x{n}), method {}, tol {:.1e}, device {}, EC {}, \
+         system {}x{} tiles of {}², backend {}",
+        args.matrix,
+        args.iter.method,
+        args.iter.tol,
+        args.opts.material,
+        if args.opts.ec { "on" } else { "off" },
+        args.system.tile_rows,
+        args.system.tile_cols,
+        args.system.cell_size,
+        solver.backend_name(),
+    );
+    let report = solver.solve_system(source, &b, &args.iter)?;
+    let x_err = report.x.sub(&x_star).norm_l2() / x_star.norm_l2();
+    if args.json {
+        let mut j = report.to_json();
+        j.set("matrix", Json::Str(args.matrix.clone()))
+            .set("x_error_l2", Json::Num(x_err));
+        println!("{}", j.pretty());
+    } else {
+        let mut t = TableBuilder::new(
+            &format!("solve-system {} via {}", args.matrix, report.method),
+            &["value"],
+        );
+        t.row("converged", vec![format!("{}", report.converged)]);
+        t.row("rel residual", vec![sci(report.rel_residual)]);
+        t.row("x error (l2)", vec![sci(x_err)]);
+        t.row("iterations", vec![format!("{}", report.iterations)]);
+        t.row("refinements", vec![format!("{}", report.refinements)]);
+        t.row("MVMs", vec![format!("{}", report.mvms)]);
+        t.row(
+            "programming passes",
+            vec![format!("{}", report.programming_passes)],
+        );
+        t.row("program write (J)", vec![sci(report.program_energy_j)]);
+        t.row("encode write (J)", vec![sci(report.solve_write_energy_j)]);
+        t.row("read (J)", vec![sci(report.read_energy_j)]);
+        t.row(
+            "write amortization",
+            vec![format!("{:.1}x", report.write_amortization())],
+        );
+        t.row("wall (s)", vec![format!("{:.3}", report.wall_seconds)]);
         print!("{}", t.render());
     }
     Ok(())

@@ -57,6 +57,36 @@ pub fn iperturb(n: usize, kappa_target: f64, seed: u64) -> Matrix {
     a
 }
 
+/// Dense nonsymmetric matrix: the exact-spectrum SPD core of
+/// [`dense_spd_with_condition`] plus a scaled random skew-symmetric
+/// perturbation.  The symmetric part *is* the SPD core (the skew addition
+/// cancels under transpose-averaging), so the field of values stays in
+/// the right half-plane and GMRES remains well-posed; `skew` sets the
+/// spectral norm of the skew part relative to `sigma_max` (≈, via the
+/// semicircle radius of a random skew matrix), so the condition number
+/// tracks `kappa` up to a small factor.
+pub fn dense_nonsymmetric_with_condition(
+    n: usize,
+    sigma_max: f64,
+    kappa: f64,
+    skew: f64,
+    reflections: usize,
+    seed: u64,
+) -> Matrix {
+    assert!(skew >= 0.0);
+    let mut a = dense_spd_with_condition(n, sigma_max, kappa, reflections, seed);
+    let g = Matrix::standard_normal(n, n, seed ^ 0x5EED_CAFE);
+    // ‖G − Gᵀ‖₂ ≈ 2·√(2n) for i.i.d. N(0,1) entries.
+    let scale = skew * sigma_max / (2.0 * (2.0 * n as f64).sqrt());
+    for i in 0..n {
+        for j in 0..n {
+            let k = g.get(i, j) - g.get(j, i);
+            a.set(i, j, a.get(i, j) + scale * k);
+        }
+    }
+    a
+}
+
 /// Random unit vector.
 fn random_unit(n: usize, rng: &mut Rng) -> Vector {
     let mut v = vec![0.0; n];
@@ -163,6 +193,35 @@ mod tests {
             }
         }
         assert!(off_max < 0.2, "off_max={off_max}");
+    }
+
+    #[test]
+    fn nonsymmetric_has_spd_symmetric_part() {
+        let n = 24;
+        let spd = dense_spd_with_condition(n, 4.0, 30.0, 6, 17);
+        let a = dense_nonsymmetric_with_condition(n, 4.0, 30.0, 0.25, 6, 17);
+        // Genuinely nonsymmetric...
+        let mut max_asym = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                max_asym = max_asym.max((a.get(i, j) - a.get(j, i)).abs());
+            }
+        }
+        assert!(max_asym > 1e-3, "{max_asym}");
+        // ...but the symmetric part is exactly the SPD core.
+        for i in 0..n {
+            for j in 0..n {
+                let sym = 0.5 * (a.get(i, j) + a.get(j, i));
+                assert!((sym - spd.get(i, j)).abs() < 1e-10, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn nonsymmetric_zero_skew_is_spd_core() {
+        let a = dense_nonsymmetric_with_condition(12, 2.0, 8.0, 0.0, 4, 19);
+        let spd = dense_spd_with_condition(12, 2.0, 8.0, 4, 19);
+        assert_eq!(a.data(), spd.data());
     }
 
     #[test]

@@ -87,6 +87,38 @@ pub const CATALOG: &[MatrixInfo] = &[
         norm2: 4.796329,
         used_in: "2.3.2 (Fig 5)",
     },
+    // Iterative-solver testbed (not from the paper): exact-spectrum SPD
+    // pairs for CG and nonsymmetric pairs for GMRES, one well- and one
+    // ill-conditioned each.  κ/‖A‖₂ are generator targets (exact for the
+    // SPD pair, approximate for the nonsymmetric pair's κ).
+    MatrixInfo {
+        name: "spd64",
+        dim: 64,
+        kappa: 20.0,
+        norm2: 4.0,
+        used_in: "iterative solvers (CG testbed)",
+    },
+    MatrixInfo {
+        name: "spdill64",
+        dim: 64,
+        kappa: 2.0e3,
+        norm2: 4.0,
+        used_in: "iterative solvers (ill-conditioned CG)",
+    },
+    MatrixInfo {
+        name: "nonsym64",
+        dim: 64,
+        kappa: 20.0,
+        norm2: 4.0,
+        used_in: "iterative solvers (GMRES testbed)",
+    },
+    MatrixInfo {
+        name: "nonsymill64",
+        dim: 64,
+        kappa: 2.0e3,
+        norm2: 4.0,
+        used_in: "iterative solvers (ill-conditioned GMRES)",
+    },
 ];
 
 pub fn info(name: &str) -> Option<&'static MatrixInfo> {
@@ -157,6 +189,26 @@ pub fn build(name: &str) -> Result<Arc<dyn MatrixSource>, String> {
             0.20,
             seed_base ^ 8,
         )),
+        "spd64" => Arc::new(DenseSource::new(generators::dense_spd_with_condition(
+            64,
+            4.0,
+            20.0,
+            8,
+            seed_base ^ 9,
+        ))),
+        "spdill64" => Arc::new(DenseSource::new(generators::dense_spd_with_condition(
+            64,
+            4.0,
+            2.0e3,
+            8,
+            seed_base ^ 10,
+        ))),
+        "nonsym64" => Arc::new(DenseSource::new(
+            generators::dense_nonsymmetric_with_condition(64, 4.0, 20.0, 0.25, 8, seed_base ^ 11),
+        )),
+        "nonsymill64" => Arc::new(DenseSource::new(
+            generators::dense_nonsymmetric_with_condition(64, 4.0, 2.0e3, 0.25, 8, seed_base ^ 12),
+        )),
         other => {
             let names: Vec<&str> = CATALOG.iter().map(|m| m.name).collect();
             return Err(format!(
@@ -226,6 +278,29 @@ mod tests {
         assert!((smax - 1.822575e4).abs() / 1.822575e4 < 1e-2, "{smax}");
         let k = cond::condition_number(&dense, 400, 2).unwrap();
         assert!((k - 4324.971).abs() / 4324.971 < 0.05, "{k}");
+    }
+
+    #[test]
+    fn solver_testbed_operands_build() {
+        use crate::linalg::cond;
+        for name in ["spd64", "spdill64", "nonsym64", "nonsymill64"] {
+            let m = build(name).unwrap();
+            assert_eq!(m.nrows(), 64, "{name}");
+            assert_eq!(m.ncols(), 64, "{name}");
+        }
+        // The SPD pair has an exact generator spectrum.
+        let spd = build("spd64").unwrap().block(0, 0, 64, 64);
+        let k = cond::condition_number(&spd, 400, 4).unwrap();
+        assert!((k - 20.0).abs() / 20.0 < 0.02, "{k}");
+        // The nonsymmetric pair is genuinely nonsymmetric.
+        let ns = build("nonsym64").unwrap().block(0, 0, 64, 64);
+        let mut asym = 0.0f64;
+        for i in 0..64 {
+            for j in 0..64 {
+                asym = asym.max((ns.get(i, j) - ns.get(j, i)).abs());
+            }
+        }
+        assert!(asym > 1e-3, "{asym}");
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Convergence reporting for the iterative `Ax = b` solvers
+//! (`crate::iterative`): the per-iteration residual trajectory plus the
+//! write-once / read-per-iteration energy split across the whole solve.
+//!
+//! The report makes the serving-layer economics of an iterative solve
+//! legible at a glance: one programming pass (`program_energy_j`, paid at
+//! session open) against the cumulative per-iteration read/encode costs —
+//! the amortization that makes in-memory Krylov methods worthwhile.
+
+use crate::linalg::Vector;
+use crate::util::json::Json;
+
+/// Full report of one iterative system solve.
+#[derive(Clone, Debug)]
+pub struct ConvergenceReport {
+    /// Method name (`cg`, `gmres`, `jacobi`, `richardson`).
+    pub method: String,
+    /// The solution iterate.
+    pub x: Vector,
+    pub converged: bool,
+    /// Target relative residual.
+    pub tol: f64,
+    /// Final relative residual `‖b − Ax‖₂ / ‖b‖₂` (exact f64 host-side).
+    pub rel_residual: f64,
+    /// MVM-bearing inner iterations.
+    pub iterations: usize,
+    /// Outer iterative-refinement corrections applied.
+    pub refinements: usize,
+    /// MVMs served by the operator over the solve.
+    pub mvms: u64,
+    /// Per-iteration relative residual trajectory.
+    pub residual_history: Vec<f64>,
+    /// Write–verify programming passes paid (1 for a resident session,
+    /// however many iterations the solve took).
+    pub programming_passes: u64,
+    /// One-time operand programming energy (write–verify at session open).
+    pub program_energy_j: f64,
+    /// Cumulative per-iteration write energy (input-vector encodes).
+    pub solve_write_energy_j: f64,
+    /// Cumulative per-iteration read energy (crossbar activations).
+    pub read_energy_j: f64,
+    pub wall_seconds: f64,
+}
+
+impl ConvergenceReport {
+    /// Programming energy over mean per-MVM write energy: how many solver
+    /// iterations the one-time operand write amortizes across.
+    pub fn write_amortization(&self) -> f64 {
+        if self.mvms == 0 {
+            return 0.0;
+        }
+        let per_mvm = self.solve_write_energy_j / self.mvms as f64;
+        self.program_energy_j / per_mvm.max(f64::MIN_POSITIVE)
+    }
+
+    /// Machine-readable JSON (CLI `--json`, bench artifacts).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("method", Json::Str(self.method.clone()))
+            .set("converged", Json::Bool(self.converged))
+            .set("tol", Json::Num(self.tol))
+            .set("rel_residual", Json::Num(self.rel_residual))
+            .set("iterations", Json::Num(self.iterations as f64))
+            .set("refinements", Json::Num(self.refinements as f64))
+            .set("mvms", Json::Num(self.mvms as f64))
+            .set(
+                "residual_history",
+                Json::Arr(self.residual_history.iter().map(|&v| Json::Num(v)).collect()),
+            )
+            .set(
+                "programming_passes",
+                Json::Num(self.programming_passes as f64),
+            )
+            .set("program_energy_j", Json::Num(self.program_energy_j))
+            .set(
+                "solve_write_energy_j",
+                Json::Num(self.solve_write_energy_j),
+            )
+            .set("read_energy_j", Json::Num(self.read_energy_j))
+            .set("write_amortization", Json::Num(self.write_amortization()))
+            .set("wall_seconds", Json::Num(self.wall_seconds));
+        j
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        format!(
+            "{}: {} at rel residual {:.3e} (tol {:.1e}) — {} iterations, \
+             {} refinements, {} MVMs in {:.2}s\n\
+             energy J: program {:.3e} ({} pass{}), encode/solve {:.3e}, \
+             read {:.3e} — write amortization {:.1}x",
+            self.method,
+            if self.converged {
+                "converged"
+            } else {
+                "NOT converged"
+            },
+            self.rel_residual,
+            self.tol,
+            self.iterations,
+            self.refinements,
+            self.mvms,
+            self.wall_seconds,
+            self.program_energy_j,
+            self.programming_passes,
+            if self.programming_passes == 1 { "" } else { "es" },
+            self.solve_write_energy_j,
+            self.read_energy_j,
+            self.write_amortization(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ConvergenceReport {
+        ConvergenceReport {
+            method: "cg".to_string(),
+            x: Vector::zeros(4),
+            converged: true,
+            tol: 1e-6,
+            rel_residual: 4.2e-7,
+            iterations: 30,
+            refinements: 5,
+            mvms: 30,
+            residual_history: vec![1.0, 1e-2, 4.2e-7],
+            programming_passes: 1,
+            program_energy_j: 3.0,
+            solve_write_energy_j: 0.3,
+            read_energy_j: 0.06,
+            wall_seconds: 0.5,
+        }
+    }
+
+    #[test]
+    fn amortization_is_program_over_per_mvm_write() {
+        let r = sample();
+        // 3.0 / (0.3 / 30) = 300.
+        assert!((r.write_amortization() - 300.0).abs() < 1e-9);
+        let mut idle = sample();
+        idle.mvms = 0;
+        assert_eq!(idle.write_amortization(), 0.0);
+    }
+
+    #[test]
+    fn json_has_convergence_fields() {
+        let j = sample().to_json();
+        assert_eq!(j.get("method").and_then(|v| v.as_str()), Some("cg"));
+        assert_eq!(j.get("iterations").unwrap().as_f64(), Some(30.0));
+        assert_eq!(j.get("programming_passes").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("residual_history").is_some());
+        assert!(j.get("write_amortization").is_some());
+    }
+
+    #[test]
+    fn render_mentions_method_and_verdict() {
+        let text = sample().render();
+        assert!(text.contains("cg"));
+        assert!(text.contains("converged"));
+        assert!(text.contains("1 pass"));
+    }
+}

@@ -2,12 +2,16 @@
 //!
 //! Relative ℓ2/ℓ∞ error norms (paper Eq. in §2.1), energy/latency
 //! aggregation across MCAs (figures report the *mean across all MCAs*),
-//! table/CSV/JSON emitters for the benches, and [`serving`] statistics
+//! table/CSV/JSON emitters for the benches, [`serving`] statistics
 //! (throughput, latency percentiles, write-vs-read energy split) for the
-//! resident-session serving layer.
+//! resident-session serving layer, and [`convergence`] reports (residual
+//! trajectory + whole-solve energy split) for the iterative solvers.
 
+pub mod convergence;
 pub mod serving;
 pub mod table;
+
+pub use convergence::ConvergenceReport;
 
 use crate::linalg::Vector;
 use crate::mca::EnergyLedger;

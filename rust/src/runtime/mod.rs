@@ -15,6 +15,8 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod service;
+#[cfg(all(feature = "pjrt", not(feature = "xla-vendored")))]
+mod xla_stub;
 
 /// Stub `pjrt` module when the feature (and its vendored `xla` crate) is
 /// absent; keeps the `runtime::pjrt::default_artifact_dir` path alive for

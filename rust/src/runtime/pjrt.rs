@@ -14,6 +14,14 @@ use crate::util::json::Json;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+// Without the vendored crate, `xla::*` resolves to the API-compatible
+// stub whose client constructor fails cleanly (see `super::xla_stub`):
+// the whole engine stays typechecked under `--features pjrt`, and
+// `PjrtBackend::start` reports the missing vendor exactly like a missing
+// artifact directory.
+#[cfg(not(feature = "xla-vendored"))]
+use super::xla_stub as xla;
+
 /// Artifact kinds produced by `make artifacts`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ArtifactKind {

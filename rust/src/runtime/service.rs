@@ -1,5 +1,6 @@
-//! Runtime-service thread: makes the single-threaded [`PjrtEngine`]
-//! available behind the `Send + Sync` [`ExecBackend`] interface.
+//! Runtime-service thread: makes the single-threaded `PjrtEngine`
+//! (`super::pjrt`, behind the `pjrt` feature) available behind the
+//! `Send + Sync` [`ExecBackend`] interface.
 //!
 //! PJRT client/executable handles are `!Send`, so a dedicated thread owns
 //! the engine and serves requests over an mpsc channel; callers block on a

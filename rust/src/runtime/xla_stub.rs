@@ -1,0 +1,138 @@
+//! API-compatible stand-in for the vendored `xla` crate.
+//!
+//! The `pjrt` feature compiles the full runtime-service plumbing
+//! ([`super::pjrt`], [`super::service`]) so the PJRT path stays
+//! typechecked in every build — but the real `xla` crate (PJRT CPU
+//! client + HLO compilation) is a vendored native dependency that not
+//! every environment carries.  When the `xla-vendored` feature is off,
+//! [`super::pjrt`] resolves `xla::*` to this module instead: the same
+//! surface, with [`PjRtClient::cpu`] failing cleanly at construction so
+//! callers fall back to the native backend exactly as they would on a
+//! missing artifact directory.  Nothing past construction is reachable —
+//! the unconstructible client makes that a type-level guarantee.
+
+use std::path::Path;
+
+/// Error type mirroring the vendored crate's (stringly, `Display`-able).
+pub struct Error(String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+fn unavailable() -> Error {
+    Error(
+        "the vendored `xla` crate is not linked (enable the `xla-vendored` feature after \
+         vendoring third_party/xla-rs)"
+            .to_string(),
+    )
+}
+
+/// Unconstructible PJRT client: [`PjRtClient::cpu`] always fails.
+pub struct PjRtClient {
+    unconstructible: std::convert::Infallible,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        match self.unconstructible {}
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        match self.unconstructible {}
+    }
+}
+
+/// Unreachable executable handle (only a client can produce one).
+pub struct PjRtLoadedExecutable {
+    unconstructible: std::convert::Infallible,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        match self.unconstructible {}
+    }
+}
+
+/// Unreachable device buffer (only an executable can produce one).
+pub struct PjRtBuffer {
+    unconstructible: std::convert::Infallible,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        match self.unconstructible {}
+    }
+}
+
+/// Host literal.  Constructible (the engine builds literals before any
+/// client call), but every device-facing operation fails.
+pub struct Literal {}
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal {}
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal), Error> {
+        Err(unavailable())
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<HloModuleProto, Error> {
+        Err(unavailable())
+    }
+}
+
+/// Compilable computation.
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let err = match PjRtClient::cpu() {
+            Err(e) => e,
+            Ok(_) => unreachable!("stub client must not construct"),
+        };
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn literals_construct_but_do_not_execute() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nope")).is_err());
+    }
+}

@@ -340,6 +340,65 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_stable_across_identical_builds() {
+        // The same registry operand built twice is a different allocation
+        // with identical content: fingerprints and full session keys must
+        // agree, so a re-built tenant hits the cache.
+        use crate::matrices::registry;
+        let a1 = registry::build("bcsstk02").unwrap();
+        let a2 = registry::build("bcsstk02").unwrap();
+        assert!(!Arc::ptr_eq(&a1, &a2));
+        assert_eq!(fingerprint(a1.as_ref()), fingerprint(a2.as_ref()));
+        let cfg = SystemConfig::single_mca(128);
+        let opts = SolveOptions::default();
+        let k1 = session_key(a1.as_ref(), &cfg, &opts);
+        let k2 = session_key(a2.as_ref(), &cfg, &opts);
+        assert_eq!(k1, k2);
+        assert!(k1.exact, "66² operands hash every entry");
+        // A different operand keeps a different fingerprint.
+        let other = registry::build("iperturb66").unwrap();
+        assert_ne!(fingerprint(a1.as_ref()), fingerprint(other.as_ref()));
+    }
+
+    #[test]
+    fn rebuilt_operand_hits_the_cache() {
+        let solver = solver();
+        let mut cache = OperandCache::new(2);
+        let s1 = cache.get_or_open(&solver, &operand(21)).unwrap();
+        let s2 = cache.get_or_open(&solver, &operand(21)).unwrap();
+        assert!(Arc::ptr_eq(&s1, &s2));
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+    }
+
+    #[test]
+    fn eviction_follows_lru_order_under_pressure() {
+        let solver = solver();
+        let mut cache = OperandCache::new(2);
+        let (a, b, c, d) = (operand(31), operand(32), operand(33), operand(34));
+        cache.get_or_open(&solver, &a).unwrap();
+        cache.get_or_open(&solver, &b).unwrap();
+        // Full at capacity 2: inserting c evicts a (the LRU).
+        cache.get_or_open(&solver, &c).unwrap();
+        assert_eq!(cache.evictions, 1);
+        assert!(!cache.contains(&solver, &a));
+        assert!(cache.contains(&solver, &b));
+        assert!(cache.contains(&solver, &c));
+        // Touch b so c becomes LRU; inserting d must evict c, not b.
+        cache.get_or_open(&solver, &b).unwrap();
+        cache.get_or_open(&solver, &d).unwrap();
+        assert_eq!(cache.evictions, 2);
+        assert!(cache.contains(&solver, &b));
+        assert!(!cache.contains(&solver, &c));
+        assert!(cache.contains(&solver, &d));
+        assert_eq!(cache.len(), 2);
+        // Re-opening an evicted tenant is a miss that programs again.
+        let misses = cache.misses;
+        cache.get_or_open(&solver, &a).unwrap();
+        assert_eq!(cache.misses, misses + 1);
+        assert_eq!(cache.evictions, 3);
+    }
+
+    #[test]
     fn cache_evicts_least_recently_used() {
         let solver = solver();
         let mut cache = OperandCache::new(2);

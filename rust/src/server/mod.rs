@@ -26,4 +26,4 @@ pub mod cache;
 pub mod session;
 
 pub use cache::{fingerprint, session_key, OperandCache, SessionKey};
-pub use session::{exec_stream_seed, ProgramReport, ServeSolve, Session};
+pub use session::{exec_stream_seed, MvmOperator, ProgramReport, ServeSolve, Session};

@@ -58,6 +58,54 @@ pub fn exec_stream_seed(
     h ^ (h >> 31)
 }
 
+/// Backend-agnostic matrix–vector multiply provider for iterative solvers
+/// (`crate::iterative`).
+///
+/// The solvers only ever ask for `y = A·x`; *where* that product runs —
+/// a resident crossbar [`Session`] (analog, noisy, write-amortized) or an
+/// exact f64 reference (`crate::iterative::ExactOperator`) — is behind
+/// this trait.  Implementations also expose how many MVMs they served and
+/// how many write–verify programming passes they paid, so a convergence
+/// report can state the paper's headline number directly: *one*
+/// programming pass, arbitrarily many read-only iterations.
+pub trait MvmOperator: Send + Sync {
+    fn nrows(&self) -> usize;
+    fn ncols(&self) -> usize;
+
+    /// Compute `y = A·x`.
+    fn apply(&self, x: &Vector) -> Result<Vector, String>;
+
+    /// MVMs served so far (monotone).
+    fn mvm_count(&self) -> u64;
+
+    /// Write–verify programming passes paid for this operator so far.
+    fn programming_passes(&self) -> u64;
+}
+
+impl MvmOperator for Session {
+    fn nrows(&self) -> usize {
+        self.source.nrows()
+    }
+
+    fn ncols(&self) -> usize {
+        self.source.ncols()
+    }
+
+    fn apply(&self, x: &Vector) -> Result<Vector, String> {
+        self.solve(x).map(|s| s.y)
+    }
+
+    fn mvm_count(&self) -> u64 {
+        self.report().solves
+    }
+
+    /// A session programs its operand exactly once, at
+    /// [`open`](Session::open) — every solve afterwards is reads only.
+    fn programming_passes(&self) -> u64 {
+        1
+    }
+}
+
 /// One-time programming cost and shape summary of a resident operand.
 #[derive(Clone, Debug)]
 pub struct ProgramReport {

@@ -13,14 +13,15 @@
 
 use crate::config::{BackendKind, SolveOptions, SystemConfig};
 use crate::coordinator;
+use crate::iterative::{self, IterOptions};
 use crate::linalg::{Matrix, Vector};
 use crate::matrices::{DenseSource, MatrixSource};
-use crate::metrics::SolveReport;
+use crate::metrics::{ConvergenceReport, SolveReport};
 use crate::runtime::native::NativeBackend;
 use crate::runtime::pjrt::default_artifact_dir;
 use crate::runtime::service::PjrtBackend;
 use crate::runtime::Backend;
-use crate::server::Session;
+use crate::server::{MvmOperator, Session};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -114,6 +115,61 @@ impl Meliso {
     /// here; per-solve cost drops to input-vector encodes plus reads.
     pub fn open_session(&self, source: Arc<dyn MatrixSource>) -> Result<Session, String> {
         Session::open(source, self.config, self.opts.clone(), self.backend.clone())
+    }
+
+    /// Solve the linear **system** `Ax = b` with an iterative method whose
+    /// every matrix–vector product is served by a resident crossbar
+    /// session: `A` is write–verified onto the grid exactly once, then all
+    /// solver iterations are read-only (see [`crate::iterative`]).
+    ///
+    /// Residual bookkeeping is exact f64 on the host, and iterative
+    /// refinement (enabled by default through
+    /// [`IterOptions::max_refinements`]) lets low-precision devices reach
+    /// tolerances far below their per-MVM error floor.
+    pub fn solve_system(
+        &self,
+        source: Arc<dyn MatrixSource>,
+        b: &Vector,
+        iter_opts: &IterOptions,
+    ) -> Result<ConvergenceReport, String> {
+        // Validate before programming: opening a session pays the full
+        // write–verify pass, which a bad input must not trigger.
+        if source.nrows() != source.ncols() {
+            return Err(format!(
+                "iterative methods need a square operand, got {}x{}",
+                source.nrows(),
+                source.ncols()
+            ));
+        }
+        if b.len() != source.ncols() {
+            return Err(format!(
+                "b has length {}, A is {}x{}",
+                b.len(),
+                source.nrows(),
+                source.ncols()
+            ));
+        }
+        let start = std::time::Instant::now();
+        let session = self.open_session(source.clone())?;
+        let outcome = iterative::solve_system(&session, Some(source.as_ref()), b, iter_opts)?;
+        let program = session.program_report();
+        let serving = session.report();
+        Ok(ConvergenceReport {
+            method: iter_opts.method.to_string(),
+            x: outcome.x,
+            converged: outcome.converged,
+            tol: iter_opts.tol,
+            rel_residual: outcome.rel_residual,
+            iterations: outcome.iterations,
+            refinements: outcome.refinements,
+            mvms: outcome.mvms,
+            residual_history: outcome.history,
+            programming_passes: session.programming_passes(),
+            program_energy_j: program.write_energy_j,
+            solve_write_energy_j: serving.solve_write_energy_j,
+            read_energy_j: serving.solve_read_energy_j,
+            wall_seconds: start.elapsed().as_secs_f64(),
+        })
     }
 
     /// Per-replication seed: the same derivation whether replications run
@@ -286,6 +342,89 @@ mod tests {
         let err = out.y.sub(&b).norm_l2() / b.norm_l2();
         assert!(err < 0.1, "{err}");
         assert_eq!(session.report().solves, 1);
+    }
+
+    #[test]
+    fn solve_system_cg_refines_past_device_floor() {
+        use crate::iterative::Method;
+        let source = crate::matrices::registry::build("spd64").unwrap();
+        let x_star = Vector::standard_normal(64, 21);
+        let b = source.matvec(&x_star);
+        let solver = native_solver(
+            SystemConfig::single_mca(64),
+            SolveOptions::default()
+                .with_device(Material::EpiRam)
+                .with_wv_iters(3)
+                .with_workers(2)
+                .with_seed(42),
+        );
+        let opts = IterOptions::default()
+            .with_method(Method::Cg)
+            .with_tol(1e-4)
+            .with_max_iters(40)
+            .with_inner_tol(1e-2)
+            .with_refinements(30);
+        let report = solver.solve_system(source, &b, &opts).unwrap();
+        assert!(
+            report.converged,
+            "rel {} after {} refinements",
+            report.rel_residual, report.refinements
+        );
+        assert!(report.rel_residual <= 1e-4);
+        // One programming pass for the whole solve, many read-only MVMs.
+        assert_eq!(report.programming_passes, 1);
+        assert!(report.mvms > 0);
+        assert!(report.program_energy_j > 0.0);
+        // The exact outer residuals improve from start to finish.
+        assert!(report.residual_history.first().unwrap() > report.residual_history.last().unwrap());
+        // And the true solution error tracks the residual on a κ=20 operand.
+        let err = report.x.sub(&x_star).norm_l2() / x_star.norm_l2();
+        assert!(err < 1e-2, "{err}");
+    }
+
+    #[test]
+    fn solve_system_gmres_on_nonsymmetric() {
+        use crate::iterative::Method;
+        let source = crate::matrices::registry::build("nonsym64").unwrap();
+        let x_star = Vector::standard_normal(64, 23);
+        let b = source.matvec(&x_star);
+        let solver = native_solver(
+            SystemConfig::single_mca(64),
+            SolveOptions::default()
+                .with_device(Material::EpiRam)
+                .with_wv_iters(3)
+                .with_workers(2)
+                .with_seed(7),
+        );
+        let opts = IterOptions::default()
+            .with_method(Method::Gmres)
+            .with_tol(1e-3)
+            .with_max_iters(48)
+            .with_restart(24)
+            .with_inner_tol(1e-2)
+            .with_refinements(30);
+        let report = solver.solve_system(source, &b, &opts).unwrap();
+        assert!(
+            report.converged,
+            "rel {} after {} refinements",
+            report.rel_residual, report.refinements
+        );
+        assert_eq!(report.programming_passes, 1);
+    }
+
+    #[test]
+    fn solve_system_rejects_rectangular_operand() {
+        let a = Matrix::standard_normal(16, 8, 25);
+        let src: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(a));
+        let solver = native_solver(
+            SystemConfig::single_mca(32),
+            SolveOptions::default().with_device(Material::EpiRam),
+        );
+        let b = Vector::standard_normal(8, 26);
+        let err = solver
+            .solve_system(src, &b, &IterOptions::default())
+            .unwrap_err();
+        assert!(err.contains("square"), "{err}");
     }
 
     #[test]
