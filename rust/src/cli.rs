@@ -11,6 +11,7 @@ use crate::config::{from_toml, BackendKind, SolveOptions, SystemConfig};
 use crate::device::materials::Material;
 use crate::ec::DenoiseMode;
 use crate::iterative::{IterOptions, Method};
+use crate::plane::Placement;
 
 #[derive(Debug)]
 pub enum Command {
@@ -94,7 +95,11 @@ RUN OPTIONS:
     --lambda V         second-order regularization (default 1e-12)
     --tiles RxC        MCA tile grid (default 8x8)
     --cell N           cells per MCA edge: 32..1024 (default 1024)
-    --workers N        worker threads (default 4)
+    --workers N        shard worker threads (default 4)
+    --placement P      round-robin | load-balanced | sparsity-aware (default round-robin)
+    --truth / --no-truth
+                       exact f64 ground-truth reference for rel_err_* (default on;
+                       switch off at scale — O(m·n) host work, rel_err_* become null)
     --reps N           replications to average (default 1)
     --seed S           master seed (default 42)
     --backend B        pjrt | native (default pjrt)
@@ -191,6 +196,13 @@ fn parse_common_flag(
                 .parse()
                 .map_err(|e| format!("--workers: {e}"))?
         }
+        "--placement" => {
+            let name = next_value(it, "--placement")?;
+            opts.placement = Placement::parse(&name)
+                .ok_or_else(|| format!("unknown placement {name:?}"))?;
+        }
+        "--truth" => opts.ground_truth = true,
+        "--no-truth" => opts.ground_truth = false,
         "--seed" => {
             opts.seed = next_value(it, "--seed")?
                 .parse()
@@ -372,7 +384,7 @@ mod tests {
     fn parses_run_with_options() {
         let cmd = parse(&argv(
             "run --matrix add32 --device epiram --no-ec --k 5 --tiles 4x2 --cell 256 \
-             --reps 3 --seed 7 --backend native --json",
+             --reps 3 --seed 7 --backend native --placement sparsity-aware --no-truth --json",
         ))
         .unwrap();
         match cmd {
@@ -385,10 +397,28 @@ mod tests {
                 assert_eq!(r.reps, 3);
                 assert_eq!(r.opts.seed, 7);
                 assert_eq!(r.opts.backend, BackendKind::Native);
+                assert_eq!(r.opts.placement, Placement::SparsityAware);
+                assert!(!r.opts.ground_truth);
                 assert!(r.json);
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn run_defaults_keep_ground_truth_on() {
+        match parse(&argv("run")).unwrap() {
+            Command::Run(r) => {
+                assert!(r.opts.ground_truth);
+                assert_eq!(r.opts.placement, Placement::RoundRobin);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_placement() {
+        assert!(parse(&argv("run --placement diagonal")).is_err());
     }
 
     #[test]

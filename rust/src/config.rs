@@ -5,6 +5,7 @@ use crate::device::materials::Material;
 use crate::device::nonideal::{AdcModel, DriftModel, IrDropModel, NonIdealExt};
 use crate::ec::{DenoiseMode, EcOptions};
 use crate::mca::WriteVerifyOpts;
+use crate::plane::Placement;
 use crate::util::toml::TomlDoc;
 use crate::virtualization::SystemGeometry;
 
@@ -78,8 +79,17 @@ pub struct SolveOptions {
     pub wv_norm_inf: bool,
     /// Master seed (chunk/MCA streams fork from it).
     pub seed: u64,
-    /// Worker threads (capped at the MCA count).
+    /// Worker threads / shards (capped at the MCA count).
     pub workers: usize,
+    /// How MCAs are grouped into shards (cannot change results — see
+    /// [`crate::plane::placement`]).
+    pub placement: Placement,
+    /// Compute the exact f64 ground-truth matvec and report `rel_err_*`.
+    /// O(m·n) host work per solve — dominant at scale and infeasible for
+    /// 65k² operands, so large runs switch it off
+    /// ([`with_ground_truth`](Self::with_ground_truth), CLI `--no-truth`);
+    /// `rel_err_*` are then NaN (serialized as JSON `null`).
+    pub ground_truth: bool,
     pub backend: BackendKind,
     /// Extended non-idealities (disabled by default).
     pub nonideal: NonIdealExt,
@@ -98,6 +108,8 @@ impl Default for SolveOptions {
             wv_norm_inf: false,
             seed: 42,
             workers: 4,
+            placement: Placement::RoundRobin,
+            ground_truth: true,
             backend: BackendKind::Pjrt,
             nonideal: NonIdealExt::default(),
         }
@@ -122,6 +134,19 @@ impl SolveOptions {
 
     pub fn with_workers(mut self, w: usize) -> Self {
         self.workers = w;
+        self
+    }
+
+    pub fn with_placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+
+    /// Enable/disable the exact ground-truth matvec (`rel_err_*`
+    /// reporting).  On by default; switch off for at-scale runs where the
+    /// O(m·n) host-side reference would dominate wall time.
+    pub fn with_ground_truth(mut self, gt: bool) -> Self {
+        self.ground_truth = gt;
         self
     }
 
@@ -210,6 +235,14 @@ pub fn from_toml(text: &str) -> Result<(SystemConfig, SolveOptions), String> {
             "solve.workers" => {
                 opts.workers = value.as_usize().ok_or("workers must be integer")?
             }
+            "solve.placement" => {
+                let name = value.as_str().ok_or("placement must be a string")?;
+                opts.placement = Placement::parse(name)
+                    .ok_or_else(|| format!("unknown placement {name:?}"))?;
+            }
+            "solve.ground_truth" => {
+                opts.ground_truth = value.as_bool().ok_or("ground_truth must be bool")?
+            }
             "solve.adc_bits" => {
                 opts.nonideal.adc =
                     AdcModel::new(value.as_usize().ok_or("adc_bits must be integer")? as u32)
@@ -250,6 +283,8 @@ mod tests {
         let o = SolveOptions::default();
         assert!(o.ec);
         assert_eq!(o.lambda, 1e-12);
+        assert_eq!(o.placement, Placement::RoundRobin);
+        assert!(o.ground_truth);
         let ec = o.ec_options();
         assert_eq!(ec.wv.max_iters, 0);
     }
@@ -271,6 +306,8 @@ mod tests {
             wv_iters = 7
             seed = 123
             workers = 2
+            placement = "sparsity-aware"
+            ground_truth = false
             backend = "native"
             "#,
         )
@@ -281,6 +318,8 @@ mod tests {
         assert_eq!(opts.denoise, DenoiseMode::Digital);
         assert_eq!(opts.wv_iters, 7);
         assert_eq!(opts.seed, 123);
+        assert_eq!(opts.placement, Placement::SparsityAware);
+        assert!(!opts.ground_truth);
         assert_eq!(opts.backend, BackendKind::Native);
     }
 

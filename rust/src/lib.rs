@@ -10,8 +10,17 @@
 //! * **L3 (this crate)** — the coordinator: RRAM device & crossbar (MCA)
 //!   simulation, `adjustableWriteandVerify` programming protocols, the
 //!   virtualization layer (zero-padding / block partitioning / chunk
-//!   scheduling / address mapping), a leader–worker distributed runtime,
-//!   energy & latency accounting, metrics, CLI and config.
+//!   scheduling / address mapping), energy & latency accounting, metrics,
+//!   CLI and config.
+//! * **Execution plane** — [`plane`]: the single sharded scatter/gather
+//!   runtime behind both one-shot solves and resident sessions.  A
+//!   [`plane::PlacementPolicy`] groups MCAs into long-lived shard threads,
+//!   the leader streams occupied chunks through the sparsity-aware
+//!   [`virtualization::ChunkPlan::nonzero_chunks`] enumeration (one
+//!   extracted tile in flight per queue slot — a 65,536² banded operand
+//!   solves without ever materializing densely), and results reduce in
+//!   deterministic chunk order, bit-reproducible for a fixed seed across
+//!   shard counts and placement policies.
 //! * **Serving layer** — [`server`]: program-once / solve-many resident
 //!   crossbar sessions ([`server::Session`]) with batched MVM, long-lived
 //!   worker pools, an LRU operand cache for multi-tenant residency
@@ -89,6 +98,7 @@ pub mod linalg;
 pub mod matrices;
 pub mod mca;
 pub mod metrics;
+pub mod plane;
 pub mod runtime;
 pub mod server;
 pub mod solver;
@@ -104,6 +114,7 @@ pub mod prelude {
     pub use crate::iterative::{IterOptions, Method, MvmOperator};
     pub use crate::linalg::{Matrix, Vector};
     pub use crate::metrics::{ConvergenceReport, SolveReport};
+    pub use crate::plane::{ExecutionPlane, Placement};
     pub use crate::server::Session;
     pub use crate::solver::Meliso;
 }

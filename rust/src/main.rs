@@ -133,6 +133,16 @@ fn cmd_artifacts() -> i32 {
     }
 }
 
+/// Table cell for a possibly-skipped accuracy metric: with the ground
+/// truth off (`--no-truth`), `rel_err_*` are NaN and render as `n/a`.
+fn metric_cell(v: f64) -> String {
+    if v.is_finite() {
+        sci(v)
+    } else {
+        "n/a (truth off)".to_string()
+    }
+}
+
 /// Build the configured solver, falling back to the native backend with a
 /// note when the PJRT artifacts are unavailable.
 fn solver_or_native(system: SystemConfig, opts: SolveOptions) -> Meliso {
@@ -336,8 +346,8 @@ fn cmd_run(run: RunArgs) -> Result<(), String> {
             &format!("{} x {} reps", run.matrix, s.reps),
             &["value"],
         );
-        t.row("rel l2 error", vec![sci(s.rel_err_l2)]);
-        t.row("rel linf error", vec![sci(s.rel_err_inf)]);
+        t.row("rel l2 error", vec![metric_cell(s.rel_err_l2)]);
+        t.row("rel linf error", vec![metric_cell(s.rel_err_inf)]);
         t.row("E_w mean (J)", vec![sci(s.ew_mean)]);
         t.row("L_w mean (s)", vec![sci(s.lw_mean)]);
         t.row("chunks", vec![format!("{}", last.chunks_total)]);

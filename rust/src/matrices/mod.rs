@@ -31,9 +31,19 @@ pub trait MatrixSource: Send + Sync {
     fn matvec(&self, x: &Vector) -> Vector;
 
     /// Conservative test: `true` only if the block is certainly all-zero
-    /// (enables the coordinator's sparsity-aware chunk skipping).
+    /// (enables the execution plane's sparsity-aware chunk skipping).
     fn block_is_zero(&self, _r0: usize, _c0: usize, _h: usize, _w: usize) -> bool {
         false
+    }
+
+    /// Conservative column span `[lo, hi)` that may hold nonzeros within
+    /// rows `[r0, r0 + rows)`.  Lets chunk planning
+    /// ([`ChunkPlan::nonzero_chunks`](crate::virtualization::ChunkPlan::nonzero_chunks))
+    /// enumerate occupied blocks without walking the full `O(grid²)` grid.
+    /// The default spans every column (no information); an empty span
+    /// (`lo >= hi`) means the rows are certainly all-zero.
+    fn occupied_cols(&self, _r0: usize, _rows: usize) -> (usize, usize) {
+        (0, self.ncols())
     }
 
     /// Upper bound on |entries| (used for conductance scaling decisions).
@@ -203,6 +213,17 @@ impl MatrixSource for BandedSource {
         r0 - c1 > band || c0 - r1 > band
     }
 
+    fn occupied_cols(&self, r0: usize, rows: usize) -> (usize, usize) {
+        if r0 >= self.n || rows == 0 {
+            return (0, 0);
+        }
+        let last = (r0 + rows - 1).min(self.n - 1);
+        (
+            r0.saturating_sub(self.band),
+            (last + self.band + 1).min(self.n),
+        )
+    }
+
     fn max_abs(&self) -> f64 {
         self.d_max
     }
@@ -282,6 +303,35 @@ mod tests {
                 assert!(b.data().iter().all(|&v| v == 0.0), "({r0},{c0})");
             }
         }
+    }
+
+    #[test]
+    fn occupied_cols_bounds_the_band() {
+        let s = BandedSource::new(1000, 8, 1.0, 10.0, 0.2, 5);
+        assert_eq!(s.occupied_cols(0, 32), (0, 40));
+        assert_eq!(s.occupied_cols(500, 32), (492, 540));
+        assert_eq!(s.occupied_cols(992, 32), (984, 1000));
+        // Past the matrix: certainly empty.
+        let (lo, hi) = s.occupied_cols(2000, 32);
+        assert!(lo >= hi);
+        // The span really covers every nonzero column of those rows.
+        for r0 in [0usize, 480, 960] {
+            let (lo, hi) = s.occupied_cols(r0, 32);
+            for i in r0..(r0 + 32).min(1000) {
+                for j in 0..1000 {
+                    if s.entry(i, j) != 0.0 {
+                        assert!(j >= lo && j < hi, "({i},{j}) outside [{lo},{hi})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_occupied_cols_spans_everything() {
+        let m = Matrix::standard_normal(10, 10, 1);
+        let s = DenseSource::new(m);
+        assert_eq!(s.occupied_cols(0, 4), (0, 10));
     }
 
     #[test]

@@ -119,6 +119,25 @@ pub const CATALOG: &[MatrixInfo] = &[
         norm2: 4.0,
         used_in: "iterative solvers (ill-conditioned GMRES)",
     },
+    // Execution-plane scale testbed (not from the paper): procedural
+    // banded operands so the at-scale path is one CLI command away.
+    // `banded8k` is the CI smoke size; `banded65k` is the 65,536²
+    // headline operand — both stream tile-by-tile and are never
+    // materialized densely.
+    MatrixInfo {
+        name: "banded8k",
+        dim: 8192,
+        kappa: 1.0e2,
+        norm2: 4.0,
+        used_in: "plane scale testbed (CI smoke, benches/plane_scaling)",
+    },
+    MatrixInfo {
+        name: "banded65k",
+        dim: 65_536,
+        kappa: 1.0e2,
+        norm2: 4.0,
+        used_in: "plane scale testbed (65,536² headline solve)",
+    },
 ];
 
 pub fn info(name: &str) -> Option<&'static MatrixInfo> {
@@ -209,6 +228,22 @@ pub fn build(name: &str) -> Result<Arc<dyn MatrixSource>, String> {
         "nonsymill64" => Arc::new(DenseSource::new(
             generators::dense_nonsymmetric_with_condition(64, 4.0, 2.0e3, 0.25, 8, seed_base ^ 12),
         )),
+        "banded8k" => Arc::new(BandedSource::new(
+            8192,
+            48,
+            4.0,
+            1.0e2,
+            0.2,
+            seed_base ^ 13,
+        )),
+        "banded65k" => Arc::new(BandedSource::new(
+            65_536,
+            48,
+            4.0,
+            1.0e2,
+            0.2,
+            seed_base ^ 14,
+        )),
         other => {
             let names: Vec<&str> = CATALOG.iter().map(|m| m.name).collect();
             return Err(format!(
@@ -267,6 +302,22 @@ mod tests {
         assert_eq!(m.nrows(), 4960);
         // Sparse: a far-off-diagonal block is zero.
         assert!(m.block_is_zero(0, 2000, 128, 128));
+    }
+
+    #[test]
+    fn scale_testbed_operands_build_procedurally() {
+        // Building is O(1) — these are procedural sources, never dense.
+        for (name, dim) in [("banded8k", 8192usize), ("banded65k", 65_536)] {
+            let m = build(name).unwrap();
+            assert_eq!(m.nrows(), dim, "{name}");
+            assert_eq!(m.ncols(), dim, "{name}");
+            assert!(info(name).is_some(), "{name} missing from catalog");
+            // Far off-diagonal blocks are certainly zero, and the
+            // occupied column span is band-bounded.
+            assert!(m.block_is_zero(0, dim / 2, 1024, 1024), "{name}");
+            let (lo, hi) = m.occupied_cols(dim / 2, 1024);
+            assert!(hi - lo <= 1024 + 2 * 48, "{name}: [{lo},{hi})");
+        }
     }
 
     #[test]

@@ -65,9 +65,9 @@ impl Mca {
 
     /// Swap in a different RNG stream, returning the previous one.
     ///
-    /// The serving layer derives a counter-based stream per (solve, chunk)
-    /// so resident-session results are independent of batching and worker
-    /// scheduling (see `server::session::exec_stream_seed`); the persistent
+    /// The execution plane derives a counter-based stream per (solve,
+    /// chunk) so resident-session results are independent of batching and
+    /// shard scheduling (see `plane::exec_stream_seed`); the persistent
     /// programming stream is restored afterwards.
     pub fn replace_rng(&mut self, rng: Rng) -> Rng {
         std::mem::replace(&mut self.rng, rng)

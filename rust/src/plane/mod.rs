@@ -1,0 +1,807 @@
+//! The sharded execution plane: one scatter/gather implementation behind
+//! both one-shot solves and resident serving sessions.
+//!
+//! Historically the one-shot coordinator and the serving layer each owned
+//! a private copy of the same machinery (thread pool, chunk dispatch,
+//! partial-product gather, ledger collection).  [`ExecutionPlane`] unifies
+//! them:
+//!
+//! ```text
+//!                        ┌────────────────────────────┐
+//!   one-shot             │       ExecutionPlane       │        resident
+//!   (coordinator)        │                            │        (server::Session)
+//!                        │  PlacementPolicy: MCA→shard│
+//!   execute_once(A, x) ──┤  shard 0 ── MCA {0, 3, …}  ├── program(A)
+//!     program+execute    │  shard 1 ── MCA {1, 4, …}  │     write–verify once
+//!     fused per chunk,   │  shard 2 ── MCA {2, 5, …}  │   execute_batch(xs)
+//!     teardown after     │   (long-lived threads)     │     reads only, ∞ solves
+//!                        └────────────────────────────┘
+//! ```
+//!
+//! * The **leader** enumerates occupied chunks through
+//!   [`ChunkPlan::nonzero_chunks`] — O(occupied blocks) for sources with a
+//!   cheap column-range bound — and streams one extracted, zero-padded
+//!   tile at a time over bounded channels (backpressure), so even a
+//!   65,536² operand never materializes densely.
+//! * Each **shard** is a long-lived worker thread owning the
+//!   [`TileExecutor`](crate::ec::TileExecutor)s of the MCAs a
+//!   [`PlacementPolicy`] assigned to it; per-shard programming runs in
+//!   parallel across shards.
+//! * The leader gathers partial products and reduces them in
+//!   **deterministic chunk order** ([`reduce_partials`]), so results are
+//!   bit-reproducible for a given seed regardless of shard count,
+//!   placement policy or thread scheduling.
+
+pub mod placement;
+pub(crate) mod shard;
+
+pub use placement::{
+    LoadBalancedPlacement, Placement, PlacementPolicy, RoundRobinPlacement,
+    SparsityAwarePlacement,
+};
+pub use shard::{exec_stream_seed, mca_seed, new_executor};
+
+use crate::config::{SolveOptions, SystemConfig};
+use crate::linalg::{Matrix, Vector};
+use crate::matrices::MatrixSource;
+use crate::mca::EnergyLedger;
+use crate::metrics::SolveReport;
+use crate::runtime::Backend;
+use crate::virtualization::{ChunkPlan, ChunkSpec};
+use shard::{ShardContext, ShardJob, ShardMsg};
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Bound on in-flight jobs per shard (backpressure: caps leader-side tile
+/// extraction memory at `depth × shards` tiles).
+pub(crate) const JOB_QUEUE_DEPTH: usize = 4;
+
+/// Reduce gathered per-chunk partial products into the output vector in
+/// deterministic `(block_row, block_col)` order, so the sum is
+/// bit-reproducible regardless of shard scheduling.  Rows past `m` (the
+/// zero-padded tail of the last block row) are dropped.
+pub fn reduce_partials(
+    m: usize,
+    tile: usize,
+    partials: &BTreeMap<(usize, usize), Vector>,
+) -> Vector {
+    let mut y = Vector::zeros(m);
+    for ((bi, _bj), part) in partials {
+        let row0 = bi * tile;
+        for (k, v) in part.data().iter().enumerate() {
+            let idx = row0 + k;
+            if idx < m {
+                y.set(idx, y.get(idx) + v);
+            }
+        }
+    }
+    y
+}
+
+/// One-time programming cost and shape summary of a resident operand.
+#[derive(Clone, Debug)]
+pub struct ProgramReport {
+    pub m: usize,
+    pub n: usize,
+    pub chunks_total: usize,
+    /// Chunks actually written to the grid (non-zero blocks).
+    pub chunks_resident: usize,
+    pub chunks_skipped: usize,
+    pub mcas_used: usize,
+    pub normalization_factor: usize,
+    pub mean_wv_iters: f64,
+    /// Total write energy across MCAs — paid once for the residency.
+    pub write_energy_j: f64,
+    /// Max write latency across MCAs (wall-clock model: rows serial per
+    /// MCA, MCAs parallel).
+    pub write_latency_s: f64,
+    pub wall_seconds: f64,
+}
+
+/// Result of one served solve.
+#[derive(Clone, Debug)]
+pub struct ServeSolve {
+    pub y: Vector,
+    /// Monotonic per-residency solve index (drives the noise counter).
+    pub solve_index: u64,
+    /// Wall-clock share of this vector (batch wall / batch size).
+    pub wall_seconds: f64,
+}
+
+/// One executed batch: the per-vector results plus the whole batch's wall
+/// clock (what serving statistics account against).
+pub struct BatchOutcome {
+    pub solves: Vec<ServeSolve>,
+    pub wall_seconds: f64,
+}
+
+/// A sharded execution plane bound to one operand's [`ChunkPlan`].
+///
+/// Built by [`build`](ExecutionPlane::build), which spawns the shard pool
+/// under the configured [`Placement`] policy.  Two execution modes share
+/// it:
+///
+/// * [`execute_once`](ExecutionPlane::execute_once) — the one-shot path:
+///   program + execute fused per chunk, full [`SolveReport`], plane
+///   consumed (workers join on drop).
+/// * [`program`](ExecutionPlane::program) then
+///   [`execute_batch`](ExecutionPlane::execute_batch) — the resident path:
+///   the write–verify pass is paid once, every batch afterwards costs only
+///   input encodes and crossbar reads.
+pub struct ExecutionPlane {
+    opts: SolveOptions,
+    plan: ChunkPlan,
+    senders: Vec<mpsc::SyncSender<ShardJob>>,
+    results: mpsc::Receiver<ShardMsg>,
+    handles: Vec<JoinHandle<()>>,
+    /// MCA index → shard index (stable for the plane's lifetime).
+    assignment: Vec<usize>,
+    /// Set once [`program`](Self::program) has started (even a failed
+    /// pass may leave tiles resident on some shards, so a plane is never
+    /// re-programmable).  Distinct from `resident_chunks`: an operand
+    /// whose every block is zero programs successfully with zero resident
+    /// chunks and still serves (all-zero) solves.
+    programmed: bool,
+    /// Set only when a programming pass completed successfully —
+    /// [`execute_batch`](Self::execute_batch) refuses to serve from a
+    /// partially programmed plane (missing chunks would silently drop
+    /// their contribution to `y`).
+    program_ok: bool,
+    resident_chunks: usize,
+    next_solve: u64,
+    /// Latest cumulative ledger snapshot per MCA.
+    ledgers: Vec<EnergyLedger>,
+}
+
+impl ExecutionPlane {
+    /// Spawn the shard pool for `source`'s chunk plan.  `source` is only
+    /// used for placement statistics here; tiles are extracted lazily by
+    /// the execution calls.
+    pub fn build(
+        source: &dyn MatrixSource,
+        config: &SystemConfig,
+        opts: &SolveOptions,
+        backend: Backend,
+    ) -> Result<ExecutionPlane, String> {
+        let (m, n) = (source.nrows(), source.ncols());
+        let plan = ChunkPlan::new(config.geometry(), m, n);
+        let tile = config.geometry().cell_size;
+        if !backend.tile_sizes().contains(&tile) {
+            return Err(format!(
+                "cell size {tile} has no compiled artifact (available: {:?})",
+                backend.tile_sizes()
+            ));
+        }
+        let mcas = plan.geometry.mcas();
+        let shards = opts.workers.max(1).min(mcas);
+        let policy = opts.placement.policy();
+        let assignment = policy.assign(&plan, source, shards);
+        if assignment.len() != mcas || assignment.iter().any(|&s| s >= shards) {
+            return Err(format!(
+                "placement {} produced a malformed assignment ({} entries for {mcas} MCAs, \
+                 {shards} shards)",
+                policy.name(),
+                assignment.len()
+            ));
+        }
+
+        let (msg_tx, msg_rx) = mpsc::channel::<ShardMsg>();
+        let mut senders = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<ShardJob>(JOB_QUEUE_DEPTH);
+            senders.push(tx);
+            let ctx = ShardContext {
+                cell: tile,
+                opts: opts.clone(),
+                backend: backend.clone(),
+                jobs: rx,
+                out: msg_tx.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("meliso-shard-{s}"))
+                    .spawn(move || shard::run(ctx))
+                    .map_err(|e| format!("spawn shard {s}: {e}"))?,
+            );
+        }
+        drop(msg_tx);
+
+        Ok(ExecutionPlane {
+            opts: opts.clone(),
+            plan,
+            senders,
+            results: msg_rx,
+            handles,
+            assignment,
+            programmed: false,
+            program_ok: false,
+            resident_chunks: 0,
+            next_solve: 0,
+            ledgers: vec![EnergyLedger::default(); mcas],
+        })
+    }
+
+    pub fn plan(&self) -> &ChunkPlan {
+        &self.plan
+    }
+
+    /// Number of shard worker threads.
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// MCA index → shard index, as decided by the placement policy.
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    /// Chunks currently resident (0 before [`program`](Self::program)).
+    pub fn resident_chunks(&self) -> usize {
+        self.resident_chunks
+    }
+
+    /// Latest cumulative per-MCA ledger snapshots.
+    pub fn ledgers(&self) -> &[EnergyLedger] {
+        &self.ledgers
+    }
+
+    /// Total (write, read) energy across all MCAs so far.
+    pub fn energy_totals(&self) -> (f64, f64) {
+        (
+            self.ledgers.iter().map(|l| l.write_energy_j).sum(),
+            self.ledgers.iter().map(|l| l.read_energy_j).sum(),
+        )
+    }
+
+    /// Stream the occupied chunks to the shards: enumerate through
+    /// [`ChunkPlan::nonzero_chunks`], extract one zero-padded tile at a
+    /// time, and dispatch to the owning shard.  Returns
+    /// `(dispatched, skipped)`.
+    fn scatter<F>(&self, source: &dyn MatrixSource, mut job: F) -> Result<(usize, usize), String>
+    where
+        F: FnMut(ChunkSpec, Matrix) -> ShardJob,
+    {
+        let tile = self.plan.geometry.cell_size;
+        let mut dispatched = 0usize;
+        for spec in self.plan.nonzero_chunks(source) {
+            let a_tile = source.block(spec.row0, spec.col0, tile, tile);
+            let s = self.assignment[spec.mca_index];
+            self.senders[s]
+                .send(job(spec, a_tile))
+                .map_err(|_| format!("shard {s} died"))?;
+            dispatched += 1;
+        }
+        // Close the walk so every shard snapshots its ledgers.
+        for (s, tx) in self.senders.iter().enumerate() {
+            tx.send(ShardJob::Seal)
+                .map_err(|_| format!("shard {s} died at seal"))?;
+        }
+        Ok((dispatched, self.plan.total_chunks() - dispatched))
+    }
+
+    fn check_dims(&self, source: &dyn MatrixSource) -> Result<(), String> {
+        if source.nrows() != self.plan.m || source.ncols() != self.plan.n {
+            return Err(format!(
+                "operand is {}x{} but the plane was built for {}x{}",
+                source.nrows(),
+                source.ncols(),
+                self.plan.m,
+                self.plan.n
+            ));
+        }
+        Ok(())
+    }
+
+    /// Run one distributed MVM end-to-end (the one-shot path): program +
+    /// execute fused per chunk, exact ground-truth comparison when
+    /// `opts.ground_truth` is set, full [`SolveReport`].  Consumes the
+    /// plane; the shard pool joins on drop.
+    pub fn execute_once(
+        mut self,
+        source: &dyn MatrixSource,
+        x: &Vector,
+    ) -> Result<SolveReport, String> {
+        if self.programmed {
+            // The programming pass consumed the per-MCA persistent streams;
+            // fusing another program+execute on top would break the
+            // bit-reproducibility contract and double-charge write energy.
+            return Err(
+                "this plane already holds a resident operand; build a fresh plane for \
+                 one-shot solves"
+                    .to_string(),
+            );
+        }
+        let start = Instant::now();
+        self.check_dims(source)?;
+        let (m, n) = (self.plan.m, self.plan.n);
+        if x.len() != n {
+            return Err(format!("x has length {} but A has {n} columns", x.len()));
+        }
+        let tile = self.plan.geometry.cell_size;
+        let (dispatched, skipped) = self.scatter(source, |spec, a_tile| ShardJob::RunOnce {
+            spec,
+            a_tile,
+            x_chunk: x.slice_padded(spec.col0, tile),
+        })?;
+        // One-shot: the walk is fully dispatched, so close the job
+        // channels now.  A shard that panics then drops its reply sender
+        // on exit, turning the gather below into a clean error instead of
+        // a hang (parity with the pre-plane coordinator).
+        let shards = self.senders.len();
+        self.senders.clear();
+        let mut partials: BTreeMap<(usize, usize), Vector> = BTreeMap::new();
+        let mut wv_sum = 0.0f64;
+        let mut got = 0usize;
+        let mut sealed = 0usize;
+        while got < dispatched || sealed < shards {
+            match self.results.recv() {
+                Ok(ShardMsg::Once {
+                    block_row,
+                    block_col,
+                    outcome,
+                }) => {
+                    got += 1;
+                    let (partial, iters) =
+                        outcome.map_err(|e| format!("chunk ({block_row},{block_col}): {e}"))?;
+                    wv_sum += iters as f64;
+                    partials.insert((block_row, block_col), partial);
+                }
+                Ok(ShardMsg::Sealed { ledgers }) => {
+                    sealed += 1;
+                    for (idx, l) in ledgers {
+                        self.ledgers[idx] = l;
+                    }
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    return Err("shards exited before delivering all results".to_string())
+                }
+            }
+        }
+        let y = reduce_partials(m, tile, &partials);
+
+        // Ground truth (opt-out: O(m·n) host work, infeasible at 65k²).
+        let mut report = SolveReport::empty(m);
+        if self.opts.ground_truth {
+            let b = source.matvec(x);
+            report.rel_err_l2 = crate::metrics::rel_err_l2(&y, &b);
+            report.rel_err_inf = crate::metrics::rel_err_inf(&y, &b);
+        } else {
+            report.rel_err_l2 = f64::NAN;
+            report.rel_err_inf = f64::NAN;
+        }
+        report.y = y;
+        report.chunks_total = self.plan.total_chunks();
+        report.chunks_skipped = skipped;
+        report.normalization_factor = self.plan.normalization_factor();
+        report.row_reassignments = self.plan.row_reassignments();
+        report.mean_wv_iters = if dispatched > 0 {
+            wv_sum / dispatched as f64
+        } else {
+            0.0
+        };
+        report.fill_from_ledgers(&self.ledgers);
+        report.wall_seconds = start.elapsed().as_secs_f64();
+        crate::log_info!(
+            "plane",
+            "solve {}x{n}: {} chunks ({} skipped) on {} shards, eps_l2={:.4e}, wall={:.2}s",
+            m,
+            dispatched,
+            skipped,
+            shards,
+            report.rel_err_l2,
+            report.wall_seconds
+        );
+        Ok(report)
+    }
+
+    /// Program `source` resident: scatter and write–verify every non-zero
+    /// chunk (per-shard programming runs in parallel) and return the
+    /// one-time programming report.  Afterwards
+    /// [`execute_batch`](Self::execute_batch) serves unlimited solves.
+    pub fn program(&mut self, source: &dyn MatrixSource) -> Result<ProgramReport, String> {
+        if self.programmed {
+            return Err("an operand is already resident on this plane".to_string());
+        }
+        let start = Instant::now();
+        self.check_dims(source)?;
+        // Flag before dispatch: even a failed pass may leave some chunks
+        // resident on shards, so a retry on the same plane must be
+        // rejected (it would duplicate residency and desynchronize every
+        // later gather).
+        self.programmed = true;
+        let (m, n) = (self.plan.m, self.plan.n);
+        let (dispatched, skipped) =
+            self.scatter(source, |spec, a_tile| ShardJob::Program { spec, a_tile })?;
+
+        let shards = self.senders.len();
+        let mut iters_sum = 0.0f64;
+        let mut acks = 0usize;
+        let mut sealed = 0usize;
+        let mut first_err: Option<String> = None;
+        while acks < dispatched || sealed < shards {
+            match self.results.recv() {
+                Ok(ShardMsg::Programmed {
+                    block_row,
+                    block_col,
+                    outcome,
+                }) => {
+                    acks += 1;
+                    match outcome {
+                        Ok(iters) => iters_sum += iters as f64,
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(format!(
+                                    "programming chunk ({block_row},{block_col}): {e}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(ShardMsg::Sealed { ledgers }) => {
+                    sealed += 1;
+                    for (idx, l) in ledgers {
+                        self.ledgers[idx] = l;
+                    }
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some("shards exited during programming".to_string());
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        self.resident_chunks = dispatched;
+        self.program_ok = true;
+
+        let used: Vec<&EnergyLedger> =
+            self.ledgers.iter().filter(|l| l.write_passes > 0).collect();
+        let write_energy_j: f64 = used.iter().map(|l| l.write_energy_j).sum();
+        let write_latency_s = used.iter().map(|l| l.write_latency_s).fold(0.0, f64::max);
+        let report = ProgramReport {
+            m,
+            n,
+            chunks_total: self.plan.total_chunks(),
+            chunks_resident: dispatched,
+            chunks_skipped: skipped,
+            mcas_used: used.len(),
+            normalization_factor: self.plan.normalization_factor(),
+            mean_wv_iters: if dispatched > 0 {
+                iters_sum / dispatched as f64
+            } else {
+                0.0
+            },
+            write_energy_j,
+            write_latency_s,
+            wall_seconds: start.elapsed().as_secs_f64(),
+        };
+        crate::log_info!(
+            "plane",
+            "programmed {m}x{n}: {} resident chunks ({} skipped) on {} MCAs / {} shards, \
+             E_w {:.3e} J, wall {:.2}s",
+            dispatched,
+            skipped,
+            report.mcas_used,
+            shards,
+            write_energy_j,
+            report.wall_seconds
+        );
+        Ok(report)
+    }
+
+    /// Serve a batch of solves against the resident operand in one chunk
+    /// walk: every resident tile is visited once and all input vectors run
+    /// against it.  Bit-identical to the same vectors solved sequentially
+    /// (counter-based execution noise streams — see [`exec_stream_seed`]).
+    pub fn execute_batch(&mut self, xs: &[Vector]) -> Result<BatchOutcome, String> {
+        let n = self.plan.n;
+        for (k, x) in xs.iter().enumerate() {
+            if x.len() != n {
+                return Err(format!(
+                    "batch vector {k} has length {} but A has {n} columns",
+                    x.len()
+                ));
+            }
+        }
+        if xs.is_empty() {
+            return Ok(BatchOutcome {
+                solves: Vec::new(),
+                wall_seconds: 0.0,
+            });
+        }
+        if !self.program_ok {
+            return Err(if self.programmed {
+                "programming failed on this plane; build a fresh plane".to_string()
+            } else {
+                "no operand resident on this plane (call program first)".to_string()
+            });
+        }
+        let start = Instant::now();
+        let first_solve = self.next_solve;
+        self.next_solve += xs.len() as u64;
+        let shared = Arc::new(xs.to_vec());
+        for (s, tx) in self.senders.iter().enumerate() {
+            tx.send(ShardJob::Execute {
+                first_solve,
+                xs: shared.clone(),
+            })
+            .map_err(|_| format!("shard {s} died"))?;
+        }
+
+        // Gather: one partial per (resident chunk, vector), then one
+        // ledger snapshot per shard.  Drained fully even on error so the
+        // ledgers stay synced and the next batch starts clean.
+        let shards = self.senders.len();
+        let expected = self.resident_chunks * xs.len();
+        let mut per_solve: Vec<BTreeMap<(usize, usize), Vector>> =
+            (0..xs.len()).map(|_| BTreeMap::new()).collect();
+        let mut got = 0usize;
+        let mut sealed = 0usize;
+        let mut first_err: Option<String> = None;
+        while got < expected || sealed < shards {
+            match self.results.recv() {
+                Ok(ShardMsg::Partial {
+                    solve,
+                    block_row,
+                    block_col,
+                    outcome,
+                }) => {
+                    got += 1;
+                    match outcome {
+                        Ok(v) => {
+                            per_solve[(solve - first_solve) as usize]
+                                .insert((block_row, block_col), v);
+                        }
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(format!(
+                                    "chunk ({block_row},{block_col}) solve {solve}: {e}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(ShardMsg::Sealed { ledgers }) => {
+                    sealed += 1;
+                    for (idx, l) in ledgers {
+                        self.ledgers[idx] = l;
+                    }
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some("shards exited mid-solve".to_string());
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let m = self.plan.m;
+        let tile = self.plan.geometry.cell_size;
+        let solves = per_solve
+            .into_iter()
+            .enumerate()
+            .map(|(k, partials)| ServeSolve {
+                y: reduce_partials(m, tile, &partials),
+                solve_index: first_solve + k as u64,
+                wall_seconds: wall / xs.len() as f64,
+            })
+            .collect();
+        Ok(BatchOutcome {
+            solves,
+            wall_seconds: wall,
+        })
+    }
+}
+
+impl Drop for ExecutionPlane {
+    fn drop(&mut self) {
+        // Closing the job channels ends the shard loops.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::materials::Material;
+    use crate::matrices::{BandedSource, DenseSource};
+    use crate::runtime::native::NativeBackend;
+
+    fn native() -> Backend {
+        Arc::new(NativeBackend::new())
+    }
+
+    fn dense(m: usize, n: usize, seed: u64) -> DenseSource {
+        DenseSource::new(Matrix::standard_normal(m, n, seed))
+    }
+
+    #[test]
+    fn one_shot_bit_reproducible_across_shards_and_placements() {
+        let src = dense(64, 64, 7);
+        let x = Vector::standard_normal(64, 8);
+        let config = SystemConfig::new(2, 2, 32);
+        let run = |workers: usize, placement: Placement| {
+            let opts = SolveOptions::default()
+                .with_device(Material::TaOxHfOx)
+                .with_seed(99)
+                .with_workers(workers)
+                .with_placement(placement);
+            ExecutionPlane::build(&src, &config, &opts, native())
+                .unwrap()
+                .execute_once(&src, &x)
+                .unwrap()
+        };
+        let reference = run(1, Placement::RoundRobin);
+        for workers in [2, 4] {
+            for placement in [
+                Placement::RoundRobin,
+                Placement::LoadBalanced,
+                Placement::SparsityAware,
+            ] {
+                let r = run(workers, placement);
+                assert_eq!(
+                    reference.y, r.y,
+                    "{workers} workers, {}",
+                    placement.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resident_plane_program_then_batch() {
+        let src = dense(48, 48, 21);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
+        let program = plane.program(&src).unwrap();
+        assert_eq!(program.chunks_total, 4);
+        assert_eq!(program.chunks_resident, 4);
+        let xs: Vec<Vector> = (0..2).map(|k| Vector::standard_normal(48, 30 + k)).collect();
+        let batch = plane.execute_batch(&xs).unwrap();
+        assert_eq!(batch.solves.len(), 2);
+        for (k, s) in batch.solves.iter().enumerate() {
+            assert_eq!(s.solve_index, k as u64);
+            let b = src.matvec(&xs[k]);
+            let err = s.y.sub(&b).norm_l2() / b.norm_l2();
+            assert!(err < 0.1, "solve {k}: {err}");
+        }
+    }
+
+    #[test]
+    fn execute_before_program_is_error() {
+        let src = dense(32, 32, 5);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane =
+            ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
+        let x = Vector::standard_normal(32, 6);
+        let err = plane.execute_batch(std::slice::from_ref(&x)).unwrap_err();
+        assert!(err.contains("no operand resident"), "{err}");
+    }
+
+    #[test]
+    fn double_program_is_error() {
+        let src = dense(32, 32, 9);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane =
+            ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
+        plane.program(&src).unwrap();
+        assert!(plane.program(&src).is_err());
+    }
+
+    #[test]
+    fn plane_rejects_mismatched_operand() {
+        let src = dense(32, 32, 11);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let plane =
+            ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
+        let other = dense(16, 16, 12);
+        let x = Vector::standard_normal(16, 13);
+        assert!(plane.execute_once(&other, &x).is_err());
+    }
+
+    #[test]
+    fn sparse_operand_streams_occupied_chunks_only() {
+        let src = BandedSource::new(256, 4, 1.0, 10.0, 0.2, 3);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default()
+            .with_device(Material::EpiRam)
+            .with_placement(Placement::SparsityAware);
+        let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
+        let program = plane.program(&src).unwrap();
+        assert_eq!(program.chunks_total, 64);
+        assert!(program.chunks_skipped > 30, "{}", program.chunks_skipped);
+        assert_eq!(
+            program.chunks_resident + program.chunks_skipped,
+            program.chunks_total
+        );
+        let x = Vector::standard_normal(256, 9);
+        let b = src.matvec(&x);
+        let batch = plane.execute_batch(std::slice::from_ref(&x)).unwrap();
+        let err = batch.solves[0].y.sub(&b).norm_l2() / b.norm_l2();
+        assert!(err < 0.1, "{err}");
+    }
+
+    /// A source whose every block is certainly zero: programs successfully
+    /// with zero resident chunks and must still serve (all-zero) solves.
+    struct ZeroSource(usize);
+
+    impl MatrixSource for ZeroSource {
+        fn nrows(&self) -> usize {
+            self.0
+        }
+
+        fn ncols(&self) -> usize {
+            self.0
+        }
+
+        fn block(&self, _r0: usize, _c0: usize, h: usize, w: usize) -> Matrix {
+            Matrix::zeros(h, w)
+        }
+
+        fn matvec(&self, _x: &Vector) -> Vector {
+            Vector::zeros(self.0)
+        }
+
+        fn block_is_zero(&self, _r0: usize, _c0: usize, _h: usize, _w: usize) -> bool {
+            true
+        }
+
+        fn max_abs(&self) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn all_zero_operand_programs_and_serves_zero_solves() {
+        let src = ZeroSource(64);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
+        let program = plane.program(&src).unwrap();
+        assert_eq!(program.chunks_resident, 0);
+        assert_eq!(program.chunks_skipped, program.chunks_total);
+        let x = Vector::standard_normal(64, 40);
+        let batch = plane.execute_batch(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(batch.solves.len(), 1);
+        assert_eq!(batch.solves[0].y, Vector::zeros(64));
+    }
+
+    #[test]
+    fn reduce_partials_tail_rows_are_dropped() {
+        // m = 40 with tile 32: block row 1 contributes rows 32..40 only;
+        // its padded tail (entries 8..32) must not leak into y.
+        let mut partials = BTreeMap::new();
+        partials.insert((0usize, 0usize), Vector::from_vec(vec![1.0; 32]));
+        let mut tail = vec![2.0; 32];
+        for (i, t) in tail.iter_mut().enumerate().skip(8) {
+            *t = 100.0 + i as f64; // padded garbage that must be dropped
+        }
+        partials.insert((1usize, 0usize), Vector::from_vec(tail));
+        let y = reduce_partials(40, 32, &partials);
+        assert_eq!(y.len(), 40);
+        for i in 0..32 {
+            assert_eq!(y.get(i), 1.0, "row {i}");
+        }
+        for i in 32..40 {
+            assert_eq!(y.get(i), 2.0, "row {i}");
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Placement policies: how MCAs are grouped into shards (worker threads).
+//!
+//! The chunk→MCA binding is fixed by the virtualization plan (paper
+//! Algorithm 8 — chunk `(i, j)` always lands on MCA `(i mod R, j mod C)`),
+//! and every MCA owns its own deterministic RNG/noise streams.  Placement
+//! therefore only decides *which shard owns each MCA*, which changes
+//! scheduling and load balance but can never change a result: any policy
+//! preserves bit-reproducibility for a fixed seed.
+
+use crate::matrices::MatrixSource;
+use crate::virtualization::ChunkPlan;
+
+/// Maps every MCA of a [`ChunkPlan`] to one of `shards` worker threads.
+///
+/// Implementations must return one shard index per MCA
+/// (`plan.geometry.mcas()` entries, each `< shards`); the
+/// [`ExecutionPlane`](crate::plane::ExecutionPlane) rejects malformed
+/// assignments.  An MCA never migrates between shards afterwards, so its
+/// RNG stream, fixed-pattern noise and energy ledger stay consistent.
+pub trait PlacementPolicy: Send + Sync {
+    /// Short name for logs and reports.
+    fn name(&self) -> &'static str;
+
+    /// Compute the MCA→shard assignment.
+    fn assign(&self, plan: &ChunkPlan, source: &dyn MatrixSource, shards: usize) -> Vec<usize>;
+}
+
+/// The historical policy: MCA `i` is owned by shard `i % shards`.
+pub struct RoundRobinPlacement;
+
+impl PlacementPolicy for RoundRobinPlacement {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn assign(&self, plan: &ChunkPlan, _source: &dyn MatrixSource, shards: usize) -> Vec<usize> {
+        let shards = shards.max(1);
+        (0..plan.geometry.mcas()).map(|i| i % shards).collect()
+    }
+}
+
+/// Balances the *planned* chunk count per shard (longest-processing-time
+/// greedy over `assignments_per_mca`).  Helps when the chunk grid does not
+/// divide evenly into the tile grid, where round-robin leaves some shards
+/// with systematically more reassignments than others.
+pub struct LoadBalancedPlacement;
+
+impl PlacementPolicy for LoadBalancedPlacement {
+    fn name(&self) -> &'static str {
+        "load-balanced"
+    }
+
+    fn assign(&self, plan: &ChunkPlan, _source: &dyn MatrixSource, shards: usize) -> Vec<usize> {
+        balance(&plan.assignments_per_mca(), shards)
+    }
+}
+
+/// Balances the *occupied* chunk count per shard: zero blocks are never
+/// dispatched, so on sparse (banded) operands the diagonal MCAs carry
+/// nearly all the work and round-robin can idle whole shards.  Counting
+/// through [`ChunkPlan::nonzero_chunks`] is O(occupied blocks) for sources
+/// with a cheap column-range bound (e.g. `BandedSource`).
+pub struct SparsityAwarePlacement;
+
+impl PlacementPolicy for SparsityAwarePlacement {
+    fn name(&self) -> &'static str {
+        "sparsity-aware"
+    }
+
+    fn assign(&self, plan: &ChunkPlan, source: &dyn MatrixSource, shards: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; plan.geometry.mcas()];
+        for spec in plan.nonzero_chunks(source) {
+            counts[spec.mca_index] += 1;
+        }
+        balance(&counts, shards)
+    }
+}
+
+/// Greedy longest-processing-time assignment: visit MCAs by descending
+/// weight (ties by index, so the result is deterministic) and hand each to
+/// the least-loaded shard.
+fn balance(counts: &[usize], shards: usize) -> Vec<usize> {
+    let shards = shards.max(1);
+    let mut order: Vec<usize> = (0..counts.len()).collect();
+    order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+    let mut load = vec![0usize; shards];
+    let mut assign = vec![0usize; counts.len()];
+    for mca in order {
+        let mut best = 0usize;
+        for (s, &l) in load.iter().enumerate().skip(1) {
+            if l < load[best] {
+                best = s;
+            }
+        }
+        assign[mca] = best;
+        // Even zero-weight MCAs count a little, so idle MCAs still spread
+        // over shards instead of piling onto shard 0.
+        load[best] += counts[mca].max(1);
+    }
+    assign
+}
+
+/// Named placement selection, carried by
+/// [`SolveOptions`](crate::config::SolveOptions) so configs and the CLI can
+/// pick a policy; embedders with custom policies pass a
+/// [`PlacementPolicy`] object to the plane directly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    RoundRobin,
+    LoadBalanced,
+    SparsityAware,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Option<Placement> {
+        match s.to_ascii_lowercase().as_str() {
+            "round-robin" | "roundrobin" | "rr" => Some(Placement::RoundRobin),
+            "load-balanced" | "loadbalanced" | "balanced" => Some(Placement::LoadBalanced),
+            "sparsity-aware" | "sparsityaware" | "sparsity" => Some(Placement::SparsityAware),
+            _ => None,
+        }
+    }
+
+    /// The policy implementation behind the name.
+    pub fn policy(self) -> &'static dyn PlacementPolicy {
+        match self {
+            Placement::RoundRobin => &RoundRobinPlacement,
+            Placement::LoadBalanced => &LoadBalancedPlacement,
+            Placement::SparsityAware => &SparsityAwarePlacement,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        self.policy().name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::matrices::{BandedSource, DenseSource};
+    use crate::virtualization::SystemGeometry;
+
+    fn dense_plan(m: usize, n: usize) -> (ChunkPlan, DenseSource) {
+        let plan = ChunkPlan::new(SystemGeometry::new(2, 2, 32), m, n);
+        (plan, DenseSource::new(Matrix::standard_normal(m, n, 1)))
+    }
+
+    #[test]
+    fn round_robin_matches_modulo() {
+        let (plan, src) = dense_plan(128, 128);
+        assert_eq!(RoundRobinPlacement.assign(&plan, &src, 3), vec![0, 1, 2, 0]);
+        assert_eq!(RoundRobinPlacement.assign(&plan, &src, 1), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn assignments_are_well_formed() {
+        let (plan, src) = dense_plan(100, 40);
+        for placement in [
+            Placement::RoundRobin,
+            Placement::LoadBalanced,
+            Placement::SparsityAware,
+        ] {
+            let assign = placement.policy().assign(&plan, &src, 3);
+            assert_eq!(assign.len(), plan.geometry.mcas(), "{}", placement.name());
+            assert!(assign.iter().all(|&s| s < 3), "{}", placement.name());
+        }
+    }
+
+    #[test]
+    fn load_balanced_spreads_uneven_grids() {
+        // 3x3 chunk grid on a 2x2 tile grid: MCA 0 carries 4 chunks, the
+        // others 2/2/1.  Greedy LPT keeps the heaviest MCA alone.
+        let plan = ChunkPlan::new(SystemGeometry::new(2, 2, 32), 96, 96);
+        let src = DenseSource::new(Matrix::standard_normal(96, 96, 2));
+        let assign = LoadBalancedPlacement.assign(&plan, &src, 2);
+        let counts = plan.assignments_per_mca();
+        let mut load = [0usize; 2];
+        for (mca, &shard) in assign.iter().enumerate() {
+            load[shard] += counts[mca];
+        }
+        assert_eq!(load.iter().sum::<usize>(), plan.total_chunks());
+        assert!(load[0].abs_diff(load[1]) <= 1, "{load:?}");
+    }
+
+    #[test]
+    fn sparsity_aware_balances_occupied_chunks() {
+        // Banded operand: only near-diagonal chunks are occupied, so the
+        // occupied count per MCA is far from uniform.
+        let src = BandedSource::new(256, 4, 1.0, 10.0, 0.2, 3);
+        let plan = ChunkPlan::new(SystemGeometry::new(2, 2, 32), 256, 256);
+        let assign = SparsityAwarePlacement.assign(&plan, &src, 2);
+        let mut occupied = vec![0usize; plan.geometry.mcas()];
+        for spec in plan.nonzero_chunks(&src) {
+            occupied[spec.mca_index] += 1;
+        }
+        let mut load = [0usize; 2];
+        for (mca, &shard) in assign.iter().enumerate() {
+            load[shard] += occupied[mca];
+        }
+        let total: usize = occupied.iter().sum();
+        assert_eq!(load.iter().sum::<usize>(), total);
+        let spread = load[0].abs_diff(load[1]);
+        assert!(spread * 4 <= total, "load {load:?} of {total}");
+    }
+
+    #[test]
+    fn placement_parse_and_names() {
+        assert_eq!(Placement::parse("round-robin"), Some(Placement::RoundRobin));
+        assert_eq!(Placement::parse("BALANCED"), Some(Placement::LoadBalanced));
+        assert_eq!(Placement::parse("sparsity"), Some(Placement::SparsityAware));
+        assert_eq!(Placement::parse("nope"), None);
+        assert_eq!(Placement::RoundRobin.name(), "round-robin");
+        assert_eq!(Placement::SparsityAware.name(), "sparsity-aware");
+    }
+}

@@ -1,0 +1,260 @@
+//! Shard worker: the single scatter/gather execution loop behind both the
+//! one-shot coordinator and the resident serving sessions.
+//!
+//! A shard is one long-lived thread owning the [`TileExecutor`]s of the
+//! MCAs placed on it (see [`crate::plane::placement`]).  An MCA never
+//! migrates, so its RNG stream, its fixed-pattern noise and its energy
+//! ledger stay consistent across every job the shard processes.
+//!
+//! **Determinism contract.**  MCA `i`'s simulator is seeded from
+//! `(master seed, i)` ([`mca_seed`]) and the leader dispatches each MCA's
+//! chunks in a fixed row-major order over a FIFO channel, so programming
+//! consumes every per-MCA stream in the same sequence no matter how many
+//! shards run, which policy placed the MCAs, or how threads are scheduled.
+//! Resident execution noise comes from a *counter-based* stream derived
+//! from `(master seed, mca, solve index, chunk)` ([`exec_stream_seed`]), so
+//! a batch of N vectors is bit-identical to N sequential solves.
+
+use crate::config::SolveOptions;
+use crate::ec::{ProgrammedTile, TileExecutor};
+use crate::linalg::{Matrix, Vector};
+use crate::mca::{EnergyLedger, Mca};
+use crate::runtime::Backend;
+use crate::util::rng::Rng;
+use crate::virtualization::ChunkSpec;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Deterministic per-MCA seed derivation: MCA `i`'s simulator stream is a
+/// pure function of the master seed, independent of shard count and
+/// placement.
+pub fn mca_seed(master: u64, mca_index: usize) -> u64 {
+    master
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(mca_index as u64)
+}
+
+/// Counter-based execution-stream derivation (Philox-style): the noise for
+/// one `(solve, chunk)` pair is a pure function of the master seed and the
+/// chunk's coordinates.  This is what makes resident-session results
+/// independent of batching, shard count and scheduling order.
+pub fn exec_stream_seed(
+    master: u64,
+    mca_index: usize,
+    solve: u64,
+    block_row: usize,
+    block_col: usize,
+) -> u64 {
+    let mut h = master ^ 0xA076_1D64_78BD_642F;
+    for v in [
+        mca_index as u64,
+        solve,
+        block_row as u64,
+        block_col as u64,
+    ] {
+        h = (h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).rotate_left(23);
+        h = (h ^ (h >> 27)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    }
+    h ^ (h >> 31)
+}
+
+/// Build the persistent executor for one MCA.  Both execution modes (fused
+/// one-shot and program/execute residency) construct device state through
+/// this single path, so they see identical simulators for a given seed.
+pub fn new_executor(
+    opts: &SolveOptions,
+    cell: usize,
+    backend: &Backend,
+    mca_index: usize,
+) -> TileExecutor {
+    let mca = Mca::new(opts.material, cell, cell, mca_seed(opts.seed, mca_index));
+    TileExecutor::new(mca, backend.clone())
+}
+
+/// One unit of work sent from the leader to a shard.
+pub(crate) enum ShardJob {
+    /// One-shot fused program + execute for a single chunk (the original
+    /// `correctedMatVecMul` shape): answer with [`ShardMsg::Once`].
+    RunOnce {
+        spec: ChunkSpec,
+        a_tile: Matrix,
+        x_chunk: Vector,
+    },
+    /// Program one chunk resident on its MCA: answer with
+    /// [`ShardMsg::Programmed`] and keep the tile for later `Execute`s.
+    Program { spec: ChunkSpec, a_tile: Matrix },
+    /// Run a batch of input vectors against every resident tile: answer
+    /// with one [`ShardMsg::Partial`] per (tile, vector), then a
+    /// [`ShardMsg::Sealed`] ledger snapshot.
+    Execute {
+        first_solve: u64,
+        xs: Arc<Vec<Vector>>,
+    },
+    /// Close a `RunOnce`/`Program` scatter walk: answer with
+    /// [`ShardMsg::Sealed`].
+    Seal,
+}
+
+/// A shard's answer to the leader.
+pub(crate) enum ShardMsg {
+    Once {
+        block_row: usize,
+        block_col: usize,
+        /// `(partial product, write–verify iterations)`.
+        outcome: Result<(Vector, usize), String>,
+    },
+    Programmed {
+        block_row: usize,
+        block_col: usize,
+        /// Write–verify iterations the matrix encode used.
+        outcome: Result<usize, String>,
+    },
+    Partial {
+        solve: u64,
+        block_row: usize,
+        block_col: usize,
+        outcome: Result<Vector, String>,
+    },
+    /// Cumulative per-MCA ledger snapshot, closing one walk.
+    Sealed {
+        ledgers: Vec<(usize, EnergyLedger)>,
+    },
+}
+
+pub(crate) struct ShardContext {
+    pub cell: usize,
+    pub opts: SolveOptions,
+    pub backend: Backend,
+    pub jobs: mpsc::Receiver<ShardJob>,
+    pub out: mpsc::Sender<ShardMsg>,
+}
+
+/// Shard main loop: process jobs until the leader closes the channel.
+///
+/// The leader counts on exact reply cardinalities (one `Once`/`Programmed`
+/// per dispatched chunk, chunks × vectors `Partial`s per batch, one
+/// `Sealed` per walk), so every path below must send — never panic — or
+/// the gather would hang while other shards keep the reply channel open.
+pub(crate) fn run(ctx: ShardContext) {
+    let ec = ctx.opts.ec_options();
+    let mut executors: HashMap<usize, TileExecutor> = HashMap::new();
+    let mut resident: Vec<(ChunkSpec, ProgrammedTile)> = Vec::new();
+    while let Ok(job) = ctx.jobs.recv() {
+        match job {
+            ShardJob::RunOnce {
+                spec,
+                a_tile,
+                x_chunk,
+            } => {
+                let exec = executors.entry(spec.mca_index).or_insert_with(|| {
+                    new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
+                });
+                let outcome = exec
+                    .run_tile(&a_tile, &x_chunk, &ec)
+                    .map(|r| (r.y, r.encode.iters));
+                let msg = ShardMsg::Once {
+                    block_row: spec.block_row,
+                    block_col: spec.block_col,
+                    outcome,
+                };
+                if ctx.out.send(msg).is_err() {
+                    return;
+                }
+            }
+            ShardJob::Program { spec, a_tile } => {
+                let exec = executors.entry(spec.mca_index).or_insert_with(|| {
+                    new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
+                });
+                let outcome = match exec.program_tile(&a_tile, &ec) {
+                    Ok(tile) => {
+                        let iters = tile.encode.iters;
+                        resident.push((spec, tile));
+                        Ok(iters)
+                    }
+                    Err(e) => Err(e),
+                };
+                let msg = ShardMsg::Programmed {
+                    block_row: spec.block_row,
+                    block_col: spec.block_col,
+                    outcome,
+                };
+                if ctx.out.send(msg).is_err() {
+                    return;
+                }
+            }
+            ShardJob::Execute { first_solve, xs } => {
+                for (spec, tile) in &resident {
+                    for (k, x) in xs.iter().enumerate() {
+                        let solve = first_solve + k as u64;
+                        let outcome = match executors.get_mut(&spec.mca_index) {
+                            Some(exec) => {
+                                let x_chunk = x.slice_padded(spec.col0, ctx.cell);
+                                let stream = Rng::new(exec_stream_seed(
+                                    ctx.opts.seed,
+                                    spec.mca_index,
+                                    solve,
+                                    spec.block_row,
+                                    spec.block_col,
+                                ));
+                                let saved = exec.mca.replace_rng(stream);
+                                let out = exec.execute_tile(tile, &x_chunk, &ec).map(|r| r.y);
+                                exec.mca.replace_rng(saved);
+                                out
+                            }
+                            None => Err("resident chunk lost its executor".to_string()),
+                        };
+                        let msg = ShardMsg::Partial {
+                            solve,
+                            block_row: spec.block_row,
+                            block_col: spec.block_col,
+                            outcome,
+                        };
+                        if ctx.out.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                }
+                if send_sealed(&ctx, &executors).is_err() {
+                    return;
+                }
+            }
+            ShardJob::Seal => {
+                if send_sealed(&ctx, &executors).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn send_sealed(
+    ctx: &ShardContext,
+    executors: &HashMap<usize, TileExecutor>,
+) -> Result<(), mpsc::SendError<ShardMsg>> {
+    let ledgers = executors.iter().map(|(idx, e)| (*idx, e.mca.ledger)).collect();
+    ctx.out.send(ShardMsg::Sealed { ledgers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_stream_seed_separates_coordinates() {
+        let base = exec_stream_seed(42, 0, 0, 0, 0);
+        assert_ne!(base, exec_stream_seed(43, 0, 0, 0, 0));
+        assert_ne!(base, exec_stream_seed(42, 1, 0, 0, 0));
+        assert_ne!(base, exec_stream_seed(42, 0, 1, 0, 0));
+        assert_ne!(base, exec_stream_seed(42, 0, 0, 1, 0));
+        assert_ne!(base, exec_stream_seed(42, 0, 0, 0, 1));
+        assert_eq!(base, exec_stream_seed(42, 0, 0, 0, 0));
+    }
+
+    #[test]
+    fn mca_seed_is_stable_and_distinct() {
+        assert_eq!(mca_seed(7, 3), mca_seed(7, 3));
+        assert_ne!(mca_seed(7, 3), mca_seed(7, 4));
+        assert_ne!(mca_seed(7, 3), mca_seed(8, 3));
+    }
+}

@@ -8,10 +8,12 @@
 //! *resident*:
 //!
 //! * [`Session`] — one operand programmed onto the MCA grid through a
-//!   single write–verify pass, held by a pool of long-lived workers whose
-//!   [`crate::ec::TileExecutor`]s (fixed-pattern noise, energy ledgers)
-//!   persist across calls; [`Session::solve`] and [`Session::solve_batch`]
-//!   then pay only input-vector encodes and crossbar reads.
+//!   single write–verify pass, held resident by the shared sharded
+//!   [`crate::plane::ExecutionPlane`] (the same scatter/gather machinery
+//!   the one-shot coordinator uses) whose [`crate::ec::TileExecutor`]s
+//!   (fixed-pattern noise, energy ledgers) persist across calls;
+//!   [`Session::solve`] and [`Session::solve_batch`] then pay only
+//!   input-vector encodes and crossbar reads.
 //! * [`OperandCache`] — multi-tenant residency: an LRU cache of sessions
 //!   keyed by operand [`fingerprint`] + programming options.
 //! * Serving metrics — throughput, p50/p99 latency, and the

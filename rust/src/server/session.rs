@@ -1,62 +1,34 @@
 //! Resident crossbar sessions: program an operand once, serve unlimited
 //! solves against it.
 //!
-//! A [`Session`] owns a pool of **long-lived** worker threads.  At open
-//! time the leader walks the [`ChunkPlan`] exactly like the one-shot
-//! coordinator — extracting zero-padded chunks, skipping certainly-zero
-//! blocks — but instead of tearing everything down after one MVM, each
-//! worker keeps its [`TileExecutor`]s (persistent fixed-pattern noise and
-//! energy ledgers) and the [`ProgrammedTile`]s resident.  Every subsequent
-//! [`Session::solve`] / [`Session::solve_batch`] pays only the
-//! input-vector encode and the crossbar reads.
+//! A [`Session`] is the serving façade over the shared
+//! [`ExecutionPlane`](crate::plane::ExecutionPlane): at open time the
+//! plane programs every non-zero chunk onto its sharded worker pool
+//! (write–verify paid once, tiles and
+//! [`TileExecutor`](crate::ec::TileExecutor)s stay resident), and every
+//! subsequent [`Session::solve`] / [`Session::solve_batch`] pays only the
+//! input-vector encode and the crossbar reads.  The session itself owns
+//! the serving concerns on top: request validation, throughput/latency
+//! statistics and the write-once/read-per-solve energy split
+//! ([`crate::metrics::serving`]).
 //!
 //! **Determinism contract.**  Programming consumes each MCA's persistent
-//! stream in leader dispatch order (same as the one-shot coordinator), so
+//! stream in leader dispatch order (the same order as one-shot solves), so
 //! the resident image is bit-reproducible for a given seed.  Execution
 //! noise is drawn from a *counter-based* stream derived from
 //! `(master seed, mca, solve index, chunk)` — see [`exec_stream_seed`] —
 //! so a batch of N vectors is bit-identical to N sequential solves, and
-//! results are independent of worker count and scheduling.
+//! results are independent of shard count, placement and scheduling.
+
+pub use crate::plane::{exec_stream_seed, ProgramReport, ServeSolve};
 
 use crate::config::{SolveOptions, SystemConfig};
-use crate::coordinator::{self, worker};
-use crate::ec::{ProgrammedTile, TileExecutor};
 use crate::linalg::Vector;
 use crate::matrices::MatrixSource;
-use crate::mca::EnergyLedger;
 use crate::metrics::serving::{ServingReport, ServingStats};
+use crate::plane::ExecutionPlane;
 use crate::runtime::Backend;
-use crate::util::rng::Rng;
-use crate::virtualization::{ChunkPlan, ChunkSpec};
-use std::collections::{BTreeMap, HashMap};
-use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
-
-/// Counter-based execution-stream derivation (Philox-style): the noise for
-/// one `(solve, chunk)` pair is a pure function of the master seed and the
-/// chunk's coordinates.  This is what makes resident-session results
-/// independent of batching, worker count and scheduling order.
-pub fn exec_stream_seed(
-    master: u64,
-    mca_index: usize,
-    solve: u64,
-    block_row: usize,
-    block_col: usize,
-) -> u64 {
-    let mut h = master ^ 0xA076_1D64_78BD_642F;
-    for v in [
-        mca_index as u64,
-        solve,
-        block_row as u64,
-        block_col as u64,
-    ] {
-        h = (h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).rotate_left(23);
-        h = (h ^ (h >> 27)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    }
-    h ^ (h >> 31)
-}
 
 /// Backend-agnostic matrix–vector multiply provider for iterative solvers
 /// (`crate::iterative`).
@@ -106,70 +78,8 @@ impl MvmOperator for Session {
     }
 }
 
-/// One-time programming cost and shape summary of a resident operand.
-#[derive(Clone, Debug)]
-pub struct ProgramReport {
-    pub m: usize,
-    pub n: usize,
-    pub chunks_total: usize,
-    /// Chunks actually written to the grid (non-zero blocks).
-    pub chunks_resident: usize,
-    pub chunks_skipped: usize,
-    pub mcas_used: usize,
-    pub normalization_factor: usize,
-    pub mean_wv_iters: f64,
-    /// Total write energy across MCAs — paid once for the session.
-    pub write_energy_j: f64,
-    /// Max write latency across MCAs (wall-clock model: rows serial per
-    /// MCA, MCAs parallel).
-    pub write_latency_s: f64,
-    pub wall_seconds: f64,
-}
-
-/// Result of one served solve.
-#[derive(Clone, Debug)]
-pub struct ServeSolve {
-    pub y: Vector,
-    /// Monotonic per-session solve index (drives the noise counter).
-    pub solve_index: u64,
-    /// Wall-clock share of this vector (batch wall / batch size).
-    pub wall_seconds: f64,
-}
-
-enum ServeJob {
-    Program { spec: ChunkSpec, a_tile: crate::linalg::Matrix },
-    SealProgram,
-    Execute { first_solve: u64, xs: Arc<Vec<Vector>> },
-}
-
-enum WorkerMsg {
-    Programmed {
-        block_row: usize,
-        block_col: usize,
-        outcome: Result<usize, String>,
-    },
-    ProgramDone {
-        ledgers: Vec<(usize, EnergyLedger)>,
-    },
-    Partial {
-        solve: u64,
-        block_row: usize,
-        block_col: usize,
-        outcome: Result<Vector, String>,
-    },
-    ExecuteDone {
-        ledgers: Vec<(usize, EnergyLedger)>,
-    },
-}
-
 struct SessionInner {
-    senders: Vec<mpsc::SyncSender<ServeJob>>,
-    results: mpsc::Receiver<WorkerMsg>,
-    handles: Vec<JoinHandle<()>>,
-    next_solve: u64,
-    resident_chunks: usize,
-    /// Latest cumulative ledger snapshot per MCA.
-    ledgers: Vec<EnergyLedger>,
+    plane: ExecutionPlane,
     last_write_j: f64,
     last_read_j: f64,
     stats: ServingStats,
@@ -190,148 +100,31 @@ pub struct Session {
 }
 
 impl Session {
-    /// Program `source` onto the grid: spawn the long-lived worker pool,
-    /// scatter and write–verify every non-zero chunk, and gather the
-    /// one-time programming report.
+    /// Program `source` onto the grid: build the sharded execution plane,
+    /// scatter and write–verify every non-zero chunk (per-shard
+    /// programming runs in parallel), and record the one-time programming
+    /// report.
     pub fn open(
         source: Arc<dyn MatrixSource>,
         config: SystemConfig,
         opts: SolveOptions,
         backend: Backend,
     ) -> Result<Session, String> {
-        let start = Instant::now();
-        let (m, n) = (source.nrows(), source.ncols());
-        let plan = ChunkPlan::new(config.geometry(), m, n);
-        let tile = config.geometry().cell_size;
-        if !backend.tile_sizes().contains(&tile) {
-            return Err(format!(
-                "cell size {tile} has no compiled artifact (available: {:?})",
-                backend.tile_sizes()
-            ));
-        }
-
-        let workers = opts.workers.max(1).min(plan.geometry.mcas());
-        let (msg_tx, msg_rx) = mpsc::channel::<WorkerMsg>();
-        let mut senders = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let (tx, rx) = mpsc::sync_channel::<ServeJob>(coordinator::JOB_QUEUE_DEPTH);
-            senders.push(tx);
-            let ctx = ServeWorker {
-                cell: tile,
-                opts: opts.clone(),
-                backend: backend.clone(),
-                jobs: rx,
-                out: msg_tx.clone(),
-            };
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("meliso-serve-{w}"))
-                    .spawn(move || run_worker(ctx))
-                    .map_err(|e| format!("spawn serving worker {w}: {e}"))?,
-            );
-        }
-        drop(msg_tx);
-
-        // Scatter/program: walk chunks in deterministic order so each
-        // MCA's persistent stream sees its chunks in a fixed sequence.
-        let mut dispatched = 0usize;
-        let mut skipped = 0usize;
-        for spec in plan.chunks() {
-            if source.block_is_zero(spec.row0, spec.col0, tile, tile) {
-                skipped += 1;
-                continue;
-            }
-            let a_tile = source.block(spec.row0, spec.col0, tile, tile);
-            senders[spec.mca_index % workers]
-                .send(ServeJob::Program { spec, a_tile })
-                .map_err(|_| format!("serving worker {} died", spec.mca_index % workers))?;
-            dispatched += 1;
-        }
-        for s in &senders {
-            s.send(ServeJob::SealProgram)
-                .map_err(|_| "serving worker died".to_string())?;
-        }
-
-        // Gather programming acks and baseline ledgers.
-        let mut ledgers = vec![EnergyLedger::default(); plan.geometry.mcas()];
-        let mut iters_sum = 0.0f64;
-        let mut acks = 0usize;
-        let mut sealed = 0usize;
-        let mut first_err: Option<String> = None;
-        while acks < dispatched || sealed < workers {
-            match msg_rx.recv() {
-                Ok(WorkerMsg::Programmed {
-                    block_row,
-                    block_col,
-                    outcome,
-                }) => {
-                    acks += 1;
-                    match outcome {
-                        Ok(iters) => iters_sum += iters as f64,
-                        Err(e) => {
-                            if first_err.is_none() {
-                                first_err =
-                                    Some(format!("programming chunk ({block_row},{block_col}): {e}"));
-                            }
-                        }
-                    }
-                }
-                Ok(WorkerMsg::ProgramDone { ledgers: batch }) => {
-                    sealed += 1;
-                    for (idx, l) in batch {
-                        ledgers[idx] = l;
-                    }
-                }
-                Ok(_) => {}
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some("serving workers exited during programming".to_string());
-                    }
-                    break;
-                }
-            }
-        }
-        if let Some(e) = first_err {
-            drop(senders);
-            for h in handles {
-                let _ = h.join();
-            }
-            return Err(e);
-        }
-
-        let used: Vec<&EnergyLedger> = ledgers.iter().filter(|l| l.write_passes > 0).collect();
-        let write_energy_j: f64 = used.iter().map(|l| l.write_energy_j).sum();
-        let write_latency_s = used.iter().map(|l| l.write_latency_s).fold(0.0, f64::max);
-        let program = ProgramReport {
-            m,
-            n,
-            chunks_total: plan.total_chunks(),
-            chunks_resident: dispatched,
-            chunks_skipped: skipped,
-            mcas_used: used.len(),
-            normalization_factor: plan.normalization_factor(),
-            mean_wv_iters: if dispatched > 0 {
-                iters_sum / dispatched as f64
-            } else {
-                0.0
-            },
-            write_energy_j,
-            write_latency_s,
-            wall_seconds: start.elapsed().as_secs_f64(),
-        };
+        let mut plane = ExecutionPlane::build(source.as_ref(), &config, &opts, backend)?;
+        let program = plane.program(source.as_ref())?;
+        let (last_write_j, last_read_j) = plane.energy_totals();
         let mut stats = ServingStats::new();
-        stats.record_program(write_energy_j, write_latency_s);
-        let last_write_j = ledgers.iter().map(|l| l.write_energy_j).sum();
-        let last_read_j = ledgers.iter().map(|l| l.read_energy_j).sum();
+        stats.record_program(program.write_energy_j, program.write_latency_s);
         crate::log_info!(
             "server",
-            "session open {m}x{n}: {} resident chunks ({} skipped) on {} MCAs, \
+            "session open {}x{}: {} resident chunks ({} skipped) on {} MCAs, \
              E_w {:.3e} J, wall {:.2}s",
-            dispatched,
-            skipped,
+            program.m,
+            program.n,
+            program.chunks_resident,
+            program.chunks_skipped,
             program.mcas_used,
-            write_energy_j,
+            program.write_energy_j,
             program.wall_seconds
         );
         Ok(Session {
@@ -340,12 +133,7 @@ impl Session {
             opts,
             program,
             inner: Mutex::new(SessionInner {
-                senders,
-                results: msg_rx,
-                handles,
-                next_solve: 0,
-                resident_chunks: dispatched,
-                ledgers,
+                plane,
                 last_write_j,
                 last_read_j,
                 stats,
@@ -376,98 +164,30 @@ impl Session {
         if xs.is_empty() {
             return Ok(Vec::new());
         }
-        let start = Instant::now();
         let mut guard = self
             .inner
             .lock()
             .map_err(|_| "session poisoned by an earlier panic".to_string())?;
         let inner = &mut *guard;
-
-        let first_solve = inner.next_solve;
-        inner.next_solve += xs.len() as u64;
-        let shared = Arc::new(xs.to_vec());
-        for s in &inner.senders {
-            s.send(ServeJob::Execute {
-                first_solve,
-                xs: shared.clone(),
-            })
-            .map_err(|_| "serving worker died".to_string())?;
-        }
-
-        // Gather: one partial per (resident chunk, vector), then one
-        // ledger snapshot per worker.
-        let workers = inner.senders.len();
-        let expected = inner.resident_chunks * xs.len();
-        let mut per_solve: Vec<BTreeMap<(usize, usize), Vector>> =
-            (0..xs.len()).map(|_| BTreeMap::new()).collect();
-        let mut got = 0usize;
-        let mut done = 0usize;
-        let mut first_err: Option<String> = None;
-        while got < expected || done < workers {
-            match inner.results.recv() {
-                Ok(WorkerMsg::Partial {
-                    solve,
-                    block_row,
-                    block_col,
-                    outcome,
-                }) => {
-                    got += 1;
-                    match outcome {
-                        Ok(v) => {
-                            per_solve[(solve - first_solve) as usize]
-                                .insert((block_row, block_col), v);
-                        }
-                        Err(e) => {
-                            if first_err.is_none() {
-                                first_err = Some(format!(
-                                    "chunk ({block_row},{block_col}) solve {solve}: {e}"
-                                ));
-                            }
-                        }
-                    }
-                }
-                Ok(WorkerMsg::ExecuteDone { ledgers }) => {
-                    done += 1;
-                    for (idx, l) in ledgers {
-                        inner.ledgers[idx] = l;
-                    }
-                }
-                Ok(_) => {}
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some("serving workers exited mid-solve".to_string());
-                    }
-                    break;
-                }
-            }
-        }
+        let outcome = inner.plane.execute_batch(xs);
         // Energy deltas for the serving stats (write = per-solve vector
         // encodes + broadcast rows; the matrix write was paid at open).
         // Synced even on error, so a failed batch's energy is not
         // attributed to the next successful one.
-        let write_j: f64 = inner.ledgers.iter().map(|l| l.write_energy_j).sum();
-        let read_j: f64 = inner.ledgers.iter().map(|l| l.read_energy_j).sum();
+        let (write_j, read_j) = inner.plane.energy_totals();
         let (dw, dr) = (write_j - inner.last_write_j, read_j - inner.last_read_j);
         inner.last_write_j = write_j;
         inner.last_read_j = read_j;
-        if let Some(e) = first_err {
-            inner.stats.record_error();
-            return Err(e);
+        match outcome {
+            Ok(batch) => {
+                inner.stats.record_batch(xs.len(), batch.wall_seconds, dw, dr);
+                Ok(batch.solves)
+            }
+            Err(e) => {
+                inner.stats.record_error();
+                Err(e)
+            }
         }
-        let wall = start.elapsed().as_secs_f64();
-        inner.stats.record_batch(xs.len(), wall, dw, dr);
-
-        let m = self.source.nrows();
-        let tile = self.config.cell_size;
-        Ok(per_solve
-            .into_iter()
-            .enumerate()
-            .map(|(k, partials)| ServeSolve {
-                y: coordinator::reduce_partials(m, tile, &partials),
-                solve_index: first_solve + k as u64,
-                wall_seconds: wall / xs.len() as f64,
-            })
-            .collect())
     }
 
     /// One-time programming report for the resident operand.
@@ -497,112 +217,6 @@ impl Session {
     }
 }
 
-impl Drop for Session {
-    fn drop(&mut self) {
-        let mut guard = match self.inner.lock() {
-            Ok(g) => g,
-            Err(p) => p.into_inner(),
-        };
-        // Closing the job channels ends the worker loops.
-        guard.senders.clear();
-        for h in guard.handles.drain(..) {
-            let _ = h.join();
-        }
-    }
-}
-
-struct ServeWorker {
-    cell: usize,
-    opts: SolveOptions,
-    backend: Backend,
-    jobs: mpsc::Receiver<ServeJob>,
-    out: mpsc::Sender<WorkerMsg>,
-}
-
-struct ResidentChunk {
-    spec: ChunkSpec,
-    tile: ProgrammedTile,
-}
-
-fn run_worker(ctx: ServeWorker) {
-    let ec = ctx.opts.ec_options();
-    let mut executors: HashMap<usize, TileExecutor> = HashMap::new();
-    let mut resident: Vec<ResidentChunk> = Vec::new();
-    while let Ok(job) = ctx.jobs.recv() {
-        match job {
-            ServeJob::Program { spec, a_tile } => {
-                let exec = executors.entry(spec.mca_index).or_insert_with(|| {
-                    worker::new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
-                });
-                let outcome = match exec.program_tile(&a_tile, &ec) {
-                    Ok(tile) => {
-                        let iters = tile.encode.iters;
-                        resident.push(ResidentChunk { spec, tile });
-                        Ok(iters)
-                    }
-                    Err(e) => Err(e),
-                };
-                let msg = WorkerMsg::Programmed {
-                    block_row: spec.block_row,
-                    block_col: spec.block_col,
-                    outcome,
-                };
-                if ctx.out.send(msg).is_err() {
-                    return;
-                }
-            }
-            ServeJob::SealProgram => {
-                let snapshot = executors.iter().map(|(idx, e)| (*idx, e.mca.ledger)).collect();
-                if ctx.out.send(WorkerMsg::ProgramDone { ledgers: snapshot }).is_err() {
-                    return;
-                }
-            }
-            ServeJob::Execute { first_solve, xs } => {
-                // The leader counts on exactly chunks x vectors partials,
-                // so every path below must send — never panic — or the
-                // gather would hang (the other workers keep the reply
-                // channel open).
-                for chunk in &resident {
-                    for (k, x) in xs.iter().enumerate() {
-                        let solve = first_solve + k as u64;
-                        let outcome = match executors.get_mut(&chunk.spec.mca_index) {
-                            Some(exec) => {
-                                let x_chunk = x.slice_padded(chunk.spec.col0, ctx.cell);
-                                let stream = Rng::new(exec_stream_seed(
-                                    ctx.opts.seed,
-                                    chunk.spec.mca_index,
-                                    solve,
-                                    chunk.spec.block_row,
-                                    chunk.spec.block_col,
-                                ));
-                                let saved = exec.mca.replace_rng(stream);
-                                let out =
-                                    exec.execute_tile(&chunk.tile, &x_chunk, &ec).map(|r| r.y);
-                                exec.mca.replace_rng(saved);
-                                out
-                            }
-                            None => Err("resident chunk lost its executor".to_string()),
-                        };
-                        let msg = WorkerMsg::Partial {
-                            solve,
-                            block_row: chunk.spec.block_row,
-                            block_col: chunk.spec.block_col,
-                            outcome,
-                        };
-                        if ctx.out.send(msg).is_err() {
-                            return;
-                        }
-                    }
-                }
-                let snapshot = executors.iter().map(|(idx, e)| (*idx, e.mca.ledger)).collect();
-                if ctx.out.send(WorkerMsg::ExecuteDone { ledgers: snapshot }).is_err() {
-                    return;
-                }
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -615,11 +229,7 @@ mod tests {
         Arc::new(NativeBackend::new())
     }
 
-    fn open(
-        a: Matrix,
-        config: SystemConfig,
-        opts: SolveOptions,
-    ) -> Session {
+    fn open(a: Matrix, config: SystemConfig, opts: SolveOptions) -> Session {
         let src: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(a));
         Session::open(src, config, opts, native()).unwrap()
     }
@@ -706,6 +316,26 @@ mod tests {
     }
 
     #[test]
+    fn tail_tile_session_matches_exact() {
+        // m % tile != 0: the resident path must drop the padded tail rows
+        // exactly like the one-shot path.
+        let a = Matrix::standard_normal(40, 40, 77);
+        let x = Vector::standard_normal(40, 78);
+        let b = a.matvec(&x);
+        let session = open(
+            a,
+            SystemConfig::new(2, 2, 32),
+            SolveOptions::default().with_device(Material::EpiRam),
+        );
+        let p = session.program_report();
+        assert_eq!(p.chunks_total, 4);
+        let out = session.solve(&x).unwrap();
+        assert_eq!(out.y.len(), 40);
+        let err = out.y.sub(&b).norm_l2() / b.norm_l2();
+        assert!(err < 0.1, "{err}");
+    }
+
+    #[test]
     fn sparse_operand_skips_zero_chunks() {
         let src: Arc<dyn MatrixSource> = Arc::new(BandedSource::new(256, 4, 1.0, 10.0, 0.2, 3));
         let session = Session::open(
@@ -765,16 +395,5 @@ mod tests {
         );
         assert!(session.solve_batch(&[]).unwrap().is_empty());
         assert_eq!(session.report().solves, 0);
-    }
-
-    #[test]
-    fn exec_stream_seed_separates_coordinates() {
-        let base = exec_stream_seed(42, 0, 0, 0, 0);
-        assert_ne!(base, exec_stream_seed(43, 0, 0, 0, 0));
-        assert_ne!(base, exec_stream_seed(42, 1, 0, 0, 0));
-        assert_ne!(base, exec_stream_seed(42, 0, 1, 0, 0));
-        assert_ne!(base, exec_stream_seed(42, 0, 0, 1, 0));
-        assert_ne!(base, exec_stream_seed(42, 0, 0, 0, 1));
-        assert_eq!(base, exec_stream_seed(42, 0, 0, 0, 0));
     }
 }

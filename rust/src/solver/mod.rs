@@ -94,7 +94,11 @@ impl Meliso {
         self
     }
 
-    /// Solve `Ax = b` in-memory for a streamable operand.
+    /// Solve `Ax = b` in-memory for a streamable operand (one-shot: a
+    /// fresh [`crate::plane::ExecutionPlane`] programs, executes and tears
+    /// down).  With `opts.ground_truth` unset, the O(m·n) exact reference
+    /// is skipped and `rel_err_*` are NaN — the at-scale mode for
+    /// operands like `banded65k`.
     pub fn solve_source(
         &self,
         source: &dyn MatrixSource,

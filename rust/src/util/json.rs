@@ -93,7 +93,12 @@ impl Json {
                 let _ = write!(out, "{b}");
             }
             Json::Num(v) => {
-                if v.fract() == 0.0 && v.abs() < 1e15 {
+                if !v.is_finite() {
+                    // JSON has no NaN/Inf literal; `null` keeps emitted
+                    // reports parseable (e.g. skipped-ground-truth
+                    // `rel_err_*` fields).
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 1e15 {
                     let _ = write!(out, "{}", *v as i64);
                 } else {
                     let _ = write!(out, "{v}");
@@ -362,6 +367,16 @@ mod tests {
         assert_eq!(back, obj);
         let back2 = Json::parse(&obj.compact()).unwrap();
         assert_eq!(back2, obj);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).compact(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).compact(), "null");
+        let mut obj = Json::obj();
+        obj.set("rel_err_l2", Json::Num(f64::NAN));
+        let back = Json::parse(&obj.pretty()).unwrap();
+        assert_eq!(back.get("rel_err_l2"), Some(&Json::Null));
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! * `generateVecChunksSet`: the input vector splits along the same column
 //!   grid.
 
+use crate::matrices::MatrixSource;
 use crate::util::ceil_div;
 
 /// Physical geometry of the multi-MCA system.
@@ -115,6 +116,36 @@ impl ChunkPlan {
     pub fn chunks(&self) -> impl Iterator<Item = ChunkSpec> + '_ {
         (0..self.grid_rows)
             .flat_map(move |i| (0..self.grid_cols).map(move |j| self.chunk(i, j)))
+    }
+
+    /// Sparsity-aware chunk enumeration: iterate, in the same
+    /// deterministic row-major order as [`chunks`](Self::chunks), exactly
+    /// the chunks whose block intersects `source`'s nonzero pattern.
+    ///
+    /// Per block row, candidates are restricted to the column span
+    /// reported by [`MatrixSource::occupied_cols`] and then confirmed with
+    /// [`MatrixSource::block_is_zero`] — so the walk is O(occupied blocks)
+    /// for sources with a cheap column bound (e.g.
+    /// [`BandedSource`](crate::matrices::BandedSource): the full
+    /// `O(grid²)` scan at 65,536²/32² would visit 4M chunks, the band
+    /// visits only the few per row that exist), and never worse than the
+    /// full grid walk for dense sources.
+    pub fn nonzero_chunks<'a>(
+        &'a self,
+        source: &'a dyn MatrixSource,
+    ) -> impl Iterator<Item = ChunkSpec> + 'a {
+        let tile = self.geometry.cell_size;
+        (0..self.grid_rows)
+            .flat_map(move |i| {
+                let (lo, hi) = source.occupied_cols(i * tile, tile);
+                let (j_lo, j_hi) = if lo >= hi {
+                    (0, 0)
+                } else {
+                    (lo / tile, ceil_div(hi, tile).min(self.grid_cols))
+                };
+                (j_lo..j_hi).map(move |j| self.chunk(i, j))
+            })
+            .filter(move |spec| !source.block_is_zero(spec.row0, spec.col0, tile, tile))
     }
 
     /// Number of chunk assignments each MCA receives.
@@ -293,5 +324,59 @@ mod tests {
         let g = SystemGeometry::new(8, 8, 1024);
         assert_eq!(g.capacity(), (8192, 8192));
         assert_eq!(g.mcas(), 64);
+    }
+
+    #[test]
+    fn nonzero_chunks_matches_filtered_full_walk() {
+        use crate::matrices::BandedSource;
+        let src = BandedSource::new(1000, 8, 1.0, 10.0, 0.2, 5);
+        let g = SystemGeometry::new(2, 2, 32);
+        let plan = ChunkPlan::new(g, 1000, 1000);
+        let tile = g.cell_size;
+        let full: Vec<(usize, usize)> = plan
+            .chunks()
+            .filter(|c| !src.block_is_zero(c.row0, c.col0, tile, tile))
+            .map(|c| (c.block_row, c.block_col))
+            .collect();
+        let streamed: Vec<(usize, usize)> = plan
+            .nonzero_chunks(&src)
+            .map(|c| (c.block_row, c.block_col))
+            .collect();
+        // Same set, same deterministic row-major order.
+        assert_eq!(full, streamed);
+        // And far fewer than the full grid (sparsity pays off).
+        assert!(streamed.len() * 5 < plan.total_chunks(), "{}", streamed.len());
+    }
+
+    #[test]
+    fn nonzero_chunks_covers_dense_sources() {
+        use crate::linalg::Matrix;
+        use crate::matrices::DenseSource;
+        let src = DenseSource::new(Matrix::standard_normal(48, 80, 13));
+        let plan = ChunkPlan::new(SystemGeometry::new(2, 2, 32), 48, 80);
+        // A dense source has no column bound: every chunk is a candidate.
+        let all: Vec<(usize, usize)> = plan
+            .nonzero_chunks(&src)
+            .map(|c| (c.block_row, c.block_col))
+            .collect();
+        let full: Vec<(usize, usize)> = plan
+            .chunks()
+            .map(|c| (c.block_row, c.block_col))
+            .collect();
+        assert_eq!(all, full);
+    }
+
+    #[test]
+    fn nonzero_chunks_is_band_bounded() {
+        use crate::matrices::BandedSource;
+        // Band half-width 48 ≤ cell 1024: at most 3 candidate chunks per
+        // block row, so the enumeration is O(grid_rows), not O(grid²).
+        let n = 65_536;
+        let src = BandedSource::new(n, 48, 4.0, 100.0, 0.2, 7);
+        let plan = ChunkPlan::new(SystemGeometry::new(8, 8, 1024), n, n);
+        let count = plan.nonzero_chunks(&src).count();
+        assert!(count >= plan.grid_rows, "{count}");
+        assert!(count <= 3 * plan.grid_rows, "{count}");
+        assert_eq!(plan.total_chunks(), 64 * 64);
     }
 }
