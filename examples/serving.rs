@@ -52,8 +52,30 @@ fn main() -> Result<(), String> {
     println!("solve #{}: rel l2 error {:.3e}", one.solve_index, rel);
     println!("{}", session.report().render());
 
-    // 4. Multi-tenant residency: an LRU cache keyed by operand content.
-    //    The second lookup of bcsstk02 skips programming entirely.
+    // 4. Multi-operand residency on ONE plane: program several operands
+    //    onto the same shard pool and serve them interleaved.  Results are
+    //    bit-identical to dedicated planes; eviction (session drop) frees
+    //    the tile slots for the next tenant.
+    let a2 = meliso::matrices::registry::build("bcsstk02")?;
+    let plane = solver.build_plane(a.as_ref())?;
+    let sa = solver.open_session_on(&plane, a.clone())?;
+    let sb = solver.open_session_on(&plane, a2.clone())?;
+    sa.solve(&Vector::standard_normal(a.ncols(), 200))?;
+    sb.solve(&Vector::standard_normal(a2.ncols(), 201))?;
+    {
+        let guard = plane.lock().map_err(|_| "plane poisoned".to_string())?;
+        println!(
+            "shared plane: {} operands resident, {} tile slots in use on {} shards",
+            guard.resident_operands(),
+            guard.slots_in_use(),
+            guard.shards()
+        );
+    }
+    drop(sb); // evicts bcsstk02's residency, slots return to the allocator
+
+    // 5. Multi-tenant residency behind an LRU cache keyed by operand
+    //    content (all entries share one plane).  The second lookup of
+    //    bcsstk02 skips programming entirely.
     let mut cache = OperandCache::new(2);
     let tenant = meliso::matrices::registry::build("bcsstk02")?;
     let s1 = cache.get_or_open(&solver, &tenant)?;

@@ -45,15 +45,30 @@ pub struct SolveSystemArgs {
 #[derive(Debug)]
 pub struct ServeBenchArgs {
     pub matrix: String,
+    /// Operands to program resident on ONE shared execution plane
+    /// (`--operands a,b,c`); empty means just `matrix`.
+    pub operands: Vec<String>,
     pub system: SystemConfig,
     pub opts: SolveOptions,
-    /// Solves served against the resident session.
+    /// Solves served against each resident session.
     pub solves: usize,
     /// Batch size for `solve_batch` (1 = sequential).
     pub batch: usize,
     /// One-shot reference solves (0 = auto: min(solves, 5)).
     pub baseline: usize,
     pub json: bool,
+}
+
+impl ServeBenchArgs {
+    /// The operand list to serve: `--operands` when given, else the single
+    /// `--matrix`.
+    pub fn operand_names(&self) -> Vec<String> {
+        if self.operands.is_empty() {
+            vec![self.matrix.clone()]
+        } else {
+            self.operands.clone()
+        }
+    }
 }
 
 pub fn usage() -> &'static str {
@@ -81,9 +96,12 @@ SOLVE-SYSTEM OPTIONS (plus the applicable RUN options below):
     --inner-tol T      inner-solve tolerance under refinement (default 1e-2)
 
 SERVE-BENCH OPTIONS (plus the applicable RUN options below):
-    --solves N         solves to serve against the resident session (default 32)
+    --operands A,B,C   program several operands resident on ONE shared
+                       execution plane and serve them interleaved
+                       (default: just --matrix)
+    --solves N         solves to serve against each resident session (default 32)
     --batch B          solve_batch size, 1 = sequential (default 8)
-    --baseline N       one-shot reference solves (default min(solves, 5))
+    --baseline N       one-shot reference solves per operand (default min(solves, 5))
 
 RUN OPTIONS:
     --matrix NAME      operand from the registry (default iperturb66)
@@ -95,6 +113,7 @@ RUN OPTIONS:
     --lambda V         second-order regularization (default 1e-12)
     --tiles RxC        MCA tile grid (default 8x8)
     --cell N           cells per MCA edge: 32..1024 (default 1024)
+    --tile-slots N     residency tile slots per MCA, 0 = unbounded (default 0)
     --workers N        shard worker threads (default 4)
     --placement P      round-robin | load-balanced | sparsity-aware (default round-robin)
     --truth / --no-truth
@@ -190,6 +209,11 @@ fn parse_common_flag(
             system.cell_size = next_value(it, "--cell")?
                 .parse()
                 .map_err(|e| format!("--cell: {e}"))?
+        }
+        "--tile-slots" => {
+            system.tile_slots = next_value(it, "--tile-slots")?
+                .parse()
+                .map_err(|e| format!("--tile-slots: {e}"))?
         }
         "--workers" => {
             opts.workers = next_value(it, "--workers")?
@@ -321,6 +345,7 @@ fn parse_solve_system(it: &mut ArgIter<'_>) -> Result<Command, String> {
 
 fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
     let mut matrix = "iperturb66".to_string();
+    let mut operands: Vec<String> = Vec::new();
     let mut system = SystemConfig::single_mca(128);
     let mut opts = SolveOptions::default();
     let mut solves = 32usize;
@@ -333,6 +358,17 @@ fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
             continue;
         }
         match arg.as_str() {
+            "--operands" => {
+                let spec = next_value(it, "--operands")?;
+                operands = spec
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                if operands.is_empty() {
+                    return Err("--operands expects a comma-separated list".to_string());
+                }
+            }
             "--solves" => {
                 solves = next_value(it, "--solves")?
                     .parse()
@@ -356,6 +392,7 @@ fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
     }
     Ok(Command::ServeBench(ServeBenchArgs {
         matrix,
+        operands,
         system,
         opts,
         solves,
@@ -497,13 +534,40 @@ mod tests {
         match parse(&argv("serve-bench")).unwrap() {
             Command::ServeBench(s) => {
                 assert_eq!(s.matrix, "iperturb66");
+                assert!(s.operands.is_empty());
+                assert_eq!(s.operand_names(), vec!["iperturb66".to_string()]);
                 assert_eq!(s.solves, 32);
                 assert_eq!(s.batch, 8);
                 assert_eq!(s.baseline, 0);
+                assert_eq!(s.system.tile_slots, 0);
                 assert!(!s.json);
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn serve_bench_parses_operand_list_and_tile_slots() {
+        match parse(&argv(
+            "serve-bench --operands iperturb66,add32,bcsstk02 --tile-slots 16 --cell 128",
+        ))
+        .unwrap()
+        {
+            Command::ServeBench(s) => {
+                assert_eq!(
+                    s.operand_names(),
+                    vec![
+                        "iperturb66".to_string(),
+                        "add32".to_string(),
+                        "bcsstk02".to_string()
+                    ]
+                );
+                assert_eq!(s.system.tile_slots, 16);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve-bench --operands ,")).is_err());
+        assert!(parse(&argv("serve-bench --tile-slots many")).is_err());
     }
 
     #[test]

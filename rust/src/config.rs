@@ -34,6 +34,11 @@ pub struct SystemConfig {
     pub tile_rows: usize,
     pub tile_cols: usize,
     pub cell_size: usize,
+    /// Residency tile slots per MCA for the multi-tenant execution plane's
+    /// allocator (`0` = unbounded).  Each resident chunk of each operand
+    /// occupies one slot on its assigned MCA; eviction frees slots for
+    /// reuse.  Does not affect results, only admission.
+    pub tile_slots: usize,
 }
 
 impl SystemConfig {
@@ -42,7 +47,14 @@ impl SystemConfig {
             tile_rows,
             tile_cols,
             cell_size,
+            tile_slots: 0,
         }
+    }
+
+    /// Cap the residency tile slots per MCA (`0` = unbounded).
+    pub fn with_tile_slots(mut self, slots: usize) -> SystemConfig {
+        self.tile_slots = slots;
+        self
     }
 
     /// A single MCA (the Table 1 / Fig 2–3 setting).
@@ -205,6 +217,9 @@ pub fn from_toml(text: &str) -> Result<(SystemConfig, SolveOptions), String> {
             "system.cell_size" => {
                 system.cell_size = value.as_usize().ok_or("cell_size must be integer")?
             }
+            "system.tile_slots" => {
+                system.tile_slots = value.as_usize().ok_or("tile_slots must be integer")?
+            }
             "solve.device" => {
                 let name = value.as_str().ok_or("device must be a string")?;
                 opts.material = Material::parse(name)
@@ -297,6 +312,7 @@ mod tests {
             tile_rows = 4
             tile_cols = 2
             cell_size = 256
+            tile_slots = 8
 
             [solve]
             device = "epiram"
@@ -312,7 +328,7 @@ mod tests {
             "#,
         )
         .unwrap();
-        assert_eq!(sys, SystemConfig::new(4, 2, 256));
+        assert_eq!(sys, SystemConfig::new(4, 2, 256).with_tile_slots(8));
         assert_eq!(opts.material, Material::EpiRam);
         assert!(!opts.ec);
         assert_eq!(opts.denoise, DenoiseMode::Digital);

@@ -40,8 +40,10 @@ pub mod stationary;
 
 use crate::linalg::Vector;
 use crate::matrices::MatrixSource;
+use crate::plane::{ExecutionPlane, OperandId};
 pub use crate::server::MvmOperator;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Which iterative method drives the solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -233,6 +235,92 @@ impl MvmOperator for ExactOperator<'_> {
     /// Exact references never touch the crossbar.
     fn programming_passes(&self) -> u64 {
         0
+    }
+}
+
+/// [`MvmOperator`] over one residency of a (shared, multi-tenant)
+/// [`ExecutionPlane`]: several systems can be solved concurrently against
+/// operands sharing one shard pool, without the serving-statistics
+/// machinery of a full [`crate::server::Session`].
+///
+/// [`program`](PlaneOperator::program) pays the single write–verify pass;
+/// every [`apply`](MvmOperator::apply) afterwards is reads only, drawing
+/// from the same counter-based noise streams as a dedicated plane — so a
+/// solve through a `PlaneOperator` is bit-identical to one through a
+/// dedicated session with the same seed.  Dropping the operator evicts
+/// its residency.
+pub struct PlaneOperator {
+    plane: Arc<Mutex<ExecutionPlane>>,
+    id: OperandId,
+    m: usize,
+    n: usize,
+    mvms: AtomicU64,
+}
+
+impl PlaneOperator {
+    /// Program `source` resident on `plane` and wrap the residency as an
+    /// MVM operator.
+    pub fn program(
+        plane: &Arc<Mutex<ExecutionPlane>>,
+        source: &dyn MatrixSource,
+    ) -> Result<PlaneOperator, String> {
+        let (id, report) = plane
+            .lock()
+            .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?
+            .program(source)?;
+        Ok(PlaneOperator {
+            plane: plane.clone(),
+            id,
+            m: report.m,
+            n: report.n,
+            mvms: AtomicU64::new(0),
+        })
+    }
+
+    /// The residency handle on the underlying plane.
+    pub fn id(&self) -> OperandId {
+        self.id
+    }
+}
+
+impl Drop for PlaneOperator {
+    fn drop(&mut self) {
+        if let Ok(mut plane) = self.plane.lock() {
+            let _ = plane.evict(self.id);
+        }
+    }
+}
+
+impl MvmOperator for PlaneOperator {
+    fn nrows(&self) -> usize {
+        self.m
+    }
+
+    fn ncols(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, x: &Vector) -> Result<Vector, String> {
+        let mut plane = self
+            .plane
+            .lock()
+            .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?;
+        let mut batch = plane.execute_batch(self.id, std::slice::from_ref(x))?;
+        self.mvms.fetch_add(1, Ordering::Relaxed);
+        batch
+            .solves
+            .pop()
+            .map(|s| s.y)
+            .ok_or_else(|| "empty batch result".to_string())
+    }
+
+    fn mvm_count(&self) -> u64 {
+        self.mvms.load(Ordering::Relaxed)
+    }
+
+    /// One write–verify pass at [`program`](PlaneOperator::program) time.
+    fn programming_passes(&self) -> u64 {
+        1
     }
 }
 
@@ -504,6 +592,60 @@ mod tests {
         let op = ExactOperator::new(&src);
         let bad = Vector::zeros(5);
         assert!(solve_system(&op, Some(&src), &bad, &IterOptions::default()).is_err());
+    }
+
+    #[test]
+    fn plane_operator_matches_dedicated_session_bit_exact() {
+        use crate::config::{SolveOptions, SystemConfig};
+        use crate::device::materials::Material;
+        use crate::runtime::native::NativeBackend;
+        use crate::solver::Meliso;
+        use std::sync::{Arc, Mutex};
+
+        let config = SystemConfig::single_mca(64);
+        let opts = SolveOptions::default()
+            .with_device(Material::EpiRam)
+            .with_wv_iters(3)
+            .with_seed(42);
+        let src_a = crate::matrices::registry::build("spd64").unwrap();
+        let src_b = crate::matrices::registry::build("spdill64").unwrap();
+        let x_star = Vector::standard_normal(64, 21);
+        let ba = src_a.matvec(&x_star);
+        let bb = src_b.matvec(&x_star);
+        let iter_opts = IterOptions::default()
+            .with_tol(1e-4)
+            .with_max_iters(60)
+            .with_inner_tol(1e-2)
+            .with_refinements(25);
+
+        // Dedicated sessions (one plane per operand), via the front door.
+        let solver = Meliso::with_backend(config, opts.clone(), Arc::new(NativeBackend::new()));
+        let ded_a = solver.solve_system(src_a.clone(), &ba, &iter_opts).unwrap();
+        let ded_b = solver.solve_system(src_b.clone(), &bb, &iter_opts).unwrap();
+
+        // Both operands resident on ONE plane, solved through
+        // PlaneOperators: bit-identical solutions.
+        let plane = Arc::new(Mutex::new(
+            crate::plane::ExecutionPlane::build(
+                src_a.as_ref(),
+                &config,
+                &opts,
+                Arc::new(NativeBackend::new()),
+            )
+            .unwrap(),
+        ));
+        let op_a = PlaneOperator::program(&plane, src_a.as_ref()).unwrap();
+        let op_b = PlaneOperator::program(&plane, src_b.as_ref()).unwrap();
+        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        let out_a = solve_system(&op_a, Some(src_a.as_ref()), &ba, &iter_opts).unwrap();
+        let out_b = solve_system(&op_b, Some(src_b.as_ref()), &bb, &iter_opts).unwrap();
+        assert_eq!(out_a.x, ded_a.x, "operand A diverged on the shared plane");
+        assert_eq!(out_b.x, ded_b.x, "operand B diverged on the shared plane");
+        assert_eq!(op_a.programming_passes(), 1);
+        assert!(op_a.mvm_count() > 0);
+        // Dropping an operator evicts its residency.
+        drop(op_a);
+        assert_eq!(plane.lock().unwrap().resident_operands(), 1);
     }
 
     #[test]

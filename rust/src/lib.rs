@@ -114,7 +114,7 @@ pub mod prelude {
     pub use crate::iterative::{IterOptions, Method, MvmOperator};
     pub use crate::linalg::{Matrix, Vector};
     pub use crate::metrics::{ConvergenceReport, SolveReport};
-    pub use crate::plane::{ExecutionPlane, Placement};
+    pub use crate::plane::{ExecutionPlane, OperandId, Placement};
     pub use crate::server::Session;
     pub use crate::solver::Meliso;
 }

@@ -160,92 +160,198 @@ fn solver_or_native(system: SystemConfig, opts: SolveOptions) -> Meliso {
 }
 
 fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
-    let source = registry::build(&args.matrix)?;
-    let n = source.ncols();
+    let names = args.operand_names();
+    let mut sources = Vec::with_capacity(names.len());
+    for name in &names {
+        sources.push(registry::build(name)?);
+    }
     let solver = solver_or_native(args.system, args.opts.clone());
-    let xs: Vec<Vector> = (0..args.solves)
-        .map(|i| Vector::standard_normal(n, args.opts.seed ^ (0xB0B0 + i as u64)))
-        .collect();
     eprintln!(
-        "# serve-bench {} ({}x{}), device {}, EC {}, system {}x{} tiles of {}², backend {}",
-        args.matrix,
-        source.nrows(),
-        n,
+        "# serve-bench [{}] on one shared plane, device {}, EC {}, system {}x{} tiles of \
+         {}² ({} tile slots/MCA), backend {}",
+        names.join(","),
         args.opts.material,
         if args.opts.ec { "on" } else { "off" },
         args.system.tile_rows,
         args.system.tile_cols,
         args.system.cell_size,
+        if args.system.tile_slots == 0 {
+            "∞".to_string()
+        } else {
+            args.system.tile_slots.to_string()
+        },
         solver.backend_name(),
     );
 
-    // One-shot reference: every solve re-programs the operand.
-    let baseline = if args.baseline > 0 {
-        args.baseline.min(args.solves)
-    } else {
-        args.solves.min(5)
+    struct Tenant {
+        name: String,
+        xs: Vec<Vector>,
+        session: meliso::server::Session,
+        oneshot_solves: usize,
+        oneshot_s: f64,
+        oneshot_j: f64,
+    }
+
+    // ONE shared execution plane hosts every tenant (the multi-tenant
+    // serving layout); sessions below are residencies on it.
+    let plane = solver.build_plane(sources[0].as_ref())?;
+    let mut tenants: Vec<Tenant> = Vec::with_capacity(names.len());
+    for (t, (name, source)) in names.iter().zip(&sources).enumerate() {
+        let n = source.ncols();
+        // Fold the tenant index into the seed so same-dimension tenants
+        // are served distinct input streams.
+        let tenant_seed = args.opts.seed ^ ((t as u64) << 32);
+        let xs: Vec<Vector> = (0..args.solves)
+            .map(|i| Vector::standard_normal(n, tenant_seed ^ (0xB0B0 + i as u64)))
+            .collect();
+        // One-shot reference: every solve re-programs the operand.
+        let baseline = if args.baseline > 0 {
+            args.baseline.min(args.solves)
+        } else {
+            args.solves.min(5)
+        };
+        let t = Instant::now();
+        let mut oneshot_write_j = 0.0;
+        for x in xs.iter().take(baseline) {
+            let r = solver.solve_source(source.as_ref(), x)?;
+            oneshot_write_j += r.ew_total;
+        }
+        let oneshot_s = t.elapsed().as_secs_f64() / baseline as f64;
+        let oneshot_j = oneshot_write_j / baseline as f64;
+        let session = solver.open_session_on(&plane, source.clone())?;
+        tenants.push(Tenant {
+            name: name.clone(),
+            xs,
+            session,
+            oneshot_solves: baseline,
+            oneshot_s,
+            oneshot_j,
+        });
+    }
+
+    // Serve the tenants' batches interleaved round-robin: one shard pool,
+    // many operands, exactly the serving pattern the allocator exists for.
+    let rounds = args.solves.div_ceil(args.batch);
+    for round in 0..rounds {
+        for tenant in &tenants {
+            let lo = round * args.batch;
+            if lo >= tenant.xs.len() {
+                continue;
+            }
+            let hi = (lo + args.batch).min(tenant.xs.len());
+            tenant.session.solve_batch(&tenant.xs[lo..hi])?;
+        }
+    }
+
+    let (residents, slots_in_use, slot_high_water, shards) = {
+        let guard = plane.lock().map_err(|_| "plane poisoned".to_string())?;
+        (
+            guard.resident_operands(),
+            guard.slots_in_use(),
+            guard.slot_high_water(),
+            guard.shards(),
+        )
     };
-    let t = Instant::now();
-    let mut oneshot_write_j = 0.0;
-    for x in xs.iter().take(baseline) {
-        let r = solver.solve_source(source.as_ref(), x)?;
-        oneshot_write_j += r.ew_total;
-    }
-    let oneshot_s = t.elapsed().as_secs_f64() / baseline as f64;
-    let oneshot_j = oneshot_write_j / baseline as f64;
 
-    // Resident session: program once, then serve.
-    let session = solver.open_session(source.clone())?;
-    let program = session.program_report().clone();
-    for chunk in xs.chunks(args.batch) {
-        session.solve_batch(chunk)?;
+    // Derive every reported metric once, so the JSON and table branches
+    // cannot drift.
+    struct TenantMetrics {
+        program: meliso::server::ProgramReport,
+        serving: meliso::metrics::serving::ServingReport,
+        speedup: f64,
+        energy_ratio: f64,
     }
-    let serving = session.report();
-
-    let speedup = oneshot_s / (serving.latency_mean_ms / 1e3).max(1e-12);
-    let energy_ratio = oneshot_j / serving.write_energy_per_solve_j.max(f64::MIN_POSITIVE);
+    let metrics: Vec<TenantMetrics> = tenants
+        .iter()
+        .map(|tenant| {
+            let program = tenant.session.program_report().clone();
+            let serving = tenant.session.report();
+            let speedup = tenant.oneshot_s / (serving.latency_mean_ms / 1e3).max(1e-12);
+            let energy_ratio =
+                tenant.oneshot_j / serving.write_energy_per_solve_j.max(f64::MIN_POSITIVE);
+            TenantMetrics {
+                program,
+                serving,
+                speedup,
+                energy_ratio,
+            }
+        })
+        .collect();
 
     if args.json {
+        let mut per_op = Vec::new();
+        for (tenant, m) in tenants.iter().zip(&metrics) {
+            let mut j = Json::obj();
+            j.set("matrix", Json::Str(tenant.name.clone()))
+                .set("oneshot_solves", Json::Num(tenant.oneshot_solves as f64))
+                .set("oneshot_per_solve_s", Json::Num(tenant.oneshot_s))
+                .set("oneshot_write_j_per_solve", Json::Num(tenant.oneshot_j))
+                .set("program_wall_s", Json::Num(m.program.wall_seconds))
+                .set("program_write_j", Json::Num(m.program.write_energy_j))
+                .set("serving", m.serving.to_json())
+                .set("wall_speedup", Json::Num(m.speedup))
+                .set("write_energy_ratio", Json::Num(m.energy_ratio));
+            per_op.push(j);
+        }
+        let mut plane_j = Json::obj();
+        plane_j
+            .set("resident_operands", Json::Num(residents as f64))
+            .set("slots_in_use", Json::Num(slots_in_use as f64))
+            .set("slot_high_water", Json::Num(slot_high_water as f64))
+            .set("shards", Json::Num(shards as f64));
         let mut j = Json::obj();
-        j.set("matrix", Json::Str(args.matrix.clone()))
-            .set("oneshot_solves", Json::Num(baseline as f64))
-            .set("oneshot_per_solve_s", Json::Num(oneshot_s))
-            .set("oneshot_write_j_per_solve", Json::Num(oneshot_j))
-            .set("program_wall_s", Json::Num(program.wall_seconds))
-            .set("program_write_j", Json::Num(program.write_energy_j))
-            .set("serving", serving.to_json())
-            .set("wall_speedup", Json::Num(speedup))
-            .set("write_energy_ratio", Json::Num(energy_ratio));
+        j.set("operands", Json::Arr(per_op)).set("plane", plane_j);
         println!("{}", j.pretty());
     } else {
-        let mut t = TableBuilder::new(
-            &format!("serve-bench {} — one-shot vs resident session", args.matrix),
-            &["value"],
-        );
-        t.row("one-shot solves", vec![format!("{baseline}")]);
-        t.row("one-shot per-solve (ms)", vec![format!("{:.3}", oneshot_s * 1e3)]);
-        t.row("one-shot write J/solve", vec![sci(oneshot_j)]);
-        t.row("program wall (s)", vec![format!("{:.3}", program.wall_seconds)]);
-        t.row("program write (J)", vec![sci(program.write_energy_j)]);
-        t.row("resident chunks", vec![format!("{}", program.chunks_resident)]);
-        t.row("resident solves", vec![format!("{}", serving.solves)]);
-        t.row(
-            "resident per-solve (ms)",
-            vec![format!("{:.3}", serving.latency_mean_ms)],
-        );
-        t.row("resident p50 (ms)", vec![format!("{:.3}", serving.latency_p50_ms)]);
-        t.row("resident p99 (ms)", vec![format!("{:.3}", serving.latency_p99_ms)]);
-        t.row(
-            "resident write J/solve",
-            vec![sci(serving.write_energy_per_solve_j)],
-        );
-        t.row(
-            "resident read J/solve",
-            vec![sci(serving.read_energy_per_solve_j)],
-        );
-        t.row("throughput (solve/s)", vec![format!("{:.1}", serving.throughput_sps)]);
-        t.row("wall speedup", vec![format!("{speedup:.1}x")]);
-        t.row("write energy ratio", vec![format!("{energy_ratio:.1}x")]);
+        for (tenant, m) in tenants.iter().zip(&metrics) {
+            let program = &m.program;
+            let serving = &m.serving;
+            let speedup = m.speedup;
+            let energy_ratio = m.energy_ratio;
+            let mut t = TableBuilder::new(
+                &format!(
+                    "serve-bench {} — one-shot vs resident session ({})",
+                    tenant.name, tenant.session.operand_id()
+                ),
+                &["value"],
+            );
+            t.row("one-shot solves", vec![format!("{}", tenant.oneshot_solves)]);
+            t.row(
+                "one-shot per-solve (ms)",
+                vec![format!("{:.3}", tenant.oneshot_s * 1e3)],
+            );
+            t.row("one-shot write J/solve", vec![sci(tenant.oneshot_j)]);
+            t.row("program wall (s)", vec![format!("{:.3}", program.wall_seconds)]);
+            t.row("program write (J)", vec![sci(program.write_energy_j)]);
+            t.row("resident chunks", vec![format!("{}", program.chunks_resident)]);
+            t.row("resident solves", vec![format!("{}", serving.solves)]);
+            t.row(
+                "resident per-solve (ms)",
+                vec![format!("{:.3}", serving.latency_mean_ms)],
+            );
+            t.row("resident p50 (ms)", vec![format!("{:.3}", serving.latency_p50_ms)]);
+            t.row("resident p99 (ms)", vec![format!("{:.3}", serving.latency_p99_ms)]);
+            t.row(
+                "resident write J/solve",
+                vec![sci(serving.write_energy_per_solve_j)],
+            );
+            t.row(
+                "resident read J/solve",
+                vec![sci(serving.read_energy_per_solve_j)],
+            );
+            t.row(
+                "throughput (solve/s)",
+                vec![format!("{:.1}", serving.throughput_sps)],
+            );
+            t.row("wall speedup", vec![format!("{speedup:.1}x")]);
+            t.row("write energy ratio", vec![format!("{energy_ratio:.1}x")]);
+            print!("{}", t.render());
+        }
+        let mut t = TableBuilder::new("shared execution plane", &["value"]);
+        t.row("resident operands", vec![format!("{residents}")]);
+        t.row("tile slots in use", vec![format!("{slots_in_use}")]);
+        t.row("tile slot high water", vec![format!("{slot_high_water}")]);
+        t.row("shards", vec![format!("{shards}")]);
         print!("{}", t.render());
     }
     Ok(())

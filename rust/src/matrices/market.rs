@@ -4,6 +4,13 @@
 //! them instead of the synthetic stand-ins; the writer lets us cache
 //! generated operands for inspection.  Supports the `matrix coordinate
 //! real {general|symmetric}` and `matrix array real general` flavors.
+//!
+//! The coordinate reader follows the SuiteSparse conventions strictly:
+//! 1-based indices are validated against the header dimensions, duplicate
+//! entries are **summed** (assembled, as SuiteSparse defines them), and
+//! every malformed entry is a [`MarketError::Format`] carrying its line
+//! number.  `pattern` and `complex` fields are rejected up front with an
+//! explicit message instead of being misparsed as real data.
 
 use crate::linalg::Matrix;
 use std::io::{BufRead, BufReader, Write};
@@ -39,11 +46,12 @@ fn ferr(msg: impl Into<String>) -> MarketError {
 /// Read a `.mtx` file into a dense [`Matrix`].
 pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
     let file = std::fs::File::open(path)?;
-    let mut lines = BufReader::new(file).lines();
+    let mut lines = BufReader::new(file).lines().enumerate();
 
     let header = lines
         .next()
-        .ok_or_else(|| ferr("empty file"))??
+        .ok_or_else(|| ferr("empty file"))?
+        .1?
         .to_lowercase();
     if !header.starts_with("%%matrixmarket") {
         return Err(ferr("missing %%MatrixMarket header"));
@@ -54,8 +62,21 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
         Some(&"array") => false,
         other => return Err(ferr(format!("unsupported format {other:?}"))),
     };
-    if tokens.get(3) != Some(&"real") && tokens.get(3) != Some(&"integer") {
-        return Err(ferr("only real/integer fields supported"));
+    match tokens.get(3) {
+        Some(&"real") | Some(&"integer") => {}
+        Some(&"pattern") => {
+            return Err(ferr(
+                "line 1: `pattern` fields are not supported (no values to program onto \
+                 conductances); convert to real first",
+            ))
+        }
+        Some(&"complex") => {
+            return Err(ferr(
+                "line 1: `complex` fields are not supported (crossbar operands are real); \
+                 take the real part or the modulus first",
+            ))
+        }
+        other => return Err(ferr(format!("line 1: unsupported field {other:?}"))),
     }
     let symmetric = match tokens.get(4) {
         Some(&"general") | None => false,
@@ -65,29 +86,37 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
 
     // Skip comments, read the size line.
     let mut size_line = None;
-    for line in lines.by_ref() {
+    for (idx, line) in lines.by_ref() {
         let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
-        size_line = Some(t.to_string());
+        size_line = Some((idx + 1, t.to_string()));
         break;
     }
-    let size_line = size_line.ok_or_else(|| ferr("missing size line"))?;
+    let (size_lineno, size_line) = size_line.ok_or_else(|| ferr("missing size line"))?;
     let dims: Vec<usize> = size_line
         .split_whitespace()
-        .map(|t| t.parse::<usize>().map_err(|e| ferr(format!("bad size: {e}"))))
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|e| ferr(format!("line {size_lineno}: bad size: {e}")))
+        })
         .collect::<Result<_, _>>()?;
 
     if coordinate {
         let (&rows, &cols, &nnz) = match dims.as_slice() {
             [r, c, n] => (r, c, n),
-            _ => return Err(ferr("coordinate size line must be `rows cols nnz`")),
+            _ => {
+                return Err(ferr(format!(
+                    "line {size_lineno}: coordinate size line must be `rows cols nnz`"
+                )))
+            }
         };
         let mut m = Matrix::zeros(rows, cols);
         let mut seen = 0usize;
-        for line in lines {
+        for (idx, line) in lines {
+            let lineno = idx + 1;
             let line = line?;
             let t = line.trim();
             if t.is_empty() || t.starts_with('%') {
@@ -96,26 +125,39 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
             let mut it = t.split_whitespace();
             let i: usize = it
                 .next()
-                .ok_or_else(|| ferr("truncated entry"))?
+                .ok_or_else(|| ferr(format!("line {lineno}: truncated entry")))?
                 .parse()
-                .map_err(|e| ferr(format!("bad row index: {e}")))?;
+                .map_err(|e| ferr(format!("line {lineno}: bad row index: {e}")))?;
             let j: usize = it
                 .next()
-                .ok_or_else(|| ferr("truncated entry"))?
+                .ok_or_else(|| ferr(format!("line {lineno}: truncated entry")))?
                 .parse()
-                .map_err(|e| ferr(format!("bad col index: {e}")))?;
+                .map_err(|e| ferr(format!("line {lineno}: bad col index: {e}")))?;
             let v: f64 = it
                 .next()
-                .map(|s| s.parse())
-                .transpose()
-                .map_err(|e| ferr(format!("bad value: {e}")))?
-                .unwrap_or(1.0); // pattern matrices default to 1
-            if i == 0 || j == 0 || i > rows || j > cols {
-                return Err(ferr(format!("index ({i},{j}) out of range")));
+                .ok_or_else(|| {
+                    ferr(format!(
+                        "line {lineno}: missing value (pattern entries are not supported)"
+                    ))
+                })?
+                .parse()
+                .map_err(|e| ferr(format!("line {lineno}: bad value: {e}")))?;
+            if it.next().is_some() {
+                return Err(ferr(format!(
+                    "line {lineno}: trailing tokens after `row col value`"
+                )));
             }
-            m.set(i - 1, j - 1, v);
-            if symmetric {
-                m.set(j - 1, i - 1, v);
+            if i == 0 || j == 0 || i > rows || j > cols {
+                return Err(ferr(format!(
+                    "line {lineno}: index ({i},{j}) out of range for a {rows}x{cols} \
+                     operand (indices are 1-based)"
+                )));
+            }
+            // SuiteSparse convention: duplicate coordinates are assembled
+            // by summation (both in the stated and the mirrored triangle).
+            m.set(i - 1, j - 1, m.get(i - 1, j - 1) + v);
+            if symmetric && i != j {
+                m.set(j - 1, i - 1, m.get(j - 1, i - 1) + v);
             }
             seen += 1;
         }
@@ -126,10 +168,15 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
     } else {
         let (&rows, &cols) = match dims.as_slice() {
             [r, c] => (r, c),
-            _ => return Err(ferr("array size line must be `rows cols`")),
+            _ => {
+                return Err(ferr(format!(
+                    "line {size_lineno}: array size line must be `rows cols`"
+                )))
+            }
         };
         let mut values = Vec::with_capacity(rows * cols);
-        for line in lines {
+        for (idx, line) in lines {
+            let lineno = idx + 1;
             let line = line?;
             let t = line.trim();
             if t.is_empty() || t.starts_with('%') {
@@ -138,7 +185,7 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
             for tok in t.split_whitespace() {
                 values.push(
                     tok.parse::<f64>()
-                        .map_err(|e| ferr(format!("bad value: {e}")))?,
+                        .map_err(|e| ferr(format!("line {lineno}: bad value: {e}")))?,
                 );
             }
         }
@@ -237,6 +284,120 @@ mod tests {
         let e = read_mtx(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         assert!(matches!(e, MarketError::Format(_)));
+    }
+
+    #[test]
+    fn duplicate_entries_are_summed() {
+        // SuiteSparse assembly convention: duplicates accumulate.
+        let p = tmpfile("dup");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.5\n1 1 2.0\n2 1 -1.0\n",
+        )
+        .unwrap();
+        let m = read_mtx(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(m.get(0, 0), 3.5);
+        assert_eq!(m.get(1, 0), -1.0);
+    }
+
+    #[test]
+    fn symmetric_diagonal_is_not_double_counted() {
+        let p = tmpfile("symdiag");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n2 2 3\n1 1 4.0\n2 2 5.0\n2 1 -1.0\n",
+        )
+        .unwrap();
+        let m = read_mtx(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(m.get(0, 0), 4.0);
+        assert_eq!(m.get(1, 1), 5.0);
+        assert_eq!(m.get(0, 1), -1.0);
+        assert_eq!(m.get(1, 0), -1.0);
+    }
+
+    #[test]
+    fn out_of_range_index_reports_line_number() {
+        let p = tmpfile("oob");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n3 1 2.0\n",
+        )
+        .unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        let msg = e.to_string();
+        assert!(msg.contains("line 4"), "{msg}");
+        assert!(msg.contains("out of range"), "{msg}");
+        assert!(msg.contains("1-based"), "{msg}");
+    }
+
+    #[test]
+    fn zero_index_reports_line_number() {
+        let p = tmpfile("zero");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n",
+        )
+        .unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert!(e.to_string().contains("line 3"), "{e}");
+    }
+
+    #[test]
+    fn pattern_field_is_rejected_explicitly() {
+        let p = tmpfile("pat");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 1\n",
+        )
+        .unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        let msg = e.to_string();
+        assert!(msg.contains("pattern"), "{msg}");
+        assert!(msg.contains("line 1"), "{msg}");
+    }
+
+    #[test]
+    fn complex_field_is_rejected_explicitly() {
+        let p = tmpfile("cplx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate complex general\n2 2 1\n1 1 1.0 0.0\n",
+        )
+        .unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        let msg = e.to_string();
+        assert!(msg.contains("complex"), "{msg}");
+        assert!(msg.contains("line 1"), "{msg}");
+    }
+
+    #[test]
+    fn missing_value_and_trailing_tokens_are_errors() {
+        let p = tmpfile("mval");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1\n",
+        )
+        .unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert!(e.to_string().contains("line 3"), "{e}");
+        assert!(e.to_string().contains("missing value"), "{e}");
+
+        let p = tmpfile("trail");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0 9.9\n",
+        )
+        .unwrap();
+        let e = read_mtx(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert!(e.to_string().contains("trailing tokens"), "{e}");
     }
 
     #[test]

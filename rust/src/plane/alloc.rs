@@ -1,0 +1,168 @@
+//! Tile-level residency allocator: which physical tile slots of which MCA
+//! hold which operand's chunks.
+//!
+//! An MCA is reassigned (time-multiplexed) across many chunks — the
+//! paper's Fig 5 normalization factor — and, since the plane became
+//! multi-tenant, across many *operands* too.  The allocator tracks one
+//! **slot** per resident chunk on its owning MCA:
+//!
+//! * allocation is deterministic (lowest freed slot first, then the next
+//!   never-used index), so evict-then-reprogram reuses the same physical
+//!   slots instead of growing the footprint;
+//! * an optional per-MCA capacity (`SystemConfig::tile_slots`, `0` =
+//!   unbounded) turns over-subscription into a clean error instead of
+//!   silent unbounded residency.
+
+use std::collections::BTreeSet;
+
+/// Handle to one operand resident on an
+/// [`ExecutionPlane`](crate::plane::ExecutionPlane), returned by
+/// [`program`](crate::plane::ExecutionPlane::program) and consumed by
+/// [`execute_batch`](crate::plane::ExecutionPlane::execute_batch) /
+/// [`evict`](crate::plane::ExecutionPlane::evict).  Ids are never reused
+/// within a plane's lifetime, so a stale handle (evicted operand) is a
+/// clean error rather than an aliased residency.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct OperandId(pub(crate) u64);
+
+impl std::fmt::Display for OperandId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "op{}", self.0)
+    }
+}
+
+/// Per-MCA tile-slot bookkeeping for one plane.
+pub struct TileAllocator {
+    /// Per-MCA slot capacity; `0` = unbounded.
+    capacity: usize,
+    /// Per-MCA next never-used slot index (the high-water mark).
+    next_fresh: Vec<usize>,
+    /// Per-MCA freed slots, reallocated lowest-first.
+    free: Vec<BTreeSet<usize>>,
+    in_use: usize,
+}
+
+impl TileAllocator {
+    pub fn new(mcas: usize, capacity: usize) -> TileAllocator {
+        TileAllocator {
+            capacity,
+            next_fresh: vec![0; mcas],
+            free: vec![BTreeSet::new(); mcas],
+            in_use: 0,
+        }
+    }
+
+    /// Per-MCA slot capacity (`0` = unbounded).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Claim one tile slot on `mca`: the lowest freed slot if any, else the
+    /// next never-used index (capacity permitting).
+    pub fn alloc(&mut self, mca: usize) -> Result<usize, String> {
+        if let Some(&slot) = self.free[mca].iter().next() {
+            self.free[mca].remove(&slot);
+            self.in_use += 1;
+            return Ok(slot);
+        }
+        let fresh = self.next_fresh[mca];
+        if self.capacity > 0 && fresh >= self.capacity {
+            return Err(format!(
+                "MCA {mca} is out of tile slots ({} per MCA, all in use); evict an \
+                 operand or raise system.tile_slots",
+                self.capacity
+            ));
+        }
+        self.next_fresh[mca] = fresh + 1;
+        self.in_use += 1;
+        Ok(fresh)
+    }
+
+    /// Return a slot to `mca`'s free list.
+    pub fn free(&mut self, mca: usize, slot: usize) {
+        debug_assert!(slot < self.next_fresh[mca], "freeing a never-allocated slot");
+        if self.free[mca].insert(slot) {
+            self.in_use -= 1;
+        }
+    }
+
+    /// Slots currently held across all MCAs.
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Highest slot count any MCA has ever needed (never shrinks; evicted
+    /// slots are reused before this grows).
+    pub fn high_water(&self) -> usize {
+        self.next_fresh.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_sequential_per_mca() {
+        let mut a = TileAllocator::new(2, 0);
+        assert_eq!(a.alloc(0).unwrap(), 0);
+        assert_eq!(a.alloc(0).unwrap(), 1);
+        assert_eq!(a.alloc(1).unwrap(), 0);
+        assert_eq!(a.in_use(), 3);
+        assert_eq!(a.high_water(), 2);
+    }
+
+    #[test]
+    fn freed_slots_are_reused_lowest_first() {
+        let mut a = TileAllocator::new(1, 0);
+        for want in 0..4 {
+            assert_eq!(a.alloc(0).unwrap(), want);
+        }
+        a.free(0, 2);
+        a.free(0, 1);
+        assert_eq!(a.in_use(), 2);
+        // Lowest freed slot first, then the other — no fresh growth.
+        assert_eq!(a.alloc(0).unwrap(), 1);
+        assert_eq!(a.alloc(0).unwrap(), 2);
+        assert_eq!(a.high_water(), 4);
+        // Only once both freed slots are reclaimed does fresh allocation
+        // resume.
+        assert_eq!(a.alloc(0).unwrap(), 4);
+        assert_eq!(a.high_water(), 5);
+    }
+
+    #[test]
+    fn capacity_is_enforced_and_freed_slots_lift_it() {
+        let mut a = TileAllocator::new(1, 2);
+        a.alloc(0).unwrap();
+        a.alloc(0).unwrap();
+        let err = a.alloc(0).unwrap_err();
+        assert!(err.contains("out of tile slots"), "{err}");
+        a.free(0, 0);
+        assert_eq!(a.alloc(0).unwrap(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_means_unbounded() {
+        let mut a = TileAllocator::new(1, 0);
+        for _ in 0..10_000 {
+            a.alloc(0).unwrap();
+        }
+        assert_eq!(a.in_use(), 10_000);
+    }
+
+    #[test]
+    fn double_free_is_idempotent() {
+        let mut a = TileAllocator::new(1, 0);
+        a.alloc(0).unwrap();
+        a.free(0, 0);
+        a.free(0, 0);
+        assert_eq!(a.in_use(), 0);
+    }
+
+    #[test]
+    fn operand_id_formats() {
+        assert_eq!(OperandId(3).to_string(), "op3");
+        assert_ne!(OperandId(1), OperandId(2));
+    }
+}

@@ -4,18 +4,19 @@
 //! Historically the one-shot coordinator and the serving layer each owned
 //! a private copy of the same machinery (thread pool, chunk dispatch,
 //! partial-product gather, ledger collection).  [`ExecutionPlane`] unifies
-//! them:
+//! them — and since the multi-tenant refactor it hosts *many* resident
+//! operands on one shard pool:
 //!
 //! ```text
 //!                        ┌────────────────────────────┐
 //!   one-shot             │       ExecutionPlane       │        resident
 //!   (coordinator)        │                            │        (server::Session)
 //!                        │  PlacementPolicy: MCA→shard│
-//!   execute_once(A, x) ──┤  shard 0 ── MCA {0, 3, …}  ├── program(A)
-//!     program+execute    │  shard 1 ── MCA {1, 4, …}  │     write–verify once
-//!     fused per chunk,   │  shard 2 ── MCA {2, 5, …}  │   execute_batch(xs)
-//!     teardown after     │   (long-lived threads)     │     reads only, ∞ solves
-//!                        └────────────────────────────┘
+//!   execute_once(A, x) ──┤  shard 0 ── MCA {0, 3, …}  ├── program(A)   → op0
+//!     program+execute    │  shard 1 ── MCA {1, 4, …}  │   program(B)   → op1
+//!     fused per chunk,   │  shard 2 ── MCA {2, 5, …}  │   execute_batch(op0, xs)
+//!     teardown after     │   (long-lived threads)     │   execute_batch(op1, xs)
+//!                        └────────────────────────────┘   evict(op0)
 //! ```
 //!
 //! * The **leader** enumerates occupied chunks through
@@ -23,18 +24,34 @@
 //!   cheap column-range bound — and streams one extracted, zero-padded
 //!   tile at a time over bounded channels (backpressure), so even a
 //!   65,536² operand never materializes densely.
-//! * Each **shard** is a long-lived worker thread owning the
-//!   [`TileExecutor`](crate::ec::TileExecutor)s of the MCAs a
-//!   [`PlacementPolicy`] assigned to it; per-shard programming runs in
-//!   parallel across shards.
+//! * Each **shard** is a long-lived worker thread owning, per resident
+//!   operand, the [`TileExecutor`](crate::ec::TileExecutor)s of the MCAs a
+//!   [`PlacementPolicy`] assigned to it.  Each operand gets a *fresh*
+//!   executor set seeded exactly like a dedicated plane would be, so
+//!   multi-tenant residency is **bit-identical** to one plane per operand.
+//! * A [`TileAllocator`] tracks which tile slots of which MCA hold which
+//!   operand's chunks: eviction frees slots for reuse, and an optional
+//!   per-MCA capacity (`SystemConfig::tile_slots`) makes over-subscription
+//!   a clean error.
 //! * The leader gathers partial products and reduces them in
 //!   **deterministic chunk order** ([`reduce_partials`]), so results are
 //!   bit-reproducible for a given seed regardless of shard count,
 //!   placement policy or thread scheduling.
+//!
+//! **Fault tolerance.**  Shard jobs run under `catch_unwind` (a panicking
+//! shard seals its ledgers into a `ShardMsg::Failed` report and
+//! exits), leader-side tile extraction is unwind-caught too, and every
+//! gather is a *supervised* receive: per-shard seal tracking plus a
+//! liveness check against the worker [`JoinHandle`]s.  A shard panic
+//! mid-walk therefore surfaces as a clean `Err` from `program` /
+//! `execute_batch` / `execute_once` — never a hang — and the plane marks
+//! itself failed so later calls fail fast instead of desynchronizing.
 
+pub mod alloc;
 pub mod placement;
 pub(crate) mod shard;
 
+pub use self::alloc::{OperandId, TileAllocator};
 pub use placement::{
     LoadBalancedPlacement, Placement, PlacementPolicy, RoundRobinPlacement,
     SparsityAwarePlacement,
@@ -50,14 +67,19 @@ use crate::runtime::Backend;
 use crate::virtualization::{ChunkPlan, ChunkSpec};
 use shard::{ShardContext, ShardJob, ShardMsg};
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Bound on in-flight jobs per shard (backpressure: caps leader-side tile
 /// extraction memory at `depth × shards` tiles).
 pub(crate) const JOB_QUEUE_DEPTH: usize = 4;
+
+/// Supervision interval of the gather loops: how often a blocked receive
+/// wakes up to check shard liveness.
+const SUPERVISE_INTERVAL: Duration = Duration::from_millis(200);
 
 /// Reduce gathered per-chunk partial products into the output vector in
 /// deterministic `(block_row, block_col)` order, so the sum is
@@ -118,7 +140,146 @@ pub struct BatchOutcome {
     pub wall_seconds: f64,
 }
 
-/// A sharded execution plane bound to one operand's [`ChunkPlan`].
+/// One operand's leader-side residency bookkeeping.
+struct Residency {
+    plan: ChunkPlan,
+    chunks_resident: usize,
+    /// Monotonic solve counter (drives the counter-based noise streams);
+    /// advances even for failed batches so retries never reuse noise.
+    next_solve: u64,
+    /// This operand's cumulative per-MCA ledger slice.
+    ledgers: Vec<EnergyLedger>,
+    /// `(mca, slot)` pairs held in the tile allocator.
+    slots: Vec<(usize, usize)>,
+}
+
+impl Residency {
+    fn energy_totals(&self) -> (f64, f64) {
+        (
+            self.ledgers.iter().map(|l| l.write_energy_j).sum(),
+            self.ledgers.iter().map(|l| l.read_energy_j).sum(),
+        )
+    }
+}
+
+/// Outcome of one supervised gather: chunk-level errors are recoverable
+/// (the plane stays serviceable), fatal errors (a shard panicked or
+/// exited mid-walk) poison the plane.
+struct WalkOutcome {
+    chunk_err: Option<String>,
+    fatal: Option<String>,
+}
+
+/// Mutable bookkeeping of one supervised gather.
+struct GatherState {
+    done: Vec<bool>,
+    pending: usize,
+    chunk_err: Option<String>,
+    fatal: Option<String>,
+}
+
+/// Route one shard reply: seals and failures update the per-shard done
+/// tracking; everything else goes to the walk-specific `on_msg` handler.
+fn dispatch_msg<F: FnMut(ShardMsg) -> Option<String>>(
+    st: &mut GatherState,
+    on_msg: &mut F,
+    msg: ShardMsg,
+) {
+    match msg {
+        ShardMsg::Sealed { shard, ledgers } => {
+            if let Some(d) = st.done.get_mut(shard) {
+                if !*d {
+                    *d = true;
+                    st.pending -= 1;
+                }
+            }
+            if let Some(e) = on_msg(ShardMsg::Sealed { shard, ledgers }) {
+                st.chunk_err.get_or_insert(e);
+            }
+        }
+        ShardMsg::Failed {
+            shard,
+            error,
+            ledgers,
+        } => {
+            if let Some(d) = st.done.get_mut(shard) {
+                if !*d {
+                    *d = true;
+                    st.pending -= 1;
+                }
+            }
+            // Deliver the dying shard's final ledgers so energy totals
+            // stay as synced as they can be.
+            let _ = on_msg(ShardMsg::Sealed { shard, ledgers });
+            st.fatal
+                .get_or_insert(format!("shard {shard} panicked: {error}"));
+        }
+        msg => {
+            if let Some(e) = on_msg(msg) {
+                st.chunk_err.get_or_insert(e);
+            }
+        }
+    }
+}
+
+/// Supervised gather: drain one walk's replies until every shard has
+/// sealed, with a periodic liveness check against the worker handles so a
+/// shard that dies without sealing (panic, abort) surfaces as an error
+/// instead of blocking the receive forever.
+///
+/// `on_msg` handles the walk-specific messages (`Once` / `Programmed` /
+/// `Partial`) and stores `Sealed` ledgers; it returns a chunk-level error
+/// to record (first one wins).
+fn drain_walk(
+    results: &mpsc::Receiver<ShardMsg>,
+    handles: &[JoinHandle<()>],
+    shards: usize,
+    mut on_msg: impl FnMut(ShardMsg) -> Option<String>,
+) -> WalkOutcome {
+    let mut st = GatherState {
+        done: vec![false; shards],
+        pending: shards,
+        chunk_err: None,
+        fatal: None,
+    };
+    while st.pending > 0 {
+        match results.recv_timeout(SUPERVISE_INTERVAL) {
+            Ok(msg) => dispatch_msg(&mut st, &mut on_msg, msg),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // Liveness sweep, race-free against a shard sealing right
+                // at the deadline: snapshot liveness FIRST, then drain the
+                // queue.  A shard sends its seal strictly before exiting,
+                // so if the snapshot saw it finished, its seal (if any)
+                // is consumed by the drain below before the verdict.
+                let finished: Vec<bool> = (0..shards)
+                    .map(|s| handles.get(s).map(|h| h.is_finished()).unwrap_or(true))
+                    .collect();
+                while let Ok(msg) = results.try_recv() {
+                    dispatch_msg(&mut st, &mut on_msg, msg);
+                }
+                for (s, &gone) in finished.iter().enumerate() {
+                    if gone && !st.done[s] {
+                        st.done[s] = true;
+                        st.pending -= 1;
+                        st.fatal
+                            .get_or_insert(format!("shard {s} exited without sealing its walk"));
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                st.fatal
+                    .get_or_insert("all shards exited before completing the walk".to_string());
+                break;
+            }
+        }
+    }
+    WalkOutcome {
+        chunk_err: st.chunk_err,
+        fatal: st.fatal,
+    }
+}
+
+/// A sharded execution plane hosting any number of resident operands.
 ///
 /// Built by [`build`](ExecutionPlane::build), which spawns the shard pool
 /// under the configured [`Placement`] policy.  Two execution modes share
@@ -129,37 +290,38 @@ pub struct BatchOutcome {
 ///   consumed (workers join on drop).
 /// * [`program`](ExecutionPlane::program) then
 ///   [`execute_batch`](ExecutionPlane::execute_batch) — the resident path:
-///   the write–verify pass is paid once, every batch afterwards costs only
-///   input encodes and crossbar reads.
+///   the write–verify pass is paid once per operand, every batch
+///   afterwards costs only input encodes and crossbar reads.  Many
+///   operands share the pool concurrently; [`evict`](ExecutionPlane::evict)
+///   releases one residency's tile slots for reuse.
 pub struct ExecutionPlane {
+    config: SystemConfig,
     opts: SolveOptions,
-    plan: ChunkPlan,
     senders: Vec<mpsc::SyncSender<ShardJob>>,
     results: mpsc::Receiver<ShardMsg>,
     handles: Vec<JoinHandle<()>>,
     /// MCA index → shard index (stable for the plane's lifetime).
     assignment: Vec<usize>,
-    /// Set once [`program`](Self::program) has started (even a failed
-    /// pass may leave tiles resident on some shards, so a plane is never
-    /// re-programmable).  Distinct from `resident_chunks`: an operand
-    /// whose every block is zero programs successfully with zero resident
-    /// chunks and still serves (all-zero) solves.
-    programmed: bool,
-    /// Set only when a programming pass completed successfully —
-    /// [`execute_batch`](Self::execute_batch) refuses to serve from a
-    /// partially programmed plane (missing chunks would silently drop
-    /// their contribution to `y`).
-    program_ok: bool,
-    resident_chunks: usize,
-    next_solve: u64,
-    /// Latest cumulative ledger snapshot per MCA.
-    ledgers: Vec<EnergyLedger>,
+    /// Live residencies by operand id.
+    residencies: BTreeMap<u64, Residency>,
+    alloc: TileAllocator,
+    next_operand: u64,
+    /// Ledger snapshots of the fused one-shot path.
+    oneshot_ledgers: Vec<EnergyLedger>,
+    /// `(write, read)` energy of evicted residencies, so plane-wide totals
+    /// stay monotone across evictions.
+    retired_energy: (f64, f64),
+    /// Set when a shard died (panic or unexpected exit): the pool can no
+    /// longer complete gathers consistently, so every later call fails
+    /// fast with this message instead of desynchronizing.
+    failed: Option<String>,
 }
 
 impl ExecutionPlane {
-    /// Spawn the shard pool for `source`'s chunk plan.  `source` is only
-    /// used for placement statistics here; tiles are extracted lazily by
-    /// the execution calls.
+    /// Spawn the shard pool sized for `source`'s chunk plan.  `source` is
+    /// only used for placement statistics and geometry validation here;
+    /// tiles are extracted lazily by the execution calls, and operands of
+    /// *other* dimensions may be programmed later — the pool is shared.
     pub fn build(
         source: &dyn MatrixSource,
         config: &SystemConfig,
@@ -195,6 +357,7 @@ impl ExecutionPlane {
             let (tx, rx) = mpsc::sync_channel::<ShardJob>(JOB_QUEUE_DEPTH);
             senders.push(tx);
             let ctx = ShardContext {
+                shard: s,
                 cell: tile,
                 opts: opts.clone(),
                 backend: backend.clone(),
@@ -211,22 +374,19 @@ impl ExecutionPlane {
         drop(msg_tx);
 
         Ok(ExecutionPlane {
+            config: *config,
             opts: opts.clone(),
-            plan,
             senders,
             results: msg_rx,
             handles,
             assignment,
-            programmed: false,
-            program_ok: false,
-            resident_chunks: 0,
-            next_solve: 0,
-            ledgers: vec![EnergyLedger::default(); mcas],
+            residencies: BTreeMap::new(),
+            alloc: TileAllocator::new(mcas, config.tile_slots),
+            next_operand: 0,
+            oneshot_ledgers: vec![EnergyLedger::default(); mcas],
+            retired_energy: (0.0, 0.0),
+            failed: None,
         })
-    }
-
-    pub fn plan(&self) -> &ChunkPlan {
-        &self.plan
     }
 
     /// Number of shard worker threads.
@@ -239,61 +399,69 @@ impl ExecutionPlane {
         &self.assignment
     }
 
-    /// Chunks currently resident (0 before [`program`](Self::program)).
+    /// The physical system configuration the pool was built for.
+    pub fn system_config(&self) -> SystemConfig {
+        self.config
+    }
+
+    /// The solve options every residency on this plane shares.
+    pub fn options(&self) -> &SolveOptions {
+        &self.opts
+    }
+
+    /// Operands currently resident.
+    pub fn resident_operands(&self) -> usize {
+        self.residencies.len()
+    }
+
+    /// Chunks currently resident across all operands.
     pub fn resident_chunks(&self) -> usize {
-        self.resident_chunks
+        self.residencies.values().map(|r| r.chunks_resident).sum()
     }
 
-    /// Latest cumulative per-MCA ledger snapshots.
-    pub fn ledgers(&self) -> &[EnergyLedger] {
-        &self.ledgers
+    /// Tile slots currently held across all MCAs.
+    pub fn slots_in_use(&self) -> usize {
+        self.alloc.in_use()
     }
 
-    /// Total (write, read) energy across all MCAs so far.
+    /// Highest tile-slot count any MCA has ever needed (eviction makes
+    /// slots reusable, so reprogramming does not grow this).
+    pub fn slot_high_water(&self) -> usize {
+        self.alloc.high_water()
+    }
+
+    /// The failure that poisoned this plane, if any (a shard panicked or
+    /// exited mid-walk).
+    pub fn failure(&self) -> Option<&str> {
+        self.failed.as_deref()
+    }
+
+    /// Total (write, read) energy across the plane so far: one-shot
+    /// executors, live residencies, and evicted (retired) residencies.
     pub fn energy_totals(&self) -> (f64, f64) {
-        (
-            self.ledgers.iter().map(|l| l.write_energy_j).sum(),
-            self.ledgers.iter().map(|l| l.read_energy_j).sum(),
-        )
+        let mut w: f64 = self.oneshot_ledgers.iter().map(|l| l.write_energy_j).sum();
+        let mut r: f64 = self.oneshot_ledgers.iter().map(|l| l.read_energy_j).sum();
+        w += self.retired_energy.0;
+        r += self.retired_energy.1;
+        for res in self.residencies.values() {
+            let (rw, rr) = res.energy_totals();
+            w += rw;
+            r += rr;
+        }
+        (w, r)
     }
 
-    /// Stream the occupied chunks to the shards: enumerate through
-    /// [`ChunkPlan::nonzero_chunks`], extract one zero-padded tile at a
-    /// time, and dispatch to the owning shard.  Returns
-    /// `(dispatched, skipped)`.
-    fn scatter<F>(&self, source: &dyn MatrixSource, mut job: F) -> Result<(usize, usize), String>
-    where
-        F: FnMut(ChunkSpec, Matrix) -> ShardJob,
-    {
-        let tile = self.plan.geometry.cell_size;
-        let mut dispatched = 0usize;
-        for spec in self.plan.nonzero_chunks(source) {
-            let a_tile = source.block(spec.row0, spec.col0, tile, tile);
-            let s = self.assignment[spec.mca_index];
-            self.senders[s]
-                .send(job(spec, a_tile))
-                .map_err(|_| format!("shard {s} died"))?;
-            dispatched += 1;
-        }
-        // Close the walk so every shard snapshots its ledgers.
-        for (s, tx) in self.senders.iter().enumerate() {
-            tx.send(ShardJob::Seal)
-                .map_err(|_| format!("shard {s} died at seal"))?;
-        }
-        Ok((dispatched, self.plan.total_chunks() - dispatched))
+    /// (write, read) energy attributable to one resident operand, or
+    /// `None` when `id` is not resident.
+    pub fn operand_energy_totals(&self, id: OperandId) -> Option<(f64, f64)> {
+        self.residencies.get(&id.0).map(|r| r.energy_totals())
     }
 
-    fn check_dims(&self, source: &dyn MatrixSource) -> Result<(), String> {
-        if source.nrows() != self.plan.m || source.ncols() != self.plan.n {
-            return Err(format!(
-                "operand is {}x{} but the plane was built for {}x{}",
-                source.nrows(),
-                source.ncols(),
-                self.plan.m,
-                self.plan.n
-            ));
+    fn ensure_live(&self) -> Result<(), String> {
+        match &self.failed {
+            Some(e) => Err(format!("execution plane failed: {e}")),
+            None => Ok(()),
         }
-        Ok(())
     }
 
     /// Run one distributed MVM end-to-end (the one-shot path): program +
@@ -305,63 +473,87 @@ impl ExecutionPlane {
         source: &dyn MatrixSource,
         x: &Vector,
     ) -> Result<SolveReport, String> {
-        if self.programmed {
-            // The programming pass consumed the per-MCA persistent streams;
-            // fusing another program+execute on top would break the
-            // bit-reproducibility contract and double-charge write energy.
+        self.ensure_live()?;
+        if !self.residencies.is_empty() {
+            // The one-shot path consumes the plane, tearing down every
+            // residency with it; fusing it onto a serving plane is always
+            // a caller bug.
             return Err(
-                "this plane already holds a resident operand; build a fresh plane for \
-                 one-shot solves"
+                "this plane holds resident operands; build a fresh plane for one-shot solves"
                     .to_string(),
             );
         }
         let start = Instant::now();
-        self.check_dims(source)?;
-        let (m, n) = (self.plan.m, self.plan.n);
+        let plan = ChunkPlan::new(self.config.geometry(), source.nrows(), source.ncols());
+        let (m, n) = (plan.m, plan.n);
         if x.len() != n {
             return Err(format!("x has length {} but A has {n} columns", x.len()));
         }
-        let tile = self.plan.geometry.cell_size;
-        let (dispatched, skipped) = self.scatter(source, |spec, a_tile| ShardJob::RunOnce {
-            spec,
-            a_tile,
-            x_chunk: x.slice_padded(spec.col0, tile),
-        })?;
-        // One-shot: the walk is fully dispatched, so close the job
-        // channels now.  A shard that panics then drops its reply sender
-        // on exit, turning the gather below into a clean error instead of
-        // a hang (parity with the pre-plane coordinator).
+        let tile = plan.geometry.cell_size;
+        let (dispatched, walk_err) = scatter_walk(
+            &self.senders,
+            &self.assignment,
+            &plan,
+            source,
+            None,
+            |spec, a_tile| {
+                Ok(ShardJob::RunOnce {
+                    spec,
+                    a_tile,
+                    x_chunk: x.slice_padded(spec.col0, tile),
+                })
+            },
+        );
+        // One-shot: fully dispatched, so close the job channels now; the
+        // workers drain, seal, and exit.
         let shards = self.senders.len();
         self.senders.clear();
+
         let mut partials: BTreeMap<(usize, usize), Vector> = BTreeMap::new();
         let mut wv_sum = 0.0f64;
         let mut got = 0usize;
-        let mut sealed = 0usize;
-        while got < dispatched || sealed < shards {
-            match self.results.recv() {
-                Ok(ShardMsg::Once {
+        let outcome = {
+            let results = &self.results;
+            let handles = &self.handles;
+            let ledgers = &mut self.oneshot_ledgers;
+            drain_walk(results, handles, shards, |msg| match msg {
+                ShardMsg::Once {
                     block_row,
                     block_col,
                     outcome,
-                }) => {
+                } => {
                     got += 1;
-                    let (partial, iters) =
-                        outcome.map_err(|e| format!("chunk ({block_row},{block_col}): {e}"))?;
-                    wv_sum += iters as f64;
-                    partials.insert((block_row, block_col), partial);
-                }
-                Ok(ShardMsg::Sealed { ledgers }) => {
-                    sealed += 1;
-                    for (idx, l) in ledgers {
-                        self.ledgers[idx] = l;
+                    match outcome {
+                        Ok((partial, iters)) => {
+                            wv_sum += iters as f64;
+                            partials.insert((block_row, block_col), partial);
+                            None
+                        }
+                        Err(e) => Some(format!("chunk ({block_row},{block_col}): {e}")),
                     }
                 }
-                Ok(_) => {}
-                Err(_) => {
-                    return Err("shards exited before delivering all results".to_string())
+                ShardMsg::Sealed { ledgers: ls, .. } => {
+                    for (idx, l) in ls {
+                        if let Some(slot) = ledgers.get_mut(idx) {
+                            *slot = l;
+                        }
+                    }
+                    None
                 }
-            }
+                _ => None,
+            })
+        };
+        if let Some(fatal) = outcome.fatal {
+            self.failed = Some(fatal.clone());
+            return Err(fatal);
         }
+        if let Some(e) = walk_err.or(outcome.chunk_err) {
+            return Err(e);
+        }
+        if got < dispatched {
+            return Err("shards exited before delivering all results".to_string());
+        }
+        let skipped = plan.total_chunks() - dispatched;
         let y = reduce_partials(m, tile, &partials);
 
         // Ground truth (opt-out: O(m·n) host work, infeasible at 65k²).
@@ -375,16 +567,16 @@ impl ExecutionPlane {
             report.rel_err_inf = f64::NAN;
         }
         report.y = y;
-        report.chunks_total = self.plan.total_chunks();
+        report.chunks_total = plan.total_chunks();
         report.chunks_skipped = skipped;
-        report.normalization_factor = self.plan.normalization_factor();
-        report.row_reassignments = self.plan.row_reassignments();
+        report.normalization_factor = plan.normalization_factor();
+        report.row_reassignments = plan.row_reassignments();
         report.mean_wv_iters = if dispatched > 0 {
             wv_sum / dispatched as f64
         } else {
             0.0
         };
-        report.fill_from_ledgers(&self.ledgers);
+        report.fill_from_ledgers(&self.oneshot_ledgers);
         report.wall_seconds = start.elapsed().as_secs_f64();
         crate::log_info!(
             "plane",
@@ -401,80 +593,112 @@ impl ExecutionPlane {
 
     /// Program `source` resident: scatter and write–verify every non-zero
     /// chunk (per-shard programming runs in parallel) and return the
-    /// one-time programming report.  Afterwards
-    /// [`execute_batch`](Self::execute_batch) serves unlimited solves.
-    pub fn program(&mut self, source: &dyn MatrixSource) -> Result<ProgramReport, String> {
-        if self.programmed {
-            return Err("an operand is already resident on this plane".to_string());
-        }
+    /// operand's handle with its one-time programming report.  Afterwards
+    /// [`execute_batch`](Self::execute_batch) serves unlimited solves
+    /// against it, interleaved freely with other residencies.
+    ///
+    /// On failure the partial residency is evicted (tile slots and
+    /// shard-side state reclaimed), so the plane stays serviceable and a
+    /// retry programs a fresh, bit-reproducible residency.
+    pub fn program(
+        &mut self,
+        source: &dyn MatrixSource,
+    ) -> Result<(OperandId, ProgramReport), String> {
+        self.ensure_live()?;
         let start = Instant::now();
-        self.check_dims(source)?;
-        // Flag before dispatch: even a failed pass may leave some chunks
-        // resident on shards, so a retry on the same plane must be
-        // rejected (it would duplicate residency and desynchronize every
-        // later gather).
-        self.programmed = true;
-        let (m, n) = (self.plan.m, self.plan.n);
-        let (dispatched, skipped) =
-            self.scatter(source, |spec, a_tile| ShardJob::Program { spec, a_tile })?;
+        let plan = ChunkPlan::new(self.config.geometry(), source.nrows(), source.ncols());
+        let (m, n) = (plan.m, plan.n);
+        let op = self.next_operand;
+        self.next_operand += 1;
+        let id = OperandId(op);
+        let mcas = plan.geometry.mcas();
+
+        let mut slots: Vec<(usize, usize)> = Vec::new();
+        let (dispatched, walk_err) = {
+            let alloc = &mut self.alloc;
+            let slots = &mut slots;
+            scatter_walk(
+                &self.senders,
+                &self.assignment,
+                &plan,
+                source,
+                Some(op),
+                |spec, a_tile| {
+                    let slot = alloc.alloc(spec.mca_index)?;
+                    slots.push((spec.mca_index, slot));
+                    Ok(ShardJob::Program { op, spec, a_tile })
+                },
+            )
+        };
 
         let shards = self.senders.len();
+        let mut res = Residency {
+            plan: plan.clone(),
+            chunks_resident: dispatched,
+            next_solve: 0,
+            ledgers: vec![EnergyLedger::default(); mcas],
+            slots,
+        };
         let mut iters_sum = 0.0f64;
         let mut acks = 0usize;
-        let mut sealed = 0usize;
-        let mut first_err: Option<String> = None;
-        while acks < dispatched || sealed < shards {
-            match self.results.recv() {
-                Ok(ShardMsg::Programmed {
+        let outcome = {
+            let results = &self.results;
+            let handles = &self.handles;
+            let ledgers = &mut res.ledgers;
+            drain_walk(results, handles, shards, |msg| match msg {
+                ShardMsg::Programmed {
                     block_row,
                     block_col,
                     outcome,
-                }) => {
+                } => {
                     acks += 1;
                     match outcome {
-                        Ok(iters) => iters_sum += iters as f64,
+                        Ok(iters) => {
+                            iters_sum += iters as f64;
+                            None
+                        }
                         Err(e) => {
-                            if first_err.is_none() {
-                                first_err = Some(format!(
-                                    "programming chunk ({block_row},{block_col}): {e}"
-                                ));
-                            }
+                            Some(format!("programming chunk ({block_row},{block_col}): {e}"))
                         }
                     }
                 }
-                Ok(ShardMsg::Sealed { ledgers }) => {
-                    sealed += 1;
-                    for (idx, l) in ledgers {
-                        self.ledgers[idx] = l;
+                ShardMsg::Sealed { ledgers: ls, .. } => {
+                    for (idx, l) in ls {
+                        if let Some(slot) = ledgers.get_mut(idx) {
+                            *slot = l;
+                        }
                     }
+                    None
                 }
-                Ok(_) => {}
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some("shards exited during programming".to_string());
-                    }
-                    break;
-                }
-            }
+                _ => None,
+            })
+        };
+        if let Some(fatal) = outcome.fatal {
+            self.failed = Some(fatal.clone());
+            self.retire(op, res);
+            return Err(fatal);
         }
-        if let Some(e) = first_err {
+        let mut err = walk_err.or(outcome.chunk_err);
+        if err.is_none() && acks < dispatched {
+            err = Some("shards exited before acknowledging every chunk".to_string());
+        }
+        if let Some(e) = err {
+            // Reclaim the partial residency so the plane stays clean.
+            self.retire(op, res);
             return Err(e);
         }
-        self.resident_chunks = dispatched;
-        self.program_ok = true;
 
-        let used: Vec<&EnergyLedger> =
-            self.ledgers.iter().filter(|l| l.write_passes > 0).collect();
+        let used: Vec<&EnergyLedger> = res.ledgers.iter().filter(|l| l.write_passes > 0).collect();
         let write_energy_j: f64 = used.iter().map(|l| l.write_energy_j).sum();
         let write_latency_s = used.iter().map(|l| l.write_latency_s).fold(0.0, f64::max);
         let report = ProgramReport {
             m,
             n,
-            chunks_total: self.plan.total_chunks(),
+            chunks_total: plan.total_chunks(),
             chunks_resident: dispatched,
-            chunks_skipped: skipped,
+            chunks_skipped: plan.total_chunks() - dispatched,
             mcas_used: used.len(),
-            normalization_factor: self.plan.normalization_factor(),
+            normalization_factor: plan.normalization_factor(),
             mean_wv_iters: if dispatched > 0 {
                 iters_sum / dispatched as f64
             } else {
@@ -484,26 +708,38 @@ impl ExecutionPlane {
             write_latency_s,
             wall_seconds: start.elapsed().as_secs_f64(),
         };
+        self.residencies.insert(op, res);
         crate::log_info!(
             "plane",
-            "programmed {m}x{n}: {} resident chunks ({} skipped) on {} MCAs / {} shards, \
-             E_w {:.3e} J, wall {:.2}s",
-            dispatched,
-            skipped,
+            "programmed {id} ({m}x{n}): {} resident chunks ({} skipped) on {} MCAs / {} \
+             shards, E_w {:.3e} J, wall {:.2}s ({} operands resident)",
+            report.chunks_resident,
+            report.chunks_skipped,
             report.mcas_used,
             shards,
             write_energy_j,
-            report.wall_seconds
+            report.wall_seconds,
+            self.residencies.len()
         );
-        Ok(report)
+        Ok((id, report))
     }
 
-    /// Serve a batch of solves against the resident operand in one chunk
+    /// Serve a batch of solves against resident operand `id` in one chunk
     /// walk: every resident tile is visited once and all input vectors run
-    /// against it.  Bit-identical to the same vectors solved sequentially
-    /// (counter-based execution noise streams — see [`exec_stream_seed`]).
-    pub fn execute_batch(&mut self, xs: &[Vector]) -> Result<BatchOutcome, String> {
-        let n = self.plan.n;
+    /// against it.  Bit-identical to the same vectors solved sequentially,
+    /// and to the same operand served from a dedicated plane (counter-based
+    /// execution noise streams — see [`exec_stream_seed`]).
+    ///
+    /// A failed batch (chunk-level shard error) leaves the residency
+    /// consistent: ledgers are fully synced and the solve counter has
+    /// advanced past the failed batch, so a subsequent batch draws exactly
+    /// the noise it would have in an error-free run.
+    pub fn execute_batch(&mut self, id: OperandId, xs: &[Vector]) -> Result<BatchOutcome, String> {
+        self.ensure_live()?;
+        let res = self.residencies.get(&id.0).ok_or_else(|| {
+            format!("operand {id} is not resident on this plane (never programmed, or evicted)")
+        })?;
+        let n = res.plan.n;
         for (k, x) in xs.iter().enumerate() {
             if x.len() != n {
                 return Err(format!(
@@ -518,79 +754,96 @@ impl ExecutionPlane {
                 wall_seconds: 0.0,
             });
         }
-        if !self.program_ok {
-            return Err(if self.programmed {
-                "programming failed on this plane; build a fresh plane".to_string()
-            } else {
-                "no operand resident on this plane (call program first)".to_string()
-            });
-        }
         let start = Instant::now();
-        let first_solve = self.next_solve;
-        self.next_solve += xs.len() as u64;
+        let (m, tile, first_solve) = {
+            let res = self.residencies.get_mut(&id.0).expect("checked above");
+            let first = res.next_solve;
+            res.next_solve += xs.len() as u64;
+            (res.plan.m, res.plan.geometry.cell_size, first)
+        };
         let shared = Arc::new(xs.to_vec());
+        // Best-effort broadcast: a dead shard (its receiver dropped after a
+        // panic) is skipped — its Failed report is already on the results
+        // channel — while every live shard still gets the job, so the
+        // supervised drain below terminates.
+        let mut dead: Option<usize> = None;
         for (s, tx) in self.senders.iter().enumerate() {
-            tx.send(ShardJob::Execute {
+            let job = ShardJob::Execute {
+                op: id.0,
                 first_solve,
                 xs: shared.clone(),
-            })
-            .map_err(|_| format!("shard {s} died"))?;
+            };
+            if tx.send(job).is_err() && dead.is_none() {
+                dead = Some(s);
+            }
+        }
+        // A dead shard implies a panic already reported (or about to be)
+        // on the results channel; drain the walk so the Failed message is
+        // consumed, then fail the plane.
+        if let Some(s) = dead {
+            let shards = self.senders.len();
+            let outcome = drain_walk(&self.results, &self.handles, shards, |_| None);
+            let fatal = outcome
+                .fatal
+                .unwrap_or_else(|| format!("shard {s} died mid-batch"));
+            self.failed = Some(fatal.clone());
+            return Err(fatal);
         }
 
-        // Gather: one partial per (resident chunk, vector), then one
-        // ledger snapshot per shard.  Drained fully even on error so the
-        // ledgers stay synced and the next batch starts clean.
+        // Gather: partials per (resident chunk, vector), then one ledger
+        // snapshot per shard.  Drained fully even on error so the ledgers
+        // stay synced and the next batch starts clean.
         let shards = self.senders.len();
-        let expected = self.resident_chunks * xs.len();
         let mut per_solve: Vec<BTreeMap<(usize, usize), Vector>> =
             (0..xs.len()).map(|_| BTreeMap::new()).collect();
-        let mut got = 0usize;
-        let mut sealed = 0usize;
-        let mut first_err: Option<String> = None;
-        while got < expected || sealed < shards {
-            match self.results.recv() {
-                Ok(ShardMsg::Partial {
+        let outcome = {
+            let results = &self.results;
+            let handles = &self.handles;
+            let res = self.residencies.get_mut(&id.0).expect("checked above");
+            let ledgers = &mut res.ledgers;
+            drain_walk(results, handles, shards, |msg| match msg {
+                ShardMsg::Partial {
                     solve,
                     block_row,
                     block_col,
                     outcome,
-                }) => {
-                    got += 1;
-                    match outcome {
-                        Ok(v) => {
-                            per_solve[(solve - first_solve) as usize]
-                                .insert((block_row, block_col), v);
-                        }
-                        Err(e) => {
-                            if first_err.is_none() {
-                                first_err = Some(format!(
-                                    "chunk ({block_row},{block_col}) solve {solve}: {e}"
-                                ));
+                } => match outcome {
+                    Ok(v) => {
+                        let k = solve.wrapping_sub(first_solve) as usize;
+                        match per_solve.get_mut(k) {
+                            Some(slot) => {
+                                slot.insert((block_row, block_col), v);
+                                None
                             }
+                            None => Some(format!(
+                                "chunk ({block_row},{block_col}): stray partial for solve \
+                                 {solve} (batch starts at {first_solve})"
+                            )),
                         }
                     }
-                }
-                Ok(ShardMsg::Sealed { ledgers }) => {
-                    sealed += 1;
-                    for (idx, l) in ledgers {
-                        self.ledgers[idx] = l;
+                    Err(e) => {
+                        Some(format!("chunk ({block_row},{block_col}) solve {solve}: {e}"))
                     }
-                }
-                Ok(_) => {}
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some("shards exited mid-solve".to_string());
+                },
+                ShardMsg::Sealed { ledgers: ls, .. } => {
+                    for (idx, l) in ls {
+                        if let Some(slot) = ledgers.get_mut(idx) {
+                            *slot = l;
+                        }
                     }
-                    break;
+                    None
                 }
-            }
+                _ => None,
+            })
+        };
+        if let Some(fatal) = outcome.fatal {
+            self.failed = Some(fatal.clone());
+            return Err(fatal);
         }
-        if let Some(e) = first_err {
+        if let Some(e) = outcome.chunk_err {
             return Err(e);
         }
         let wall = start.elapsed().as_secs_f64();
-        let m = self.plan.m;
-        let tile = self.plan.geometry.cell_size;
         let solves = per_solve
             .into_iter()
             .enumerate()
@@ -605,6 +858,157 @@ impl ExecutionPlane {
             wall_seconds: wall,
         })
     }
+
+    /// Evict resident operand `id`: drop its tiles and executors on every
+    /// shard, fold its energy into the plane's retired totals, and return
+    /// its tile slots to the allocator for reuse.  The id becomes stale —
+    /// later calls with it are clean errors.
+    ///
+    /// Eviction works on a *failed* plane too (the shard walk is skipped;
+    /// leader-side bookkeeping is still reclaimed) and returns `Ok` — the
+    /// pool failure stays observable through [`failure`](Self::failure).
+    /// `Err` here means only one thing: `id` was not resident.
+    pub fn evict(&mut self, id: OperandId) -> Result<(), String> {
+        let res = self.residencies.remove(&id.0).ok_or_else(|| {
+            format!("operand {id} is not resident on this plane (already evicted?)")
+        })?;
+        self.retire(id.0, res);
+        Ok(())
+    }
+
+    /// Drop operand `op`'s shard-side state (when the pool is still live),
+    /// free its tile slots, and fold its final energy into the retired
+    /// totals.  Used by [`evict`](Self::evict) and by failed-programming
+    /// cleanup.
+    fn retire(&mut self, op: u64, mut res: Residency) {
+        if self.failed.is_none() {
+            // Best-effort broadcast (see execute_batch): skip dead shards
+            // so the drain below still terminates.
+            let mut dead: Option<usize> = None;
+            for (s, tx) in self.senders.iter().enumerate() {
+                if tx.send(ShardJob::Evict { op }).is_err() && dead.is_none() {
+                    dead = Some(s);
+                }
+            }
+            let shards = self.senders.len();
+            let outcome = {
+                let results = &self.results;
+                let handles = &self.handles;
+                let ledgers = &mut res.ledgers;
+                drain_walk(results, handles, shards, |msg| {
+                    if let ShardMsg::Sealed { ledgers: ls, .. } = msg {
+                        for (idx, l) in ls {
+                            if let Some(slot) = ledgers.get_mut(idx) {
+                                *slot = l;
+                            }
+                        }
+                    }
+                    None
+                })
+            };
+            if let Some(fatal) = outcome.fatal {
+                self.failed = Some(fatal);
+            } else if let Some(s) = dead {
+                self.failed = Some(format!("shard {s} died during evict"));
+            }
+        }
+        for (mca, slot) in &res.slots {
+            self.alloc.free(*mca, *slot);
+        }
+        let (w, r) = res.energy_totals();
+        self.retired_energy.0 += w;
+        self.retired_energy.1 += r;
+    }
+}
+
+/// Stream the occupied chunks of `plan` to the shards: enumerate through
+/// [`ChunkPlan::nonzero_chunks`], extract one zero-padded tile at a time
+/// (unwind-caught), build the job via `make_job` (which may refuse — e.g.
+/// tile-slot exhaustion), and dispatch to the owning shard.  Returns
+/// `(dispatched, walk_err)`.
+///
+/// The walk is **always closed**: every shard gets a best-effort
+/// `Seal { op: seal_op }` even after an error, so the matching supervised
+/// gather terminates on a partial walk (a dead shard already reported a
+/// `Failed` before its channel dropped).
+fn scatter_walk<F>(
+    senders: &[mpsc::SyncSender<ShardJob>],
+    assignment: &[usize],
+    plan: &ChunkPlan,
+    source: &dyn MatrixSource,
+    seal_op: Option<u64>,
+    mut make_job: F,
+) -> (usize, Option<String>)
+where
+    F: FnMut(ChunkSpec, Matrix) -> Result<ShardJob, String>,
+{
+    let tile = plan.geometry.cell_size;
+    let mut dispatched = 0usize;
+    let mut walk_err: Option<String> = None;
+    {
+        let mut iter = plan.nonzero_chunks(source);
+        loop {
+            let spec = match next_chunk(&mut iter) {
+                Ok(Some(spec)) => spec,
+                Ok(None) => break,
+                Err(e) => {
+                    walk_err = Some(e);
+                    break;
+                }
+            };
+            let a_tile = match extract_tile(source, &spec, tile) {
+                Ok(t) => t,
+                Err(e) => {
+                    walk_err = Some(e);
+                    break;
+                }
+            };
+            let job = match make_job(spec, a_tile) {
+                Ok(job) => job,
+                Err(e) => {
+                    walk_err = Some(e);
+                    break;
+                }
+            };
+            let s = assignment[spec.mca_index];
+            if senders[s].send(job).is_err() {
+                walk_err = Some(format!("shard {s} died mid-walk"));
+                break;
+            }
+            dispatched += 1;
+        }
+    }
+    for tx in senders {
+        let _ = tx.send(ShardJob::Seal { op: seal_op });
+    }
+    (dispatched, walk_err)
+}
+
+/// Advance the chunk walk one step, converting a panic inside the
+/// source's sparsity probes into an error.
+fn next_chunk(iter: &mut dyn Iterator<Item = ChunkSpec>) -> Result<Option<ChunkSpec>, String> {
+    catch_unwind(AssertUnwindSafe(|| iter.next()))
+        .map_err(|p| format!("operand chunk walk panicked: {}", shard::panic_text(p)))
+}
+
+/// Extract one zero-padded tile, converting a panic inside the source's
+/// `block` into an error.
+fn extract_tile(
+    source: &dyn MatrixSource,
+    spec: &ChunkSpec,
+    tile: usize,
+) -> Result<Matrix, String> {
+    catch_unwind(AssertUnwindSafe(|| {
+        source.block(spec.row0, spec.col0, tile, tile)
+    }))
+    .map_err(|p| {
+        format!(
+            "extracting chunk ({},{}) panicked: {}",
+            spec.block_row,
+            spec.block_col,
+            shard::panic_text(p)
+        )
+    })
 }
 
 impl Drop for ExecutionPlane {
@@ -671,11 +1075,13 @@ mod tests {
         let config = SystemConfig::new(2, 2, 32);
         let opts = SolveOptions::default().with_device(Material::EpiRam);
         let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
-        let program = plane.program(&src).unwrap();
+        let (id, program) = plane.program(&src).unwrap();
         assert_eq!(program.chunks_total, 4);
         assert_eq!(program.chunks_resident, 4);
+        assert_eq!(plane.resident_operands(), 1);
+        assert_eq!(plane.slots_in_use(), 4);
         let xs: Vec<Vector> = (0..2).map(|k| Vector::standard_normal(48, 30 + k)).collect();
-        let batch = plane.execute_batch(&xs).unwrap();
+        let batch = plane.execute_batch(id, &xs).unwrap();
         assert_eq!(batch.solves.len(), 2);
         for (k, s) in batch.solves.iter().enumerate() {
             assert_eq!(s.solve_index, k as u64);
@@ -686,35 +1092,199 @@ mod tests {
     }
 
     #[test]
-    fn execute_before_program_is_error() {
+    fn execute_with_unknown_operand_is_error() {
         let src = dense(32, 32, 5);
         let opts = SolveOptions::default().with_device(Material::EpiRam);
         let mut plane =
             ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
         let x = Vector::standard_normal(32, 6);
-        let err = plane.execute_batch(std::slice::from_ref(&x)).unwrap_err();
-        assert!(err.contains("no operand resident"), "{err}");
+        let err = plane
+            .execute_batch(OperandId(0), std::slice::from_ref(&x))
+            .unwrap_err();
+        assert!(err.contains("not resident"), "{err}");
     }
 
     #[test]
-    fn double_program_is_error() {
+    fn evicted_operand_id_is_stale() {
         let src = dense(32, 32, 9);
         let opts = SolveOptions::default().with_device(Material::EpiRam);
         let mut plane =
             ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
-        plane.program(&src).unwrap();
-        assert!(plane.program(&src).is_err());
+        let (id, _) = plane.program(&src).unwrap();
+        plane.evict(id).unwrap();
+        assert_eq!(plane.resident_operands(), 0);
+        assert_eq!(plane.slots_in_use(), 0);
+        let x = Vector::standard_normal(32, 10);
+        let err = plane
+            .execute_batch(id, std::slice::from_ref(&x))
+            .unwrap_err();
+        assert!(err.contains("not resident"), "{err}");
+        assert!(plane.evict(id).is_err());
     }
 
     #[test]
-    fn plane_rejects_mismatched_operand() {
+    fn two_operands_interleave_bit_identical_to_dedicated_planes() {
+        let src_a = dense(48, 48, 31);
+        let src_b = dense(48, 48, 32);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_seed(77)
+            .with_workers(3);
+        let xs_a: Vec<Vector> = (0..2).map(|k| Vector::standard_normal(48, 40 + k)).collect();
+        let xs_b: Vec<Vector> = (0..2).map(|k| Vector::standard_normal(48, 50 + k)).collect();
+
+        // Dedicated planes, one operand each (the historical layout).
+        let dedicated = |src: &DenseSource, xs: &[Vector]| {
+            let mut plane = ExecutionPlane::build(src, &config, &opts, native()).unwrap();
+            let (id, _) = plane.program(src).unwrap();
+            let mut out = Vec::new();
+            for x in xs {
+                out.push(
+                    plane
+                        .execute_batch(id, std::slice::from_ref(x))
+                        .unwrap()
+                        .solves
+                        .remove(0)
+                        .y,
+                );
+            }
+            out
+        };
+        let ded_a = dedicated(&src_a, &xs_a);
+        let ded_b = dedicated(&src_b, &xs_b);
+
+        // One shared plane, batches interleaved A/B/A/B.
+        let mut plane = ExecutionPlane::build(&src_a, &config, &opts, native()).unwrap();
+        let (ida, _) = plane.program(&src_a).unwrap();
+        let (idb, _) = plane.program(&src_b).unwrap();
+        assert_ne!(ida, idb);
+        assert_eq!(plane.resident_operands(), 2);
+        let mut shared_a = Vec::new();
+        let mut shared_b = Vec::new();
+        for k in 0..2 {
+            shared_a.push(
+                plane
+                    .execute_batch(ida, std::slice::from_ref(&xs_a[k]))
+                    .unwrap()
+                    .solves
+                    .remove(0)
+                    .y,
+            );
+            shared_b.push(
+                plane
+                    .execute_batch(idb, std::slice::from_ref(&xs_b[k]))
+                    .unwrap()
+                    .solves
+                    .remove(0)
+                    .y,
+            );
+        }
+        assert_eq!(ded_a, shared_a, "operand A diverged under multi-tenancy");
+        assert_eq!(ded_b, shared_b, "operand B diverged under multi-tenancy");
+    }
+
+    #[test]
+    fn evict_then_reprogram_reuses_tile_slots() {
+        let src = dense(64, 64, 41);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
+        let (ida, pa) = plane.program(&src).unwrap();
+        let high = plane.slot_high_water();
+        assert_eq!(plane.slots_in_use(), pa.chunks_resident);
+        plane.evict(ida).unwrap();
+        assert_eq!(plane.slots_in_use(), 0);
+        // Reprogramming an equally-shaped operand reuses the freed slots:
+        // the high-water mark does not grow.
+        let other = dense(64, 64, 42);
+        let (idb, pb) = plane.program(&other).unwrap();
+        assert_eq!(plane.slots_in_use(), pb.chunks_resident);
+        assert_eq!(plane.slot_high_water(), high);
+        let x = Vector::standard_normal(64, 43);
+        assert!(plane.execute_batch(idb, std::slice::from_ref(&x)).is_ok());
+    }
+
+    #[test]
+    fn tile_slot_capacity_is_enforced() {
+        let src = dense(64, 64, 45);
+        // 2x2 grid of 32² cells: a 64² operand needs 1 slot per MCA; with
+        // capacity 1 a second operand cannot fit until the first leaves.
+        let config = SystemConfig::new(2, 2, 32).with_tile_slots(1);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
+        let (ida, _) = plane.program(&src).unwrap();
+        let err = plane.program(&dense(64, 64, 46)).unwrap_err();
+        assert!(err.contains("out of tile slots"), "{err}");
+        // The failed program was retired; the first residency still serves.
+        let x = Vector::standard_normal(64, 47);
+        assert!(plane.execute_batch(ida, std::slice::from_ref(&x)).is_ok());
+        // Evicting frees the slots for the next tenant.
+        plane.evict(ida).unwrap();
+        assert!(plane.program(&dense(64, 64, 46)).is_ok());
+    }
+
+    #[test]
+    fn operands_of_different_dims_share_one_plane() {
+        let src_a = dense(64, 64, 51);
+        let src_b = dense(40, 40, 52);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane = ExecutionPlane::build(&src_a, &config, &opts, native()).unwrap();
+        let (ida, _) = plane.program(&src_a).unwrap();
+        let (idb, pb) = plane.program(&src_b).unwrap();
+        assert_eq!((pb.m, pb.n), (40, 40));
+        let xa = Vector::standard_normal(64, 53);
+        let xb = Vector::standard_normal(40, 54);
+        let ya = &plane
+            .execute_batch(ida, std::slice::from_ref(&xa))
+            .unwrap()
+            .solves[0]
+            .y;
+        let ba = src_a.matvec(&xa);
+        assert!(ya.sub(&ba).norm_l2() / ba.norm_l2() < 0.1);
+        let yb = &plane
+            .execute_batch(idb, std::slice::from_ref(&xb))
+            .unwrap()
+            .solves[0]
+            .y;
+        let bb = src_b.matvec(&xb);
+        assert!(yb.sub(&bb).norm_l2() / bb.norm_l2() < 0.1);
+        // Dimension checks are per-residency.
+        assert!(plane
+            .execute_batch(idb, std::slice::from_ref(&xa))
+            .is_err());
+    }
+
+    #[test]
+    fn execute_once_refuses_a_serving_plane() {
+        let src = dense(32, 32, 55);
+        let opts = SolveOptions::default().with_device(Material::EpiRam);
+        let mut plane =
+            ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
+        plane.program(&src).unwrap();
+        let x = Vector::standard_normal(32, 56);
+        assert!(plane.execute_once(&src, &x).is_err());
+    }
+
+    #[test]
+    fn one_shot_adapts_to_operand_dims_but_rejects_bad_x() {
+        // The pool is sized at build time but plans per call, so a
+        // different-dims operand still solves one-shot; a vector that does
+        // not match the operand is rejected.
         let src = dense(32, 32, 11);
         let opts = SolveOptions::default().with_device(Material::EpiRam);
         let plane =
             ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
         let other = dense(16, 16, 12);
+        let bad_x = Vector::standard_normal(32, 13);
+        assert!(plane.execute_once(&other, &bad_x).is_err());
+        let plane =
+            ExecutionPlane::build(&src, &SystemConfig::single_mca(32), &opts, native()).unwrap();
         let x = Vector::standard_normal(16, 13);
-        assert!(plane.execute_once(&other, &x).is_err());
+        let report = plane.execute_once(&other, &x).unwrap();
+        assert_eq!(report.y.len(), 16);
+        assert!(report.rel_err_l2 < 0.1, "{}", report.rel_err_l2);
     }
 
     #[test]
@@ -725,7 +1295,7 @@ mod tests {
             .with_device(Material::EpiRam)
             .with_placement(Placement::SparsityAware);
         let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
-        let program = plane.program(&src).unwrap();
+        let (id, program) = plane.program(&src).unwrap();
         assert_eq!(program.chunks_total, 64);
         assert!(program.chunks_skipped > 30, "{}", program.chunks_skipped);
         assert_eq!(
@@ -734,7 +1304,7 @@ mod tests {
         );
         let x = Vector::standard_normal(256, 9);
         let b = src.matvec(&x);
-        let batch = plane.execute_batch(std::slice::from_ref(&x)).unwrap();
+        let batch = plane.execute_batch(id, std::slice::from_ref(&x)).unwrap();
         let err = batch.solves[0].y.sub(&b).norm_l2() / b.norm_l2();
         assert!(err < 0.1, "{err}");
     }
@@ -775,13 +1345,80 @@ mod tests {
         let config = SystemConfig::new(2, 2, 32);
         let opts = SolveOptions::default().with_device(Material::EpiRam);
         let mut plane = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
-        let program = plane.program(&src).unwrap();
+        let (id, program) = plane.program(&src).unwrap();
         assert_eq!(program.chunks_resident, 0);
         assert_eq!(program.chunks_skipped, program.chunks_total);
         let x = Vector::standard_normal(64, 40);
-        let batch = plane.execute_batch(std::slice::from_ref(&x)).unwrap();
+        let batch = plane.execute_batch(id, std::slice::from_ref(&x)).unwrap();
         assert_eq!(batch.solves.len(), 1);
         assert_eq!(batch.solves[0].y, Vector::zeros(64));
+    }
+
+    #[test]
+    fn failed_batch_keeps_counters_and_ledgers_consistent() {
+        use crate::testing::faults::FaultBackend;
+        let src = dense(48, 48, 61);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_seed(5)
+            .with_workers(2);
+        let xs0: Vec<Vector> = (0..2).map(|k| Vector::standard_normal(48, 70 + k)).collect();
+        let xs1: Vec<Vector> = (0..2).map(|k| Vector::standard_normal(48, 80 + k)).collect();
+
+        // Clean reference run: both batches succeed.
+        let mut clean = ExecutionPlane::build(&src, &config, &opts, native()).unwrap();
+        let (idc, _) = clean.program(&src).unwrap();
+        let pre_clean = clean.operand_energy_totals(idc).unwrap();
+        let _ = clean.execute_batch(idc, &xs0).unwrap();
+        let mid_clean = clean.operand_energy_totals(idc).unwrap();
+        let y_clean: Vec<Vector> = clean
+            .execute_batch(idc, &xs1)
+            .unwrap()
+            .solves
+            .into_iter()
+            .map(|s| s.y)
+            .collect();
+        let post_clean = clean.operand_energy_totals(idc).unwrap();
+        assert!(mid_clean.1 > pre_clean.1, "reads charge energy");
+
+        // Faulty run: the first batch fails at the backend, the second
+        // succeeds and must be bit-identical to the clean run's second
+        // batch (same solve indices → same counter-based noise), with the
+        // same energy delta across the successful batch.
+        let flaky = FaultBackend::erroring(NativeBackend::new());
+        let handle = flaky.handle();
+        let mut faulty =
+            ExecutionPlane::build(&src, &config, &opts, Arc::new(flaky)).unwrap();
+        let (idf, _) = faulty.program(&src).unwrap();
+        handle.fail_next_reads(true);
+        let err = faulty.execute_batch(idf, &xs0).unwrap_err();
+        assert!(err.contains("injected"), "{err}");
+        handle.fail_next_reads(false);
+        let mid_faulty = faulty.operand_energy_totals(idf).unwrap();
+        let y_faulty: Vec<Vector> = faulty
+            .execute_batch(idf, &xs1)
+            .unwrap()
+            .solves
+            .into_iter()
+            .map(|s| s.y)
+            .collect();
+        let post_faulty = faulty.operand_energy_totals(idf).unwrap();
+
+        assert_eq!(y_clean, y_faulty, "recovery batch diverged after a failed batch");
+        // The recovery batch must charge exactly the energy the clean
+        // run's second batch does.  Deltas are compared with a tight
+        // relative tolerance: the *amounts* are identical, but the
+        // running totals they are subtracted from differ (the failed
+        // batch charged differently than a successful one), so the f64
+        // subtraction can differ in the last ulps.
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()) + 1e-18;
+        let delta_clean = (post_clean.0 - mid_clean.0, post_clean.1 - mid_clean.1);
+        let delta_faulty = (post_faulty.0 - mid_faulty.0, post_faulty.1 - mid_faulty.1);
+        assert!(
+            close(delta_clean.0, delta_faulty.0) && close(delta_clean.1, delta_faulty.1),
+            "energy accounting diverged: clean {delta_clean:?} vs faulty {delta_faulty:?}"
+        );
     }
 
     #[test]

@@ -1,28 +1,39 @@
 //! Shard worker: the single scatter/gather execution loop behind both the
 //! one-shot coordinator and the resident serving sessions.
 //!
-//! A shard is one long-lived thread owning the [`TileExecutor`]s of the
-//! MCAs placed on it (see [`crate::plane::placement`]).  An MCA never
-//! migrates, so its RNG stream, its fixed-pattern noise and its energy
-//! ledger stay consistent across every job the shard processes.
+//! A shard is one long-lived thread owning, for every operand resident on
+//! it, the [`TileExecutor`]s of the MCAs placed on it (see
+//! [`crate::plane::placement`]).  An MCA never migrates, so its RNG
+//! stream, its fixed-pattern noise and its energy ledger stay consistent
+//! across every job the shard processes.
 //!
-//! **Determinism contract.**  MCA `i`'s simulator is seeded from
-//! `(master seed, i)` ([`mca_seed`]) and the leader dispatches each MCA's
-//! chunks in a fixed row-major order over a FIFO channel, so programming
-//! consumes every per-MCA stream in the same sequence no matter how many
-//! shards run, which policy placed the MCAs, or how threads are scheduled.
-//! Resident execution noise comes from a *counter-based* stream derived
-//! from `(master seed, mca, solve index, chunk)` ([`exec_stream_seed`]), so
-//! a batch of N vectors is bit-identical to N sequential solves.
+//! **Determinism contract.**  Each resident operand owns its *own* set of
+//! executors: MCA `i`'s simulator for operand `k` is seeded from
+//! `(master seed, i)` ([`mca_seed`]) exactly as if the operand had a
+//! dedicated plane, and the leader dispatches each operand's chunks in a
+//! fixed row-major order over a FIFO channel — so multi-tenant residency
+//! is bit-identical to one plane per operand.  Resident execution noise
+//! comes from a *counter-based* stream derived from
+//! `(master seed, mca, solve index, chunk)` ([`exec_stream_seed`]), so a
+//! batch of N vectors is bit-identical to N sequential solves.
+//!
+//! **Fault containment.**  Every job is processed under
+//! [`std::panic::catch_unwind`]: a panicking shard seals the ledgers of
+//! the walk it was serving into a [`ShardMsg::Failed`] report and exits,
+//! instead of silently dropping out of the reply protocol.  The leader's
+//! supervised gather (see [`crate::plane`]) converts that into a clean
+//! error — a shard panic can no longer hang a resident `program` or
+//! `execute_batch` gather.
 
 use crate::config::SolveOptions;
-use crate::ec::{ProgrammedTile, TileExecutor};
+use crate::ec::{EcOptions, ProgrammedTile, TileExecutor};
 use crate::linalg::{Matrix, Vector};
 use crate::mca::{EnergyLedger, Mca};
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::virtualization::ChunkSpec;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
 
@@ -81,19 +92,40 @@ pub(crate) enum ShardJob {
         a_tile: Matrix,
         x_chunk: Vector,
     },
-    /// Program one chunk resident on its MCA: answer with
+    /// Program one chunk of operand `op` resident on its MCA: answer with
     /// [`ShardMsg::Programmed`] and keep the tile for later `Execute`s.
-    Program { spec: ChunkSpec, a_tile: Matrix },
-    /// Run a batch of input vectors against every resident tile: answer
-    /// with one [`ShardMsg::Partial`] per (tile, vector), then a
-    /// [`ShardMsg::Sealed`] ledger snapshot.
+    Program {
+        op: u64,
+        spec: ChunkSpec,
+        a_tile: Matrix,
+    },
+    /// Run a batch of input vectors against every tile of operand `op`
+    /// resident on this shard: answer with one [`ShardMsg::Partial`] per
+    /// (tile, vector), then a [`ShardMsg::Sealed`] ledger snapshot.
     Execute {
+        op: u64,
         first_solve: u64,
         xs: Arc<Vec<Vector>>,
     },
-    /// Close a `RunOnce`/`Program` scatter walk: answer with
-    /// [`ShardMsg::Sealed`].
-    Seal,
+    /// Drop operand `op`'s resident tiles and executors: answer with a
+    /// final [`ShardMsg::Sealed`] ledger snapshot.
+    Evict { op: u64 },
+    /// Close a `RunOnce` (`op` = `None`) or `Program` (`op` = `Some`)
+    /// scatter walk: answer with [`ShardMsg::Sealed`].
+    Seal { op: Option<u64> },
+}
+
+impl ShardJob {
+    /// Which operand's ledgers a panic while serving this job should seal.
+    fn walk_op(&self) -> Option<u64> {
+        match self {
+            ShardJob::RunOnce { .. } => None,
+            ShardJob::Program { op, .. }
+            | ShardJob::Execute { op, .. }
+            | ShardJob::Evict { op } => Some(*op),
+            ShardJob::Seal { op } => *op,
+        }
+    }
 }
 
 /// A shard's answer to the leader.
@@ -118,11 +150,21 @@ pub(crate) enum ShardMsg {
     },
     /// Cumulative per-MCA ledger snapshot, closing one walk.
     Sealed {
+        shard: usize,
+        ledgers: Vec<(usize, EnergyLedger)>,
+    },
+    /// The shard caught a panic: its final ledger snapshot plus the panic
+    /// message.  The shard exits after sending this — the leader marks the
+    /// plane failed and every later call returns a clean error.
+    Failed {
+        shard: usize,
+        error: String,
         ledgers: Vec<(usize, EnergyLedger)>,
     },
 }
 
 pub(crate) struct ShardContext {
+    pub shard: usize,
     pub cell: usize,
     pub opts: SolveOptions,
     pub backend: Backend,
@@ -130,110 +172,200 @@ pub(crate) struct ShardContext {
     pub out: mpsc::Sender<ShardMsg>,
 }
 
+/// Per-operand shard-side residency: this shard's slice of the operand's
+/// executors and programmed tiles.
+#[derive(Default)]
+struct OperandState {
+    executors: HashMap<usize, TileExecutor>,
+    resident: Vec<(ChunkSpec, ProgrammedTile)>,
+}
+
+impl OperandState {
+    fn ledgers(&self) -> Vec<(usize, EnergyLedger)> {
+        self.executors
+            .iter()
+            .map(|(idx, e)| (*idx, e.mca.ledger))
+            .collect()
+    }
+}
+
+/// All state a shard thread owns: one executor set per resident operand,
+/// plus the separate executor set the fused one-shot path uses.
+struct ShardState {
+    oneshot: HashMap<usize, TileExecutor>,
+    ops: HashMap<u64, OperandState>,
+}
+
+impl ShardState {
+    fn ledgers_for(&self, op: Option<u64>) -> Vec<(usize, EnergyLedger)> {
+        match op {
+            None => self
+                .oneshot
+                .iter()
+                .map(|(idx, e)| (*idx, e.mca.ledger))
+                .collect(),
+            Some(op) => self.ops.get(&op).map(|o| o.ledgers()).unwrap_or_default(),
+        }
+    }
+}
+
+/// Render a caught panic payload as text (shared by the shard loop and
+/// the leader-side walk supervision in [`crate::plane`]).
+pub(crate) fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with a non-string payload".to_string()
+    }
+}
+
 /// Shard main loop: process jobs until the leader closes the channel.
 ///
-/// The leader counts on exact reply cardinalities (one `Once`/`Programmed`
-/// per dispatched chunk, chunks × vectors `Partial`s per batch, one
-/// `Sealed` per walk), so every path below must send — never panic — or
-/// the gather would hang while other shards keep the reply channel open.
+/// The leader's gather is *supervised* (per-shard seal tracking + liveness
+/// checks), but the contract here is still exact reply cardinalities per
+/// walk, closed by one `Sealed` per shard.  A panic inside a job no longer
+/// breaks that contract silently: it is caught, the walk's ledgers are
+/// sealed into a [`ShardMsg::Failed`], and the shard exits.
 pub(crate) fn run(ctx: ShardContext) {
     let ec = ctx.opts.ec_options();
-    let mut executors: HashMap<usize, TileExecutor> = HashMap::new();
-    let mut resident: Vec<(ChunkSpec, ProgrammedTile)> = Vec::new();
+    let mut state = ShardState {
+        oneshot: HashMap::new(),
+        ops: HashMap::new(),
+    };
     while let Ok(job) = ctx.jobs.recv() {
-        match job {
-            ShardJob::RunOnce {
-                spec,
-                a_tile,
-                x_chunk,
-            } => {
-                let exec = executors.entry(spec.mca_index).or_insert_with(|| {
-                    new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
+        let walk_op = job.walk_op();
+        match catch_unwind(AssertUnwindSafe(|| handle(&ctx, &ec, &mut state, job))) {
+            // Job handled; leader still listening.
+            Ok(true) => {}
+            // Reply channel closed: the leader is gone, stop quietly.
+            Ok(false) => return,
+            Err(payload) => {
+                let ledgers = state.ledgers_for(walk_op);
+                let _ = ctx.out.send(ShardMsg::Failed {
+                    shard: ctx.shard,
+                    error: panic_text(payload),
+                    ledgers,
                 });
-                let outcome = exec
-                    .run_tile(&a_tile, &x_chunk, &ec)
-                    .map(|r| (r.y, r.encode.iters));
-                let msg = ShardMsg::Once {
-                    block_row: spec.block_row,
-                    block_col: spec.block_col,
-                    outcome,
-                };
-                if ctx.out.send(msg).is_err() {
-                    return;
-                }
-            }
-            ShardJob::Program { spec, a_tile } => {
-                let exec = executors.entry(spec.mca_index).or_insert_with(|| {
-                    new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
-                });
-                let outcome = match exec.program_tile(&a_tile, &ec) {
-                    Ok(tile) => {
-                        let iters = tile.encode.iters;
-                        resident.push((spec, tile));
-                        Ok(iters)
-                    }
-                    Err(e) => Err(e),
-                };
-                let msg = ShardMsg::Programmed {
-                    block_row: spec.block_row,
-                    block_col: spec.block_col,
-                    outcome,
-                };
-                if ctx.out.send(msg).is_err() {
-                    return;
-                }
-            }
-            ShardJob::Execute { first_solve, xs } => {
-                for (spec, tile) in &resident {
-                    for (k, x) in xs.iter().enumerate() {
-                        let solve = first_solve + k as u64;
-                        let outcome = match executors.get_mut(&spec.mca_index) {
-                            Some(exec) => {
-                                let x_chunk = x.slice_padded(spec.col0, ctx.cell);
-                                let stream = Rng::new(exec_stream_seed(
-                                    ctx.opts.seed,
-                                    spec.mca_index,
-                                    solve,
-                                    spec.block_row,
-                                    spec.block_col,
-                                ));
-                                let saved = exec.mca.replace_rng(stream);
-                                let out = exec.execute_tile(tile, &x_chunk, &ec).map(|r| r.y);
-                                exec.mca.replace_rng(saved);
-                                out
-                            }
-                            None => Err("resident chunk lost its executor".to_string()),
-                        };
-                        let msg = ShardMsg::Partial {
-                            solve,
-                            block_row: spec.block_row,
-                            block_col: spec.block_col,
-                            outcome,
-                        };
-                        if ctx.out.send(msg).is_err() {
-                            return;
-                        }
-                    }
-                }
-                if send_sealed(&ctx, &executors).is_err() {
-                    return;
-                }
-            }
-            ShardJob::Seal => {
-                if send_sealed(&ctx, &executors).is_err() {
-                    return;
-                }
+                return;
             }
         }
     }
 }
 
-fn send_sealed(
-    ctx: &ShardContext,
-    executors: &HashMap<usize, TileExecutor>,
-) -> Result<(), mpsc::SendError<ShardMsg>> {
-    let ledgers = executors.iter().map(|(idx, e)| (*idx, e.mca.ledger)).collect();
-    ctx.out.send(ShardMsg::Sealed { ledgers })
+/// Process one job.  Returns `false` when the reply channel is closed.
+fn handle(ctx: &ShardContext, ec: &EcOptions, state: &mut ShardState, job: ShardJob) -> bool {
+    match job {
+        ShardJob::RunOnce {
+            spec,
+            a_tile,
+            x_chunk,
+        } => {
+            let exec = state.oneshot.entry(spec.mca_index).or_insert_with(|| {
+                new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
+            });
+            let outcome = exec
+                .run_tile(&a_tile, &x_chunk, ec)
+                .map(|r| (r.y, r.encode.iters));
+            let msg = ShardMsg::Once {
+                block_row: spec.block_row,
+                block_col: spec.block_col,
+                outcome,
+            };
+            ctx.out.send(msg).is_ok()
+        }
+        ShardJob::Program { op, spec, a_tile } => {
+            let opstate = state.ops.entry(op).or_default();
+            let exec = opstate.executors.entry(spec.mca_index).or_insert_with(|| {
+                new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
+            });
+            let outcome = match exec.program_tile(&a_tile, ec) {
+                Ok(tile) => {
+                    let iters = tile.encode.iters;
+                    opstate.resident.push((spec, tile));
+                    Ok(iters)
+                }
+                Err(e) => Err(e),
+            };
+            let msg = ShardMsg::Programmed {
+                block_row: spec.block_row,
+                block_col: spec.block_col,
+                outcome,
+            };
+            ctx.out.send(msg).is_ok()
+        }
+        ShardJob::Execute {
+            op,
+            first_solve,
+            xs,
+        } => {
+            let Some(opstate) = state.ops.get_mut(&op) else {
+                // No chunks of this operand were placed on this shard:
+                // the walk still closes with an (empty) seal.
+                let msg = ShardMsg::Sealed {
+                    shard: ctx.shard,
+                    ledgers: Vec::new(),
+                };
+                return ctx.out.send(msg).is_ok();
+            };
+            for (spec, tile) in opstate.resident.iter() {
+                for (k, x) in xs.iter().enumerate() {
+                    let solve = first_solve + k as u64;
+                    let outcome = match opstate.executors.get_mut(&spec.mca_index) {
+                        Some(exec) => {
+                            let x_chunk = x.slice_padded(spec.col0, ctx.cell);
+                            let stream = Rng::new(exec_stream_seed(
+                                ctx.opts.seed,
+                                spec.mca_index,
+                                solve,
+                                spec.block_row,
+                                spec.block_col,
+                            ));
+                            let saved = exec.mca.replace_rng(stream);
+                            let out = exec.execute_tile(tile, &x_chunk, ec).map(|r| r.y);
+                            exec.mca.replace_rng(saved);
+                            out
+                        }
+                        None => Err("resident chunk lost its executor".to_string()),
+                    };
+                    let msg = ShardMsg::Partial {
+                        solve,
+                        block_row: spec.block_row,
+                        block_col: spec.block_col,
+                        outcome,
+                    };
+                    if ctx.out.send(msg).is_err() {
+                        return false;
+                    }
+                }
+            }
+            let msg = ShardMsg::Sealed {
+                shard: ctx.shard,
+                ledgers: opstate.ledgers(),
+            };
+            ctx.out.send(msg).is_ok()
+        }
+        ShardJob::Evict { op } => {
+            let ledgers = state
+                .ops
+                .remove(&op)
+                .map(|o| o.ledgers())
+                .unwrap_or_default();
+            let msg = ShardMsg::Sealed {
+                shard: ctx.shard,
+                ledgers,
+            };
+            ctx.out.send(msg).is_ok()
+        }
+        ShardJob::Seal { op } => {
+            let msg = ShardMsg::Sealed {
+                shard: ctx.shard,
+                ledgers: state.ledgers_for(op),
+            };
+            ctx.out.send(msg).is_ok()
+        }
+    }
 }
 
 #[cfg(test)]
@@ -256,5 +388,13 @@ mod tests {
         assert_eq!(mca_seed(7, 3), mca_seed(7, 3));
         assert_ne!(mca_seed(7, 3), mca_seed(7, 4));
         assert_ne!(mca_seed(7, 3), mca_seed(8, 3));
+    }
+
+    #[test]
+    fn panic_text_renders_common_payloads() {
+        let s = catch_unwind(|| panic!("boom")).unwrap_err();
+        assert_eq!(panic_text(s), "boom");
+        let s = catch_unwind(|| panic!("chunk {}", 3)).unwrap_err();
+        assert_eq!(panic_text(s), "chunk 3");
     }
 }

@@ -1,12 +1,16 @@
 //! Multi-tenant operand residency: an LRU cache of resident [`Session`]s
-//! keyed by matrix fingerprint.
+//! keyed by matrix fingerprint, sharing **one** execution plane.
 //!
 //! A serving deployment holds many operands but only so much crossbar
 //! real estate.  [`OperandCache`] keeps the `capacity` most-recently-used
-//! sessions resident; a repeated solve against a cached operand skips the
-//! whole write–verify programming pass (the expensive part), and the
-//! least-recently-used session is dropped (its worker pool shut down) when
-//! a new tenant needs the space.
+//! sessions resident *as residencies on a single shared
+//! [`ExecutionPlane`]* — one shard pool serves every tenant, instead of
+//! one thread pool per operand.  A repeated solve against a cached
+//! operand skips the whole write–verify programming pass (the expensive
+//! part); evicting the least-recently-used session returns its tile slots
+//! to the plane's allocator for the next tenant.  If the shared plane
+//! fails (a shard panicked), the cache transparently rebuilds a fresh
+//! plane on the next miss.
 //!
 //! Keys combine a content [`fingerprint`] of the operand with every option
 //! that shapes the resident state (material, geometry, seed, EC settings),
@@ -17,8 +21,9 @@ use super::session::Session;
 use crate::config::{SolveOptions, SystemConfig};
 use crate::ec::DenoiseMode;
 use crate::matrices::MatrixSource;
+use crate::plane::ExecutionPlane;
 use crate::solver::Meliso;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -163,14 +168,20 @@ impl CacheEntry {
     }
 }
 
-/// LRU cache of resident sessions (multi-tenant serving).
+/// LRU cache of resident sessions (multi-tenant serving) sharing one
+/// execution plane.
 pub struct OperandCache {
     capacity: usize,
     entries: Vec<CacheEntry>,
+    /// The shared plane hosting every cached residency; built lazily from
+    /// the first tenant, rebuilt if it fails.
+    plane: Option<Arc<Mutex<ExecutionPlane>>>,
     clock: u64,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Times the shared plane was (re)built after a failure.
+    pub rebuilds: u64,
 }
 
 impl OperandCache {
@@ -180,10 +191,12 @@ impl OperandCache {
         OperandCache {
             capacity,
             entries: Vec::new(),
+            plane: None,
             clock: 0,
             hits: 0,
             misses: 0,
             evictions: 0,
+            rebuilds: 0,
         }
     }
 
@@ -195,13 +208,63 @@ impl OperandCache {
         self.entries.is_empty()
     }
 
+    /// The shared plane hosting the cached residencies (None until the
+    /// first tenant is programmed).
+    pub fn plane(&self) -> Option<&Arc<Mutex<ExecutionPlane>>> {
+        self.plane.as_ref()
+    }
+
+    /// Drop the shared plane and every session bound to it if the pool
+    /// has failed (a shard panicked), so neither the hit nor the miss
+    /// path can ever hand out a session wired to a dead pool.
+    fn invalidate_failed_plane(&mut self) {
+        let dead = self
+            .plane
+            .as_ref()
+            .map(|p| p.lock().map(|g| g.failure().is_some()).unwrap_or(true))
+            .unwrap_or(false);
+        if dead {
+            self.evictions += self.entries.len() as u64;
+            self.entries.clear();
+            self.plane = None;
+            self.rebuilds += 1;
+        }
+    }
+
+    /// The shared plane, building it on first use (and after a failure
+    /// cleared it).
+    fn live_plane(
+        &mut self,
+        solver: &Meliso,
+        source: &Arc<dyn MatrixSource>,
+    ) -> Result<Arc<Mutex<ExecutionPlane>>, String> {
+        if let Some(plane) = &self.plane {
+            return Ok(plane.clone());
+        }
+        let plane = solver.build_plane(source.as_ref())?;
+        self.plane = Some(plane.clone());
+        Ok(plane)
+    }
+
     /// Return the resident session for `source` under the solver's
-    /// configuration, programming it (and evicting the LRU tenant) on miss.
+    /// configuration, programming it onto the shared plane (and evicting
+    /// the LRU tenant) on miss.
+    ///
+    /// Eviction is transactional: the LRU entry is *displaced* but held
+    /// through the first open attempt, so a failed open restores it
+    /// instead of losing a programmed tenant.  If the open fails while a
+    /// displaced tenant exists (e.g. "out of tile slots" under a
+    /// `SystemConfig::tile_slots` cap), the displaced residency is
+    /// dropped for real and the open retried once.  Note the residency's
+    /// tile slots return to the allocator only when the **last**
+    /// `Arc<Session>` drops — callers that hold sessions past their use
+    /// keep those slots pinned.
     pub fn get_or_open(
         &mut self,
         solver: &Meliso,
         source: &Arc<dyn MatrixSource>,
     ) -> Result<Arc<Session>, String> {
+        self.invalidate_failed_plane();
         let key = session_key(source.as_ref(), solver.config(), solver.options());
         self.clock += 1;
         if let Some(entry) = self.entries.iter_mut().find(|e| e.matches(&key, source)) {
@@ -210,7 +273,8 @@ impl OperandCache {
             return Ok(entry.session.clone());
         }
         self.misses += 1;
-        let session = Arc::new(solver.open_session(source.clone())?);
+        let plane = self.live_plane(solver, source)?;
+        let mut displaced: Option<CacheEntry> = None;
         if self.entries.len() >= self.capacity {
             let lru = self
                 .entries
@@ -219,9 +283,26 @@ impl OperandCache {
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i)
                 .expect("non-empty cache");
-            self.entries.swap_remove(lru);
+            displaced = Some(self.entries.swap_remove(lru));
+        }
+        let session = match Session::open_on(plane.clone(), source.clone()) {
+            Ok(session) => session,
+            Err(first_err) => match displaced.take() {
+                // Nothing was displaced: fail with nothing lost.
+                None => return Err(first_err),
+                // Drop the displaced residency for real (freeing its tile
+                // slots, unless an outside handle pins them) and retry.
+                Some(entry) => {
+                    drop(entry);
+                    self.evictions += 1;
+                    Session::open_on(plane, source.clone())?
+                }
+            },
+        };
+        if displaced.take().is_some() {
             self.evictions += 1;
         }
+        let session = Arc::new(session);
         self.entries.push(CacheEntry {
             key,
             source: source.clone(),
@@ -396,6 +477,59 @@ mod tests {
         cache.get_or_open(&solver, &a).unwrap();
         assert_eq!(cache.misses, misses + 1);
         assert_eq!(cache.evictions, 3);
+    }
+
+    #[test]
+    fn cached_sessions_share_one_plane() {
+        let solver = solver();
+        let mut cache = OperandCache::new(4);
+        let s1 = cache.get_or_open(&solver, &operand(61)).unwrap();
+        let s2 = cache.get_or_open(&solver, &operand(62)).unwrap();
+        assert!(
+            Arc::ptr_eq(s1.plane(), s2.plane()),
+            "cache tenants must be residencies of one plane"
+        );
+        let plane = cache.plane().expect("plane built on first miss").clone();
+        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        // Evicting a tenant (capacity pressure elsewhere) frees its
+        // residency once the last session handle drops.
+        drop(s1);
+        cache.entries.remove(0);
+        assert_eq!(plane.lock().unwrap().resident_operands(), 1);
+        assert!(s2.solve(&Vector::standard_normal(16, 63)).is_ok());
+    }
+
+    #[test]
+    fn cache_rebuilds_plane_after_shard_failure() {
+        use crate::testing::faults::FaultBackend;
+        let backend = FaultBackend::panicking(NativeBackend::new());
+        let handle = backend.handle();
+        let solver = Meliso::with_backend(
+            SystemConfig::single_mca(32),
+            SolveOptions::default().with_device(Material::EpiRam),
+            Arc::new(backend),
+        );
+        let mut cache = OperandCache::new(2);
+        let a = operand(71);
+        let s = cache.get_or_open(&solver, &a).unwrap();
+        // Kill the shared pool with an injected shard panic.
+        handle.fail_next_reads(true);
+        let err = s.solve(&Vector::standard_normal(16, 72)).unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        handle.fail_next_reads(false);
+        drop(s);
+        // Looking the SAME (cached) operand up again must not hand back a
+        // session wired to the dead pool: the hit path invalidates first,
+        // rebuilds, and programs afresh.
+        let s2 = cache.get_or_open(&solver, &a).unwrap();
+        assert_eq!(cache.rebuilds, 1);
+        assert!(s2.solve(&Vector::standard_normal(16, 74)).is_ok());
+        // And other tenants land on the same fresh plane.
+        let b = operand(73);
+        let s3 = cache.get_or_open(&solver, &b).unwrap();
+        assert_eq!(cache.rebuilds, 1);
+        assert!(Arc::ptr_eq(s2.plane(), s3.plane()));
+        assert!(s3.solve(&Vector::standard_normal(16, 75)).is_ok());
     }
 
     #[test]

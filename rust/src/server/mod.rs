@@ -7,25 +7,35 @@
 //! many solves against the same operand.  This module keeps operands
 //! *resident*:
 //!
-//! * [`Session`] — one operand programmed onto the MCA grid through a
-//!   single write–verify pass, held resident by the shared sharded
+//! * [`Session`] — one operand programmed through a single write–verify
+//!   pass as a *residency* on a sharded
 //!   [`crate::plane::ExecutionPlane`] (the same scatter/gather machinery
 //!   the one-shot coordinator uses) whose [`crate::ec::TileExecutor`]s
 //!   (fixed-pattern noise, energy ledgers) persist across calls;
 //!   [`Session::solve`] and [`Session::solve_batch`] then pay only
-//!   input-vector encodes and crossbar reads.
+//!   input-vector encodes and crossbar reads.  Planes are multi-tenant:
+//!   [`Session::open_on`] /
+//!   [`crate::solver::Meliso::open_session_on`] program additional
+//!   operands onto an existing plane, so N tenants share one shard pool
+//!   instead of spinning up N.
 //! * [`OperandCache`] — multi-tenant residency: an LRU cache of sessions
-//!   keyed by operand [`fingerprint`] + programming options.
+//!   keyed by operand [`fingerprint`] + programming options, all hosted
+//!   on one shared plane whose tile slots recycle across evictions (and
+//!   which is transparently rebuilt if a shard panic poisons it).
 //! * Serving metrics — throughput, p50/p99 latency, and the
 //!   write-once/read-per-solve energy split, in
 //!   [`crate::metrics::serving`].
 //!
-//! Entry point: [`crate::solver::Meliso::open_session`].  The CLI exposes
-//! `meliso serve-bench`, and `benches/serving_throughput.rs` quantifies
-//! the amortization against repeated one-shot solves.
+//! Entry points: [`crate::solver::Meliso::open_session`] (dedicated
+//! plane) and [`crate::solver::Meliso::open_session_on`] (shared plane).
+//! The CLI exposes `meliso serve-bench` (multi-operand via `--operands`),
+//! and `benches/serving_throughput.rs` quantifies the amortization
+//! against repeated one-shot solves.
 
 pub mod cache;
 pub mod session;
 
 pub use cache::{fingerprint, session_key, OperandCache, SessionKey};
-pub use session::{exec_stream_seed, MvmOperator, ProgramReport, ServeSolve, Session};
+pub use session::{
+    exec_stream_seed, MvmOperator, OperandId, ProgramReport, ServeSolve, Session,
+};

@@ -1,26 +1,36 @@
 //! Resident crossbar sessions: program an operand once, serve unlimited
 //! solves against it.
 //!
-//! A [`Session`] is the serving façade over the shared
+//! A [`Session`] is the serving façade over one *residency* of the shared
 //! [`ExecutionPlane`](crate::plane::ExecutionPlane): at open time the
 //! plane programs every non-zero chunk onto its sharded worker pool
 //! (write–verify paid once, tiles and
 //! [`TileExecutor`](crate::ec::TileExecutor)s stay resident), and every
 //! subsequent [`Session::solve`] / [`Session::solve_batch`] pays only the
-//! input-vector encode and the crossbar reads.  The session itself owns
-//! the serving concerns on top: request validation, throughput/latency
-//! statistics and the write-once/read-per-solve energy split
-//! ([`crate::metrics::serving`]).
+//! input-vector encode and the crossbar reads.  Since the plane became
+//! multi-tenant, **many sessions share one plane**: open them with
+//! [`Session::open_on`] (or
+//! [`Meliso::open_session_on`](crate::solver::Meliso::open_session_on))
+//! against the same `Arc<Mutex<ExecutionPlane>>` and their batches
+//! interleave on one shard pool — bit-identical to dedicated planes.  The
+//! session itself owns the serving concerns on top: request validation,
+//! throughput/latency statistics and the write-once/read-per-solve energy
+//! split ([`crate::metrics::serving`]).
 //!
-//! **Determinism contract.**  Programming consumes each MCA's persistent
-//! stream in leader dispatch order (the same order as one-shot solves), so
-//! the resident image is bit-reproducible for a given seed.  Execution
-//! noise is drawn from a *counter-based* stream derived from
+//! **Determinism contract.**  Each residency gets its own executor set
+//! seeded exactly like a dedicated plane, programmed in leader dispatch
+//! order, so the resident image is bit-reproducible for a given seed
+//! regardless of which other tenants share the plane.  Execution noise is
+//! drawn from a *counter-based* stream derived from
 //! `(master seed, mca, solve index, chunk)` — see [`exec_stream_seed`] —
-//! so a batch of N vectors is bit-identical to N sequential solves, and
-//! results are independent of shard count, placement and scheduling.
+//! so a batch of N vectors is bit-identical to N sequential solves.
+//!
+//! **Fault tolerance.**  A shard panic surfaces as a clean `Err` from the
+//! ongoing call (the plane's supervised gather — see [`crate::plane`])
+//! and poisons the plane so later calls fail fast; dropping the session
+//! evicts its residency, returning the tile slots to the allocator.
 
-pub use crate::plane::{exec_stream_seed, ProgramReport, ServeSolve};
+pub use crate::plane::{exec_stream_seed, OperandId, ProgramReport, ServeSolve};
 
 use crate::config::{SolveOptions, SystemConfig};
 use crate::linalg::Vector;
@@ -34,10 +44,11 @@ use std::sync::{Arc, Mutex};
 /// (`crate::iterative`).
 ///
 /// The solvers only ever ask for `y = A·x`; *where* that product runs —
-/// a resident crossbar [`Session`] (analog, noisy, write-amortized) or an
-/// exact f64 reference (`crate::iterative::ExactOperator`) — is behind
-/// this trait.  Implementations also expose how many MVMs they served and
-/// how many write–verify programming passes they paid, so a convergence
+/// a resident crossbar [`Session`] (analog, noisy, write-amortized), a
+/// bare plane residency ([`crate::iterative::PlaneOperator`]) or an exact
+/// f64 reference (`crate::iterative::ExactOperator`) — is behind this
+/// trait.  Implementations also expose how many MVMs they served and how
+/// many write–verify programming passes they paid, so a convergence
 /// report can state the paper's headline number directly: *one*
 /// programming pass, arbitrarily many read-only iterations.
 pub trait MvmOperator: Send + Sync {
@@ -79,29 +90,30 @@ impl MvmOperator for Session {
 }
 
 struct SessionInner {
-    plane: ExecutionPlane,
     last_write_j: f64,
     last_read_j: f64,
     stats: ServingStats,
 }
 
-/// A resident crossbar session: one operand programmed onto the MCA grid,
-/// serving unlimited solves.  `Sync` — share it behind an `Arc` and call
-/// [`solve`](Session::solve) from any thread (solves on one session are
-/// serialized, matching an analog array executing one MVM at a time;
-/// throughput comes from [`solve_batch`](Session::solve_batch) and from
-/// running many sessions).
+/// A resident crossbar session: one operand programmed onto the (possibly
+/// shared) MCA grid, serving unlimited solves.  `Sync` — share it behind
+/// an `Arc` and call [`solve`](Session::solve) from any thread (solves on
+/// one session are serialized, matching an analog array executing one MVM
+/// at a time; throughput comes from [`solve_batch`](Session::solve_batch)
+/// and from running many sessions).
 pub struct Session {
     source: Arc<dyn MatrixSource>,
     config: SystemConfig,
     opts: SolveOptions,
     program: ProgramReport,
+    id: OperandId,
+    plane: Arc<Mutex<ExecutionPlane>>,
     inner: Mutex<SessionInner>,
 }
 
 impl Session {
-    /// Program `source` onto the grid: build the sharded execution plane,
-    /// scatter and write–verify every non-zero chunk (per-shard
+    /// Program `source` onto a fresh dedicated plane: build the sharded
+    /// pool, scatter and write–verify every non-zero chunk (per-shard
     /// programming runs in parallel), and record the one-time programming
     /// report.
     pub fn open(
@@ -110,14 +122,32 @@ impl Session {
         opts: SolveOptions,
         backend: Backend,
     ) -> Result<Session, String> {
-        let mut plane = ExecutionPlane::build(source.as_ref(), &config, &opts, backend)?;
-        let program = plane.program(source.as_ref())?;
-        let (last_write_j, last_read_j) = plane.energy_totals();
+        let plane = ExecutionPlane::build(source.as_ref(), &config, &opts, backend)?;
+        Session::open_on(Arc::new(Mutex::new(plane)), source)
+    }
+
+    /// Program `source` as a residency on an existing (shared) plane.
+    /// Many sessions opened on one plane serve interleaved batches from
+    /// one shard pool, bit-identical to dedicated planes.
+    pub fn open_on(
+        plane: Arc<Mutex<ExecutionPlane>>,
+        source: Arc<dyn MatrixSource>,
+    ) -> Result<Session, String> {
+        let (config, opts, id, program, write_j, read_j) = {
+            let mut guard = plane
+                .lock()
+                .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?;
+            let config = guard.system_config();
+            let opts = guard.options().clone();
+            let (id, program) = guard.program(source.as_ref())?;
+            let (write_j, read_j) = guard.operand_energy_totals(id).unwrap_or((0.0, 0.0));
+            (config, opts, id, program, write_j, read_j)
+        };
         let mut stats = ServingStats::new();
         stats.record_program(program.write_energy_j, program.write_latency_s);
         crate::log_info!(
             "server",
-            "session open {}x{}: {} resident chunks ({} skipped) on {} MCAs, \
+            "session open {id} ({}x{}): {} resident chunks ({} skipped) on {} MCAs, \
              E_w {:.3e} J, wall {:.2}s",
             program.m,
             program.n,
@@ -132,10 +162,11 @@ impl Session {
             config,
             opts,
             program,
+            id,
+            plane,
             inner: Mutex::new(SessionInner {
-                plane,
-                last_write_j,
-                last_read_j,
+                last_write_j: write_j,
+                last_read_j: read_j,
                 stats,
             }),
         })
@@ -169,12 +200,20 @@ impl Session {
             .lock()
             .map_err(|_| "session poisoned by an earlier panic".to_string())?;
         let inner = &mut *guard;
-        let outcome = inner.plane.execute_batch(xs);
-        // Energy deltas for the serving stats (write = per-solve vector
-        // encodes + broadcast rows; the matrix write was paid at open).
-        // Synced even on error, so a failed batch's energy is not
-        // attributed to the next successful one.
-        let (write_j, read_j) = inner.plane.energy_totals();
+        let (outcome, write_j, read_j) = {
+            let mut plane = self
+                .plane
+                .lock()
+                .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?;
+            let outcome = plane.execute_batch(self.id, xs);
+            // This residency's energy totals, synced even on error, so a
+            // failed batch's energy is not attributed to the next
+            // successful one.
+            let (w, r) = plane
+                .operand_energy_totals(self.id)
+                .unwrap_or((inner.last_write_j, inner.last_read_j));
+            (outcome, w, r)
+        };
         let (dw, dr) = (write_j - inner.last_write_j, read_j - inner.last_read_j);
         inner.last_write_j = write_j;
         inner.last_read_j = read_j;
@@ -204,6 +243,17 @@ impl Session {
         }
     }
 
+    /// This session's residency handle on its plane.
+    pub fn operand_id(&self) -> OperandId {
+        self.id
+    }
+
+    /// The (possibly shared) execution plane hosting this session's
+    /// residency.
+    pub fn plane(&self) -> &Arc<Mutex<ExecutionPlane>> {
+        &self.plane
+    }
+
     pub fn source(&self) -> &Arc<dyn MatrixSource> {
         &self.source
     }
@@ -214,6 +264,16 @@ impl Session {
 
     pub fn options(&self) -> &SolveOptions {
         &self.opts
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // Release the residency so a shared plane reclaims its tile slots;
+        // on a dedicated plane the whole pool is about to join anyway.
+        if let Ok(mut plane) = self.plane.lock() {
+            let _ = plane.evict(self.id);
+        }
     }
 }
 
@@ -273,6 +333,45 @@ mod tests {
             .map(|r| r.y)
             .collect();
         assert_eq!(seq, batch);
+    }
+
+    #[test]
+    fn two_sessions_share_one_plane() {
+        // Two tenants on one plane serve interleaved solves bit-identical
+        // to two dedicated planes with the same seeds.
+        let a = Matrix::standard_normal(48, 48, 91);
+        let c = Matrix::standard_normal(48, 48, 92);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_seed(17)
+            .with_workers(2);
+        let xa = Vector::standard_normal(48, 93);
+        let xc = Vector::standard_normal(48, 94);
+
+        let ded_a = open(a.clone(), config, opts.clone()).solve(&xa).unwrap().y;
+        let ded_c = open(c.clone(), config, opts.clone()).solve(&xc).unwrap().y;
+
+        let src_a: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(a));
+        let src_c: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(c));
+        let plane = ExecutionPlane::build(src_a.as_ref(), &config, &opts, native()).unwrap();
+        let plane = Arc::new(Mutex::new(plane));
+        let sa = Session::open_on(plane.clone(), src_a).unwrap();
+        let sc = Session::open_on(plane.clone(), src_c).unwrap();
+        assert!(Arc::ptr_eq(sa.plane(), sc.plane()));
+        assert_ne!(sa.operand_id(), sc.operand_id());
+        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        // Interleaved order: C first, then A — counter-based noise makes
+        // order irrelevant.
+        let shared_c = sc.solve(&xc).unwrap().y;
+        let shared_a = sa.solve(&xa).unwrap().y;
+        assert_eq!(ded_a, shared_a);
+        assert_eq!(ded_c, shared_c);
+        // Dropping one session frees its residency, the other keeps
+        // serving.
+        drop(sc);
+        assert_eq!(plane.lock().unwrap().resident_operands(), 1);
+        assert!(sa.solve(&xa).is_ok());
     }
 
     #[test]

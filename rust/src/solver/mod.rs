@@ -17,13 +17,14 @@ use crate::iterative::{self, IterOptions};
 use crate::linalg::{Matrix, Vector};
 use crate::matrices::{DenseSource, MatrixSource};
 use crate::metrics::{ConvergenceReport, SolveReport};
+use crate::plane::ExecutionPlane;
 use crate::runtime::native::NativeBackend;
 use crate::runtime::pjrt::default_artifact_dir;
 use crate::runtime::service::PjrtBackend;
 use crate::runtime::Backend;
 use crate::server::{MvmOperator, Session};
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// The MELISO+ solver: a configured multi-MCA system plus solve options.
 pub struct Meliso {
@@ -113,12 +114,42 @@ impl Meliso {
         self.solve_source(&src, x)
     }
 
-    /// Open a resident serving session: program `source` onto the grid
-    /// once, then serve unlimited `solve` / `solve_batch` calls against it
-    /// (see [`crate::server`]).  The expensive write–verify pass is paid
-    /// here; per-solve cost drops to input-vector encodes plus reads.
+    /// Open a resident serving session on a fresh dedicated plane:
+    /// program `source` onto the grid once, then serve unlimited `solve` /
+    /// `solve_batch` calls against it (see [`crate::server`]).  The
+    /// expensive write–verify pass is paid here; per-solve cost drops to
+    /// input-vector encodes plus reads.  To host several operands on one
+    /// shard pool, use [`build_plane`](Self::build_plane) +
+    /// [`open_session_on`](Self::open_session_on) instead.
     pub fn open_session(&self, source: Arc<dyn MatrixSource>) -> Result<Session, String> {
         Session::open(source, self.config, self.opts.clone(), self.backend.clone())
+    }
+
+    /// Build a shared multi-tenant execution plane sized for `source`'s
+    /// chunk plan.  Program any number of operands onto it with
+    /// [`open_session_on`](Self::open_session_on) (or
+    /// [`ExecutionPlane::program`] directly) — they serve interleaved
+    /// batches from one shard pool, bit-identical to dedicated planes.
+    pub fn build_plane(
+        &self,
+        source: &dyn MatrixSource,
+    ) -> Result<Arc<Mutex<ExecutionPlane>>, String> {
+        Ok(Arc::new(Mutex::new(ExecutionPlane::build(
+            source,
+            &self.config,
+            &self.opts,
+            self.backend.clone(),
+        )?)))
+    }
+
+    /// Open a resident serving session as a residency on an existing
+    /// shared plane (see [`build_plane`](Self::build_plane)).
+    pub fn open_session_on(
+        &self,
+        plane: &Arc<Mutex<ExecutionPlane>>,
+        source: Arc<dyn MatrixSource>,
+    ) -> Result<Session, String> {
+        Session::open_on(plane.clone(), source)
     }
 
     /// Solve the linear **system** `Ax = b` with an iterative method whose
@@ -346,6 +377,29 @@ mod tests {
         let err = out.y.sub(&b).norm_l2() / b.norm_l2();
         assert!(err < 0.1, "{err}");
         assert_eq!(session.report().solves, 1);
+    }
+
+    #[test]
+    fn shared_plane_sessions_via_front_door() {
+        let a = Matrix::standard_normal(32, 32, 7);
+        let c = Matrix::standard_normal(32, 32, 8);
+        let solver = native_solver(
+            SystemConfig::single_mca(32),
+            SolveOptions::default().with_device(Material::EpiRam),
+        );
+        let src_a: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(a.clone()));
+        let src_c: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(c.clone()));
+        let plane = solver.build_plane(src_a.as_ref()).unwrap();
+        let sa = solver.open_session_on(&plane, src_a).unwrap();
+        let sc = solver.open_session_on(&plane, src_c).unwrap();
+        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        let x = Vector::standard_normal(32, 9);
+        let ba = a.matvec(&x);
+        let ya = sa.solve(&x).unwrap().y;
+        assert!(ya.sub(&ba).norm_l2() / ba.norm_l2() < 0.1);
+        let bc = c.matvec(&x);
+        let yc = sc.solve(&x).unwrap().y;
+        assert!(yc.sub(&bc).norm_l2() / bc.norm_l2() < 0.1);
     }
 
     #[test]

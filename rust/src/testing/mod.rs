@@ -92,6 +92,163 @@ pub mod gen {
     }
 }
 
+/// Fault-injection doubles for the execution plane's supervision tests:
+/// a matrix source whose `block` panics on a chosen chunk (leader-side
+/// walk faults), a backend that panics mid-read (true shard-thread
+/// panics), and a backend that returns clean errors on demand (chunk-level
+/// failures that must leave the plane serviceable).
+///
+/// These live in the library (not `#[cfg(test)]`) so the
+/// `fault_tolerance` integration suite and unit tests share one set of
+/// poisons; they are never constructed on production paths.
+pub mod faults {
+    use crate::linalg::{Matrix, Vector};
+    use crate::matrices::{DenseSource, MatrixSource};
+    use crate::runtime::{EcMvmRequest, EcMvmResponse, ExecBackend};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    /// A dense operand whose `block` **panics** when the extraction covers
+    /// `poison = (row0, col0)` — simulates a corrupt chunk on the leader's
+    /// streaming walk.
+    pub struct PanicSource {
+        inner: DenseSource,
+        poison: (usize, usize),
+    }
+
+    impl PanicSource {
+        /// Poison the chunk whose origin is `(row0, col0)`.
+        pub fn new(matrix: Matrix, poison: (usize, usize)) -> PanicSource {
+            PanicSource {
+                inner: DenseSource::new(matrix),
+                poison,
+            }
+        }
+    }
+
+    impl MatrixSource for PanicSource {
+        fn nrows(&self) -> usize {
+            self.inner.nrows()
+        }
+
+        fn ncols(&self) -> usize {
+            self.inner.ncols()
+        }
+
+        fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Matrix {
+            let (pr, pc) = self.poison;
+            if r0 <= pr && pr < r0 + h && c0 <= pc && pc < c0 + w {
+                panic!("injected poisoned block at ({pr},{pc})");
+            }
+            self.inner.block(r0, c0, h, w)
+        }
+
+        fn matvec(&self, x: &Vector) -> Vector {
+            self.inner.matvec(x)
+        }
+
+        fn max_abs(&self) -> f64 {
+            self.inner.max_abs()
+        }
+    }
+
+    /// Shared switch controlling an injected backend fault.
+    #[derive(Clone)]
+    pub struct FaultHandle(Arc<AtomicBool>);
+
+    impl FaultHandle {
+        /// Arm (`true`) or disarm (`false`) the fault for subsequent reads.
+        pub fn fail_next_reads(&self, armed: bool) {
+            self.0.store(armed, Ordering::SeqCst);
+        }
+
+        fn armed(&self) -> bool {
+            self.0.load(Ordering::SeqCst)
+        }
+    }
+
+    /// What an armed [`FaultBackend`] does on the next tile read.
+    #[derive(Clone, Copy)]
+    enum FaultMode {
+        /// Return `Err("injected backend failure")` — a recoverable
+        /// chunk-level failure: the plane must drain the batch cleanly and
+        /// keep serving.
+        Error,
+        /// `panic!` inside the shard thread — the supervised gather must
+        /// convert it into a clean error instead of hanging.
+        Panic,
+    }
+
+    /// Backend wrapper that injects a fault into every tile read while
+    /// armed; build with [`erroring`](FaultBackend::erroring) or
+    /// [`panicking`](FaultBackend::panicking).
+    pub struct FaultBackend<B: ExecBackend> {
+        inner: B,
+        handle: FaultHandle,
+        mode: FaultMode,
+    }
+
+    impl<B: ExecBackend> FaultBackend<B> {
+        fn with_mode(inner: B, mode: FaultMode) -> FaultBackend<B> {
+            FaultBackend {
+                inner,
+                handle: FaultHandle(Arc::new(AtomicBool::new(false))),
+                mode,
+            }
+        }
+
+        /// Armed reads return a clean `Err`.
+        pub fn erroring(inner: B) -> FaultBackend<B> {
+            FaultBackend::with_mode(inner, FaultMode::Error)
+        }
+
+        /// Armed reads panic (a true shard-thread panic).
+        pub fn panicking(inner: B) -> FaultBackend<B> {
+            FaultBackend::with_mode(inner, FaultMode::Panic)
+        }
+
+        /// Arm from the start (builder style).
+        pub fn armed(self) -> FaultBackend<B> {
+            self.handle.fail_next_reads(true);
+            self
+        }
+
+        pub fn handle(&self) -> FaultHandle {
+            self.handle.clone()
+        }
+
+        fn check(&self, site: &str) -> Result<(), String> {
+            if self.handle.armed() {
+                match self.mode {
+                    FaultMode::Error => return Err("injected backend failure".to_string()),
+                    FaultMode::Panic => panic!("injected shard panic ({site})"),
+                }
+            }
+            Ok(())
+        }
+    }
+
+    impl<B: ExecBackend> ExecBackend for FaultBackend<B> {
+        fn mvm(&self, n: usize, at: Vec<f32>, xt: Vec<f32>) -> Result<Vec<f32>, String> {
+            self.check("mvm")?;
+            self.inner.mvm(n, at, xt)
+        }
+
+        fn ec_mvm(&self, req: EcMvmRequest) -> Result<EcMvmResponse, String> {
+            self.check("ec_mvm")?;
+            self.inner.ec_mvm(req)
+        }
+
+        fn tile_sizes(&self) -> Vec<usize> {
+            self.inner.tile_sizes()
+        }
+
+        fn name(&self) -> &'static str {
+            "fault-injection"
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

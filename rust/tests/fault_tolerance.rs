@@ -1,0 +1,186 @@
+//! Panic-injection regression suite for the execution plane's supervised
+//! gather (the ROADMAP's former known limitation: a shard that panicked
+//! mid-walk hung the resident-path gather forever).
+//!
+//! Every scenario runs under a hard wall-clock bound: the operation
+//! executes on a helper thread and the test fails — instead of hanging
+//! CI — if no result arrives in time.  Faults are injected through
+//! `meliso::testing::faults`:
+//!
+//! * [`PanicSource`] — the *leader-side* walk panics extracting a chosen
+//!   chunk (corrupt operand);
+//! * [`FaultBackend::panicking`] — a *shard thread* panics mid-read (the
+//!   original hang);
+//! * recovery: after a shard panic the plane is failed and every call
+//!   returns a clean error; after a leader-side extraction panic the
+//!   plane stays serviceable.
+
+use meliso::matrices::{DenseSource, MatrixSource};
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::testing::faults::{FaultBackend, PanicSource};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Hard bound on any single scenario: generous for slow CI runners, tiny
+/// against the infinite hang this suite guards against.
+const SCENARIO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Run `f` on a helper thread and fail the test if it does not finish in
+/// [`SCENARIO_TIMEOUT`] — a regression of the hang fix trips this bound
+/// instead of wedging the whole test run.
+fn bounded<T: Send + 'static>(name: &str, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::Builder::new()
+        .name(format!("bounded-{name}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .expect("spawn scenario thread");
+    match rx.recv_timeout(SCENARIO_TIMEOUT) {
+        Ok(v) => v,
+        Err(_) => panic!("scenario {name:?} hung past {SCENARIO_TIMEOUT:?} (hang-fix regression)"),
+    }
+}
+
+fn config() -> SystemConfig {
+    SystemConfig::new(2, 2, 32)
+}
+
+fn opts() -> SolveOptions {
+    SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_workers(2)
+        .with_seed(11)
+}
+
+fn dense(seed: u64) -> Matrix {
+    Matrix::standard_normal(64, 64, seed)
+}
+
+#[test]
+fn one_shot_leader_extraction_panic_is_clean_error() {
+    let err = bounded("one-shot/leader-panic", || {
+        // Poison the chunk at (32, 0): the leader's streaming extraction
+        // panics mid-walk.
+        let src = PanicSource::new(dense(1), (32, 0));
+        let x = Vector::standard_normal(64, 2);
+        let plane =
+            ExecutionPlane::build(&src, &config(), &opts(), Arc::new(NativeBackend::new()))
+                .unwrap();
+        plane.execute_once(&src, &x).unwrap_err()
+    });
+    assert!(err.contains("panicked"), "{err}");
+    assert!(err.contains("poisoned block"), "{err}");
+}
+
+#[test]
+fn resident_program_leader_panic_is_clean_error_and_plane_recovers() {
+    bounded("resident/program-leader-panic", || {
+        let poisoned = PanicSource::new(dense(3), (32, 32));
+        let clean = DenseSource::new(dense(4));
+        let mut plane =
+            ExecutionPlane::build(&poisoned, &config(), &opts(), Arc::new(NativeBackend::new()))
+                .unwrap();
+        let err = plane.program(&poisoned).unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // A leader-side extraction fault is recoverable: the partial
+        // residency was retired (slots freed) and the pool still serves.
+        assert_eq!(plane.resident_operands(), 0);
+        assert_eq!(plane.slots_in_use(), 0);
+        let (id, program) = plane.program(&clean).unwrap();
+        assert_eq!(program.chunks_resident, 4);
+        let x = Vector::standard_normal(64, 5);
+        let batch = plane.execute_batch(id, std::slice::from_ref(&x)).unwrap();
+        assert_eq!(batch.solves.len(), 1);
+    });
+}
+
+#[test]
+fn one_shot_shard_panic_is_clean_error() {
+    let err = bounded("one-shot/shard-panic", || {
+        // The backend panics inside the shard thread on every tile read —
+        // the exact failure that used to hang the gather.
+        let src = DenseSource::new(dense(6));
+        let x = Vector::standard_normal(64, 7);
+        let backend = FaultBackend::panicking(NativeBackend::new()).armed();
+        let plane =
+            ExecutionPlane::build(&src, &config(), &opts(), Arc::new(backend)).unwrap();
+        plane.execute_once(&src, &x).unwrap_err()
+    });
+    assert!(err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn resident_execute_shard_panic_is_clean_error_and_fails_fast_after() {
+    bounded("resident/execute-shard-panic", || {
+        let src = DenseSource::new(dense(8));
+        let backend = FaultBackend::panicking(NativeBackend::new());
+        let handle = backend.handle();
+        let mut plane =
+            ExecutionPlane::build(&src, &config(), &opts(), Arc::new(backend)).unwrap();
+        // Programming does not touch the backend; arm afterwards so the
+        // panic fires inside a shard's execute walk.
+        let (id, _) = plane.program(&src).unwrap();
+        handle.fail_next_reads(true);
+        let x = Vector::standard_normal(64, 9);
+        let err = plane
+            .execute_batch(id, std::slice::from_ref(&x))
+            .unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // The pool lost a worker: the plane is failed, and every later
+        // call is an immediate clean error (fail fast, never hang).
+        assert!(plane.failure().is_some());
+        handle.fail_next_reads(false);
+        let err2 = plane
+            .execute_batch(id, std::slice::from_ref(&x))
+            .unwrap_err();
+        assert!(err2.contains("failed"), "{err2}");
+        let err3 = plane.program(&src).unwrap_err();
+        assert!(err3.contains("failed"), "{err3}");
+    });
+}
+
+#[test]
+fn resident_session_surfaces_shard_panic_as_error() {
+    bounded("resident/session-shard-panic", || {
+        let backend = FaultBackend::panicking(NativeBackend::new());
+        let handle = backend.handle();
+        let src: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(dense(10)));
+        let session = Session::open(src, config(), opts(), Arc::new(backend)).unwrap();
+        let x = Vector::standard_normal(64, 11);
+        assert!(session.solve(&x).is_ok());
+        handle.fail_next_reads(true);
+        let err = session.solve(&x).unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // The session keeps reporting (stats survive) and keeps failing
+        // cleanly rather than hanging.
+        assert_eq!(session.report().errors, 1);
+        assert!(session.solve(&x).is_err());
+    });
+}
+
+#[test]
+fn multi_tenant_plane_survives_leader_fault_in_one_tenant() {
+    bounded("resident/multi-tenant-isolation", || {
+        let good: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(dense(12)));
+        let poisoned = PanicSource::new(dense(13), (0, 32));
+        let plane = ExecutionPlane::build(
+            good.as_ref(),
+            &config(),
+            &opts(),
+            Arc::new(NativeBackend::new()),
+        )
+        .unwrap();
+        let plane = Arc::new(Mutex::new(plane));
+        let good_session = Session::open_on(plane.clone(), good).unwrap();
+        // A tenant whose operand is corrupt fails to open ...
+        let err = Session::open_on(plane.clone(), Arc::new(poisoned)).unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        // ... without disturbing the healthy tenant.
+        let x = Vector::standard_normal(64, 14);
+        assert!(good_session.solve(&x).is_ok());
+        assert_eq!(plane.lock().unwrap().resident_operands(), 1);
+    });
+}
