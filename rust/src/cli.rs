@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! meliso run --matrix add32 --device taox-hfox --ec --k 5 --tiles 8x8 --cell 1024
+//! meliso run --matrix data/suitesparse/bcsstk02.mtx   # any Matrix-Market file
+//! meliso solve-system --matrix arrow1k --method cg    # irregular sparse operand
 //! meliso matrices          # Table 2 stand-in summary
 //! meliso devices           # device parameter sheet
 //! meliso artifacts         # loaded-artifact inventory
@@ -104,7 +106,9 @@ SERVE-BENCH OPTIONS (plus the applicable RUN options below):
     --baseline N       one-shot reference solves per operand (default min(solves, 5))
 
 RUN OPTIONS:
-    --matrix NAME      operand from the registry (default iperturb66)
+    --matrix NAME      operand from the registry (default iperturb66), or a
+                       Matrix-Market file: any path ending in .mtx, or mtx:PATH
+                       (loaded as a CSR sparse operand, O(nnz) memory)
     --config FILE      load [system]/[solve] sections from a TOML file
     --device NAME      ag-asi | alox-hfo2 | epiram | taox-hfox
     --ec / --no-ec     two-tier error correction (default on)

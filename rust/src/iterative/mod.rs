@@ -32,7 +32,22 @@
 //! paper's "lower-precision devices outperform high-precision
 //! alternatives" claim, measured on the full solve).
 //!
-//! Front door for users: [`crate::solver::Meliso::solve_system`].
+//! Front door for users: [`crate::solver::Meliso::solve_system`]:
+//!
+//! ```
+//! use meliso::prelude::*;
+//!
+//! let a = meliso::matrices::registry::build("spd64").unwrap();
+//! let b = a.matvec(&Vector::standard_normal(a.ncols(), 3));
+//! let opts = SolveOptions::default()
+//!     .with_device(Material::EpiRam)
+//!     .with_wv_iters(4)
+//!     .with_backend(BackendKind::Native);
+//! let report = Meliso::new(SystemConfig::single_mca(64), opts).unwrap()
+//!     .solve_system(a, &b, &IterOptions::default().with_method(Method::Cg))
+//!     .unwrap();
+//! assert!(report.converged && report.programming_passes == 1);
+//! ```
 
 pub mod cg;
 pub mod gmres;

@@ -5,6 +5,9 @@
 //! *"Harnessing the Full Potential of RRAMs through Scalable and Distributed
 //! In-Memory Computing with Integrated Error Correction"* (CS.DC 2025).
 //!
+//! The full paper-concept → module tour (and the life of a solve through
+//! both execution paths) lives in `docs/ARCHITECTURE.md`; the short map:
+//!
 //! ## Architecture (four layers)
 //!
 //! * **L3 (this crate)** — the coordinator: RRAM device & crossbar (MCA)
@@ -39,33 +42,60 @@
 //!   PJRT CPU client (`xla` crate, behind the `pjrt` feature) and executes
 //!   them on the request path.  Python never runs at request time.
 //!
+//! ## Module index
+//!
+//! | module | role |
+//! |---|---|
+//! | [`bench`] | in-house benchmark harness (warmup, robust stats, JSON emission) |
+//! | [`cli`] | hand-rolled argv parser behind the `meliso` binary |
+//! | [`config`] | [`config::SystemConfig`] / [`config::SolveOptions`], minimal-TOML loading |
+//! | [`coordinator`] | thin facade over the one-shot plane path (historic entry point) |
+//! | [`device`] | RRAM material models, pulse physics, extended non-idealities |
+//! | [`ec`] | two-tier error correction and the per-tile [`ec::TileExecutor`] |
+//! | [`iterative`] | Jacobi/Richardson/CG/GMRES over resident sessions + refinement |
+//! | [`linalg`] | dense [`linalg::Matrix`]/[`linalg::Vector`], LU, Krylov workspaces |
+//! | [`matrices`] | operand substrate: [`matrices::MatrixSource`], [`matrices::BandedSource`], [`matrices::sparse::CsrSource`], generators, Matrix-Market IO, the named [`matrices::registry`] |
+//! | [`mca`] | multi-crossbar-array simulation: write–verify, energy ledgers |
+//! | [`metrics`] | solve/serving/convergence reports, error norms, tables |
+//! | [`plane`] | the sharded [`plane::ExecutionPlane`]: placement, dispatch, supervised gathers, multi-operand residency |
+//! | [`runtime`] | execution backends: pure-Rust native twin, PJRT artifact engine |
+//! | [`server`] | resident [`server::Session`]s, [`server::OperandCache`], serving metrics |
+//! | [`solver`] | the [`solver::Meliso`] front door: one-shot, sessions, `Ax = b` |
+//! | [`testing`] | property-test mini-framework and fault-injection helpers |
+//! | [`util`] | vendored substrates: rng, json, toml, logging |
+//! | [`virtualization`] | chunk planning: [`virtualization::ChunkPlan`], geometry, sparsity-aware enumeration |
+//!
 //! ## Quickstart (one-shot)
 //!
-//! ```no_run
+//! ```
 //! use meliso::prelude::*;
 //!
 //! let matrix = meliso::matrices::registry::build("iperturb66").unwrap();
 //! let x = Vector::standard_normal(matrix.ncols(), 7);
-//! let cfg = SolveOptions::default().with_device(Material::TaOxHfOx).with_ec(true);
+//! let cfg = SolveOptions::default()
+//!     .with_device(Material::TaOxHfOx)
+//!     .with_ec(true)
+//!     .with_backend(BackendKind::Native);
 //! let report = Meliso::new(SystemConfig::single_mca(128), cfg).unwrap()
 //!     .solve_source(matrix.as_ref(), &x).unwrap();
-//! println!("rel l2 error: {:.4}", report.rel_err_l2);
+//! assert!(report.rel_err_l2 < 0.5);
 //! ```
 //!
 //! ## Quickstart (resident session, program once / solve many)
 //!
-//! ```no_run
+//! ```
 //! use meliso::prelude::*;
 //!
 //! let matrix = meliso::matrices::registry::build("iperturb66").unwrap();
-//! let solver = Meliso::new(SystemConfig::single_mca(128), SolveOptions::default()).unwrap();
+//! let opts = SolveOptions::default().with_backend(BackendKind::Native);
+//! let solver = Meliso::new(SystemConfig::single_mca(128), opts).unwrap();
 //! let session = solver.open_session(matrix.clone()).unwrap();   // write-verify once
-//! for seed in 0..1000 {
+//! for seed in 0..8 {
 //!     let x = Vector::standard_normal(matrix.ncols(), seed);
 //!     let out = session.solve(&x).unwrap();                     // reads only
 //!     assert_eq!(out.y.len(), matrix.nrows());
 //! }
-//! println!("{}", session.report().render());
+//! assert_eq!(session.report().solves, 8);
 //! ```
 //!
 //! ## Quickstart (solving Ax = b iteratively)
@@ -75,17 +105,43 @@
 //! exact f64 host-side refinement drives the residual far below the
 //! device's per-MVM error floor (see [`iterative`]):
 //!
-//! ```no_run
+//! ```
 //! use meliso::prelude::*;
 //!
 //! let a = meliso::matrices::registry::build("spd64").unwrap();
 //! let b = a.matvec(&Vector::standard_normal(a.ncols(), 7));
-//! let solver = Meliso::new(SystemConfig::single_mca(64), SolveOptions::default()).unwrap();
+//! let opts = SolveOptions::default()
+//!     .with_device(Material::EpiRam)
+//!     .with_wv_iters(4)
+//!     .with_backend(BackendKind::Native);
+//! let solver = Meliso::new(SystemConfig::single_mca(64), opts).unwrap();
 //! let report = solver
 //!     .solve_system(a, &b, &IterOptions::default().with_method(Method::Cg))
 //!     .unwrap();
-//! println!("{}", report.render());   // residual trajectory + energy split
+//! assert!(report.converged && report.programming_passes == 1);
 //! ```
+//!
+//! ## Quickstart (real sparse operands)
+//!
+//! Irregular sparsity — a Matrix-Market file or a procedural CSR pattern —
+//! runs the same paths, with planning and dispatch restricted to the
+//! occupied chunks ([`matrices::sparse`]):
+//!
+//! ```no_run
+//! use meliso::prelude::*;
+//!
+//! // Registry route: `mtx:<path>` (or any name ending in `.mtx`).
+//! let a = meliso::matrices::registry::build("mtx:data/operand.mtx").unwrap();
+//! let opts = SolveOptions::default()
+//!     .with_placement(Placement::SparsityAware)
+//!     .with_backend(BackendKind::Native);
+//! let solver = Meliso::new(SystemConfig::new(4, 4, 256), opts).unwrap();
+//! let b = a.matvec(&Vector::standard_normal(a.ncols(), 1));
+//! let report = solver.solve_system(a, &b, &IterOptions::default()).unwrap();
+//! assert!(report.converged);
+//! ```
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench;
 pub mod cli;
@@ -113,6 +169,7 @@ pub mod prelude {
     pub use crate::ec::DenoiseMode;
     pub use crate::iterative::{IterOptions, Method, MvmOperator};
     pub use crate::linalg::{Matrix, Vector};
+    pub use crate::matrices::CsrSource;
     pub use crate::metrics::{ConvergenceReport, SolveReport};
     pub use crate::plane::{ExecutionPlane, OperandId, Placement};
     pub use crate::server::Session;

@@ -9,6 +9,7 @@
 //! off-diagonals, which tracks the target condition number to within a
 //! small factor — validated by `linalg::cond` in the tests.
 
+use super::sparse::CsrSource;
 use crate::linalg::{Matrix, Vector};
 use crate::util::rng::Rng;
 
@@ -142,6 +143,182 @@ fn apply_householder_two_sided(a: &mut Matrix, u: &Vector) {
     }
 }
 
+/// Symmetric positive-definite CSR operand over an arbitrary
+/// strict-upper-triangle `pattern`.
+///
+/// The diagonal carries the same geometric profile as
+/// [`BandedSource`](super::BandedSource) — `d(i)` spans
+/// `d_max .. d_max/kappa_target` — and each pattern entry gets the value
+/// `√(d_i·d_j)·u_ij` (deterministic `u ∈ [-1, 1]`), rescaled per row so
+/// the absolute off-diagonal row sums never exceed `off_amp·d(i)`.  That
+/// makes the matrix strictly diagonally dominant with positive diagonal,
+/// hence SPD, and pins the spectrum by Gershgorin to
+/// `[d(i)·(1−off_amp), d(i)·(1+off_amp)]`:
+///
+/// * condition number within `(1+off_amp)/(1−off_amp)` of `kappa_target`
+///   (for the default `off_amp = 0.2`: within 1.5×),
+/// * spectral norm at most `d_max·(1+off_amp)`.
+///
+/// Duplicate pattern pairs are legal (their contributions sum; the row
+/// budget counts every draw, so dominance still holds).
+pub fn sparse_spd_from_pattern(
+    n: usize,
+    pattern: &[(usize, usize)],
+    d_max: f64,
+    kappa_target: f64,
+    off_amp: f64,
+    seed: u64,
+) -> CsrSource {
+    assert!(n > 1 && d_max > 0.0 && kappa_target >= 1.0);
+    assert!((0.0..1.0).contains(&off_amp), "off_amp must be in [0, 1)");
+    let diag = |i: usize| -> f64 {
+        let t = i as f64 / (n - 1) as f64;
+        d_max * kappa_target.powf(-t)
+    };
+    let mut rng = Rng::new(seed);
+    // Raw magnitudes first; per-row totals set the rescaling budget.
+    let mut raw: Vec<(usize, usize, f64)> = Vec::with_capacity(pattern.len());
+    let mut row_sum = vec![0.0f64; n];
+    for &(i, j) in pattern {
+        assert!(i < j && j < n, "pattern must be strict upper triangle");
+        let w = (diag(i) * diag(j)).sqrt() * rng.uniform_range(-1.0, 1.0);
+        raw.push((i, j, w));
+        row_sum[i] += w.abs();
+        row_sum[j] += w.abs();
+    }
+    let budget: Vec<f64> = (0..n)
+        .map(|i| {
+            if row_sum[i] > 0.0 {
+                (off_amp * diag(i) / row_sum[i]).min(1.0)
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut trip: Vec<(usize, usize, f64)> = Vec::with_capacity(2 * raw.len() + n);
+    for &(i, j, w) in &raw {
+        let v = w * budget[i].min(budget[j]);
+        if v != 0.0 {
+            trip.push((i, j, v));
+            trip.push((j, i, v));
+        }
+    }
+    for i in 0..n {
+        trip.push((i, i, diag(i)));
+    }
+    CsrSource::from_triplets(n, n, &trip).expect("pattern indices validated above")
+}
+
+/// Arrowhead SPD operand: a full first row/column plus the superdiagonal.
+///
+/// The canonical "wide span, sparse interior" stress case for planning:
+/// every block row's [`occupied_cols`](crate::matrices::MatrixSource::occupied_cols)
+/// span reaches column 0, so chunk candidates are pruned by the *exact*
+/// [`block_is_zero`](crate::matrices::MatrixSource::block_is_zero) rather
+/// than the column bound.  nnz = 5n − 6 (≈ 0.5% dense at n = 1000);
+/// condition/norm targets as in [`sparse_spd_from_pattern`].
+pub fn arrowhead_csr(
+    n: usize,
+    d_max: f64,
+    kappa_target: f64,
+    off_amp: f64,
+    seed: u64,
+) -> CsrSource {
+    assert!(n > 2);
+    let mut pattern: Vec<(usize, usize)> = (1..n).map(|j| (0, j)).collect();
+    pattern.extend((2..n).map(|j| (j - 1, j)));
+    sparse_spd_from_pattern(n, &pattern, d_max, kappa_target, off_amp, seed)
+}
+
+/// Power-law (hub-dominated) SPD operand: every row couples to
+/// `mean_degree` draws from a small set of `max(3, n/512)` seeded hub
+/// columns, so column degrees are heavy-tailed — hubs collect ~`n`
+/// couplings each while every other column has O(1) (scale-free-style
+/// structure).
+///
+/// nnz ≤ n·(1 + 2·mean_degree) (duplicate draws assemble into one
+/// entry), and the occupied chunks are *provably* confined to the
+/// diagonal plus the hub block-rows/columns — at most
+/// `(2·hubs + 1)·grid` of `grid²` for any tile size — so planning wins
+/// are deterministic, not probabilistic.  Condition/norm targets as in
+/// [`sparse_spd_from_pattern`].
+pub fn power_law_csr(
+    n: usize,
+    mean_degree: usize,
+    d_max: f64,
+    kappa_target: f64,
+    off_amp: f64,
+    seed: u64,
+) -> CsrSource {
+    assert!(n > 2 && mean_degree > 0);
+    let mut rng = Rng::new(seed ^ 0x50574C41);
+    let hub_count = (n / 512).max(3);
+    let hubs: Vec<usize> = (0..hub_count).map(|_| rng.below(n)).collect();
+    let mut pattern = Vec::with_capacity(n * mean_degree);
+    for i in 0..n {
+        for _ in 0..mean_degree {
+            let h = hubs[rng.below(hubs.len())];
+            if h != i {
+                pattern.push((i.min(h), i.max(h)));
+            }
+        }
+    }
+    sparse_spd_from_pattern(n, &pattern, d_max, kappa_target, off_amp, seed)
+}
+
+/// Block-diagonal SPD operand: dense blocks of seeded sizes in
+/// `[8, max_block]` along the diagonal, nothing in between — the
+/// load-imbalance stress case (whole chunk columns between blocks are
+/// empty).  Condition/norm targets as in [`sparse_spd_from_pattern`].
+pub fn block_diag_csr(
+    n: usize,
+    max_block: usize,
+    d_max: f64,
+    kappa_target: f64,
+    off_amp: f64,
+    seed: u64,
+) -> CsrSource {
+    assert!(n > 2 && max_block >= 8);
+    let mut rng = Rng::new(seed ^ 0x424C4B44);
+    let mut pattern = Vec::new();
+    let mut i0 = 0usize;
+    while i0 < n {
+        let bs = (8 + rng.below(max_block - 7)).min(n - i0);
+        for i in i0..i0 + bs {
+            for j in (i + 1)..i0 + bs {
+                pattern.push((i, j));
+            }
+        }
+        i0 += bs;
+    }
+    sparse_spd_from_pattern(n, &pattern, d_max, kappa_target, off_amp, seed)
+}
+
+/// Uniform (Erdős–Rényi-style) sparse SPD operand: each row draws
+/// `degree` partner columns uniformly.  Expected nnz ≈ n·(1 + 2·degree);
+/// condition/norm targets as in [`sparse_spd_from_pattern`].
+pub fn sprand_spd_csr(
+    n: usize,
+    degree: usize,
+    d_max: f64,
+    kappa_target: f64,
+    off_amp: f64,
+    seed: u64,
+) -> CsrSource {
+    assert!(n > 2 && degree > 0);
+    let mut rng = Rng::new(seed ^ 0x53505244);
+    let mut pattern = Vec::with_capacity(n * degree);
+    for i in 0..n {
+        for _ in 0..degree {
+            let j = rng.below(n);
+            if i != j {
+                pattern.push((i.min(j), i.max(j)));
+            }
+        }
+    }
+    sparse_spd_from_pattern(n, &pattern, d_max, kappa_target, off_amp, seed)
+}
+
 /// Sparsify a dense matrix by zeroing entries below `threshold * max_abs`
 /// (used to hit Table 2's `nzeros` fractions when needed).
 pub fn sparsify(a: &mut Matrix, threshold: f64) {
@@ -248,5 +425,82 @@ mod tests {
         let a = dense_spd_with_condition(16, 2.0, 8.0, 4, 42);
         let b = dense_spd_with_condition(16, 2.0, 8.0, 4, 42);
         assert_eq!(a.data(), b.data());
+    }
+
+    /// Strict diagonal dominance + symmetry (the SPD guarantee) for every
+    /// sparse pattern generator.
+    fn assert_sdd_symmetric(a: &CsrSource, off_amp: f64) {
+        use crate::matrices::MatrixSource;
+        let n = a.nrows();
+        for i in 0..n {
+            let (cols, vals) = a.row(i);
+            let mut off = 0.0;
+            let mut d = 0.0;
+            for (&j, &v) in cols.iter().zip(vals) {
+                if j == i {
+                    d = v;
+                } else {
+                    off += v.abs();
+                    assert_eq!(v, a.get(j, i), "asymmetric at ({i},{j})");
+                }
+            }
+            assert!(d > 0.0, "row {i} missing positive diagonal");
+            assert!(
+                off <= off_amp * d * (1.0 + 1e-12),
+                "row {i}: off sum {off} exceeds {off_amp}*{d}"
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_generators_are_spd_and_deterministic() {
+        let gens: Vec<(&str, CsrSource, CsrSource)> = vec![
+            (
+                "arrowhead",
+                arrowhead_csr(200, 4.0, 100.0, 0.2, 9),
+                arrowhead_csr(200, 4.0, 100.0, 0.2, 9),
+            ),
+            (
+                "power-law",
+                power_law_csr(200, 3, 4.0, 100.0, 0.2, 9),
+                power_law_csr(200, 3, 4.0, 100.0, 0.2, 9),
+            ),
+            (
+                "block-diag",
+                block_diag_csr(200, 48, 4.0, 100.0, 0.2, 9),
+                block_diag_csr(200, 48, 4.0, 100.0, 0.2, 9),
+            ),
+            (
+                "sprand",
+                sprand_spd_csr(200, 4, 4.0, 100.0, 0.2, 9),
+                sprand_spd_csr(200, 4, 4.0, 100.0, 0.2, 9),
+            ),
+        ];
+        for (name, a, b) in &gens {
+            assert_sdd_symmetric(a, 0.2);
+            assert_eq!(a.nnz(), b.nnz(), "{name} not deterministic");
+            assert_eq!(a.to_dense().data(), b.to_dense().data(), "{name}");
+            // Genuinely sparse: far below 20% density at n=200.
+            assert!(a.density() < 0.2, "{name} density {}", a.density());
+        }
+    }
+
+    #[test]
+    fn sparse_spd_condition_tracks_target() {
+        use crate::matrices::MatrixSource;
+        // Gershgorin pins kappa within (1+a)/(1-a) = 1.5x of target.
+        let a = arrowhead_csr(120, 4.0, 50.0, 0.2, 3);
+        let dense = a.block(0, 0, 120, 120);
+        let k = cond::condition_number(&dense, 400, 7).unwrap();
+        assert!(k >= 50.0 / 1.5 && k <= 50.0 * 1.6, "kappa={k}");
+        let smax = cond::spectral_norm(&dense, 400, 8);
+        assert!(smax <= 4.0 * 1.2 * 1.001 && smax >= 4.0 * 0.8, "smax={smax}");
+    }
+
+    #[test]
+    fn arrowhead_nnz_formula() {
+        let a = arrowhead_csr(64, 4.0, 10.0, 0.2, 1);
+        // 5n - 6 structural entries unless a draw lands exactly on 0.0.
+        assert!(a.nnz() <= 5 * 64 - 6 && a.nnz() >= 5 * 64 - 10, "{}", a.nnz());
     }
 }

@@ -1,16 +1,27 @@
 //! MatrixMarket (.mtx) reader/writer.
 //!
-//! If a user drops the *real* SuiteSparse files into `data/`, the CLI loads
-//! them instead of the synthetic stand-ins; the writer lets us cache
-//! generated operands for inspection.  Supports the `matrix coordinate
-//! real {general|symmetric}` and `matrix array real general` flavors.
+//! If a user drops *real* SuiteSparse files into `data/`, the CLI loads
+//! them instead of the synthetic stand-ins (`--matrix path/to/file.mtx`);
+//! the writer lets us cache generated operands for inspection.  Supports
+//! the `matrix coordinate real {general|symmetric}` and `matrix array
+//! real general` flavors.
 //!
-//! The coordinate reader follows the SuiteSparse conventions strictly:
-//! 1-based indices are validated against the header dimensions, duplicate
-//! entries are **summed** (assembled, as SuiteSparse defines them), and
-//! every malformed entry is a [`MarketError::Format`] carrying its line
-//! number.  `pattern` and `complex` fields are rejected up front with an
-//! explicit message instead of being misparsed as real data.
+//! The reader follows the SuiteSparse conventions strictly: 1-based
+//! indices are validated against the header dimensions, duplicate entries
+//! are **summed** (assembled, as SuiteSparse defines them), and every
+//! malformed entry is a [`MarketError::Format`] carrying its line number.
+//! `pattern` and `complex` fields are rejected up front with an explicit
+//! message instead of being misparsed as real data.
+//!
+//! The primary entry point is [`read_mtx_triplets`], which streams the
+//! file into an O(nnz) coordinate list — feed it to
+//! [`CsrSource::from_triplets`](super::sparse::CsrSource::from_triplets)
+//! (or use [`CsrSource::from_mtx`](super::sparse::CsrSource::from_mtx)
+//! directly).  The legacy [`read_mtx`] materializes a dense
+//! [`Matrix`] — O(m·n) memory even for tiny-nnz files — and is deprecated
+//! in favor of an explicit
+//! [`CsrSource::to_dense`](super::sparse::CsrSource::to_dense) when a
+//! dense copy is genuinely wanted.
 
 use crate::linalg::Matrix;
 use std::io::{BufRead, BufReader, Write};
@@ -43,8 +54,23 @@ fn ferr(msg: impl Into<String>) -> MarketError {
     MarketError::Format(msg.into())
 }
 
-/// Read a `.mtx` file into a dense [`Matrix`].
-pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
+/// Assembled coordinate stream of one `.mtx` file: dimensions plus
+/// 0-based `(row, col, value)` entries in file order.
+///
+/// Symmetric files are mirrored here (each off-diagonal entry appears
+/// twice, `(i, j)` then `(j, i)`); duplicate coordinates are **not**
+/// summed yet — consumers assemble, preserving the SuiteSparse summation
+/// order (see
+/// [`CsrSource::from_triplets`](super::sparse::CsrSource::from_triplets)).
+/// Explicitly-stored zeros (and `array`-format zeros) are dropped.
+pub struct MtxData {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(usize, usize, f64)>,
+}
+
+/// Read a `.mtx` file into an O(nnz) triplet stream ([`MtxData`]).
+pub fn read_mtx_triplets(path: &Path) -> Result<MtxData, MarketError> {
     let file = std::fs::File::open(path)?;
     let mut lines = BufReader::new(file).lines().enumerate();
 
@@ -113,7 +139,7 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
                 )))
             }
         };
-        let mut m = Matrix::zeros(rows, cols);
+        let mut entries = Vec::with_capacity(if symmetric { 2 * nnz } else { nnz });
         let mut seen = 0usize;
         for (idx, line) in lines {
             let lineno = idx + 1;
@@ -155,16 +181,23 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
             }
             // SuiteSparse convention: duplicate coordinates are assembled
             // by summation (both in the stated and the mirrored triangle).
-            m.set(i - 1, j - 1, m.get(i - 1, j - 1) + v);
-            if symmetric && i != j {
-                m.set(j - 1, i - 1, m.get(j - 1, i - 1) + v);
+            // The consumer sums; explicit zeros carry no information.
+            if v != 0.0 {
+                entries.push((i - 1, j - 1, v));
+                if symmetric && i != j {
+                    entries.push((j - 1, i - 1, v));
+                }
             }
             seen += 1;
         }
         if seen != nnz {
             return Err(ferr(format!("expected {nnz} entries, found {seen}")));
         }
-        Ok(m)
+        Ok(MtxData {
+            rows,
+            cols,
+            entries,
+        })
     } else {
         let (&rows, &cols) = match dims.as_slice() {
             [r, c] => (r, c),
@@ -196,15 +229,40 @@ pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
                 values.len()
             )));
         }
-        // Array format is column-major.
-        let mut m = Matrix::zeros(rows, cols);
+        // Array format is column-major; keep only nonzeros.
+        let mut entries = Vec::new();
         for j in 0..cols {
             for i in 0..rows {
-                m.set(i, j, values[j * rows + i]);
+                let v = values[j * rows + i];
+                if v != 0.0 {
+                    entries.push((i, j, v));
+                }
             }
         }
-        Ok(m)
+        Ok(MtxData {
+            rows,
+            cols,
+            entries,
+        })
     }
+}
+
+/// Read a `.mtx` file into a dense [`Matrix`].
+///
+/// Materializes O(m·n) memory even for tiny-nnz files, which is why the
+/// solve path no longer uses it.
+#[deprecated(
+    since = "0.3.0",
+    note = "materializes a dense O(m·n) Matrix; use matrices::sparse::CsrSource::from_mtx \
+            (call .to_dense() explicitly if a dense copy is really wanted)"
+)]
+pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
+    let data = read_mtx_triplets(path)?;
+    let mut m = Matrix::zeros(data.rows, data.cols);
+    for &(i, j, v) in &data.entries {
+        m.set(i, j, m.get(i, j) + v);
+    }
+    Ok(m)
 }
 
 /// Write a dense matrix as `coordinate real general` (zeros omitted).
@@ -228,6 +286,7 @@ pub fn write_mtx(path: &Path, m: &Matrix) -> Result<(), MarketError> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrices::sparse::CsrSource;
 
     fn tmpfile(name: &str) -> std::path::PathBuf {
         let mut p = std::env::temp_dir();
@@ -235,11 +294,27 @@ mod tests {
         p
     }
 
+    /// Test helper: dense view through the CSR path (the supported route).
+    fn read_dense(p: &Path) -> Result<Matrix, MarketError> {
+        Ok(CsrSource::from_mtx(p)?.to_dense())
+    }
+
     #[test]
     fn roundtrip_coordinate() {
         let m = Matrix::from_vec(2, 3, vec![1.0, 0.0, -2.5, 0.0, 3.25, 0.0]);
         let p = tmpfile("rt");
         write_mtx(&p, &m).unwrap();
+        let back = read_dense(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn deprecated_dense_reader_still_matches() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, -2.0, 0.0, 4.0]);
+        let p = tmpfile("legacy");
+        write_mtx(&p, &m).unwrap();
+        #[allow(deprecated)]
         let back = read_mtx(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(back, m);
@@ -253,7 +328,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real symmetric\n2 2 2\n1 1 4.0\n2 1 -1.0\n",
         )
         .unwrap();
-        let m = read_mtx(&p).unwrap();
+        let m = read_dense(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(m.get(0, 1), -1.0);
         assert_eq!(m.get(1, 0), -1.0);
@@ -268,7 +343,7 @@ mod tests {
             "%%MatrixMarket matrix array real general\n2 2\n1.0\n2.0\n3.0\n4.0\n",
         )
         .unwrap();
-        let m = read_mtx(&p).unwrap();
+        let m = read_dense(&p).unwrap();
         std::fs::remove_file(&p).ok();
         // column-major: [1 3; 2 4]
         assert_eq!(m.get(0, 0), 1.0);
@@ -278,10 +353,26 @@ mod tests {
     }
 
     #[test]
+    fn triplet_stream_is_o_nnz_not_dense() {
+        // A 10000x10000 operand with 2 stored entries: the triplet reader
+        // returns 2 entries (the dense path would allocate 800 MB).
+        let p = tmpfile("huge");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n10000 10000 2\n1 1 1.0\n10000 10000 2.0\n",
+        )
+        .unwrap();
+        let data = read_mtx_triplets(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!((data.rows, data.cols), (10000, 10000));
+        assert_eq!(data.entries, vec![(0, 0, 1.0), (9999, 9999, 2.0)]);
+    }
+
+    #[test]
     fn rejects_bad_header() {
         let p = tmpfile("bad");
         std::fs::write(&p, "not a matrix\n").unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         assert!(matches!(e, MarketError::Format(_)));
     }
@@ -295,7 +386,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.5\n1 1 2.0\n2 1 -1.0\n",
         )
         .unwrap();
-        let m = read_mtx(&p).unwrap();
+        let m = read_dense(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(m.get(0, 0), 3.5);
         assert_eq!(m.get(1, 0), -1.0);
@@ -309,7 +400,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real symmetric\n2 2 3\n1 1 4.0\n2 2 5.0\n2 1 -1.0\n",
         )
         .unwrap();
-        let m = read_mtx(&p).unwrap();
+        let m = read_dense(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(m.get(0, 0), 4.0);
         assert_eq!(m.get(1, 1), 5.0);
@@ -325,7 +416,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n3 1 2.0\n",
         )
         .unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         let msg = e.to_string();
         assert!(msg.contains("line 4"), "{msg}");
@@ -341,7 +432,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n",
         )
         .unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         assert!(e.to_string().contains("line 3"), "{e}");
     }
@@ -354,7 +445,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 1\n",
         )
         .unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         let msg = e.to_string();
         assert!(msg.contains("pattern"), "{msg}");
@@ -369,7 +460,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate complex general\n2 2 1\n1 1 1.0 0.0\n",
         )
         .unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         let msg = e.to_string();
         assert!(msg.contains("complex"), "{msg}");
@@ -384,7 +475,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1\n",
         )
         .unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         assert!(e.to_string().contains("line 3"), "{e}");
         assert!(e.to_string().contains("missing value"), "{e}");
@@ -395,7 +486,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0 9.9\n",
         )
         .unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         assert!(e.to_string().contains("trailing tokens"), "{e}");
     }
@@ -408,7 +499,7 @@ mod tests {
             "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n",
         )
         .unwrap();
-        let e = read_mtx(&p).unwrap_err();
+        let e = read_mtx_triplets(&p).unwrap_err();
         std::fs::remove_file(&p).ok();
         assert!(matches!(e, MarketError::Format(_)));
     }

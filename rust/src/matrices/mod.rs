@@ -8,10 +8,20 @@
 //! 65,025² strong-scaling point streams tile-by-tile instead of
 //! materializing ~34 GB of dense data — mirroring how the real system never
 //! holds more than one tile per MCA.
+//!
+//! Real-world sparsity arrives through [`sparse::CsrSource`]: a CSR
+//! operand assembled from triplets or a Matrix-Market file
+//! ([`market`]), whose tight structural queries give irregular patterns
+//! (arrowhead, power-law, block-diagonal) the same O(occupied-chunks)
+//! planning that [`BandedSource`] gets.  The registry serves file-backed
+//! operands under `mtx:<path>` (or any name ending in `.mtx`).
 
 pub mod generators;
 pub mod market;
 pub mod registry;
+pub mod sparse;
+
+pub use sparse::CsrSource;
 
 use crate::linalg::{Matrix, Vector};
 

@@ -46,6 +46,26 @@
 //! mid-walk therefore surfaces as a clean `Err` from `program` /
 //! `execute_batch` / `execute_once` — never a hang — and the plane marks
 //! itself failed so later calls fail fast instead of desynchronizing.
+//!
+//! Embedders usually reach the plane through
+//! [`Meliso`](crate::solver::Meliso) (`build_plane` / `open_session_on`),
+//! but it is a public runtime of its own:
+//!
+//! ```
+//! use meliso::plane::ExecutionPlane;
+//! use meliso::prelude::*;
+//! use meliso::runtime::native::NativeBackend;
+//! use std::sync::Arc;
+//!
+//! let src = meliso::matrices::registry::build("iperturb66").unwrap();
+//! let cfg = SystemConfig::single_mca(128);
+//! let opts = SolveOptions::default().with_workers(2);
+//! let plane =
+//!     ExecutionPlane::build(src.as_ref(), &cfg, &opts, Arc::new(NativeBackend::new())).unwrap();
+//! let x = Vector::standard_normal(src.ncols(), 1);
+//! let report = plane.execute_once(src.as_ref(), &x).unwrap(); // consumes the plane
+//! assert_eq!(report.y.len(), 66);
+//! ```
 
 pub mod alloc;
 pub mod placement;

@@ -31,6 +31,19 @@
 //! The CLI exposes `meliso serve-bench` (multi-operand via `--operands`),
 //! and `benches/serving_throughput.rs` quantifies the amortization
 //! against repeated one-shot solves.
+//!
+//! ```
+//! use meliso::prelude::*;
+//!
+//! let a = meliso::matrices::registry::build("iperturb66").unwrap();
+//! let opts = SolveOptions::default().with_backend(BackendKind::Native);
+//! let solver = Meliso::new(SystemConfig::single_mca(128), opts).unwrap();
+//! let session = solver.open_session(a.clone()).unwrap(); // write-verify once
+//! let xs: Vec<Vector> = (0..4).map(|s| Vector::standard_normal(66, s)).collect();
+//! let outs = session.solve_batch(&xs).unwrap();          // reads only
+//! assert_eq!(outs.len(), 4);
+//! assert_eq!(session.report().solves, 4);
+//! ```
 
 pub mod cache;
 pub mod session;

@@ -1,14 +1,17 @@
 //! Public solver API (the MelisoPy-equivalent front door, DESIGN.md S11).
 //!
-//! ```no_run
+//! ```
 //! use meliso::prelude::*;
 //!
-//! let a = meliso::matrices::registry::build("add32").unwrap();
-//! let x = meliso::linalg::Vector::standard_normal(a.ncols(), 1);
-//! let solver = Meliso::new(SystemConfig::tiles_8x8(1024),
-//!                          SolveOptions::default()).unwrap();
+//! let a = meliso::matrices::registry::build("iperturb66").unwrap();
+//! let x = Vector::standard_normal(a.ncols(), 1);
+//! let solver = Meliso::new(
+//!     SystemConfig::single_mca(128),
+//!     SolveOptions::default().with_backend(BackendKind::Native),
+//! )
+//! .unwrap();
 //! let report = solver.solve_source(a.as_ref(), &x).unwrap();
-//! println!("{}", report.to_json().pretty());
+//! assert!(report.rel_err_l2 < 0.5);
 //! ```
 
 use crate::config::{BackendKind, SolveOptions, SystemConfig};
@@ -121,6 +124,20 @@ impl Meliso {
     /// input-vector encodes plus reads.  To host several operands on one
     /// shard pool, use [`build_plane`](Self::build_plane) +
     /// [`open_session_on`](Self::open_session_on) instead.
+    ///
+    /// ```
+    /// use meliso::prelude::*;
+    ///
+    /// let a = meliso::matrices::registry::build("iperturb66").unwrap();
+    /// let solver = Meliso::new(
+    ///     SystemConfig::single_mca(128),
+    ///     SolveOptions::default().with_backend(BackendKind::Native),
+    /// )
+    /// .unwrap();
+    /// let session = solver.open_session(a.clone()).unwrap(); // programs here
+    /// let out = session.solve(&Vector::standard_normal(66, 9)).unwrap();
+    /// assert_eq!(out.y.len(), 66);
+    /// ```
     pub fn open_session(&self, source: Arc<dyn MatrixSource>) -> Result<Session, String> {
         Session::open(source, self.config, self.opts.clone(), self.backend.clone())
     }
@@ -161,6 +178,22 @@ impl Meliso {
     /// refinement (enabled by default through
     /// [`IterOptions::max_refinements`]) lets low-precision devices reach
     /// tolerances far below their per-MVM error floor.
+    ///
+    /// ```
+    /// use meliso::prelude::*;
+    ///
+    /// let a = meliso::matrices::registry::build("spd64").unwrap();
+    /// let b = a.matvec(&Vector::standard_normal(a.ncols(), 7));
+    /// let opts = SolveOptions::default()
+    ///     .with_device(Material::EpiRam)
+    ///     .with_wv_iters(4)
+    ///     .with_backend(BackendKind::Native);
+    /// let solver = Meliso::new(SystemConfig::single_mca(64), opts).unwrap();
+    /// let report = solver
+    ///     .solve_system(a, &b, &IterOptions::default().with_method(Method::Cg))
+    ///     .unwrap();
+    /// assert!(report.converged && report.rel_residual <= 1e-6);
+    /// ```
     pub fn solve_system(
         &self,
         source: Arc<dyn MatrixSource>,

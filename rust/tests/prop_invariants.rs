@@ -222,3 +222,129 @@ fn prop_sparsity_skipping_never_changes_results_much() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_csr_agrees_with_dense_reference() {
+    use meliso::matrices::CsrSource;
+    // block / matvec / occupied_cols / block_is_zero against a dense
+    // reference on random sparse matrices: empty rows, duplicate
+    // triplets, tail tiles and non-square shapes included.
+    PropRunner::new(48, 108).run("csr-dense-agreement", |rng, case| {
+        let m = 1 + rng.below(120);
+        let n = 1 + rng.below(120);
+        // Density sweep from nearly-empty to ~quarter full.
+        let count = rng.below(1 + (m * n) / 4);
+        let trip: Vec<(usize, usize, f64)> = (0..count)
+            .map(|_| (rng.below(m), rng.below(n), rng.uniform_range(-2.0, 2.0)))
+            .collect();
+        let csr = CsrSource::from_triplets(m, n, &trip).map_err(|e| e.to_string())?;
+        let mut dense = Matrix::zeros(m, n);
+        for &(i, j, v) in &trip {
+            dense.set(i, j, dense.get(i, j) + v);
+        }
+
+        // matvec agrees to f64 roundoff.
+        let x = gen::vector(rng, n);
+        let ya = csr.matvec(&x);
+        let yd = dense.matvec(&x);
+        for (idx, (a, d)) in ya.data().iter().zip(yd.data()).enumerate() {
+            if (a - d).abs() > 1e-10 {
+                return Err(format!("case {case}: matvec row {idx}: {a} vs {d}"));
+            }
+        }
+
+        // Random blocks (including ones hanging past both edges).
+        for _ in 0..8 {
+            let r0 = rng.below(m + 8);
+            let c0 = rng.below(n + 8);
+            let h = 1 + rng.below(40);
+            let w = 1 + rng.below(40);
+            let got = csr.block(r0, c0, h, w);
+            let want = dense.block_padded(r0, c0, h, w);
+            if got != want {
+                return Err(format!("case {case}: block ({r0},{c0},{h},{w}) mismatch"));
+            }
+            let structurally_zero = csr.block_is_zero(r0, c0, h, w);
+            let actually_zero = want.data().iter().all(|&v| v == 0.0);
+            if structurally_zero != actually_zero {
+                return Err(format!(
+                    "case {case}: block_is_zero({r0},{c0},{h},{w}) = {structurally_zero}, \
+                     dense says {actually_zero}"
+                ));
+            }
+        }
+
+        // occupied_cols covers every nonzero column of the row range, and
+        // is tight at both ends (or empty when the rows are empty).
+        for _ in 0..4 {
+            let r0 = rng.below(m + 4);
+            let rows = 1 + rng.below(24);
+            let (lo, hi) = csr.occupied_cols(r0, rows);
+            let mut seen: Option<(usize, usize)> = None;
+            for i in r0..(r0 + rows).min(m) {
+                for j in 0..n {
+                    if dense.get(i, j) != 0.0 {
+                        let (a, b) = seen.unwrap_or((j, j));
+                        seen = Some((a.min(j), b.max(j)));
+                    }
+                }
+            }
+            match seen {
+                None => {
+                    if lo < hi {
+                        return Err(format!("case {case}: empty rows reported [{lo},{hi})"));
+                    }
+                }
+                Some((first, last)) => {
+                    if (lo, hi) != (first, last + 1) {
+                        return Err(format!(
+                            "case {case}: occupied_cols [{lo},{hi}) not tight vs \
+                             [{first},{})",
+                            last + 1
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_planned_chunks_match_filtered_grid_walk() {
+    use meliso::matrices::{generators, CsrSource};
+    // For irregular patterns, the streaming enumeration must visit
+    // exactly the chunks a filtered full-grid walk would, in the same
+    // deterministic row-major order.
+    PropRunner::new(24, 109).run("csr-planning-equivalence", |rng, case| {
+        let n = 64 + rng.below(256);
+        let kind = rng.below(4);
+        let src: CsrSource = match kind {
+            0 => generators::arrowhead_csr(n, 4.0, 50.0, 0.2, case as u64),
+            1 => generators::power_law_csr(n, 3, 4.0, 50.0, 0.2, case as u64),
+            2 => generators::block_diag_csr(n, 32, 4.0, 50.0, 0.2, case as u64),
+            _ => generators::sprand_spd_csr(n, 3, 4.0, 50.0, 0.2, case as u64),
+        };
+        let cell = *gen::choice(rng, &[16usize, 32]);
+        let tiles = 1 + rng.below(4);
+        let plan = ChunkPlan::new(SystemGeometry::new(tiles, tiles, cell), n, n);
+        let full: Vec<(usize, usize)> = plan
+            .chunks()
+            .filter(|c| !src.block_is_zero(c.row0, c.col0, cell, cell))
+            .map(|c| (c.block_row, c.block_col))
+            .collect();
+        let streamed: Vec<(usize, usize)> = plan
+            .nonzero_chunks(&src)
+            .map(|c| (c.block_row, c.block_col))
+            .collect();
+        if full != streamed {
+            return Err(format!(
+                "case {case} (kind {kind}, n {n}, cell {cell}): streamed {} chunks, \
+                 filtered walk {}",
+                streamed.len(),
+                full.len()
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,171 @@
+//! End-to-end coverage for *irregular* sparse operands (`CsrSource`):
+//! the ISSUE-5 acceptance path.  An irregular operand must solve through
+//! both execution paths — one-shot (`solve_source`) and resident
+//! (`program`/`execute_batch` behind a `Session`) — bit-identical across
+//! shard counts and placement policies, and a Matrix-Market file must
+//! ride the same registry route the synthetic testbed uses.
+
+use meliso::device::materials::Material;
+use meliso::matrices::{generators, registry, MatrixSource};
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use std::sync::Arc;
+
+fn native_solver(config: SystemConfig, opts: SolveOptions) -> Meliso {
+    Meliso::with_backend(config, opts, Arc::new(NativeBackend::new()))
+}
+
+fn base_opts() -> SolveOptions {
+    SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_seed(42)
+}
+
+/// A small irregular operand: arrowhead + superdiagonal, SPD, n = 120.
+fn arrow120() -> Arc<dyn MatrixSource> {
+    Arc::new(generators::arrowhead_csr(120, 4.0, 50.0, 0.2, 0xA1))
+}
+
+#[test]
+fn one_shot_bit_identical_across_shards_and_placements() {
+    let src = arrow120();
+    let x = Vector::standard_normal(120, 7);
+    let cfg = SystemConfig::new(2, 2, 32);
+    let mut results: Vec<(String, Vector)> = Vec::new();
+    for workers in [1usize, 2, 4] {
+        for placement in [
+            Placement::RoundRobin,
+            Placement::LoadBalanced,
+            Placement::SparsityAware,
+        ] {
+            let solver = native_solver(
+                cfg,
+                base_opts().with_workers(workers).with_placement(placement),
+            );
+            let report = solver.solve_source(src.as_ref(), &x).unwrap();
+            // Sparsity-aware skipping engaged: the arrowhead leaves most
+            // of the 4x4 chunk grid unoccupied.
+            assert!(report.chunks_skipped > 0, "w{workers}/{}", placement.name());
+            assert!(report.rel_err_l2 < 0.1, "w{workers}: {}", report.rel_err_l2);
+            results.push((format!("w{workers}/{}", placement.name()), report.y));
+        }
+    }
+    for (label, y) in &results[1..] {
+        assert_eq!(*y, results[0].1, "{label} differs from {}", results[0].0);
+    }
+}
+
+#[test]
+fn resident_bit_identical_across_shards_and_placements() {
+    let src = arrow120();
+    let xs: Vec<Vector> = (0..4)
+        .map(|i| Vector::standard_normal(120, 100 + i))
+        .collect();
+    let cfg = SystemConfig::new(2, 2, 32);
+    let mut results: Vec<(String, Vec<Vector>)> = Vec::new();
+    for workers in [1usize, 3] {
+        for placement in [Placement::RoundRobin, Placement::SparsityAware] {
+            let solver = native_solver(
+                cfg,
+                base_opts().with_workers(workers).with_placement(placement),
+            );
+            let session = solver.open_session(src.clone()).unwrap();
+            let solves = session.solve_batch(&xs).unwrap();
+            let ys: Vec<Vector> = solves.into_iter().map(|s| s.y).collect();
+            results.push((format!("w{workers}/{}", placement.name()), ys));
+        }
+    }
+    for (label, ys) in &results[1..] {
+        assert_eq!(*ys, results[0].1, "{label} differs from {}", results[0].0);
+    }
+    // And the served results are accurate against the exact matvec.
+    let b = src.matvec(&xs[0]);
+    let err = results[0].1[0].sub(&b).norm_l2() / b.norm_l2();
+    assert!(err < 0.1, "{err}");
+}
+
+#[test]
+fn irregular_operand_solves_ax_equals_b_via_cg() {
+    let src = arrow120();
+    let x_star = Vector::standard_normal(120, 31);
+    let b = src.matvec(&x_star);
+    let solver = native_solver(
+        SystemConfig::new(2, 2, 64),
+        base_opts().with_wv_iters(3).with_placement(Placement::SparsityAware),
+    );
+    let report = solver
+        .solve_system(
+            src.clone(),
+            &b,
+            &IterOptions::default()
+                .with_method(Method::Cg)
+                .with_tol(1e-5)
+                .with_max_iters(80)
+                .with_refinements(30),
+        )
+        .unwrap();
+    assert!(report.converged, "rel {}", report.rel_residual);
+    assert!(report.rel_residual <= 1e-5);
+    assert_eq!(report.programming_passes, 1);
+    let err = report.x.sub(&x_star).norm_l2() / x_star.norm_l2();
+    assert!(err < 1e-2, "{err}");
+}
+
+#[test]
+fn irregular_operands_share_one_resident_plane() {
+    // Two different irregular tenants resident on ONE shard pool,
+    // bit-identical to dedicated planes.
+    let a: Arc<dyn MatrixSource> =
+        Arc::new(generators::power_law_csr(96, 3, 4.0, 50.0, 0.2, 0xB2));
+    let c: Arc<dyn MatrixSource> =
+        Arc::new(generators::block_diag_csr(96, 32, 4.0, 50.0, 0.2, 0xB3));
+    let solver = native_solver(SystemConfig::new(2, 2, 32), base_opts().with_workers(2));
+    let x = Vector::standard_normal(96, 5);
+
+    let dedicated_a = solver.open_session(a.clone()).unwrap().solve(&x).unwrap().y;
+    let dedicated_c = solver.open_session(c.clone()).unwrap().solve(&x).unwrap().y;
+
+    let plane = solver.build_plane(a.as_ref()).unwrap();
+    let sa = solver.open_session_on(&plane, a.clone()).unwrap();
+    let sc = solver.open_session_on(&plane, c.clone()).unwrap();
+    assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+    assert_eq!(sa.solve(&x).unwrap().y, dedicated_a);
+    assert_eq!(sc.solve(&x).unwrap().y, dedicated_c);
+}
+
+#[test]
+fn bundled_mtx_fixture_runs_end_to_end() {
+    // The CI smoke fixture, through the registry's file route: both the
+    // `mtx:` prefix and the bare path must load, one-shot-solve and
+    // CG-solve.  Integration tests run from the package root.
+    let src = registry::build("mtx:data/arrow16.mtx").unwrap();
+    assert_eq!((src.nrows(), src.ncols()), (16, 16));
+    let same = registry::build("data/arrow16.mtx").unwrap();
+    assert_eq!(same.nrows(), 16);
+
+    let x = Vector::standard_normal(16, 3);
+    let solver = native_solver(SystemConfig::single_mca(32), base_opts());
+    let report = solver.solve_source(src.as_ref(), &x).unwrap();
+    assert!(report.rel_err_l2 < 0.1, "{}", report.rel_err_l2);
+
+    let x_star = Vector::standard_normal(16, 4);
+    let b = src.matvec(&x_star);
+    let conv = solver
+        .solve_system(src, &b, &IterOptions::default().with_method(Method::Cg))
+        .unwrap();
+    assert!(conv.converged, "rel {}", conv.rel_residual);
+    assert_eq!(conv.programming_passes, 1);
+}
+
+#[test]
+fn csr_plan_skips_empty_chunk_columns_for_block_diagonal() {
+    use meliso::virtualization::{ChunkPlan, SystemGeometry};
+    let src = generators::block_diag_csr(512, 32, 4.0, 50.0, 0.2, 0xB4);
+    let plan = ChunkPlan::new(SystemGeometry::new(2, 2, 16), 512, 512);
+    let planned = plan.nonzero_chunks(&src).count();
+    assert!(
+        planned * 2 < plan.total_chunks(),
+        "block-diagonal should occupy a small fraction of the grid: {planned} of {}",
+        plan.total_chunks()
+    );
+}
