@@ -1,0 +1,110 @@
+//! Observability overhead budget: the `obs` layer promises to be
+//! zero-cost when disabled and cheap when armed.
+//!
+//! The disabled fast path is one relaxed atomic load per instrumentation
+//! site (`obs::metrics_on()` / `obs::span_start()`), so this bench
+//! measures that check directly, scales it by a deliberately generous
+//! per-solve site count, and **asserts** the product stays under 2% of a
+//! representative distributed solve's wall clock.  The armed levels
+//! (metrics, trace) are reported informationally — they buy data with
+//! time, which is fine, but the disabled budget is a hard contract.
+//!
+//! Usage: `cargo bench --bench obs_overhead [-- --quick]`
+
+use meliso::bench::{BenchArgs, BenchRunner};
+use meliso::matrices::DenseSource;
+use meliso::obs::{self, ObsLevel};
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use std::hint::black_box;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Generous upper bound on instrumentation checks one plane solve can
+/// hit: every stage of every chunk re-checking the level a handful of
+/// times, padded by an order of magnitude.
+const CHECKS_PER_SOLVE: f64 = 4096.0;
+
+/// Hard ceiling on the estimated disabled-path share of solve wall.
+const DISABLED_BUDGET: f64 = 0.02;
+
+fn main() {
+    let args = BenchArgs::parse();
+    let runner = if args.quick {
+        BenchRunner { warmup_iters: 1, sample_iters: 3 }
+    } else {
+        BenchRunner::default()
+    };
+    println!(
+        "# observability overhead (disabled-path budget {:.0}%)\n",
+        DISABLED_BUDGET * 100.0
+    );
+
+    obs::set_level(ObsLevel::Off);
+    let src = DenseSource::new(Matrix::standard_normal(128, 128, 9));
+    let x = Vector::standard_normal(128, 10);
+    let opts = SolveOptions::default()
+        .with_device(Material::TaOxHfOx)
+        .with_workers(2)
+        .with_wv_iters(1);
+    let solver = Meliso::with_backend(
+        SystemConfig::new(2, 2, 64),
+        opts,
+        Arc::new(NativeBackend::new()),
+    );
+
+    let off = runner.run("solve/obs-off", || {
+        let _ = solver.solve_source(&src, &x).unwrap();
+    });
+    println!("{}", off.throughput_line(1.0, "solve"));
+
+    // The disabled fast path, measured directly.
+    let checks = 10_000_000u64;
+    let t0 = Instant::now();
+    let mut armed = 0u64;
+    for _ in 0..checks {
+        if black_box(obs::metrics_on()) {
+            armed += 1;
+        }
+    }
+    let per_check_s = t0.elapsed().as_secs_f64() / checks as f64;
+    assert_eq!(armed, 0, "level should be Off during the check bench");
+
+    let overhead = per_check_s * CHECKS_PER_SOLVE / off.mean_s.max(1e-12);
+    println!(
+        "disabled check: {:.2} ns/site; {:.0} sites/solve -> {:.4}% of solve wall",
+        per_check_s * 1e9,
+        CHECKS_PER_SOLVE,
+        overhead * 100.0
+    );
+    assert!(
+        overhead < DISABLED_BUDGET,
+        "disabled-path observability overhead {:.3}% exceeds the {:.0}% budget",
+        overhead * 100.0,
+        DISABLED_BUDGET * 100.0
+    );
+
+    // Armed levels, informational: what metrics/trace collection costs.
+    obs::set_level(ObsLevel::Metrics);
+    let metrics = runner.run("solve/obs-metrics", || {
+        let _ = solver.solve_source(&src, &x).unwrap();
+    });
+    println!("{}", metrics.throughput_line(1.0, "solve"));
+
+    obs::set_level(ObsLevel::Trace);
+    obs::recorder().clear();
+    let trace = runner.run("solve/obs-trace", || {
+        let _ = solver.solve_source(&src, &x).unwrap();
+    });
+    println!("{}", trace.throughput_line(1.0, "solve"));
+    let (events, dropped) = obs::recorder().snapshot();
+    obs::set_level(ObsLevel::Off);
+
+    println!(
+        "\narmed deltas vs off: metrics {:+.2}%, trace {:+.2}% ({} spans retained, {} dropped)",
+        (metrics.mean_s / off.mean_s.max(1e-12) - 1.0) * 100.0,
+        (trace.mean_s / off.mean_s.max(1e-12) - 1.0) * 100.0,
+        events.len(),
+        dropped
+    );
+}

@@ -20,10 +20,46 @@ pub enum Command {
     Run(RunArgs),
     ServeBench(ServeBenchArgs),
     SolveSystem(SolveSystemArgs),
+    Status(StatusArgs),
     Matrices,
     Devices,
     Artifacts,
     Help,
+}
+
+/// Observability sinks shared by `run` / `solve-system` / `serve-bench`.
+/// Either flag arms the metrics registry; `--trace-out` also arms the
+/// flight recorder.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ObsArgs {
+    /// `--metrics-out PATH`: write a metrics snapshot (`.json` = JSON
+    /// document, anything else = Prometheus exposition text).
+    pub metrics_out: Option<String>,
+    /// `--trace-out PATH`: write the flight-recorder ring as Chrome
+    /// trace-event JSON.
+    pub trace_out: Option<String>,
+}
+
+impl ObsArgs {
+    /// The observability level these flags imply.
+    pub fn level(&self) -> crate::obs::ObsLevel {
+        if self.trace_out.is_some() {
+            crate::obs::ObsLevel::Trace
+        } else if self.metrics_out.is_some() {
+            crate::obs::ObsLevel::Metrics
+        } else {
+            crate::obs::ObsLevel::Off
+        }
+    }
+}
+
+/// `meliso status`: render a previously written metrics snapshot.
+#[derive(Debug)]
+pub struct StatusArgs {
+    /// Snapshot path written by `--metrics-out` (default
+    /// `meliso-metrics.json`).
+    pub file: String,
+    pub json: bool,
 }
 
 #[derive(Debug)]
@@ -33,6 +69,7 @@ pub struct RunArgs {
     pub opts: SolveOptions,
     pub reps: usize,
     pub json: bool,
+    pub obs: ObsArgs,
 }
 
 #[derive(Debug)]
@@ -42,6 +79,7 @@ pub struct SolveSystemArgs {
     pub opts: SolveOptions,
     pub iter: IterOptions,
     pub json: bool,
+    pub obs: ObsArgs,
 }
 
 #[derive(Debug)]
@@ -59,6 +97,7 @@ pub struct ServeBenchArgs {
     /// One-shot reference solves (0 = auto: min(solves, 5)).
     pub baseline: usize,
     pub json: bool,
+    pub obs: ObsArgs,
 }
 
 impl ServeBenchArgs {
@@ -83,10 +122,15 @@ COMMANDS:
     run          execute a distributed in-memory MVM benchmark
     solve-system solve Ax=b iteratively on a resident crossbar session
     serve-bench  compare resident-session serving vs repeated one-shot solves
+    status       render a metrics snapshot written by --metrics-out
     matrices     list the benchmark operands (paper Table 2 stand-ins)
     devices      list the RRAM material parameter sets
     artifacts    show the AOT artifact inventory
     help         show this message
+
+STATUS OPTIONS:
+    --file PATH        metrics snapshot to read (default meliso-metrics.json)
+    --json             emit the raw snapshot document instead of the table
 
 SOLVE-SYSTEM OPTIONS (plus the applicable RUN options below):
     --method M         jacobi | richardson | cg | gmres (default cg)
@@ -127,6 +171,10 @@ RUN OPTIONS:
     --seed S           master seed (default 42)
     --backend B        pjrt | native (default pjrt)
     --json             emit a JSON report instead of text
+    --metrics-out PATH write a metrics snapshot on exit (.json = JSON document,
+                       else Prometheus text); also enables metrics collection
+    --trace-out PATH   write a Chrome trace (load in Perfetto / chrome://tracing);
+                       also enables span recording
     -v / -vv           log verbosity
 "
 }
@@ -142,6 +190,7 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
         Some("run") => parse_run(&mut it),
         Some("solve-system") => parse_solve_system(&mut it),
         Some("serve-bench") => parse_serve_bench(&mut it),
+        Some("status") => parse_status(&mut it),
         Some(other) => Err(format!("unknown command {other:?}; try `meliso help`")),
     }
 }
@@ -164,8 +213,11 @@ fn parse_common_flag(
     system: &mut SystemConfig,
     opts: &mut SolveOptions,
     json: &mut bool,
+    obs: &mut ObsArgs,
 ) -> Result<bool, String> {
     match arg {
+        "--metrics-out" => obs.metrics_out = Some(next_value(it, "--metrics-out")?),
+        "--trace-out" => obs.trace_out = Some(next_value(it, "--trace-out")?),
         "--matrix" => *matrix = next_value(it, "--matrix")?,
         "--config" => {
             let path = next_value(it, "--config")?;
@@ -255,9 +307,18 @@ fn parse_run(it: &mut ArgIter<'_>) -> Result<Command, String> {
     let mut opts = SolveOptions::default();
     let mut reps = 1usize;
     let mut json = false;
+    let mut obs = ObsArgs::default();
 
     while let Some(arg) = it.next() {
-        if parse_common_flag(arg.as_str(), it, &mut matrix, &mut system, &mut opts, &mut json)? {
+        if parse_common_flag(
+            arg.as_str(),
+            it,
+            &mut matrix,
+            &mut system,
+            &mut opts,
+            &mut json,
+            &mut obs,
+        )? {
             continue;
         }
         match arg.as_str() {
@@ -276,6 +337,7 @@ fn parse_run(it: &mut ArgIter<'_>) -> Result<Command, String> {
         opts,
         reps,
         json,
+        obs,
     }))
 }
 
@@ -285,9 +347,18 @@ fn parse_solve_system(it: &mut ArgIter<'_>) -> Result<Command, String> {
     let mut opts = SolveOptions::default();
     let mut iter = IterOptions::default();
     let mut json = false;
+    let mut obs = ObsArgs::default();
 
     while let Some(arg) = it.next() {
-        if parse_common_flag(arg.as_str(), it, &mut matrix, &mut system, &mut opts, &mut json)? {
+        if parse_common_flag(
+            arg.as_str(),
+            it,
+            &mut matrix,
+            &mut system,
+            &mut opts,
+            &mut json,
+            &mut obs,
+        )? {
             continue;
         }
         match arg.as_str() {
@@ -344,6 +415,7 @@ fn parse_solve_system(it: &mut ArgIter<'_>) -> Result<Command, String> {
         opts,
         iter,
         json,
+        obs,
     }))
 }
 
@@ -356,9 +428,18 @@ fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
     let mut batch = 8usize;
     let mut baseline = 0usize;
     let mut json = false;
+    let mut obs = ObsArgs::default();
 
     while let Some(arg) = it.next() {
-        if parse_common_flag(arg.as_str(), it, &mut matrix, &mut system, &mut opts, &mut json)? {
+        if parse_common_flag(
+            arg.as_str(),
+            it,
+            &mut matrix,
+            &mut system,
+            &mut opts,
+            &mut json,
+            &mut obs,
+        )? {
             continue;
         }
         match arg.as_str() {
@@ -403,7 +484,23 @@ fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
         batch: batch.max(1),
         baseline,
         json,
+        obs,
     }))
+}
+
+fn parse_status(it: &mut ArgIter<'_>) -> Result<Command, String> {
+    let mut file = "meliso-metrics.json".to_string();
+    let mut json = false;
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--file" => file = next_value(it, "--file")?,
+            "--json" => json = true,
+            "-v" => crate::util::log::set_level(crate::util::log::Level::Info),
+            "-vv" => crate::util::log::set_level(crate::util::log::Level::Debug),
+            other => return Err(format!("unknown option {other:?}; try `meliso help`")),
+        }
+    }
+    Ok(Command::Status(StatusArgs { file, json }))
 }
 
 #[cfg(test)]
@@ -583,6 +680,58 @@ mod tests {
     #[test]
     fn rejects_unknown_flag() {
         assert!(parse(&argv("run --frobnicate")).is_err());
+    }
+
+    #[test]
+    fn parses_obs_sinks_on_every_solve_command() {
+        for cmdline in [
+            "run --metrics-out m.prom --trace-out t.json",
+            "solve-system --metrics-out m.prom --trace-out t.json",
+            "serve-bench --metrics-out m.prom --trace-out t.json",
+        ] {
+            let obs = match parse(&argv(cmdline)).unwrap() {
+                Command::Run(r) => r.obs,
+                Command::SolveSystem(s) => s.obs,
+                Command::ServeBench(s) => s.obs,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(obs.metrics_out.as_deref(), Some("m.prom"), "{cmdline}");
+            assert_eq!(obs.trace_out.as_deref(), Some("t.json"), "{cmdline}");
+            assert_eq!(obs.level(), crate::obs::ObsLevel::Trace, "{cmdline}");
+        }
+    }
+
+    #[test]
+    fn obs_level_tracks_the_armed_sinks() {
+        assert_eq!(ObsArgs::default().level(), crate::obs::ObsLevel::Off);
+        match parse(&argv("run --metrics-out m.json")).unwrap() {
+            Command::Run(r) => {
+                assert_eq!(r.obs.level(), crate::obs::ObsLevel::Metrics);
+                assert!(r.obs.trace_out.is_none());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("run --metrics-out")).is_err());
+        assert!(parse(&argv("run --trace-out")).is_err());
+    }
+
+    #[test]
+    fn parses_status_command() {
+        match parse(&argv("status")).unwrap() {
+            Command::Status(s) => {
+                assert_eq!(s.file, "meliso-metrics.json");
+                assert!(!s.json);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse(&argv("status --file /tmp/snap.json --json")).unwrap() {
+            Command::Status(s) => {
+                assert_eq!(s.file, "/tmp/snap.json");
+                assert!(s.json);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("status --frobnicate")).is_err());
     }
 
     #[test]

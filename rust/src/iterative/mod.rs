@@ -373,6 +373,28 @@ fn run_inner(
     }
 }
 
+/// Mirror one finished iterative solve into the global metrics registry:
+/// inner-iteration counter and final-residual gauge, labelled by method.
+fn publish_outcome(method: Method, out: &SolveOutcome) {
+    if !crate::obs::metrics_on() {
+        return;
+    }
+    let labels: &[(&str, &str)] = &[("method", method.name())];
+    let g = crate::obs::global();
+    g.counter(
+        crate::obs::names::ITER_ITERATIONS,
+        "Iterative-solver inner iterations",
+        labels,
+    )
+    .add(out.iterations as f64);
+    g.gauge(
+        crate::obs::names::ITER_RESIDUAL,
+        "Iterative-solver final relative residual",
+        labels,
+    )
+    .set(out.rel_residual);
+}
+
 /// Solve `Ax = b` with the configured method, optionally wrapped in
 /// exact-residual iterative refinement (see the module docs).
 ///
@@ -444,7 +466,7 @@ pub fn solve_system(
                 }
                 None => (out.rel_residual, out.converged),
             };
-            return Ok(SolveOutcome {
+            let outcome = SolveOutcome {
                 x: out.x,
                 converged,
                 rel_residual: rel,
@@ -452,7 +474,9 @@ pub fn solve_system(
                 refinements: 0,
                 history,
                 mvms: op.mvm_count() - mvms0,
-            });
+            };
+            publish_outcome(opts.method, &outcome);
+            return Ok(outcome);
         }
     };
 
@@ -499,7 +523,7 @@ pub fn solve_system(
         x.add_assign(&inner.x);
         refinements += 1;
     }
-    Ok(SolveOutcome {
+    let outcome = SolveOutcome {
         x: best_x,
         converged,
         rel_residual: best_rel,
@@ -507,7 +531,9 @@ pub fn solve_system(
         refinements,
         history,
         mvms: op.mvm_count() - mvms0,
-    })
+    };
+    publish_outcome(opts.method, &outcome);
+    Ok(outcome)
 }
 
 #[cfg(test)]

@@ -57,6 +57,7 @@
 //! | [`matrices`] | operand substrate: [`matrices::MatrixSource`], [`matrices::BandedSource`], [`matrices::sparse::CsrSource`], generators, Matrix-Market IO, the named [`matrices::registry`] |
 //! | [`mca`] | multi-crossbar-array simulation: write–verify, energy ledgers |
 //! | [`metrics`] | solve/serving/convergence reports, error norms, tables |
+//! | [`obs`] | observability: process-wide metrics registry + flight recorder, Prometheus/Chrome-trace export, the `meliso status` surface |
 //! | [`plane`] | the sharded [`plane::ExecutionPlane`]: placement, dispatch, supervised gathers, multi-operand residency |
 //! | [`runtime`] | execution backends: pure-Rust native twin, PJRT artifact engine |
 //! | [`server`] | resident [`server::Session`]s, [`server::OperandCache`], serving metrics |
@@ -154,6 +155,7 @@ pub mod linalg;
 pub mod matrices;
 pub mod mca;
 pub mod metrics;
+pub mod obs;
 pub mod plane;
 pub mod runtime;
 pub mod server;

@@ -1,6 +1,8 @@
 //! `meliso` — leader entrypoint / CLI for the MELISO+ framework.
 
-use meliso::cli::{parse, usage, Command, RunArgs, ServeBenchArgs, SolveSystemArgs};
+use meliso::cli::{
+    parse, usage, Command, ObsArgs, RunArgs, ServeBenchArgs, SolveSystemArgs, StatusArgs,
+};
 use meliso::device::materials::Material;
 use meliso::matrices::registry;
 use meliso::metrics::table::TableBuilder;
@@ -35,6 +37,13 @@ fn main() {
             }
         },
         Ok(Command::SolveSystem(ss)) => match cmd_solve_system(ss) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        Ok(Command::Status(st)) => match cmd_status(st) {
             Ok(()) => 0,
             Err(e) => {
                 eprintln!("error: {e}");
@@ -143,6 +152,46 @@ fn metric_cell(v: f64) -> String {
     }
 }
 
+/// Arm the observability level the CLI sinks imply.  Runs without
+/// `--metrics-out`/`--trace-out` leave the level alone so the
+/// `MELISO_OBS` environment variable still governs collection.
+fn arm_obs(obs: &ObsArgs) {
+    let level = obs.level();
+    if level > meliso::obs::ObsLevel::Off {
+        meliso::obs::set_level(level);
+    }
+}
+
+/// Flush the armed observability sinks at command exit.
+fn write_obs_sinks(obs: &ObsArgs) -> Result<(), String> {
+    if let Some(path) = &obs.metrics_out {
+        meliso::obs::export::write_metrics_file(path)?;
+        eprintln!("# metrics snapshot -> {path}");
+    }
+    if let Some(path) = &obs.trace_out {
+        meliso::obs::export::write_trace_file(path)?;
+        eprintln!("# chrome trace -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_status(args: StatusArgs) -> Result<(), String> {
+    let text = std::fs::read_to_string(&args.file).map_err(|e| {
+        format!(
+            "cannot read {}: {e} (write one with `--metrics-out {}`)",
+            args.file, args.file
+        )
+    })?;
+    let doc = Json::parse(&text).map_err(|e| format!("{}: not a JSON snapshot: {e}", args.file))?;
+    let report = meliso::obs::StatusReport::from_json(&doc)?;
+    if args.json {
+        println!("{}", report.to_json().pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(())
+}
+
 /// Build the configured solver, falling back to the native backend with a
 /// note when the PJRT artifacts are unavailable.
 fn solver_or_native(system: SystemConfig, opts: SolveOptions) -> Meliso {
@@ -160,6 +209,7 @@ fn solver_or_native(system: SystemConfig, opts: SolveOptions) -> Meliso {
 }
 
 fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
+    arm_obs(&args.obs);
     let names = args.operand_names();
     let mut sources = Vec::with_capacity(names.len());
     for name in &names {
@@ -240,6 +290,11 @@ fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
             }
             let hi = (lo + args.batch).min(tenant.xs.len());
             tenant.session.solve_batch(&tenant.xs[lo..hi])?;
+        }
+        // Refresh the snapshot each round (atomic rename), so a concurrent
+        // `meliso status` watches occupancy and latency move live.
+        if let Some(path) = &args.obs.metrics_out {
+            meliso::obs::export::write_metrics_file(path)?;
         }
     }
 
@@ -354,10 +409,12 @@ fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
         t.row("shards", vec![format!("{shards}")]);
         print!("{}", t.render());
     }
+    write_obs_sinks(&args.obs)?;
     Ok(())
 }
 
 fn cmd_solve_system(args: SolveSystemArgs) -> Result<(), String> {
+    arm_obs(&args.obs);
     let source = registry::build(&args.matrix)?;
     if source.nrows() != source.ncols() {
         return Err(format!(
@@ -418,10 +475,12 @@ fn cmd_solve_system(args: SolveSystemArgs) -> Result<(), String> {
         t.row("wall (s)", vec![format!("{:.3}", report.wall_seconds)]);
         print!("{}", t.render());
     }
+    write_obs_sinks(&args.obs)?;
     Ok(())
 }
 
 fn cmd_run(run: RunArgs) -> Result<(), String> {
+    arm_obs(&run.obs);
     let source = registry::build(&run.matrix)?;
     let x = Vector::standard_normal(source.ncols(), run.opts.seed ^ 0x5eed);
     let solver = Meliso::new(run.system, run.opts.clone())?;
@@ -466,5 +525,6 @@ fn cmd_run(run: RunArgs) -> Result<(), String> {
         t.row("wall (s)", vec![format!("{:.3}", last.wall_seconds)]);
         print!("{}", t.render());
     }
+    write_obs_sinks(&run.obs)?;
     Ok(())
 }

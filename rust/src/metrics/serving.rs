@@ -22,6 +22,7 @@ pub struct ServingStats {
     errors: u64,
     latencies_s: Vec<f64>,
     sample_cursor: usize,
+    samples_dropped: u64,
     program_energy_j: f64,
     program_latency_s: f64,
     solve_write_energy_j: f64,
@@ -37,6 +38,7 @@ impl ServingStats {
             errors: 0,
             latencies_s: Vec::new(),
             sample_cursor: 0,
+            samples_dropped: 0,
             program_energy_j: 0.0,
             program_latency_s: 0.0,
             solve_write_energy_j: 0.0,
@@ -59,12 +61,28 @@ impl ServingStats {
         self.solve_write_energy_j += write_j;
         self.solve_read_energy_j += read_j;
         let per_vector = wall_s / vectors as f64;
+        let mut dropped = 0u64;
         for _ in 0..vectors {
             if self.latencies_s.len() < MAX_LATENCY_SAMPLES {
                 self.latencies_s.push(per_vector);
             } else {
+                // The ring is full: overwriting evicts the oldest retained
+                // sample, so percentiles describe the most recent window.
                 self.latencies_s[self.sample_cursor] = per_vector;
                 self.sample_cursor = (self.sample_cursor + 1) % MAX_LATENCY_SAMPLES;
+                dropped += 1;
+            }
+        }
+        if dropped > 0 {
+            self.samples_dropped += dropped;
+            if crate::obs::metrics_on() {
+                crate::obs::global()
+                    .counter(
+                        crate::obs::names::SAMPLES_DROPPED,
+                        "Per-solve latency samples evicted from the serving ring",
+                        &[],
+                    )
+                    .add(dropped as f64);
             }
         }
     }
@@ -91,6 +109,8 @@ impl ServingStats {
             latency_mean_ms: mean_s * 1e3,
             latency_p50_ms: percentile(&sorted, 0.50) * 1e3,
             latency_p99_ms: percentile(&sorted, 0.99) * 1e3,
+            latency_samples: self.latencies_s.len() as u64,
+            latency_samples_dropped: self.samples_dropped,
             program_energy_j: self.program_energy_j,
             program_latency_s: self.program_latency_s,
             solve_write_energy_j: self.solve_write_energy_j,
@@ -129,6 +149,11 @@ pub struct ServingReport {
     pub latency_mean_ms: f64,
     pub latency_p50_ms: f64,
     pub latency_p99_ms: f64,
+    /// Samples currently retained in the latency ring.
+    pub latency_samples: u64,
+    /// Samples evicted once the ring filled; when non-zero the percentiles
+    /// describe the most recent `latency_samples` solves, not the lifetime.
+    pub latency_samples_dropped: u64,
     /// One-time programming (write) cost of the resident operand.
     pub program_energy_j: f64,
     pub program_latency_s: f64,
@@ -153,6 +178,11 @@ impl ServingReport {
             .set("latency_mean_ms", Json::Num(self.latency_mean_ms))
             .set("latency_p50_ms", Json::Num(self.latency_p50_ms))
             .set("latency_p99_ms", Json::Num(self.latency_p99_ms))
+            .set("latency_samples", Json::Num(self.latency_samples as f64))
+            .set(
+                "latency_samples_dropped",
+                Json::Num(self.latency_samples_dropped as f64),
+            )
             .set("program_energy_j", Json::Num(self.program_energy_j))
             .set("program_latency_s", Json::Num(self.program_latency_s))
             .set(
@@ -174,9 +204,17 @@ impl ServingReport {
 
     /// Human-readable multi-line summary.
     pub fn render(&self) -> String {
+        let window = if self.latency_samples_dropped > 0 {
+            format!(
+                " (last {} samples; {} dropped)",
+                self.latency_samples, self.latency_samples_dropped
+            )
+        } else {
+            String::new()
+        };
         format!(
             "solves {} (batches {}, errors {}) over {:.2}s -> {:.1} solves/s\n\
-             latency ms: mean {:.3}, p50 {:.3}, p99 {:.3}\n\
+             latency ms: mean {:.3}, p50 {:.3}, p99 {:.3}{}\n\
              energy J: program {:.3e} (once), write/solve {:.3e}, read/solve {:.3e}\n\
              write amortization: {:.1}x",
             self.solves,
@@ -187,6 +225,7 @@ impl ServingReport {
             self.latency_mean_ms,
             self.latency_p50_ms,
             self.latency_p99_ms,
+            window,
             self.program_energy_j,
             self.write_energy_per_solve_j,
             self.read_energy_per_solve_j,
@@ -234,8 +273,59 @@ mod tests {
         for _ in 0..3 {
             s.record_batch(40_000, 1.0, 0.0, 0.0);
         }
-        assert_eq!(s.report().solves, 120_000);
+        let r = s.report();
+        assert_eq!(r.solves, 120_000);
         assert!(s.latencies_s.len() <= 65_536);
+        assert_eq!(r.latency_samples, 65_536);
+        assert_eq!(r.latency_samples_dropped, 120_000 - 65_536);
+    }
+
+    #[test]
+    fn no_samples_dropped_below_capacity() {
+        let mut s = ServingStats::new();
+        s.record_batch(100, 1.0, 0.0, 0.0);
+        let r = s.report();
+        assert_eq!(r.latency_samples, 100);
+        assert_eq!(r.latency_samples_dropped, 0);
+        assert!(!r.render().contains("dropped"));
+    }
+
+    #[test]
+    fn percentiles_follow_the_window_after_wraparound() {
+        let mut s = ServingStats::new();
+        // Fill the ring with slow 1s solves, then push exactly one full
+        // window of fast 1ms solves: every retained sample must be fast.
+        s.record_batch(MAX_LATENCY_SAMPLES, MAX_LATENCY_SAMPLES as f64, 0.0, 0.0);
+        s.record_batch(MAX_LATENCY_SAMPLES, MAX_LATENCY_SAMPLES as f64 * 1e-3, 0.0, 0.0);
+        let r = s.report();
+        assert_eq!(r.latency_samples, MAX_LATENCY_SAMPLES as u64);
+        assert_eq!(r.latency_samples_dropped, MAX_LATENCY_SAMPLES as u64);
+        assert!((r.latency_p50_ms - 1.0).abs() < 1e-9, "{}", r.latency_p50_ms);
+        assert!((r.latency_p99_ms - 1.0).abs() < 1e-9, "{}", r.latency_p99_ms);
+        assert!(r.render().contains("dropped"));
+    }
+
+    #[test]
+    fn partial_wraparound_keeps_a_mixed_window() {
+        let mut s = ServingStats::new();
+        s.record_batch(MAX_LATENCY_SAMPLES, MAX_LATENCY_SAMPLES as f64 * 2.0, 0.0, 0.0);
+        // Overwrite just over half the ring with 1ms samples: p50 lands in
+        // the fast half while p99 still sees the surviving slow samples.
+        let fast = MAX_LATENCY_SAMPLES / 2 + 1;
+        s.record_batch(fast, fast as f64 * 1e-3, 0.0, 0.0);
+        let r = s.report();
+        assert_eq!(r.latency_samples_dropped, fast as u64);
+        assert!((r.latency_p50_ms - 1.0).abs() < 1e-9, "{}", r.latency_p50_ms);
+        assert!(
+            (r.latency_p99_ms - 2000.0).abs() < 1e-6,
+            "{}",
+            r.latency_p99_ms
+        );
+        let j = r.to_json();
+        assert_eq!(
+            j.get("latency_samples_dropped").unwrap().as_f64(),
+            Some(fast as f64)
+        );
     }
 
     #[test]

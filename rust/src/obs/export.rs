@@ -1,0 +1,307 @@
+//! Exporters: registry snapshots as Prometheus text exposition or
+//! [`Json`], and flight-recorder traces as Chrome trace-event files.
+//!
+//! The Prometheus writer follows the text exposition format: one
+//! `# HELP` / `# TYPE` pair per family, label values escaped (`\\`, `\"`,
+//! `\n`), histograms rendered as *cumulative* `_bucket` series closed by
+//! `le="+Inf"`, plus `_sum` and `_count`.  The golden-file test in
+//! `rust/tests/obs_end_to_end.rs` pins the format.
+//!
+//! File writers go through a same-directory temp file + rename, so a
+//! `serve-bench --metrics-out` loop can refresh the snapshot while a
+//! concurrent `meliso status` reads it without ever seeing a torn file.
+
+use crate::obs::registry::{MetricKind, SeriesValue, Snapshot};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Render a number the way Prometheus expects (integers without a
+/// fraction, everything else via Rust's shortest-roundtrip float).
+fn fmt_num(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Escape a label value per the exposition format.
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape HELP text (only `\\` and newline are special there).
+fn escape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render a snapshot in the Prometheus text exposition format.
+pub fn prometheus(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for fam in &snap.families {
+        out.push_str(&format!("# HELP {} {}\n", fam.name, escape_help(&fam.help)));
+        out.push_str(&format!("# TYPE {} {}\n", fam.name, fam.kind.name()));
+        for series in &fam.series {
+            match &series.value {
+                SeriesValue::Counter(v) | SeriesValue::Gauge(v) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        fam.name,
+                        label_block(&series.labels, None),
+                        fmt_num(*v)
+                    ));
+                }
+                SeriesValue::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, c) in h.counts.iter().enumerate() {
+                        cum += c;
+                        let le = if i < h.bounds.len() {
+                            fmt_num(h.bounds[i])
+                        } else {
+                            "+Inf".to_string()
+                        };
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            fam.name,
+                            label_block(&series.labels, Some(("le", &le))),
+                            cum
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        fam.name,
+                        label_block(&series.labels, None),
+                        fmt_num(h.sum)
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        fam.name,
+                        label_block(&series.labels, None),
+                        cum
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Render a snapshot as a JSON document (`meliso status` reads this).
+pub fn to_json(snap: &Snapshot, uptime_s: f64) -> Json {
+    let mut metrics = Json::obj();
+    for fam in &snap.families {
+        let mut series_items = Vec::with_capacity(fam.series.len());
+        for series in &fam.series {
+            let mut labels = Json::obj();
+            for (k, v) in &series.labels {
+                labels.set(k, Json::Str(v.clone()));
+            }
+            let mut item = Json::obj();
+            item.set("labels", labels);
+            match &series.value {
+                SeriesValue::Counter(v) | SeriesValue::Gauge(v) => {
+                    item.set("value", Json::Num(*v));
+                }
+                SeriesValue::Histogram(h) => {
+                    item.set("sum", Json::Num(h.sum))
+                        .set("count", Json::Num(h.count as f64))
+                        .set(
+                            "bounds",
+                            Json::Arr(h.bounds.iter().map(|&b| Json::Num(b)).collect()),
+                        )
+                        .set(
+                            "counts",
+                            Json::Arr(h.counts.iter().map(|&c| Json::Num(c as f64)).collect()),
+                        );
+                }
+            }
+            series_items.push(item);
+        }
+        let mut fam_obj = Json::obj();
+        fam_obj
+            .set("help", Json::Str(fam.help.clone()))
+            .set("type", Json::Str(fam.kind.name().into()))
+            .set("series", Json::Arr(series_items));
+        metrics.set(&fam.name, fam_obj);
+    }
+    let mut doc = Json::obj();
+    doc.set("schema", Json::Num(1.0))
+        .set("uptime_s", Json::Num(uptime_s))
+        .set("metrics", metrics);
+    doc
+}
+
+/// Write `content` to `path` atomically (same-directory temp + rename).
+fn write_atomic(path: &str, content: &str) -> Result<(), String> {
+    let p = Path::new(path);
+    if let Some(dir) = p.parent() {
+        if !dir.as_os_str().is_empty() && !dir.exists() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| format!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    let tmp = format!("{path}.tmp.{}", std::process::id());
+    std::fs::write(&tmp, content).map_err(|e| format!("writing {tmp}: {e}"))?;
+    std::fs::rename(&tmp, path).map_err(|e| format!("renaming {tmp} -> {path}: {e}"))
+}
+
+/// Snapshot the global registry and write it to `path`: JSON when the
+/// path ends in `.json` (what `meliso status` reads), Prometheus text
+/// otherwise.  A `meliso_obs_uptime_seconds` gauge is stamped into the
+/// snapshot so readers can turn busy-seconds counters into fractions.
+pub fn write_metrics_file(path: &str) -> Result<(), String> {
+    let uptime = crate::obs::uptime_s();
+    crate::obs::global()
+        .gauge(
+            crate::obs::names::UPTIME,
+            "Seconds since the observability epoch, set at snapshot time",
+            &[],
+        )
+        .set(uptime);
+    let snap = crate::obs::global().snapshot();
+    let content = if path.ends_with(".json") {
+        to_json(&snap, uptime).pretty() + "\n"
+    } else {
+        prometheus(&snap)
+    };
+    write_atomic(path, &content)
+}
+
+/// Write the global flight recorder's retained spans to `path` as a
+/// Chrome trace-event JSON document.
+pub fn write_trace_file(path: &str) -> Result<(), String> {
+    let doc = crate::obs::recorder().chrome_trace();
+    write_atomic(path, &(doc.pretty() + "\n"))
+}
+
+/// Histogram invariant checks shared by tests: cumulative buckets are
+/// monotone and the `+Inf` bucket equals `_count`.
+pub fn check_histogram_invariants(snap: &Snapshot) -> Result<(), String> {
+    for fam in &snap.families {
+        if fam.kind != MetricKind::Histogram {
+            continue;
+        }
+        for series in &fam.series {
+            let SeriesValue::Histogram(h) = &series.value else {
+                return Err(format!("{}: non-histogram series", fam.name));
+            };
+            if h.counts.len() != h.bounds.len() + 1 {
+                return Err(format!("{}: bucket/bound arity mismatch", fam.name));
+            }
+            let total: u64 = h.counts.iter().sum();
+            if total != h.count {
+                return Err(format!(
+                    "{}: +Inf cumulative {} != count {}",
+                    fam.name, total, h.count
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    #[test]
+    fn prometheus_escapes_label_values() {
+        let r = Registry::new();
+        let c = r.counter("m_total", "help", &[("op", "a\\b\"c\nd")]);
+        c.inc();
+        let text = prometheus(&r.snapshot());
+        assert!(
+            text.contains(r#"m_total{op="a\\b\"c\nd"} 1"#),
+            "got: {text}"
+        );
+    }
+
+    #[test]
+    fn prometheus_histogram_buckets_are_cumulative() {
+        let r = Registry::new();
+        let h = r.histogram("lat_seconds", "latency", &[], &[0.1, 1.0]);
+        h.observe(0.05);
+        h.observe(0.5);
+        h.observe(5.0);
+        let text = prometheus(&r.snapshot());
+        assert!(text.contains("lat_seconds_bucket{le=\"0.1\"} 1"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"1\"} 2"), "{text}");
+        assert!(text.contains("lat_seconds_bucket{le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("lat_seconds_count 3"), "{text}");
+        check_histogram_invariants(&r.snapshot()).unwrap();
+    }
+
+    #[test]
+    fn json_export_parses_back() {
+        let r = Registry::new();
+        r.counter("c_total", "c", &[("shard", "0")]).add(2.0);
+        r.gauge("g", "g", &[]).set(7.5);
+        r.histogram("h_seconds", "h", &[], &[1.0]).observe(0.5);
+        let doc = to_json(&r.snapshot(), 12.5);
+        let back = Json::parse(&doc.pretty()).unwrap();
+        assert_eq!(back.get("uptime_s").unwrap().as_f64(), Some(12.5));
+        let metrics = back.get("metrics").unwrap();
+        let c = metrics.get("c_total").unwrap();
+        assert_eq!(c.get("type").unwrap().as_str(), Some("counter"));
+        let series = c.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series[0].get("value").unwrap().as_f64(), Some(2.0));
+        assert_eq!(
+            series[0]
+                .get("labels")
+                .unwrap()
+                .get("shard")
+                .unwrap()
+                .as_str(),
+            Some("0")
+        );
+        let h = metrics.get("h_seconds").unwrap();
+        let hs = &h.get("series").unwrap().as_arr().unwrap()[0];
+        assert_eq!(hs.get("count").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn fmt_num_renders_integers_and_floats() {
+        assert_eq!(fmt_num(3.0), "3");
+        assert_eq!(fmt_num(0.25), "0.25");
+        assert_eq!(fmt_num(f64::INFINITY), "+Inf");
+    }
+}

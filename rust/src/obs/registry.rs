@@ -1,0 +1,456 @@
+//! Process-wide metrics registry: counters, gauges and fixed-bucket
+//! histograms with static label sets.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`s onto
+//! lock-free atomic cells: registration (`counter()`/`gauge()`/
+//! `histogram()`) takes the registry mutex once, after which recording is
+//! pure atomics.  Hot paths cache their handles (see
+//! `plane/shard.rs`); cold paths just re-register — get-or-create is
+//! idempotent and returns a handle onto the same cell.
+//!
+//! Values are `f64` stored as bits in an [`AtomicU64`] (Prometheus
+//! counters are floats; seconds and joules need fractions).  Counter adds
+//! use a CAS loop, which only ever runs when observability is enabled.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default latency buckets (seconds): 10 µs → 10 s, roughly log-spaced.
+pub const LATENCY_BUCKETS: &[f64] = &[
+    1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25,
+    0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+fn f64_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotone float counter.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1.0);
+    }
+
+    /// Add `v` (callers keep counters monotone: `v >= 0`).
+    pub fn add(&self, v: f64) {
+        f64_add(&self.cell, v);
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+}
+
+/// Last-write-wins float gauge.
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.cell.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+}
+
+struct HistogramCore {
+    /// Upper bounds of the finite buckets (ascending); an implicit `+Inf`
+    /// bucket follows.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) observation counts; `len() == bounds.len() + 1`.
+    buckets: Vec<AtomicU64>,
+    /// Sum of observations (f64 bits).
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Fixed-bucket histogram.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .core
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.core.bounds.len());
+        self.core.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        f64_add(&self.core.sum, v);
+        self.core.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.core.count.load(Ordering::Relaxed)
+    }
+}
+
+/// Metric family kind (drives the Prometheus `# TYPE` line).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone counter.
+    Counter,
+    /// Last-write-wins gauge.
+    Gauge,
+    /// Fixed-bucket histogram.
+    Histogram,
+}
+
+impl MetricKind {
+    /// Prometheus type keyword.
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Series {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Histogram(Arc<HistogramCore>),
+}
+
+struct Family {
+    help: String,
+    kind: MetricKind,
+    series: BTreeMap<Vec<(String, String)>, Series>,
+}
+
+/// A metrics registry.  Most code uses the process-wide [`global`]
+/// instance; tests construct their own.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+fn canonical_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut out: Vec<(String, String)> = labels
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    out.sort();
+    out
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn family<'a>(
+        families: &'a mut BTreeMap<String, Family>,
+        name: &str,
+        help: &str,
+        kind: MetricKind,
+    ) -> &'a mut Family {
+        let fam = families.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: BTreeMap::new(),
+        });
+        assert!(
+            fam.kind == kind,
+            "metric {name} registered as {} and {}",
+            fam.kind.name(),
+            kind.name()
+        );
+        fam
+    }
+
+    /// Get-or-create a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        let key = canonical_labels(labels);
+        let mut families = self.families.lock().unwrap();
+        let fam = Self::family(&mut families, name, help, MetricKind::Counter);
+        let series = fam
+            .series
+            .entry(key)
+            .or_insert_with(|| Series::Counter(Arc::new(AtomicU64::new(0f64.to_bits()))));
+        match series {
+            Series::Counter(cell) => Counter { cell: cell.clone() },
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Get-or-create a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        let key = canonical_labels(labels);
+        let mut families = self.families.lock().unwrap();
+        let fam = Self::family(&mut families, name, help, MetricKind::Gauge);
+        let series = fam
+            .series
+            .entry(key)
+            .or_insert_with(|| Series::Gauge(Arc::new(AtomicU64::new(0f64.to_bits()))));
+        match series {
+            Series::Gauge(cell) => Gauge { cell: cell.clone() },
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// Get-or-create a histogram series.  If the series already exists its
+    /// original buckets win (`bounds` must be ascending).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        let key = canonical_labels(labels);
+        let mut families = self.families.lock().unwrap();
+        let fam = Self::family(&mut families, name, help, MetricKind::Histogram);
+        let series = fam.series.entry(key).or_insert_with(|| {
+            debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+            Series::Histogram(Arc::new(HistogramCore {
+                bounds: bounds.to_vec(),
+                buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+                sum: AtomicU64::new(0f64.to_bits()),
+                count: AtomicU64::new(0),
+            }))
+        });
+        match series {
+            Series::Histogram(core) => Histogram { core: core.clone() },
+            _ => unreachable!("kind checked above"),
+        }
+    }
+
+    /// A point-in-time copy of every family and series.
+    pub fn snapshot(&self) -> Snapshot {
+        let families = self.families.lock().unwrap();
+        Snapshot {
+            families: families
+                .iter()
+                .map(|(name, fam)| FamilySnapshot {
+                    name: name.clone(),
+                    help: fam.help.clone(),
+                    kind: fam.kind,
+                    series: fam
+                        .series
+                        .iter()
+                        .map(|(labels, series)| SeriesSnapshot {
+                            labels: labels.clone(),
+                            value: match series {
+                                Series::Counter(c) => SeriesValue::Counter(f64::from_bits(
+                                    c.load(Ordering::Relaxed),
+                                )),
+                                Series::Gauge(g) => SeriesValue::Gauge(f64::from_bits(
+                                    g.load(Ordering::Relaxed),
+                                )),
+                                Series::Histogram(h) => SeriesValue::Histogram(HistogramSnapshot {
+                                    bounds: h.bounds.clone(),
+                                    counts: h
+                                        .buckets
+                                        .iter()
+                                        .map(|b| b.load(Ordering::Relaxed))
+                                        .collect(),
+                                    sum: f64::from_bits(h.sum.load(Ordering::Relaxed)),
+                                    count: h.count.load(Ordering::Relaxed),
+                                }),
+                            },
+                        })
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// The process-wide registry every instrumentation site records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Point-in-time registry contents (see [`Registry::snapshot`]).
+pub struct Snapshot {
+    /// One entry per metric family, name-ordered.
+    pub families: Vec<FamilySnapshot>,
+}
+
+/// One metric family: a name, its kind/help, and its label series.
+pub struct FamilySnapshot {
+    /// Metric name (`meliso_*`).
+    pub name: String,
+    /// `# HELP` text.
+    pub help: String,
+    /// Counter / gauge / histogram.
+    pub kind: MetricKind,
+    /// Series, ordered by canonical label set.
+    pub series: Vec<SeriesSnapshot>,
+}
+
+/// One labeled series inside a family.
+pub struct SeriesSnapshot {
+    /// Canonical (key-sorted) label pairs.
+    pub labels: Vec<(String, String)>,
+    /// The recorded value.
+    pub value: SeriesValue,
+}
+
+/// Snapshotted value of one series.
+pub enum SeriesValue {
+    /// Counter value.
+    Counter(f64),
+    /// Gauge value.
+    Gauge(f64),
+    /// Histogram state.
+    Histogram(HistogramSnapshot),
+}
+
+/// Snapshotted histogram state (per-bucket counts are **not** cumulative;
+/// the exporter accumulates them).
+#[derive(Clone)]
+pub struct HistogramSnapshot {
+    /// Finite bucket upper bounds, ascending.
+    pub bounds: Vec<f64>,
+    /// Per-bucket observation counts; the final entry is the `+Inf` bucket.
+    pub counts: Vec<u64>,
+    /// Sum of all observations.
+    pub sum: f64,
+    /// Total observations.
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Nearest-rank quantile estimate from the bucket counts, interpolating
+    /// linearly within the landing bucket.  `q` in `[0, 1]`.  Returns NaN
+    /// when the histogram is empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let rank = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            let prev = cum;
+            cum += c;
+            if cum >= rank {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    // +Inf bucket: the best point estimate is the last
+                    // finite bound (or the mean for a bound-less histogram).
+                    return self.bounds.last().copied().unwrap_or(self.sum
+                        / self.count as f64);
+                };
+                let frac = if c == 0 {
+                    0.0
+                } else {
+                    (rank - prev) as f64 / c as f64
+                };
+                return lo + (hi - lo) * frac;
+            }
+        }
+        f64::NAN
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_one_cell() {
+        let r = Registry::new();
+        let a = r.counter("m_total", "h", &[("shard", "0")]);
+        let b = r.counter("m_total", "h", &[("shard", "0")]);
+        a.inc();
+        b.add(2.5);
+        assert_eq!(a.value(), 3.5);
+        // A different label set is a different cell.
+        let c = r.counter("m_total", "h", &[("shard", "1")]);
+        assert_eq!(c.value(), 0.0);
+    }
+
+    #[test]
+    fn label_order_does_not_split_series() {
+        let r = Registry::new();
+        let a = r.counter("m_total", "h", &[("a", "1"), ("b", "2")]);
+        let b = r.counter("m_total", "h", &[("b", "2"), ("a", "1")]);
+        a.inc();
+        assert_eq!(b.value(), 1.0);
+    }
+
+    #[test]
+    fn gauge_is_last_write_wins() {
+        let r = Registry::new();
+        let g = r.gauge("g", "h", &[]);
+        g.set(4.0);
+        g.set(2.0);
+        assert_eq!(g.value(), 2.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let r = Registry::new();
+        let h = r.histogram("h_seconds", "h", &[], &[0.1, 1.0, 10.0]);
+        for v in [0.05, 0.5, 0.5, 5.0, 50.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 5);
+        let snap = r.snapshot();
+        let fam = &snap.families[0];
+        let SeriesValue::Histogram(hs) = &fam.series[0].value else {
+            panic!("expected histogram");
+        };
+        assert_eq!(hs.counts, vec![1, 2, 1, 1]);
+        assert_eq!(hs.count, 5);
+        assert!((hs.sum - 56.05).abs() < 1e-12);
+        // p50 lands in the (0.1, 1.0] bucket.
+        let p50 = hs.quantile(0.5);
+        assert!(p50 > 0.1 && p50 <= 1.0, "p50 = {p50}");
+        // p100 lands in +Inf and clamps to the last finite bound.
+        assert_eq!(hs.quantile(1.0), 10.0);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_nan() {
+        let r = Registry::new();
+        let h = r.histogram("h_seconds", "h", &[], &[1.0]);
+        drop(h);
+        let snap = r.snapshot();
+        let SeriesValue::Histogram(hs) = &snap.families[0].series[0].value else {
+            panic!("expected histogram");
+        };
+        assert!(hs.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        let _ = r.counter("m", "h", &[]);
+        let _ = r.gauge("m", "h", &[]);
+    }
+}

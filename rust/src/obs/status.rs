@@ -1,0 +1,457 @@
+//! The `meliso status` surface: turn a metrics snapshot (the JSON file a
+//! `--metrics-out *.json` run refreshes) into a one-screen operational
+//! summary — plane occupancy, per-shard busy fractions, cache hit rate,
+//! solve p50/p99 and the write/read energy split.
+//!
+//! The reader is deliberately decoupled from the live registry: it
+//! consumes the exported [`Json`] document, so `meliso status` works
+//! against a snapshot file refreshed by a separate `serve-bench` process.
+
+use crate::obs::names;
+use crate::obs::registry::HistogramSnapshot;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One shard row of the status table.
+pub struct ShardStatus {
+    /// Shard label (the `shard` metric label).
+    pub shard: String,
+    /// Seconds spent processing jobs.
+    pub busy_s: f64,
+    /// Chunk executions.
+    pub chunks: f64,
+    /// `busy_s / uptime` (NaN when uptime is unknown).
+    pub busy_frac: f64,
+}
+
+/// Everything `meliso status` reports, assembled from a metrics snapshot.
+pub struct StatusReport {
+    /// Snapshot uptime (seconds since the producing process's epoch).
+    pub uptime_s: f64,
+    /// Tile slots currently held across all MCAs.
+    pub slots_in_use: Option<f64>,
+    /// Highest per-MCA slot count ever needed.
+    pub slot_high_water: Option<f64>,
+    /// Operands resident on the plane.
+    pub resident_operands: Option<f64>,
+    /// Chunks resident on the plane.
+    pub resident_chunks: Option<f64>,
+    /// Operand evictions/retirements.
+    pub evictions: Option<f64>,
+    /// Per-shard busy rows, shard-ordered.
+    pub shards: Vec<ShardStatus>,
+    /// Operand-cache hits.
+    pub cache_hits: Option<f64>,
+    /// Operand-cache misses.
+    pub cache_misses: Option<f64>,
+    /// Operand-cache plane rebuilds.
+    pub cache_rebuilds: Option<f64>,
+    /// `hits / (hits + misses)` (None until the cache served a lookup).
+    pub cache_hit_rate: Option<f64>,
+    /// Served solves (histogram count).
+    pub solve_count: u64,
+    /// Per-vector latency p50, milliseconds.
+    pub solve_p50_ms: Option<f64>,
+    /// Per-vector latency p99, milliseconds.
+    pub solve_p99_ms: Option<f64>,
+    /// Per-vector latency mean, milliseconds.
+    pub solve_mean_ms: Option<f64>,
+    /// Failed served batches.
+    pub solve_errors: Option<f64>,
+    /// Serve-path write energy, joules.
+    pub energy_write_j: Option<f64>,
+    /// Serve-path read energy, joules.
+    pub energy_read_j: Option<f64>,
+}
+
+fn family<'a>(doc: &'a Json, name: &str) -> Option<&'a Json> {
+    doc.get("metrics")?.get(name)
+}
+
+fn series<'a>(fam: &'a Json) -> &'a [Json] {
+    fam.get("series").and_then(|s| s.as_arr()).unwrap_or(&[])
+}
+
+/// Sum of `value` across every series of a family (counters/gauges).
+fn sum_values(doc: &Json, name: &str) -> Option<f64> {
+    let fam = family(doc, name)?;
+    Some(
+        series(fam)
+            .iter()
+            .filter_map(|s| s.get("value").and_then(|v| v.as_f64()))
+            .sum(),
+    )
+}
+
+/// Sum of `value` across series matching `label == value`.
+fn sum_where(doc: &Json, name: &str, label: &str, value: &str) -> Option<f64> {
+    let fam = family(doc, name)?;
+    Some(
+        series(fam)
+            .iter()
+            .filter(|s| {
+                s.get("labels")
+                    .and_then(|l| l.get(label))
+                    .and_then(|v| v.as_str())
+                    == Some(value)
+            })
+            .filter_map(|s| s.get("value").and_then(|v| v.as_f64()))
+            .sum(),
+    )
+}
+
+/// `label value -> summed counter` across a family.
+fn values_by_label(doc: &Json, name: &str, label: &str) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    let Some(fam) = family(doc, name) else {
+        return out;
+    };
+    for s in series(fam) {
+        let Some(key) = s
+            .get("labels")
+            .and_then(|l| l.get(label))
+            .and_then(|v| v.as_str())
+        else {
+            continue;
+        };
+        let v = s.get("value").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        *out.entry(key.to_string()).or_insert(0.0) += v;
+    }
+    out
+}
+
+/// Merge every series of a histogram family into one snapshot (series
+/// share the registered bounds, so bucket-wise addition is exact).
+fn merged_histogram(doc: &Json, name: &str) -> Option<HistogramSnapshot> {
+    let fam = family(doc, name)?;
+    let mut merged: Option<HistogramSnapshot> = None;
+    for s in series(fam) {
+        let bounds: Vec<f64> = s
+            .get("bounds")?
+            .as_arr()?
+            .iter()
+            .filter_map(|b| b.as_f64())
+            .collect();
+        let counts: Vec<u64> = s
+            .get("counts")?
+            .as_arr()?
+            .iter()
+            .filter_map(|c| c.as_f64())
+            .map(|c| c as u64)
+            .collect();
+        let sum = s.get("sum")?.as_f64()?;
+        let count = s.get("count")?.as_f64()? as u64;
+        match &mut merged {
+            None => {
+                merged = Some(HistogramSnapshot {
+                    bounds,
+                    counts,
+                    sum,
+                    count,
+                })
+            }
+            Some(m) if m.bounds == bounds && m.counts.len() == counts.len() => {
+                for (a, b) in m.counts.iter_mut().zip(&counts) {
+                    *a += b;
+                }
+                m.sum += sum;
+                m.count += count;
+            }
+            Some(_) => return None,
+        }
+    }
+    merged
+}
+
+impl StatusReport {
+    /// Assemble a report from an exported metrics JSON document.
+    pub fn from_json(doc: &Json) -> Result<StatusReport, String> {
+        if doc.get("metrics").and_then(|m| m.as_obj()).is_none() {
+            return Err("not a metrics snapshot (missing top-level \"metrics\" object)".into());
+        }
+        let uptime_s = doc
+            .get("uptime_s")
+            .and_then(|v| v.as_f64())
+            .or_else(|| sum_values(doc, names::UPTIME))
+            .unwrap_or(f64::NAN);
+
+        let busy = values_by_label(doc, names::SHARD_BUSY_SECONDS, "shard");
+        let chunks = values_by_label(doc, names::SHARD_CHUNKS, "shard");
+        let mut shard_keys: Vec<String> = busy.keys().chain(chunks.keys()).cloned().collect();
+        shard_keys.sort_by_key(|k| k.parse::<u64>().unwrap_or(u64::MAX));
+        shard_keys.dedup();
+        let shards = shard_keys
+            .into_iter()
+            .map(|k| {
+                let busy_s = busy.get(&k).copied().unwrap_or(0.0);
+                ShardStatus {
+                    busy_frac: busy_s / uptime_s,
+                    busy_s,
+                    chunks: chunks.get(&k).copied().unwrap_or(0.0),
+                    shard: k,
+                }
+            })
+            .collect();
+
+        let cache_hits = sum_values(doc, names::CACHE_HITS);
+        let cache_misses = sum_values(doc, names::CACHE_MISSES);
+        let cache_hit_rate = match (cache_hits, cache_misses) {
+            (Some(h), Some(m)) if h + m > 0.0 => Some(h / (h + m)),
+            _ => None,
+        };
+
+        let solve = merged_histogram(doc, names::SOLVE_LATENCY);
+        let (solve_count, p50, p99, mean) = match &solve {
+            Some(h) if h.count > 0 => (
+                h.count,
+                Some(h.quantile(0.5) * 1e3),
+                Some(h.quantile(0.99) * 1e3),
+                Some(h.sum / h.count as f64 * 1e3),
+            ),
+            _ => (0, None, None, None),
+        };
+
+        Ok(StatusReport {
+            uptime_s,
+            slots_in_use: sum_values(doc, names::PLANE_SLOTS_IN_USE),
+            slot_high_water: sum_values(doc, names::PLANE_SLOT_HIGH_WATER),
+            resident_operands: sum_values(doc, names::PLANE_RESIDENT_OPERANDS),
+            resident_chunks: sum_values(doc, names::PLANE_RESIDENT_CHUNKS),
+            evictions: sum_values(doc, names::PLANE_EVICTIONS),
+            shards,
+            cache_hits,
+            cache_misses,
+            cache_rebuilds: sum_values(doc, names::CACHE_REBUILDS),
+            cache_hit_rate,
+            solve_count,
+            solve_p50_ms: p50,
+            solve_p99_ms: p99,
+            solve_mean_ms: mean,
+            solve_errors: sum_values(doc, names::SOLVE_ERRORS),
+            energy_write_j: sum_where(doc, names::ENERGY_JOULES, "kind", "write"),
+            energy_read_j: sum_where(doc, names::ENERGY_JOULES, "kind", "read"),
+        })
+    }
+
+    /// Machine-readable form (`meliso status --json`).
+    pub fn to_json(&self) -> Json {
+        fn opt(v: Option<f64>) -> Json {
+            v.map(Json::Num).unwrap_or(Json::Null)
+        }
+        let mut plane = Json::obj();
+        plane
+            .set("tile_slots_in_use", opt(self.slots_in_use))
+            .set("tile_slot_high_water", opt(self.slot_high_water))
+            .set("resident_operands", opt(self.resident_operands))
+            .set("resident_chunks", opt(self.resident_chunks))
+            .set("evictions", opt(self.evictions));
+        let shards = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut row = Json::obj();
+                row.set("shard", Json::Str(s.shard.clone()))
+                    .set("busy_s", Json::Num(s.busy_s))
+                    .set("chunks", Json::Num(s.chunks))
+                    .set("busy_frac", Json::Num(s.busy_frac));
+                row
+            })
+            .collect();
+        let mut cache = Json::obj();
+        cache
+            .set("hits", opt(self.cache_hits))
+            .set("misses", opt(self.cache_misses))
+            .set("rebuilds", opt(self.cache_rebuilds))
+            .set("hit_rate", opt(self.cache_hit_rate));
+        let mut solves = Json::obj();
+        solves
+            .set("count", Json::Num(self.solve_count as f64))
+            .set("p50_ms", opt(self.solve_p50_ms))
+            .set("p99_ms", opt(self.solve_p99_ms))
+            .set("mean_ms", opt(self.solve_mean_ms))
+            .set("errors", opt(self.solve_errors));
+        let mut energy = Json::obj();
+        energy
+            .set("write_j", opt(self.energy_write_j))
+            .set("read_j", opt(self.energy_read_j));
+        let mut doc = Json::obj();
+        doc.set("uptime_s", Json::Num(self.uptime_s))
+            .set("plane", plane)
+            .set("shards", Json::Arr(shards))
+            .set("cache", cache)
+            .set("solves", solves)
+            .set("energy", energy);
+        doc
+    }
+
+    /// Human-readable status table.
+    pub fn render(&self) -> String {
+        fn cell(v: Option<f64>) -> String {
+            match v {
+                Some(v) if v.is_finite() => {
+                    if v.fract() == 0.0 && v.abs() < 1e15 {
+                        format!("{}", v as i64)
+                    } else {
+                        format!("{v:.3}")
+                    }
+                }
+                _ => "-".to_string(),
+            }
+        }
+        fn sci(v: Option<f64>) -> String {
+            match v {
+                Some(v) if v.is_finite() => format!("{v:.3e}"),
+                _ => "-".to_string(),
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "meliso status  (snapshot uptime {:.1} s)\n\n",
+            self.uptime_s
+        ));
+        out.push_str("plane\n");
+        out.push_str(&format!(
+            "  tile slots in use   {}\n",
+            cell(self.slots_in_use)
+        ));
+        out.push_str(&format!(
+            "  slot high water     {}\n",
+            cell(self.slot_high_water)
+        ));
+        out.push_str(&format!(
+            "  resident operands   {}\n",
+            cell(self.resident_operands)
+        ));
+        out.push_str(&format!(
+            "  resident chunks     {}\n",
+            cell(self.resident_chunks)
+        ));
+        out.push_str(&format!("  evictions           {}\n", cell(self.evictions)));
+        out.push_str("\nshards          busy s      chunks      busy %\n");
+        if self.shards.is_empty() {
+            out.push_str("  (no shard activity recorded)\n");
+        }
+        for s in &self.shards {
+            let frac = if s.busy_frac.is_finite() {
+                format!("{:.1}%", s.busy_frac * 100.0)
+            } else {
+                "-".to_string()
+            };
+            out.push_str(&format!(
+                "  shard {:<6} {:<11.3} {:<11} {}\n",
+                s.shard, s.busy_s, s.chunks as u64, frac
+            ));
+        }
+        out.push_str(&format!(
+            "\ncache           hits {}   misses {}   hit rate {}   rebuilds {}\n",
+            cell(self.cache_hits),
+            cell(self.cache_misses),
+            self.cache_hit_rate
+                .map(|r| format!("{:.1}%", r * 100.0))
+                .unwrap_or_else(|| "-".to_string()),
+            cell(self.cache_rebuilds),
+        ));
+        out.push_str(&format!(
+            "solves          count {}   p50 {} ms   p99 {} ms   mean {} ms   errors {}\n",
+            self.solve_count,
+            cell(self.solve_p50_ms),
+            cell(self.solve_p99_ms),
+            cell(self.solve_mean_ms),
+            cell(self.solve_errors),
+        ));
+        out.push_str(&format!(
+            "energy          write {} J   read {} J\n",
+            sci(self.energy_write_j),
+            sci(self.energy_read_j),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::to_json;
+    use crate::obs::registry::{Registry, LATENCY_BUCKETS};
+
+    fn sample_doc() -> Json {
+        let r = Registry::new();
+        r.counter(names::SHARD_BUSY_SECONDS, "h", &[("shard", "0")])
+            .add(2.0);
+        r.counter(names::SHARD_BUSY_SECONDS, "h", &[("shard", "1")])
+            .add(1.0);
+        r.counter(names::SHARD_CHUNKS, "h", &[("shard", "0")]).add(8.0);
+        r.gauge(names::PLANE_SLOTS_IN_USE, "h", &[]).set(6.0);
+        r.gauge(names::PLANE_RESIDENT_OPERANDS, "h", &[]).set(2.0);
+        r.counter(names::CACHE_HITS, "h", &[]).add(3.0);
+        r.counter(names::CACHE_MISSES, "h", &[]).add(1.0);
+        let h = r.histogram(
+            names::SOLVE_LATENCY,
+            "h",
+            &[("operand", "op0")],
+            LATENCY_BUCKETS,
+        );
+        for _ in 0..100 {
+            h.observe(2e-3);
+        }
+        r.counter(names::ENERGY_JOULES, "h", &[("operand", "op0"), ("kind", "write")])
+            .add(1e-3);
+        r.counter(names::ENERGY_JOULES, "h", &[("operand", "op0"), ("kind", "read")])
+            .add(2e-5);
+        to_json(&r.snapshot(), 10.0)
+    }
+
+    #[test]
+    fn report_assembles_all_sections() {
+        let report = StatusReport::from_json(&sample_doc()).unwrap();
+        assert_eq!(report.uptime_s, 10.0);
+        assert_eq!(report.slots_in_use, Some(6.0));
+        assert_eq!(report.resident_operands, Some(2.0));
+        assert_eq!(report.shards.len(), 2);
+        assert_eq!(report.shards[0].shard, "0");
+        assert!((report.shards[0].busy_frac - 0.2).abs() < 1e-12);
+        assert_eq!(report.cache_hit_rate, Some(0.75));
+        assert_eq!(report.solve_count, 100);
+        let p50 = report.solve_p50_ms.unwrap();
+        assert!(p50 > 1.0 && p50 <= 2.5, "p50 = {p50}");
+        assert_eq!(report.energy_write_j, Some(1e-3));
+        assert_eq!(report.energy_read_j, Some(2e-5));
+    }
+
+    #[test]
+    fn report_round_trips_to_json() {
+        let report = StatusReport::from_json(&sample_doc()).unwrap();
+        let doc = report.to_json();
+        let back = Json::parse(&doc.pretty()).unwrap();
+        assert_eq!(
+            back.get("plane")
+                .unwrap()
+                .get("tile_slots_in_use")
+                .unwrap()
+                .as_f64(),
+            Some(6.0)
+        );
+        assert_eq!(back.get("shards").unwrap().as_arr().unwrap().len(), 2);
+        assert!(back
+            .get("solves")
+            .unwrap()
+            .get("p50_ms")
+            .unwrap()
+            .as_f64()
+            .is_some());
+    }
+
+    #[test]
+    fn render_tolerates_missing_families() {
+        let doc = to_json(&Registry::new().snapshot(), 1.0);
+        let report = StatusReport::from_json(&doc).unwrap();
+        let text = report.render();
+        assert!(text.contains("tile slots in use   -"), "{text}");
+        assert!(text.contains("no shard activity"), "{text}");
+    }
+
+    #[test]
+    fn rejects_non_snapshot_documents() {
+        assert!(StatusReport::from_json(&Json::parse("{\"x\":1}").unwrap()).is_err());
+    }
+}

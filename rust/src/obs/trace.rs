@@ -1,0 +1,320 @@
+//! Flight recorder: a bounded ring buffer of timestamped span events,
+//! serializing to Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing` loadable).
+//!
+//! Spans name the six pipeline stages of a plane solve — plan, extract,
+//! encode, execute, gather, reduce — and carry a [`Lane`]: the leader
+//! thread or one shard.  In the rendered trace each lane is a thread row,
+//! so leader-side tile-extraction serialization shows up visually as a
+//! dense `extract` band with idle shard rows underneath it.
+//!
+//! The ring is bounded (`MELISO_TRACE_CAP`, default 65 536 events):
+//! recording beyond capacity drops the *oldest* events and counts them, so
+//! a long `serve-bench` loop keeps the most recent window instead of
+//! growing without bound.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+/// Default ring capacity (events) when `MELISO_TRACE_CAP` is unset.
+pub const DEFAULT_TRACE_CAP: usize = 65_536;
+
+/// The six pipeline stages of a plane solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Chunk-plan + placement derivation (leader).
+    Plan,
+    /// Tile extraction + dispatch of one chunk (leader).
+    Extract,
+    /// Write–verify matrix encode of one chunk (shard).
+    Encode,
+    /// EC-corrected MVM of one chunk against a vector batch (shard).
+    Execute,
+    /// Supervised gather of partials and seals (leader).
+    Gather,
+    /// Deterministic chunk-order reduction (leader).
+    Reduce,
+}
+
+impl Stage {
+    /// Span name in the rendered trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Plan => "plan",
+            Stage::Extract => "extract",
+            Stage::Encode => "encode",
+            Stage::Execute => "execute",
+            Stage::Gather => "gather",
+            Stage::Reduce => "reduce",
+        }
+    }
+
+    /// All stages, pipeline order (used by coverage tests).
+    pub const ALL: [Stage; 6] = [
+        Stage::Plan,
+        Stage::Extract,
+        Stage::Encode,
+        Stage::Execute,
+        Stage::Gather,
+        Stage::Reduce,
+    ];
+}
+
+/// Which thread row a span belongs to in the rendered trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// The plane leader (plan / extract / gather / reduce).
+    Leader,
+    /// Shard thread `n` (encode / execute).
+    Shard(usize),
+}
+
+impl Lane {
+    /// Chrome trace `tid`: leader is 0, shard `n` is `n + 1`.
+    pub fn tid(self) -> u64 {
+        match self {
+            Lane::Leader => 0,
+            Lane::Shard(s) => s as u64 + 1,
+        }
+    }
+
+    /// Human-readable row name for trace metadata.
+    pub fn label(self) -> String {
+        match self {
+            Lane::Leader => "leader".to_string(),
+            Lane::Shard(s) => format!("shard {s}"),
+        }
+    }
+}
+
+/// One completed span.
+pub struct SpanEvent {
+    /// Pipeline stage.
+    pub stage: Stage,
+    /// Thread row.
+    pub lane: Lane,
+    /// Start, microseconds since the process trace epoch.
+    pub ts_us: u64,
+    /// Duration in microseconds.
+    pub dur_us: u64,
+    /// Extra key/value context (chunk coordinates, operand, batch size).
+    pub args: Vec<(&'static str, String)>,
+}
+
+struct Ring {
+    buf: VecDeque<SpanEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+/// The bounded span ring buffer.  Most code uses the process-wide
+/// [`recorder`]; tests construct their own.
+pub struct FlightRecorder {
+    inner: Mutex<Ring>,
+}
+
+impl FlightRecorder {
+    /// A recorder holding at most `cap` events.
+    pub fn with_capacity(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            inner: Mutex::new(Ring {
+                buf: VecDeque::with_capacity(cap.min(4096)),
+                cap: cap.max(1),
+                dropped: 0,
+            }),
+        }
+    }
+
+    /// Push one event, evicting the oldest when full.  Also mirrors the
+    /// event to the [`log`](crate::util::log) stream at trace level, so
+    /// `MELISO_LOG=trace` interleaves span events with the rest of the
+    /// operational log.
+    pub fn record(&self, ev: SpanEvent) {
+        crate::log_trace!(
+            "obs::trace",
+            "span {} lane={} ts_us={} dur_us={}",
+            ev.stage.name(),
+            ev.lane.label(),
+            ev.ts_us,
+            ev.dur_us
+        );
+        let mut ring = self.inner.lock().unwrap();
+        if ring.buf.len() >= ring.cap {
+            ring.buf.pop_front();
+            ring.dropped += 1;
+        }
+        ring.buf.push_back(ev);
+    }
+
+    /// Copy out the retained events plus the dropped-event count.
+    pub fn snapshot(&self) -> (Vec<SpanEvent>, u64) {
+        let ring = self.inner.lock().unwrap();
+        let events = ring
+            .buf
+            .iter()
+            .map(|e| SpanEvent {
+                stage: e.stage,
+                lane: e.lane,
+                ts_us: e.ts_us,
+                dur_us: e.dur_us,
+                args: e.args.clone(),
+            })
+            .collect();
+        (events, ring.dropped)
+    }
+
+    /// Drop every retained event and reset the dropped count.
+    pub fn clear(&self) {
+        let mut ring = self.inner.lock().unwrap();
+        ring.buf.clear();
+        ring.dropped = 0;
+    }
+
+    /// Render the retained events as a Chrome trace-event document.
+    pub fn chrome_trace(&self) -> Json {
+        let (events, dropped) = self.snapshot();
+        chrome_trace_json(&events, dropped)
+    }
+}
+
+/// The process-wide flight recorder (capacity from `MELISO_TRACE_CAP`).
+pub fn recorder() -> &'static FlightRecorder {
+    static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+    RECORDER.get_or_init(|| {
+        let cap = std::env::var("MELISO_TRACE_CAP")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_TRACE_CAP);
+        FlightRecorder::with_capacity(cap)
+    })
+}
+
+/// Serialize span events to the Chrome trace-event JSON object format:
+/// one `"X"` (complete) event per span plus `"M"` metadata events naming
+/// the process and each lane.  Load the file in Perfetto
+/// (<https://ui.perfetto.dev>) or `chrome://tracing`.
+pub fn chrome_trace_json(events: &[SpanEvent], dropped: u64) -> Json {
+    let mut lanes: Vec<Lane> = Vec::new();
+    for ev in events {
+        if !lanes.contains(&ev.lane) {
+            lanes.push(ev.lane);
+        }
+    }
+    lanes.sort_by_key(|l| l.tid());
+
+    let mut items = Vec::with_capacity(events.len() + lanes.len() + 1);
+    let mut proc_meta = Json::obj();
+    proc_meta
+        .set("name", Json::Str("process_name".into()))
+        .set("ph", Json::Str("M".into()))
+        .set("pid", Json::Num(1.0))
+        .set("tid", Json::Num(0.0));
+    let mut args = Json::obj();
+    args.set("name", Json::Str("meliso".into()));
+    proc_meta.set("args", args);
+    items.push(proc_meta);
+
+    for lane in &lanes {
+        let mut meta = Json::obj();
+        meta.set("name", Json::Str("thread_name".into()))
+            .set("ph", Json::Str("M".into()))
+            .set("pid", Json::Num(1.0))
+            .set("tid", Json::Num(lane.tid() as f64));
+        let mut args = Json::obj();
+        args.set("name", Json::Str(lane.label()));
+        meta.set("args", args);
+        items.push(meta);
+    }
+
+    for ev in events {
+        let mut item = Json::obj();
+        item.set("name", Json::Str(ev.stage.name().into()))
+            .set("cat", Json::Str("meliso".into()))
+            .set("ph", Json::Str("X".into()))
+            .set("ts", Json::Num(ev.ts_us as f64))
+            .set("dur", Json::Num(ev.dur_us.max(1) as f64))
+            .set("pid", Json::Num(1.0))
+            .set("tid", Json::Num(ev.lane.tid() as f64));
+        let mut args = Json::obj();
+        for (k, v) in &ev.args {
+            args.set(k, Json::Str(v.clone()));
+        }
+        item.set("args", args);
+        items.push(item);
+    }
+
+    let mut doc = Json::obj();
+    doc.set("traceEvents", Json::Arr(items))
+        .set("displayTimeUnit", Json::Str("ms".into()));
+    let mut other = Json::obj();
+    other.set("dropped_events", Json::Num(dropped as f64));
+    doc.set("otherData", other);
+    doc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(stage: Stage, lane: Lane, ts_us: u64) -> SpanEvent {
+        SpanEvent {
+            stage,
+            lane,
+            ts_us,
+            dur_us: 5,
+            args: vec![("chunk", "(0,1)".to_string())],
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_beyond_capacity() {
+        let rec = FlightRecorder::with_capacity(2);
+        rec.record(ev(Stage::Plan, Lane::Leader, 0));
+        rec.record(ev(Stage::Extract, Lane::Leader, 1));
+        rec.record(ev(Stage::Gather, Lane::Leader, 2));
+        let (events, dropped) = rec.snapshot();
+        assert_eq!(dropped, 1);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].stage, Stage::Extract);
+        assert_eq!(events[1].stage, Stage::Gather);
+    }
+
+    #[test]
+    fn chrome_trace_has_metadata_and_lanes() {
+        let rec = FlightRecorder::with_capacity(16);
+        rec.record(ev(Stage::Extract, Lane::Leader, 0));
+        rec.record(ev(Stage::Execute, Lane::Shard(0), 3));
+        rec.record(ev(Stage::Execute, Lane::Shard(1), 4));
+        let doc = rec.chrome_trace();
+        // Round-trips through the JSON parser.
+        let back = Json::parse(&doc.compact()).unwrap();
+        let items = back.get("traceEvents").unwrap().as_arr().unwrap();
+        // 1 process meta + 3 lane metas + 3 spans.
+        assert_eq!(items.len(), 7);
+        let metas: Vec<_> = items
+            .iter()
+            .filter(|i| i.get("ph").unwrap().as_str() == Some("M"))
+            .collect();
+        assert_eq!(metas.len(), 4);
+        let spans: Vec<_> = items
+            .iter()
+            .filter(|i| i.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(spans.len(), 3);
+        // Shard lanes are distinct tids offset past the leader's 0.
+        assert_eq!(spans[1].get("tid").unwrap().as_f64(), Some(1.0));
+        assert_eq!(spans[2].get("tid").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn clear_resets_ring_and_dropped() {
+        let rec = FlightRecorder::with_capacity(1);
+        rec.record(ev(Stage::Plan, Lane::Leader, 0));
+        rec.record(ev(Stage::Plan, Lane::Leader, 1));
+        rec.clear();
+        let (events, dropped) = rec.snapshot();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+    }
+}

@@ -13,6 +13,7 @@
 //!   unbounded) turns over-subscription into a clean error instead of
 //!   silent unbounded residency.
 
+use crate::obs;
 use std::collections::BTreeSet;
 
 /// Handle to one operand resident on an
@@ -63,6 +64,7 @@ impl TileAllocator {
         if let Some(&slot) = self.free[mca].iter().next() {
             self.free[mca].remove(&slot);
             self.in_use += 1;
+            self.publish();
             return Ok(slot);
         }
         let fresh = self.next_fresh[mca];
@@ -75,6 +77,7 @@ impl TileAllocator {
         }
         self.next_fresh[mca] = fresh + 1;
         self.in_use += 1;
+        self.publish();
         Ok(fresh)
     }
 
@@ -83,7 +86,28 @@ impl TileAllocator {
         debug_assert!(slot < self.next_fresh[mca], "freeing a never-allocated slot");
         if self.free[mca].insert(slot) {
             self.in_use -= 1;
+            self.publish();
         }
+    }
+
+    /// Mirror the occupancy into the global registry's gauges.
+    fn publish(&self) {
+        if !obs::metrics_on() {
+            return;
+        }
+        let g = obs::global();
+        g.gauge(
+            obs::names::PLANE_SLOTS_IN_USE,
+            "Tile slots currently held across all MCAs",
+            &[],
+        )
+        .set(self.in_use as f64);
+        g.gauge(
+            obs::names::PLANE_SLOT_HIGH_WATER,
+            "Highest per-MCA tile-slot count ever needed",
+            &[],
+        )
+        .set(self.high_water() as f64);
     }
 
     /// Slots currently held across all MCAs.

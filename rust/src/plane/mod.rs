@@ -83,6 +83,7 @@ use crate::linalg::{Matrix, Vector};
 use crate::matrices::MatrixSource;
 use crate::mca::EnergyLedger;
 use crate::metrics::SolveReport;
+use crate::obs::{self, Lane, Stage};
 use crate::runtime::Backend;
 use crate::virtualization::{ChunkPlan, ChunkSpec};
 use shard::{ShardContext, ShardJob, ShardMsg};
@@ -299,6 +300,41 @@ fn drain_walk(
     }
 }
 
+/// Close a leader-side `Plan` span (shared by the one-shot, program and
+/// batch paths; a no-op `None` when tracing is off).
+fn note_plan(span: Option<obs::SpanTimer>, path: &'static str, chunks: usize, m: usize, n: usize) {
+    if let Some(sp) = span {
+        sp.finish(
+            Stage::Plan,
+            Lane::Leader,
+            vec![
+                ("path", path.to_string()),
+                ("m", m.to_string()),
+                ("n", n.to_string()),
+                ("chunks", chunks.to_string()),
+            ],
+        );
+    }
+}
+
+/// Account one supervised gather: fold the blocked-wait seconds into the
+/// leader's gather-wait counter and close the `Gather` span.  Both handles
+/// are `None` when the corresponding level is off.
+fn note_gather(clock: Option<Instant>, span: Option<obs::SpanTimer>, path: &'static str) {
+    if let Some(t0) = clock {
+        obs::global()
+            .counter(
+                obs::names::PLANE_GATHER_WAIT,
+                "Seconds the leader spent in supervised gathers",
+                &[],
+            )
+            .add(t0.elapsed().as_secs_f64());
+    }
+    if let Some(sp) = span {
+        sp.finish(Stage::Gather, Lane::Leader, vec![("path", path.to_string())]);
+    }
+}
+
 /// A sharded execution plane hosting any number of resident operands.
 ///
 /// Built by [`build`](ExecutionPlane::build), which spawns the shard pool
@@ -477,6 +513,27 @@ impl ExecutionPlane {
         self.residencies.get(&id.0).map(|r| r.energy_totals())
     }
 
+    /// Publish the plane's residency gauges to the global registry (the
+    /// allocator publishes the slot-occupancy gauges itself).
+    fn publish_occupancy(&self) {
+        if !obs::metrics_on() {
+            return;
+        }
+        let g = obs::global();
+        g.gauge(
+            obs::names::PLANE_RESIDENT_OPERANDS,
+            "Operands currently resident on the plane",
+            &[],
+        )
+        .set(self.residencies.len() as f64);
+        g.gauge(
+            obs::names::PLANE_RESIDENT_CHUNKS,
+            "Chunks currently resident on the plane",
+            &[],
+        )
+        .set(self.resident_chunks() as f64);
+    }
+
     fn ensure_live(&self) -> Result<(), String> {
         match &self.failed {
             Some(e) => Err(format!("execution plane failed: {e}")),
@@ -504,8 +561,10 @@ impl ExecutionPlane {
             );
         }
         let start = Instant::now();
+        let plan_span = obs::span_start();
         let plan = ChunkPlan::new(self.config.geometry(), source.nrows(), source.ncols());
         let (m, n) = (plan.m, plan.n);
+        note_plan(plan_span, "one-shot", plan.total_chunks(), m, n);
         if x.len() != n {
             return Err(format!("x has length {} but A has {n} columns", x.len()));
         }
@@ -532,6 +591,8 @@ impl ExecutionPlane {
         let mut partials: BTreeMap<(usize, usize), Vector> = BTreeMap::new();
         let mut wv_sum = 0.0f64;
         let mut got = 0usize;
+        let gather_span = obs::span_start();
+        let gather_clock = obs::metrics_clock();
         let outcome = {
             let results = &self.results;
             let handles = &self.handles;
@@ -563,6 +624,7 @@ impl ExecutionPlane {
                 _ => None,
             })
         };
+        note_gather(gather_clock, gather_span, "one-shot");
         if let Some(fatal) = outcome.fatal {
             self.failed = Some(fatal.clone());
             return Err(fatal);
@@ -574,7 +636,15 @@ impl ExecutionPlane {
             return Err("shards exited before delivering all results".to_string());
         }
         let skipped = plan.total_chunks() - dispatched;
+        let reduce_span = obs::span_start();
         let y = reduce_partials(m, tile, &partials);
+        if let Some(sp) = reduce_span {
+            sp.finish(
+                Stage::Reduce,
+                Lane::Leader,
+                vec![("chunks", partials.len().to_string())],
+            );
+        }
 
         // Ground truth (opt-out: O(m·n) host work, infeasible at 65k²).
         let mut report = SolveReport::empty(m);
@@ -626,8 +696,10 @@ impl ExecutionPlane {
     ) -> Result<(OperandId, ProgramReport), String> {
         self.ensure_live()?;
         let start = Instant::now();
+        let plan_span = obs::span_start();
         let plan = ChunkPlan::new(self.config.geometry(), source.nrows(), source.ncols());
         let (m, n) = (plan.m, plan.n);
+        note_plan(plan_span, "program", plan.total_chunks(), m, n);
         let op = self.next_operand;
         self.next_operand += 1;
         let id = OperandId(op);
@@ -661,6 +733,8 @@ impl ExecutionPlane {
         };
         let mut iters_sum = 0.0f64;
         let mut acks = 0usize;
+        let gather_span = obs::span_start();
+        let gather_clock = obs::metrics_clock();
         let outcome = {
             let results = &self.results;
             let handles = &self.handles;
@@ -693,6 +767,7 @@ impl ExecutionPlane {
                 _ => None,
             })
         };
+        note_gather(gather_clock, gather_span, "program");
         if let Some(fatal) = outcome.fatal {
             self.failed = Some(fatal.clone());
             self.retire(op, res);
@@ -729,6 +804,7 @@ impl ExecutionPlane {
             wall_seconds: start.elapsed().as_secs_f64(),
         };
         self.residencies.insert(op, res);
+        self.publish_occupancy();
         crate::log_info!(
             "plane",
             "programmed {id} ({m}x{n}): {} resident chunks ({} skipped) on {} MCAs / {} \
@@ -775,6 +851,7 @@ impl ExecutionPlane {
             });
         }
         let start = Instant::now();
+        let plan_span = obs::span_start();
         let (m, tile, first_solve) = {
             let res = self.residencies.get_mut(&id.0).expect("checked above");
             let first = res.next_solve;
@@ -797,6 +874,17 @@ impl ExecutionPlane {
                 dead = Some(s);
             }
         }
+        if let Some(sp) = plan_span {
+            sp.finish(
+                Stage::Plan,
+                Lane::Leader,
+                vec![
+                    ("path", "batch".to_string()),
+                    ("operand", id.0.to_string()),
+                    ("batch", xs.len().to_string()),
+                ],
+            );
+        }
         // A dead shard implies a panic already reported (or about to be)
         // on the results channel; drain the walk so the Failed message is
         // consumed, then fail the plane.
@@ -816,6 +904,8 @@ impl ExecutionPlane {
         let shards = self.senders.len();
         let mut per_solve: Vec<BTreeMap<(usize, usize), Vector>> =
             (0..xs.len()).map(|_| BTreeMap::new()).collect();
+        let gather_span = obs::span_start();
+        let gather_clock = obs::metrics_clock();
         let outcome = {
             let results = &self.results;
             let handles = &self.handles;
@@ -856,6 +946,7 @@ impl ExecutionPlane {
                 _ => None,
             })
         };
+        note_gather(gather_clock, gather_span, "batch");
         if let Some(fatal) = outcome.fatal {
             self.failed = Some(fatal.clone());
             return Err(fatal);
@@ -864,7 +955,8 @@ impl ExecutionPlane {
             return Err(e);
         }
         let wall = start.elapsed().as_secs_f64();
-        let solves = per_solve
+        let reduce_span = obs::span_start();
+        let solves: Vec<ServeSolve> = per_solve
             .into_iter()
             .enumerate()
             .map(|(k, partials)| ServeSolve {
@@ -873,6 +965,16 @@ impl ExecutionPlane {
                 wall_seconds: wall / xs.len() as f64,
             })
             .collect();
+        if let Some(sp) = reduce_span {
+            sp.finish(
+                Stage::Reduce,
+                Lane::Leader,
+                vec![
+                    ("operand", id.0.to_string()),
+                    ("batch", xs.len().to_string()),
+                ],
+            );
+        }
         Ok(BatchOutcome {
             solves,
             wall_seconds: wall,
@@ -938,6 +1040,16 @@ impl ExecutionPlane {
         let (w, r) = res.energy_totals();
         self.retired_energy.0 += w;
         self.retired_energy.1 += r;
+        if obs::metrics_on() {
+            obs::global()
+                .counter(
+                    obs::names::PLANE_EVICTIONS,
+                    "Operand evictions/retirements from the plane",
+                    &[],
+                )
+                .inc();
+        }
+        self.publish_occupancy();
     }
 }
 
@@ -965,6 +1077,23 @@ where
     let tile = plan.geometry.cell_size;
     let mut dispatched = 0usize;
     let mut walk_err: Option<String> = None;
+    let extract_metrics = if obs::metrics_on() {
+        let g = obs::global();
+        Some((
+            g.counter(
+                obs::names::PLANE_TILES_EXTRACTED,
+                "Tiles extracted and dispatched by the leader",
+                &[],
+            ),
+            g.counter(
+                obs::names::PLANE_EXTRACT_SECONDS,
+                "Seconds the leader spent extracting and dispatching tiles",
+                &[],
+            ),
+        ))
+    } else {
+        None
+    };
     {
         let mut iter = plan.nonzero_chunks(source);
         loop {
@@ -976,6 +1105,8 @@ where
                     break;
                 }
             };
+            let span = obs::span_start();
+            let t0 = extract_metrics.as_ref().map(|_| Instant::now());
             let a_tile = match extract_tile(source, &spec, tile) {
                 Ok(t) => t,
                 Err(e) => {
@@ -996,6 +1127,20 @@ where
                 break;
             }
             dispatched += 1;
+            if let (Some((tiles, secs)), Some(t0)) = (&extract_metrics, t0) {
+                tiles.inc();
+                secs.add(t0.elapsed().as_secs_f64());
+            }
+            if let Some(sp) = span {
+                sp.finish(
+                    Stage::Extract,
+                    Lane::Leader,
+                    vec![
+                        ("chunk", format!("({},{})", spec.block_row, spec.block_col)),
+                        ("mca", spec.mca_index.to_string()),
+                    ],
+                );
+            }
         }
     }
     for tx in senders {

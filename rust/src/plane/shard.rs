@@ -29,6 +29,7 @@ use crate::config::SolveOptions;
 use crate::ec::{EcOptions, ProgrammedTile, TileExecutor};
 use crate::linalg::{Matrix, Vector};
 use crate::mca::{EnergyLedger, Mca};
+use crate::obs::{self, Counter, Lane, Stage};
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::virtualization::ChunkSpec;
@@ -209,6 +210,43 @@ impl ShardState {
     }
 }
 
+/// One shard's cached metric handles (label `shard` is static for the
+/// thread's lifetime, so the registry lock is paid once, not per job).
+struct ShardCounters {
+    busy: Counter,
+    idle: Counter,
+    jobs: Counter,
+    chunks: Counter,
+}
+
+/// Lazily build the shard's counter handles the first time metrics are
+/// found enabled (planes built before the level was raised still record).
+fn shard_counters(cache: &mut Option<ShardCounters>, shard: usize) -> &ShardCounters {
+    cache.get_or_insert_with(|| {
+        let label = shard.to_string();
+        let labels: &[(&str, &str)] = &[("shard", &label)];
+        let g = obs::global();
+        ShardCounters {
+            busy: g.counter(
+                obs::names::SHARD_BUSY_SECONDS,
+                "Per-shard seconds spent processing jobs",
+                labels,
+            ),
+            idle: g.counter(
+                obs::names::SHARD_IDLE_SECONDS,
+                "Per-shard seconds spent blocked waiting for work",
+                labels,
+            ),
+            jobs: g.counter(obs::names::SHARD_JOBS, "Jobs processed per shard", labels),
+            chunks: g.counter(
+                obs::names::SHARD_CHUNKS,
+                "Chunk executions per shard, one per (chunk, vector)",
+                labels,
+            ),
+        }
+    })
+}
+
 /// Render a caught panic payload as text (shared by the shard loop and
 /// the leader-side walk supervision in [`crate::plane`]).
 pub(crate) fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -234,9 +272,34 @@ pub(crate) fn run(ctx: ShardContext) {
         oneshot: HashMap::new(),
         ops: HashMap::new(),
     };
-    while let Ok(job) = ctx.jobs.recv() {
+    let mut counters: Option<ShardCounters> = None;
+    loop {
+        let idle_clock = obs::metrics_clock();
+        let job = match ctx.jobs.recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let chunk_counter = if let Some(t0) = idle_clock {
+            let h = shard_counters(&mut counters, ctx.shard);
+            h.idle.add(t0.elapsed().as_secs_f64());
+            h.jobs.inc();
+            Some(h.chunks.clone())
+        } else {
+            None
+        };
+        let busy_clock = obs::metrics_clock();
         let walk_op = job.walk_op();
-        match catch_unwind(AssertUnwindSafe(|| handle(&ctx, &ec, &mut state, job))) {
+        let chunk_counter = chunk_counter.as_ref();
+        let handled =
+            catch_unwind(AssertUnwindSafe(|| {
+                handle(&ctx, &ec, &mut state, job, chunk_counter)
+            }));
+        if let Some(t0) = busy_clock {
+            shard_counters(&mut counters, ctx.shard)
+                .busy
+                .add(t0.elapsed().as_secs_f64());
+        }
+        match handled {
             // Job handled; leader still listening.
             Ok(true) => {}
             // Reply channel closed: the leader is gone, stop quietly.
@@ -254,8 +317,24 @@ pub(crate) fn run(ctx: ShardContext) {
     }
 }
 
+/// Span arguments shared by every shard-side stage event.
+fn chunk_args(spec: &ChunkSpec) -> Vec<(&'static str, String)> {
+    vec![
+        ("chunk", format!("({},{})", spec.block_row, spec.block_col)),
+        ("mca", spec.mca_index.to_string()),
+    ]
+}
+
 /// Process one job.  Returns `false` when the reply channel is closed.
-fn handle(ctx: &ShardContext, ec: &EcOptions, state: &mut ShardState, job: ShardJob) -> bool {
+/// `chunks` is the shard's chunk-execution counter when metrics are on.
+fn handle(
+    ctx: &ShardContext,
+    ec: &EcOptions,
+    state: &mut ShardState,
+    job: ShardJob,
+    chunks: Option<&Counter>,
+) -> bool {
+    let lane = Lane::Shard(ctx.shard);
     match job {
         ShardJob::RunOnce {
             spec,
@@ -265,9 +344,29 @@ fn handle(ctx: &ShardContext, ec: &EcOptions, state: &mut ShardState, job: Shard
             let exec = state.oneshot.entry(spec.mca_index).or_insert_with(|| {
                 new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
             });
-            let outcome = exec
-                .run_tile(&a_tile, &x_chunk, ec)
-                .map(|r| (r.y, r.encode.iters));
+            // `run_tile` split into its two halves so encode and execute
+            // trace as separate stages — same calls, bit-identical result.
+            let encode_span = obs::span_start();
+            let programmed = exec.program_tile(&a_tile, ec);
+            if let Some(sp) = encode_span {
+                sp.finish(Stage::Encode, lane, chunk_args(&spec));
+            }
+            let outcome = match programmed {
+                Ok(tile) => {
+                    let exec_span = obs::span_start();
+                    let out = exec
+                        .execute_tile(&tile, &x_chunk, ec)
+                        .map(|r| (r.y, r.encode.iters));
+                    if let Some(sp) = exec_span {
+                        sp.finish(Stage::Execute, lane, chunk_args(&spec));
+                    }
+                    out
+                }
+                Err(e) => Err(e),
+            };
+            if let Some(c) = chunks {
+                c.inc();
+            }
             let msg = ShardMsg::Once {
                 block_row: spec.block_row,
                 block_col: spec.block_col,
@@ -280,6 +379,7 @@ fn handle(ctx: &ShardContext, ec: &EcOptions, state: &mut ShardState, job: Shard
             let exec = opstate.executors.entry(spec.mca_index).or_insert_with(|| {
                 new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
             });
+            let encode_span = obs::span_start();
             let outcome = match exec.program_tile(&a_tile, ec) {
                 Ok(tile) => {
                     let iters = tile.encode.iters;
@@ -288,6 +388,11 @@ fn handle(ctx: &ShardContext, ec: &EcOptions, state: &mut ShardState, job: Shard
                 }
                 Err(e) => Err(e),
             };
+            if let Some(sp) = encode_span {
+                let mut args = chunk_args(&spec);
+                args.push(("operand", op.to_string()));
+                sp.finish(Stage::Encode, lane, args);
+            }
             let msg = ShardMsg::Programmed {
                 block_row: spec.block_row,
                 block_col: spec.block_col,
@@ -312,6 +417,7 @@ fn handle(ctx: &ShardContext, ec: &EcOptions, state: &mut ShardState, job: Shard
             for (spec, tile) in opstate.resident.iter() {
                 for (k, x) in xs.iter().enumerate() {
                     let solve = first_solve + k as u64;
+                    let exec_span = obs::span_start();
                     let outcome = match opstate.executors.get_mut(&spec.mca_index) {
                         Some(exec) => {
                             let x_chunk = x.slice_padded(spec.col0, ctx.cell);
@@ -329,6 +435,15 @@ fn handle(ctx: &ShardContext, ec: &EcOptions, state: &mut ShardState, job: Shard
                         }
                         None => Err("resident chunk lost its executor".to_string()),
                     };
+                    if let Some(sp) = exec_span {
+                        let mut args = chunk_args(spec);
+                        args.push(("operand", op.to_string()));
+                        args.push(("solve", solve.to_string()));
+                        sp.finish(Stage::Execute, lane, args);
+                    }
+                    if let Some(c) = chunks {
+                        c.inc();
+                    }
                     let msg = ShardMsg::Partial {
                         solve,
                         block_row: spec.block_row,

@@ -21,9 +21,17 @@ use super::session::Session;
 use crate::config::{SolveOptions, SystemConfig};
 use crate::ec::DenoiseMode;
 use crate::matrices::MatrixSource;
+use crate::obs;
 use crate::plane::ExecutionPlane;
 use crate::solver::Meliso;
 use std::sync::{Arc, Mutex};
+
+/// Mirror one cache event into the global metrics registry.
+fn note_cache(name: &'static str, help: &'static str, n: u64) {
+    if n > 0 && obs::metrics_on() {
+        obs::global().counter(name, help, &[]).add(n as f64);
+    }
+}
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -225,9 +233,19 @@ impl OperandCache {
             .unwrap_or(false);
         if dead {
             self.evictions += self.entries.len() as u64;
+            note_cache(
+                obs::names::CACHE_EVICTIONS,
+                "Operand-cache evictions",
+                self.entries.len() as u64,
+            );
             self.entries.clear();
             self.plane = None;
             self.rebuilds += 1;
+            note_cache(
+                obs::names::CACHE_REBUILDS,
+                "Operand-cache plane rebuilds after failure",
+                1,
+            );
         }
     }
 
@@ -270,9 +288,15 @@ impl OperandCache {
         if let Some(entry) = self.entries.iter_mut().find(|e| e.matches(&key, source)) {
             entry.last_used = self.clock;
             self.hits += 1;
+            note_cache(obs::names::CACHE_HITS, "Operand-cache session reuses", 1);
             return Ok(entry.session.clone());
         }
         self.misses += 1;
+        note_cache(
+            obs::names::CACHE_MISSES,
+            "Operand-cache programming misses",
+            1,
+        );
         let plane = self.live_plane(solver, source)?;
         let mut displaced: Option<CacheEntry> = None;
         if self.entries.len() >= self.capacity {
@@ -295,12 +319,14 @@ impl OperandCache {
                 Some(entry) => {
                     drop(entry);
                     self.evictions += 1;
+                    note_cache(obs::names::CACHE_EVICTIONS, "Operand-cache evictions", 1);
                     Session::open_on(plane, source.clone())?
                 }
             },
         };
         if displaced.take().is_some() {
             self.evictions += 1;
+            note_cache(obs::names::CACHE_EVICTIONS, "Operand-cache evictions", 1);
         }
         let session = Arc::new(session);
         self.entries.push(CacheEntry {

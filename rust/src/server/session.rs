@@ -36,9 +36,23 @@ use crate::config::{SolveOptions, SystemConfig};
 use crate::linalg::Vector;
 use crate::matrices::MatrixSource;
 use crate::metrics::serving::{ServingReport, ServingStats};
+use crate::obs;
 use crate::plane::ExecutionPlane;
 use crate::runtime::Backend;
 use std::sync::{Arc, Mutex};
+
+/// Mirror an energy delta into the global registry's serve-path split.
+fn note_energy(op: &str, kind: &str, joules: f64) {
+    if joules > 0.0 {
+        obs::global()
+            .counter(
+                obs::names::ENERGY_JOULES,
+                "Serve-path energy split by operand and kind (write|read)",
+                &[("operand", op), ("kind", kind)],
+            )
+            .add(joules);
+    }
+}
 
 /// Backend-agnostic matrix–vector multiply provider for iterative solvers
 /// (`crate::iterative`).
@@ -145,6 +159,9 @@ impl Session {
         };
         let mut stats = ServingStats::new();
         stats.record_program(program.write_energy_j, program.write_latency_s);
+        if obs::metrics_on() {
+            note_energy(&id.to_string(), "write", program.write_energy_j);
+        }
         crate::log_info!(
             "server",
             "session open {id} ({}x{}): {} resident chunks ({} skipped) on {} MCAs, \
@@ -220,13 +237,53 @@ impl Session {
         match outcome {
             Ok(batch) => {
                 inner.stats.record_batch(xs.len(), batch.wall_seconds, dw, dr);
+                if obs::metrics_on() {
+                    self.publish_batch_metrics(xs.len(), batch.wall_seconds, dw, dr);
+                }
                 Ok(batch.solves)
             }
             Err(e) => {
                 inner.stats.record_error();
+                if obs::metrics_on() {
+                    let op = self.id.to_string();
+                    obs::global()
+                        .counter(
+                            obs::names::SOLVE_ERRORS,
+                            "Failed served batches",
+                            &[("operand", &op)],
+                        )
+                        .inc();
+                }
                 Err(e)
             }
         }
+    }
+
+    /// Mirror one served batch into the global metrics registry: batch and
+    /// per-vector latency histograms plus the energy deltas.
+    fn publish_batch_metrics(&self, batch: usize, wall_s: f64, write_j: f64, read_j: f64) {
+        let op = self.id.to_string();
+        let labels: &[(&str, &str)] = &[("operand", &op)];
+        let g = obs::global();
+        g.histogram(
+            obs::names::BATCH_LATENCY,
+            "Whole-batch served solve latency in seconds",
+            labels,
+            obs::LATENCY_BUCKETS,
+        )
+        .observe(wall_s);
+        let per_vector = g.histogram(
+            obs::names::SOLVE_LATENCY,
+            "Per-vector served solve latency in seconds",
+            labels,
+            obs::LATENCY_BUCKETS,
+        );
+        let share = wall_s / batch as f64;
+        for _ in 0..batch {
+            per_vector.observe(share);
+        }
+        note_energy(&op, "write", write_j);
+        note_energy(&op, "read", read_j);
     }
 
     /// One-time programming report for the resident operand.

@@ -1,0 +1,203 @@
+//! Observability end-to-end suite: the three contracts the `obs` layer
+//! makes to the rest of the framework.
+//!
+//! 1. **Never perturb numerics** — a solve with full tracing enabled is
+//!    bit-identical to the same solve with observability off.
+//! 2. **Cover the pipeline** — a resident program + batch execute leaves
+//!    at least one span per stage (plan, extract, encode, execute,
+//!    gather, reduce) with per-shard lanes, and the rendered Chrome
+//!    trace parses back as JSON.
+//! 3. **Stable exposition** — the Prometheus text format is pinned by a
+//!    golden file (HELP/TYPE lines, label escaping, cumulative
+//!    `_bucket`/`_sum`/`_count`), and every exported histogram satisfies
+//!    the bucket invariants.
+//!
+//! The observability level is process-global, so the tests that toggle
+//! it serialize on one mutex and restore `Off` on the way out (also on
+//! panic, via a drop guard).
+
+use meliso::matrices::{DenseSource, MatrixSource};
+use meliso::obs::export::{check_histogram_invariants, prometheus, to_json};
+use meliso::obs::registry::Registry;
+use meliso::obs::{self, Lane, ObsLevel, Stage, StatusReport};
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::util::json::Json;
+use std::sync::{Arc, Mutex, OnceLock};
+
+fn obs_lock() -> &'static Mutex<()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+}
+
+/// Restores `ObsLevel::Off` when dropped, so a failing assertion cannot
+/// leak an armed level into the other tests.
+struct LevelGuard;
+
+impl Drop for LevelGuard {
+    fn drop(&mut self) {
+        obs::set_level(ObsLevel::Off);
+    }
+}
+
+fn config() -> SystemConfig {
+    SystemConfig::new(2, 2, 32)
+}
+
+fn opts() -> SolveOptions {
+    SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_workers(2)
+        .with_seed(17)
+}
+
+/// One-shot solve on a fresh plane, returning the raw result bits.
+fn solve_once(src: &DenseSource, x: &Vector) -> Vec<u64> {
+    let plane = ExecutionPlane::build(src, &config(), &opts(), Arc::new(NativeBackend::new()))
+        .expect("build plane");
+    let report = plane.execute_once(src, x).expect("execute once");
+    report.y.data().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn tracing_never_perturbs_numerics() {
+    let _g = obs_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = LevelGuard;
+    let src = DenseSource::new(Matrix::standard_normal(64, 64, 21));
+    let x = Vector::standard_normal(64, 22);
+
+    obs::set_level(ObsLevel::Off);
+    let base = solve_once(&src, &x);
+
+    obs::set_level(ObsLevel::Trace);
+    obs::recorder().clear();
+    let traced = solve_once(&src, &x);
+
+    assert_eq!(base, traced, "tracing changed the solve result bits");
+    let (events, _) = obs::recorder().snapshot();
+    assert!(!events.is_empty(), "trace level recorded no spans");
+}
+
+#[test]
+fn resident_serving_traces_every_stage_across_shard_lanes() {
+    let _g = obs_lock().lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = LevelGuard;
+    obs::set_level(ObsLevel::Trace);
+    obs::recorder().clear();
+
+    let source: Arc<dyn MatrixSource> =
+        Arc::new(DenseSource::new(Matrix::standard_normal(64, 64, 31)));
+    let solver = Meliso::with_backend(config(), opts(), Arc::new(NativeBackend::new()));
+    let plane = solver.build_plane(source.as_ref()).expect("build plane");
+    let session = solver
+        .open_session_on(&plane, source)
+        .expect("open session");
+    let xs: Vec<Vector> = (0..4)
+        .map(|i| Vector::standard_normal(64, 40 + i as u64))
+        .collect();
+    session.solve_batch(&xs).expect("solve batch");
+
+    let (events, _) = obs::recorder().snapshot();
+    for stage in Stage::ALL {
+        assert!(
+            events.iter().any(|e| e.stage == stage),
+            "no span recorded for stage {:?}",
+            stage
+        );
+    }
+    let mut shard_lanes: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e.lane {
+            Lane::Shard(s) => Some(s),
+            Lane::Leader => None,
+        })
+        .collect();
+    shard_lanes.sort_unstable();
+    shard_lanes.dedup();
+    assert!(
+        shard_lanes.len() >= 2,
+        "expected spans from >= 2 shard lanes, got {shard_lanes:?}"
+    );
+
+    // The rendered Chrome trace is valid JSON with metadata rows and at
+    // least one complete ("X") span event.
+    let doc = obs::recorder().chrome_trace();
+    let back = Json::parse(&doc.pretty()).expect("chrome trace parses");
+    let items = back
+        .get("traceEvents")
+        .and_then(|t| t.as_arr())
+        .expect("traceEvents array");
+    assert!(items
+        .iter()
+        .any(|i| i.get("ph").and_then(|p| p.as_str()) == Some("X")));
+    assert!(items
+        .iter()
+        .any(|i| i.get("ph").and_then(|p| p.as_str()) == Some("M")));
+
+    // The metrics side of the same run: the exported snapshot assembles
+    // into a status report with per-shard rows and recorded solves, and
+    // every histogram satisfies the exposition invariants.
+    let snap = obs::global().snapshot();
+    check_histogram_invariants(&snap).expect("histogram invariants");
+    let report = StatusReport::from_json(&to_json(&snap, 5.0)).expect("status report");
+    assert!(
+        report.shards.len() >= 2,
+        "status surfaced {} shard rows",
+        report.shards.len()
+    );
+    assert!(report.solve_count > 0, "status surfaced no served solves");
+    assert!(report.energy_write_j.unwrap_or(0.0) > 0.0);
+}
+
+/// A deterministic registry whose exposition the golden file pins.
+fn golden_registry() -> Registry {
+    let r = Registry::new();
+    let help = "Chunks executed by the demo plane";
+    r.counter("demo_chunks_total", help, &[("shard", "0")]).add(8.0);
+    r.counter("demo_chunks_total", help, &[("shard", "1")]).add(3.0);
+    r.counter(
+        "demo_escaped_total",
+        "Label escaping: backslash \\ quote \" newline \n end",
+        &[("operand", "a\\b\"c\nd")],
+    )
+    .inc();
+    r.gauge("demo_slots_in_use", "Tile slots currently held", &[])
+        .set(6.0);
+    let h = r.histogram(
+        "demo_latency_seconds",
+        "Demo latency",
+        &[("operand", "op0")],
+        &[0.25, 1.0, 4.0],
+    );
+    // Powers of two, so the `_sum` renders exactly.
+    h.observe(0.125);
+    h.observe(0.5);
+    h.observe(2.0);
+    h.observe(8.0);
+    r
+}
+
+#[test]
+fn prometheus_exposition_matches_golden_file() {
+    let snap = golden_registry().snapshot();
+    let got = prometheus(&snap);
+    let want = include_str!("data/metrics_golden.prom");
+    assert_eq!(got, want, "Prometheus exposition drifted from the golden file");
+    check_histogram_invariants(&snap).unwrap();
+}
+
+#[test]
+fn golden_document_round_trips_through_json() {
+    let snap = golden_registry().snapshot();
+    let doc = to_json(&snap, 2.0);
+    let back = Json::parse(&doc.pretty()).expect("JSON export parses");
+    assert_eq!(back.get("schema").and_then(|s| s.as_f64()), Some(1.0));
+    let hist = back
+        .get("metrics")
+        .and_then(|m| m.get("demo_latency_seconds"))
+        .expect("histogram family");
+    assert_eq!(hist.get("type").and_then(|t| t.as_str()), Some("histogram"));
+    let series = &hist.get("series").and_then(|s| s.as_arr()).unwrap()[0];
+    assert_eq!(series.get("count").and_then(|c| c.as_f64()), Some(4.0));
+    assert_eq!(series.get("sum").and_then(|s| s.as_f64()), Some(10.625));
+}
