@@ -60,17 +60,21 @@ fn main() -> Result<(), String> {
     let plane = solver.build_plane(a.as_ref())?;
     let sa = solver.open_session_on(&plane, a.clone())?;
     let sb = solver.open_session_on(&plane, a2.clone())?;
-    sa.solve(&Vector::standard_normal(a.ncols(), 200))?;
-    sb.solve(&Vector::standard_normal(a2.ncols(), 201))?;
-    {
-        let guard = plane.lock().map_err(|_| "plane poisoned".to_string())?;
-        println!(
-            "shared plane: {} operands resident, {} tile slots in use on {} shards",
-            guard.resident_operands(),
-            guard.slots_in_use(),
-            guard.shards()
-        );
-    }
+    // Sessions admit batches through `&self`, so different tenants solve
+    // concurrently on the one shard pool.
+    std::thread::scope(|s| {
+        let ha = s.spawn(|| sa.solve(&Vector::standard_normal(a.ncols(), 200)));
+        let hb = s.spawn(|| sb.solve(&Vector::standard_normal(a2.ncols(), 201)));
+        ha.join().expect("tenant A thread")?;
+        hb.join().expect("tenant B thread")?;
+        Ok::<(), PlaneError>(())
+    })?;
+    println!(
+        "shared plane: {} operands resident, {} tile slots in use on {} shards",
+        plane.resident_operands(),
+        plane.slots_in_use(),
+        plane.shards()
+    );
     drop(sb); // evicts bcsstk02's residency, slots return to the allocator
 
     // 5. Multi-tenant residency behind an LRU cache keyed by operand

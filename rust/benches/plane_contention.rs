@@ -1,0 +1,304 @@
+//! Concurrent-admission benchmark: N clients hammering M resident
+//! operands on ONE shared execution plane through clone-able
+//! [`PlaneHandle`]s (`meliso::plane`).
+//!
+//! Quantifies what the shared-handle redesign exists for:
+//!
+//! * **chunks/s under contention** — 8 client threads × 4 resident
+//!   operands, batches admitted through `&self` with no plane-wide lock,
+//!   against a *serialized baseline* that funnels every batch through one
+//!   admission mutex (the old `&mut self` surface);
+//! * **p99 batch latency** — the tail cost of head-of-line blocking the
+//!   serialized plane pays and the concurrent plane does not;
+//! * **determinism** — 8 operand streams solved under 1-, 2- and 8-way
+//!   client concurrency and every placement policy must produce
+//!   bit-identical results (always asserted: execution noise is
+//!   counter-based per `(operand, solve, chunk)`, so scheduling cannot
+//!   leak into the numerics).
+//!
+//! The wall-clock contention threshold (concurrent admission at least
+//! 2x the serialized chunks/s) only asserts when `MELISO_BENCH_ASSERT=1`,
+//! like `plane_scaling` — shared single-core CI runners cannot express
+//! admission parallelism, so CI reports the numbers (and uploads
+//! `BENCH_plane_contention.json`) without flaking.
+//!
+//! Usage: `cargo bench --bench plane_contention [-- --quick]`
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::{DenseSource, MatrixSource};
+use meliso::prelude::*;
+use meliso::util::json::Json;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+const CLIENTS: usize = 8;
+const OPERANDS: usize = 4;
+
+fn dense_sources(count: usize, n: usize, seed: u64) -> Vec<Arc<dyn MatrixSource>> {
+    (0..count)
+        .map(|m| {
+            Arc::new(DenseSource::new(Matrix::standard_normal(n, n, seed + m as u64)))
+                as Arc<dyn MatrixSource>
+        })
+        .collect()
+}
+
+struct RunStats {
+    wall_s: f64,
+    chunks_per_s: f64,
+    mean_ms: f64,
+    p99_ms: f64,
+}
+
+impl RunStats {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("wall_s", Json::Num(self.wall_s))
+            .set("chunks_per_s", Json::Num(self.chunks_per_s))
+            .set("batch_mean_ms", Json::Num(self.mean_ms))
+            .set("batch_p99_ms", Json::Num(self.p99_ms));
+        j
+    }
+}
+
+/// 8 clients (2 per operand) issue `batches` batches each against one
+/// shared plane.  `serialize` funnels every admission through a single
+/// mutex — the plane-wide lock the old `&mut self` surface forced.
+fn contention_run(
+    srcs: &[Arc<dyn MatrixSource>],
+    config: &SystemConfig,
+    opts: &SolveOptions,
+    batches: usize,
+    batch: usize,
+    serialize: bool,
+) -> RunStats {
+    let plane = PlaneHandle::build(srcs[0].as_ref(), config, opts, backend()).unwrap();
+    let residencies: Vec<(OperandId, usize)> = srcs
+        .iter()
+        .map(|s| {
+            let (id, p) = plane.program(s.as_ref()).unwrap();
+            (id, p.chunks_resident)
+        })
+        .collect();
+    // Pre-generate every client's inputs so the timed region is admission
+    // and execution only.
+    let inputs: Vec<Vec<Vec<Vector>>> = (0..CLIENTS)
+        .map(|c| {
+            let n = srcs[c % OPERANDS].ncols();
+            (0..batches)
+                .map(|b| {
+                    (0..batch)
+                        .map(|v| {
+                            let seed = ((c as u64) << 32) ^ (b * batch + v) as u64;
+                            Vector::standard_normal(n, seed)
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+    let admission = Mutex::new(());
+    let t0 = Instant::now();
+    let latencies: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                let plane = plane.clone();
+                let (id, _) = residencies[c % OPERANDS];
+                let xs = &inputs[c];
+                let admission = &admission;
+                scope.spawn(move || {
+                    let mut lats = Vec::with_capacity(batches);
+                    for batch_xs in xs {
+                        let t = Instant::now();
+                        if serialize {
+                            let _gate = admission.lock().unwrap();
+                            plane.execute_batch(id, batch_xs).unwrap();
+                        } else {
+                            plane.execute_batch(id, batch_xs).unwrap();
+                        }
+                        lats.push(t.elapsed().as_secs_f64());
+                    }
+                    lats
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let chunks: usize = (0..CLIENTS)
+        .map(|c| residencies[c % OPERANDS].1 * batches)
+        .sum();
+    let mut sorted = latencies.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| sorted[((sorted.len() - 1) as f64 * q).round() as usize];
+    RunStats {
+        wall_s,
+        chunks_per_s: chunks as f64 / wall_s.max(1e-12),
+        mean_ms: latencies.iter().sum::<f64>() / latencies.len() as f64 * 1e3,
+        p99_ms: pct(0.99) * 1e3,
+    }
+}
+
+/// Solve 8 operand streams (each stream served in-order by exactly one
+/// thread) split across `threads` concurrent clients, and return every
+/// result's raw bits, per stream per solve.
+fn det_run(
+    srcs: &[Arc<dyn MatrixSource>],
+    config: &SystemConfig,
+    opts: &SolveOptions,
+    solves: usize,
+    threads: usize,
+) -> Vec<Vec<Vec<u64>>> {
+    let plane = PlaneHandle::build(srcs[0].as_ref(), config, opts, backend()).unwrap();
+    let ids: Vec<OperandId> = srcs
+        .iter()
+        .map(|s| plane.program(s.as_ref()).unwrap().0)
+        .collect();
+    let streams = srcs.len();
+    let per_thread = streams.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let plane = plane.clone();
+                let ids = &ids;
+                let srcs = srcs;
+                scope.spawn(move || {
+                    let lo = t * per_thread;
+                    let hi = ((t + 1) * per_thread).min(streams);
+                    // Round-robin the thread's streams so concurrent
+                    // threads interleave operands as much as possible.
+                    let mut out: Vec<(usize, Vec<Vec<u64>>)> =
+                        (lo..hi).map(|s| (s, Vec::new())).collect();
+                    for k in 0..solves {
+                        for (s, ys) in out.iter_mut() {
+                            let x = Vector::standard_normal(
+                                srcs[*s].ncols(),
+                                0xDE7 + (*s as u64) * 131 + k as u64,
+                            );
+                            let batch = plane
+                                .execute_batch(ids[*s], std::slice::from_ref(&x))
+                                .unwrap();
+                            ys.push(
+                                batch.solves[0].y.data().iter().map(|v| v.to_bits()).collect(),
+                            );
+                        }
+                    }
+                    out
+                })
+            })
+            .collect();
+        let mut all: Vec<Vec<Vec<u64>>> = vec![Vec::new(); streams];
+        for h in handles {
+            for (s, ys) in h.join().expect("det thread") {
+                all[s] = ys;
+            }
+        }
+        all
+    })
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let (n, batches, batch, det_solves) = if args.quick {
+        (64, 6, 2, 2)
+    } else {
+        (128, 16, 4, 3)
+    };
+    let config = SystemConfig::new(2, 2, 32);
+    let opts = SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_seed(42)
+        .with_workers(4)
+        .with_ground_truth(false);
+
+    println!(
+        "# plane contention: {CLIENTS} clients x {OPERANDS} operands ({n}x{n}) on one shared \
+         plane, batch {batch}, {batches} batches/client\n"
+    );
+
+    // --- serialized baseline vs concurrent admission --------------------
+    let srcs = dense_sources(OPERANDS, n, 0xC0);
+    let serialized = contention_run(&srcs, &config, &opts, batches, batch, true);
+    println!(
+        "serialized admission: {:>8.1} chunks/s, batch mean {:>7.2} ms, p99 {:>7.2} ms  ({:.3} s)",
+        serialized.chunks_per_s, serialized.mean_ms, serialized.p99_ms, serialized.wall_s
+    );
+    let concurrent = contention_run(&srcs, &config, &opts, batches, batch, false);
+    println!(
+        "concurrent admission: {:>8.1} chunks/s, batch mean {:>7.2} ms, p99 {:>7.2} ms  ({:.3} s)",
+        concurrent.chunks_per_s, concurrent.mean_ms, concurrent.p99_ms, concurrent.wall_s
+    );
+    let speedup = concurrent.chunks_per_s / serialized.chunks_per_s.max(1e-12);
+    println!("\nchunks/s vs serialized baseline: {speedup:.2}x   (target >= 2x)");
+
+    // --- determinism: 1/2/8-way concurrency x every placement -----------
+    let det_srcs = dense_sources(CLIENTS, 48, 0xD0);
+    let placements = [
+        Placement::RoundRobin,
+        Placement::LoadBalanced,
+        Placement::SparsityAware,
+        Placement::TimingAware,
+    ];
+    let reference = det_run(
+        &det_srcs,
+        &config,
+        &opts.clone().with_placement(Placement::RoundRobin),
+        det_solves,
+        1,
+    );
+    let mut deterministic = true;
+    for threads in [1usize, 2, 8] {
+        for placement in placements {
+            let got = det_run(
+                &det_srcs,
+                &config,
+                &opts.clone().with_placement(placement),
+                det_solves,
+                threads,
+            );
+            let ok = got == reference;
+            deterministic &= ok;
+            println!(
+                "determinism: {threads}-way, {:<15} bit-identical: {ok}",
+                placement.name()
+            );
+        }
+    }
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("plane_contention".to_string()))
+        .set("clients", Json::Num(CLIENTS as f64))
+        .set("operands", Json::Num(OPERANDS as f64))
+        .set("n", Json::Num(n as f64))
+        .set("batch", Json::Num(batch as f64))
+        .set("batches_per_client", Json::Num(batches as f64))
+        .set("serialized", serialized.to_json())
+        .set("concurrent", concurrent.to_json())
+        .set("speedup_chunks_per_s", Json::Num(speedup))
+        .set("deterministic", Json::Bool(deterministic));
+    args.write_result("BENCH_plane_contention.json", &j.pretty());
+
+    assert!(
+        deterministic,
+        "results must be bit-identical across concurrency levels and placements"
+    );
+    // Admission parallelism is invisible on single-core shared runners:
+    // hard-assert only when explicitly requested.
+    let hard_assert = std::env::var("MELISO_BENCH_ASSERT").as_deref() == Ok("1");
+    if hard_assert {
+        assert!(
+            speedup >= 2.0,
+            "concurrent admission {speedup:.2}x < 2x serialized baseline"
+        );
+        println!("\nPASS: concurrent admission is {speedup:.2}x the serialized baseline");
+    } else {
+        println!(
+            "\nDONE (contention threshold reported, not asserted — set MELISO_BENCH_ASSERT=1 \
+             to enforce >= 2x)"
+        );
+    }
+}

@@ -163,7 +163,9 @@ RUN OPTIONS:
     --cell N           cells per MCA edge: 32..1024 (default 1024)
     --tile-slots N     residency tile slots per MCA, 0 = unbounded (default 0)
     --workers N        shard worker threads (default 4)
-    --placement P      round-robin | load-balanced | sparsity-aware (default round-robin)
+    --placement P      round-robin | load-balanced | sparsity-aware | timing-aware
+                       (default round-robin; timing-aware re-splits batches by
+                       measured per-MCA wall time)
     --truth / --no-truth
                        exact f64 ground-truth reference for rel_err_* (default on;
                        switch off at scale — O(m·n) host work, rel_err_* become null)

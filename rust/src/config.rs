@@ -340,6 +340,14 @@ mod tests {
     }
 
     #[test]
+    fn parses_timing_aware_placement() {
+        let (_, opts) = from_toml("[solve]\nplacement = \"timing-aware\"\n").unwrap();
+        assert_eq!(opts.placement, Placement::TimingAware);
+        let (_, opts) = from_toml("[solve]\nplacement = \"timing\"\n").unwrap();
+        assert_eq!(opts.placement, Placement::TimingAware);
+    }
+
+    #[test]
     fn rejects_unknown_keys() {
         let err = from_toml("[solve]\nfoo = 1\n").unwrap_err();
         assert!(err.contains("solve.foo"), "{err}");

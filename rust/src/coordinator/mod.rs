@@ -19,7 +19,7 @@ use crate::config::{SolveOptions, SystemConfig};
 use crate::linalg::Vector;
 use crate::matrices::MatrixSource;
 use crate::metrics::SolveReport;
-use crate::plane::ExecutionPlane;
+use crate::plane::{ExecutionPlane, PlaneError};
 use crate::runtime::Backend;
 
 /// Run one distributed MVM and return the full report.
@@ -34,7 +34,7 @@ pub fn solve_distributed(
     config: &SystemConfig,
     opts: &SolveOptions,
     backend: Backend,
-) -> Result<SolveReport, String> {
+) -> Result<SolveReport, PlaneError> {
     ExecutionPlane::build(source, config, opts, backend)?.execute_once(source, x)
 }
 
@@ -195,7 +195,11 @@ mod tests {
         let config = SystemConfig::single_mca(48); // not an artifact size
         let opts = SolveOptions::default();
         let err = solve_distributed(&src, &x, &config, &opts, native()).unwrap_err();
-        assert!(err.contains("cell size 48"), "{err}");
+        assert!(
+            matches!(err, PlaneError::UnsupportedCell { cell: 48, .. }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("cell size 48"), "{err}");
     }
 
     #[test]

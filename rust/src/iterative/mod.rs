@@ -55,10 +55,9 @@ pub mod stationary;
 
 use crate::linalg::Vector;
 use crate::matrices::MatrixSource;
-use crate::plane::{ExecutionPlane, OperandId};
+use crate::plane::{OperandId, PlaneError, PlaneHandle};
 pub use crate::server::MvmOperator;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 
 /// Which iterative method drives the solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -254,9 +253,10 @@ impl MvmOperator for ExactOperator<'_> {
 }
 
 /// [`MvmOperator`] over one residency of a (shared, multi-tenant)
-/// [`ExecutionPlane`]: several systems can be solved concurrently against
-/// operands sharing one shard pool, without the serving-statistics
-/// machinery of a full [`crate::server::Session`].
+/// execution plane: several systems can be solved *concurrently* against
+/// operands sharing one shard pool (each `apply` admits its batch through
+/// the clone-able [`PlaneHandle`] — no plane-wide lock), without the
+/// serving-statistics machinery of a full [`crate::server::Session`].
 ///
 /// [`program`](PlaneOperator::program) pays the single write–verify pass;
 /// every [`apply`](MvmOperator::apply) afterwards is reads only, drawing
@@ -265,7 +265,7 @@ impl MvmOperator for ExactOperator<'_> {
 /// dedicated session with the same seed.  Dropping the operator evicts
 /// its residency.
 pub struct PlaneOperator {
-    plane: Arc<Mutex<ExecutionPlane>>,
+    plane: PlaneHandle,
     id: OperandId,
     m: usize,
     n: usize,
@@ -276,13 +276,10 @@ impl PlaneOperator {
     /// Program `source` resident on `plane` and wrap the residency as an
     /// MVM operator.
     pub fn program(
-        plane: &Arc<Mutex<ExecutionPlane>>,
+        plane: &PlaneHandle,
         source: &dyn MatrixSource,
-    ) -> Result<PlaneOperator, String> {
-        let (id, report) = plane
-            .lock()
-            .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?
-            .program(source)?;
+    ) -> Result<PlaneOperator, PlaneError> {
+        let (id, report) = plane.program(source)?;
         Ok(PlaneOperator {
             plane: plane.clone(),
             id,
@@ -300,9 +297,7 @@ impl PlaneOperator {
 
 impl Drop for PlaneOperator {
     fn drop(&mut self) {
-        if let Ok(mut plane) = self.plane.lock() {
-            let _ = plane.evict(self.id);
-        }
+        let _ = self.plane.evict(self.id);
     }
 }
 
@@ -316,11 +311,10 @@ impl MvmOperator for PlaneOperator {
     }
 
     fn apply(&self, x: &Vector) -> Result<Vector, String> {
-        let mut plane = self
+        let mut batch = self
             .plane
-            .lock()
-            .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?;
-        let mut batch = plane.execute_batch(self.id, std::slice::from_ref(x))?;
+            .execute_batch(self.id, std::slice::from_ref(x))
+            .map_err(String::from)?;
         self.mvms.fetch_add(1, Ordering::Relaxed);
         batch
             .solves
@@ -641,7 +635,7 @@ mod tests {
         use crate::device::materials::Material;
         use crate::runtime::native::NativeBackend;
         use crate::solver::Meliso;
-        use std::sync::{Arc, Mutex};
+        use std::sync::Arc;
 
         let config = SystemConfig::single_mca(64);
         let opts = SolveOptions::default()
@@ -666,18 +660,16 @@ mod tests {
 
         // Both operands resident on ONE plane, solved through
         // PlaneOperators: bit-identical solutions.
-        let plane = Arc::new(Mutex::new(
-            crate::plane::ExecutionPlane::build(
-                src_a.as_ref(),
-                &config,
-                &opts,
-                Arc::new(NativeBackend::new()),
-            )
-            .unwrap(),
-        ));
+        let plane = PlaneHandle::build(
+            src_a.as_ref(),
+            &config,
+            &opts,
+            Arc::new(NativeBackend::new()),
+        )
+        .unwrap();
         let op_a = PlaneOperator::program(&plane, src_a.as_ref()).unwrap();
         let op_b = PlaneOperator::program(&plane, src_b.as_ref()).unwrap();
-        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        assert_eq!(plane.resident_operands(), 2);
         let out_a = solve_system(&op_a, Some(src_a.as_ref()), &ba, &iter_opts).unwrap();
         let out_b = solve_system(&op_b, Some(src_b.as_ref()), &bb, &iter_opts).unwrap();
         assert_eq!(out_a.x, ded_a.x, "operand A diverged on the shared plane");
@@ -686,7 +678,7 @@ mod tests {
         assert!(op_a.mvm_count() > 0);
         // Dropping an operator evicts its residency.
         drop(op_a);
-        assert_eq!(plane.lock().unwrap().resident_operands(), 1);
+        assert_eq!(plane.resident_operands(), 1);
     }
 
     #[test]

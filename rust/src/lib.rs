@@ -16,14 +16,20 @@
 //!   scheduling / address mapping), energy & latency accounting, metrics,
 //!   CLI and config.
 //! * **Execution plane** — [`plane`]: the single sharded scatter/gather
-//!   runtime behind both one-shot solves and resident sessions.  A
-//!   [`plane::PlacementPolicy`] groups MCAs into long-lived shard threads,
-//!   the leader streams occupied chunks through the sparsity-aware
-//!   [`virtualization::ChunkPlan::nonzero_chunks`] enumeration (one
-//!   extracted tile in flight per queue slot — a 65,536² banded operand
-//!   solves without ever materializing densely), and results reduce in
-//!   deterministic chunk order, bit-reproducible for a fixed seed across
-//!   shard counts and placement policies.
+//!   runtime behind both one-shot solves and resident sessions, served
+//!   through the clone-able [`plane::PlaneHandle`] (every admission method
+//!   takes `&self`, so concurrent clients share one shard pool and fail
+//!   with typed [`plane::PlaneError`]s).  A [`plane::PlacementPolicy`]
+//!   groups MCAs into long-lived shard threads, the leader streams
+//!   occupied chunks through the sparsity-aware
+//!   [`virtualization::ChunkPlan::nonzero_chunks`] enumeration with
+//!   double-buffered extraction (chunk `N + 1` extracts while chunk `N`
+//!   dispatches — a 65,536² banded operand solves without ever
+//!   materializing densely), batch workers steal whole MCAs from each
+//!   other when irregular sparsity unbalances their queues, and results
+//!   reduce in deterministic chunk order, bit-reproducible for a fixed
+//!   seed across shard counts, placement policies, concurrency levels and
+//!   steal orders.
 //! * **Serving layer** — [`server`]: program-once / solve-many resident
 //!   crossbar sessions ([`server::Session`]) with batched MVM, long-lived
 //!   worker pools, an LRU operand cache for multi-tenant residency
@@ -58,7 +64,7 @@
 //! | [`mca`] | multi-crossbar-array simulation: write–verify, energy ledgers |
 //! | [`metrics`] | solve/serving/convergence reports, error norms, tables |
 //! | [`obs`] | observability: process-wide metrics registry + flight recorder, Prometheus/Chrome-trace export, the `meliso status` surface |
-//! | [`plane`] | the sharded [`plane::ExecutionPlane`]: placement, dispatch, supervised gathers, multi-operand residency |
+//! | [`plane`] | the sharded execution plane behind [`plane::PlaneHandle`]: placement, dispatch, work stealing, supervised gathers, multi-operand residency |
 //! | [`runtime`] | execution backends: pure-Rust native twin, PJRT artifact engine |
 //! | [`server`] | resident [`server::Session`]s, [`server::OperandCache`], serving metrics |
 //! | [`solver`] | the [`solver::Meliso`] front door: one-shot, sessions, `Ax = b` |
@@ -97,6 +103,31 @@
 //!     assert_eq!(out.y.len(), matrix.nrows());
 //! }
 //! assert_eq!(session.report().solves, 8);
+//! ```
+//!
+//! ## Quickstart (one plane, many tenants, concurrent batches)
+//!
+//! A [`plane::PlaneHandle`] is clone-able and every admission method takes
+//! `&self`, so sessions for different operands share one shard pool and
+//! solve concurrently — results stay bit-identical to dedicated planes:
+//!
+//! ```
+//! use meliso::prelude::*;
+//!
+//! let a = meliso::matrices::registry::build("iperturb66").unwrap();
+//! let b = meliso::matrices::registry::build("spd64").unwrap();
+//! let opts = SolveOptions::default()
+//!     .with_workers(2)
+//!     .with_backend(BackendKind::Native);
+//! let solver = Meliso::new(SystemConfig::new(2, 2, 64), opts).unwrap();
+//! let plane = solver.build_plane(a.as_ref()).unwrap();          // one shard pool
+//! let sa = solver.open_session_on(&plane, a.clone()).unwrap();  // residency 1
+//! let sb = solver.open_session_on(&plane, b.clone()).unwrap();  // residency 2
+//! std::thread::scope(|s| {
+//!     s.spawn(|| sa.solve(&Vector::standard_normal(a.ncols(), 1)).unwrap());
+//!     s.spawn(|| sb.solve(&Vector::standard_normal(b.ncols(), 2)).unwrap());
+//! });
+//! assert_eq!(plane.resident_operands(), 2);
 //! ```
 //!
 //! ## Quickstart (solving Ax = b iteratively)
@@ -173,7 +204,7 @@ pub mod prelude {
     pub use crate::linalg::{Matrix, Vector};
     pub use crate::matrices::CsrSource;
     pub use crate::metrics::{ConvergenceReport, SolveReport};
-    pub use crate::plane::{ExecutionPlane, OperandId, Placement};
+    pub use crate::plane::{ExecutionPlane, OperandId, Placement, PlaneError, PlaneHandle};
     pub use crate::server::Session;
-    pub use crate::solver::Meliso;
+    pub use crate::solver::{Meliso, MelisoError};
 }

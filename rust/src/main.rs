@@ -298,15 +298,12 @@ fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
         }
     }
 
-    let (residents, slots_in_use, slot_high_water, shards) = {
-        let guard = plane.lock().map_err(|_| "plane poisoned".to_string())?;
-        (
-            guard.resident_operands(),
-            guard.slots_in_use(),
-            guard.slot_high_water(),
-            guard.shards(),
-        )
-    };
+    let (residents, slots_in_use, slot_high_water, shards) = (
+        plane.resident_operands(),
+        plane.slots_in_use(),
+        plane.slot_high_water(),
+        plane.shards(),
+    );
 
     // Derive every reported metric once, so the JSON and table branches
     // cannot drift.

@@ -13,15 +13,14 @@
 //! `pattern` and `complex` fields are rejected up front with an explicit
 //! message instead of being misparsed as real data.
 //!
-//! The primary entry point is [`read_mtx_triplets`], which streams the
-//! file into an O(nnz) coordinate list — feed it to
+//! The entry point is [`read_mtx_triplets`], which streams the file into
+//! an O(nnz) coordinate list — feed it to
 //! [`CsrSource::from_triplets`](super::sparse::CsrSource::from_triplets)
 //! (or use [`CsrSource::from_mtx`](super::sparse::CsrSource::from_mtx)
-//! directly).  The legacy [`read_mtx`] materializes a dense
-//! [`Matrix`] — O(m·n) memory even for tiny-nnz files — and is deprecated
-//! in favor of an explicit
-//! [`CsrSource::to_dense`](super::sparse::CsrSource::to_dense) when a
-//! dense copy is genuinely wanted.
+//! directly).  When a dense copy is genuinely wanted, call
+//! [`CsrSource::to_dense`](super::sparse::CsrSource::to_dense) explicitly;
+//! the old `read_mtx` dense reader (deprecated in 0.3.0, O(m·n) memory
+//! even for tiny-nnz files) was removed in 0.4.0.
 
 use crate::linalg::Matrix;
 use std::io::{BufRead, BufReader, Write};
@@ -247,24 +246,6 @@ pub fn read_mtx_triplets(path: &Path) -> Result<MtxData, MarketError> {
     }
 }
 
-/// Read a `.mtx` file into a dense [`Matrix`].
-///
-/// Materializes O(m·n) memory even for tiny-nnz files, which is why the
-/// solve path no longer uses it.
-#[deprecated(
-    since = "0.3.0",
-    note = "materializes a dense O(m·n) Matrix; use matrices::sparse::CsrSource::from_mtx \
-            (call .to_dense() explicitly if a dense copy is really wanted)"
-)]
-pub fn read_mtx(path: &Path) -> Result<Matrix, MarketError> {
-    let data = read_mtx_triplets(path)?;
-    let mut m = Matrix::zeros(data.rows, data.cols);
-    for &(i, j, v) in &data.entries {
-        m.set(i, j, m.get(i, j) + v);
-    }
-    Ok(m)
-}
-
 /// Write a dense matrix as `coordinate real general` (zeros omitted).
 pub fn write_mtx(path: &Path, m: &Matrix) -> Result<(), MarketError> {
     let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -305,17 +286,6 @@ mod tests {
         let p = tmpfile("rt");
         write_mtx(&p, &m).unwrap();
         let back = read_dense(&p).unwrap();
-        std::fs::remove_file(&p).ok();
-        assert_eq!(back, m);
-    }
-
-    #[test]
-    fn deprecated_dense_reader_still_matches() {
-        let m = Matrix::from_vec(2, 2, vec![1.0, -2.0, 0.0, 4.0]);
-        let p = tmpfile("legacy");
-        write_mtx(&p, &m).unwrap();
-        #[allow(deprecated)]
-        let back = read_mtx(&p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(back, m);
     }

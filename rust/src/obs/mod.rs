@@ -171,6 +171,8 @@ pub mod names {
     pub const SHARD_JOBS: &str = "meliso_shard_jobs_total";
     /// Chunk executions per shard — one per (chunk, vector) (counter, label `shard`).
     pub const SHARD_CHUNKS: &str = "meliso_shard_chunks_executed_total";
+    /// MCAs a shard claimed from another worker's batch queue (counter, label `shard`).
+    pub const SHARD_STEALS: &str = "meliso_shard_steals_total";
     /// Seconds the leader spent in supervised gathers (counter).
     pub const PLANE_GATHER_WAIT: &str = "meliso_plane_gather_wait_seconds_total";
     /// Tiles extracted + dispatched by the leader (counter).

@@ -13,14 +13,15 @@
 //!   unbounded) turns over-subscription into a clean error instead of
 //!   silent unbounded residency.
 
+use super::error::PlaneError;
 use crate::obs;
 use std::collections::BTreeSet;
 
-/// Handle to one operand resident on an
-/// [`ExecutionPlane`](crate::plane::ExecutionPlane), returned by
-/// [`program`](crate::plane::ExecutionPlane::program) and consumed by
-/// [`execute_batch`](crate::plane::ExecutionPlane::execute_batch) /
-/// [`evict`](crate::plane::ExecutionPlane::evict).  Ids are never reused
+/// Handle to one operand resident on a
+/// [`PlaneHandle`](crate::plane::PlaneHandle), returned by
+/// [`program`](crate::plane::PlaneHandle::program) and consumed by
+/// [`execute_batch`](crate::plane::PlaneHandle::execute_batch) /
+/// [`evict`](crate::plane::PlaneHandle::evict).  Ids are never reused
 /// within a plane's lifetime, so a stale handle (evicted operand) is a
 /// clean error rather than an aliased residency.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
@@ -60,7 +61,7 @@ impl TileAllocator {
 
     /// Claim one tile slot on `mca`: the lowest freed slot if any, else the
     /// next never-used index (capacity permitting).
-    pub fn alloc(&mut self, mca: usize) -> Result<usize, String> {
+    pub fn alloc(&mut self, mca: usize) -> Result<usize, PlaneError> {
         if let Some(&slot) = self.free[mca].iter().next() {
             self.free[mca].remove(&slot);
             self.in_use += 1;
@@ -69,11 +70,10 @@ impl TileAllocator {
         }
         let fresh = self.next_fresh[mca];
         if self.capacity > 0 && fresh >= self.capacity {
-            return Err(format!(
-                "MCA {mca} is out of tile slots ({} per MCA, all in use); evict an \
-                 operand or raise system.tile_slots",
-                self.capacity
-            ));
+            return Err(PlaneError::Capacity {
+                mca,
+                slots: self.capacity,
+            });
         }
         self.next_fresh[mca] = fresh + 1;
         self.in_use += 1;
@@ -161,7 +161,7 @@ mod tests {
         a.alloc(0).unwrap();
         a.alloc(0).unwrap();
         let err = a.alloc(0).unwrap_err();
-        assert!(err.contains("out of tile slots"), "{err}");
+        assert!(err.to_string().contains("out of tile slots"), "{err}");
         a.free(0, 0);
         assert_eq!(a.alloc(0).unwrap(), 0);
     }

@@ -1,0 +1,123 @@
+//! Typed errors of the execution plane.
+//!
+//! Every public entry point of [`crate::plane`] returns [`PlaneError`]
+//! instead of a bare `String`, so embedders can match on *why* a call
+//! failed (stale operand vs. capacity vs. a dead shard) instead of
+//! grepping messages.  [`std::fmt::Display`] renders the same operator
+//!-facing text the string-based API produced, and `From<PlaneError> for
+//! String` keeps `?` working in string-typed callers (the CLI).
+
+use super::alloc::OperandId;
+use std::fmt;
+
+/// Why a plane call failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlaneError {
+    /// The requested cell size has no compiled kernel artifact.
+    UnsupportedCell { cell: usize, available: Vec<usize> },
+    /// The shard pool could not be built (thread spawn, malformed
+    /// placement assignment).
+    Build(String),
+    /// A caller-side validation failed (dimension mismatch, one-shot on a
+    /// serving plane, …).  The plane is untouched.
+    InvalidInput(String),
+    /// The [`OperandId`] is not resident on this plane: it was never
+    /// programmed here, or it has been evicted.
+    StaleOperand { id: OperandId },
+    /// The operand still has in-flight batches; evicting now would race
+    /// the executing shards for the tile slots.  Drain (or drop the other
+    /// callers) and retry.
+    OperandBusy { id: OperandId, inflight: usize },
+    /// An MCA ran out of tile slots while programming.
+    Capacity { mca: usize, slots: usize },
+    /// A chunk-level failure (backend error, extraction panic).  The
+    /// plane stays serviceable; the failed walk's effects are rolled back
+    /// (program) or accounted (batch).
+    Chunk(String),
+    /// A shard worker panicked or exited mid-walk.  The plane is
+    /// poisoned: every later call fails fast with [`PlaneError::Failed`].
+    ShardDead(String),
+    /// A supervised gather exceeded its deadline while the shards were
+    /// still alive (see `MELISO_WALK_TIMEOUT_SECS`).  The plane is
+    /// poisoned — the walk's replies can no longer be trusted complete.
+    Timeout(String),
+    /// The plane was poisoned by an earlier fatal error; this call
+    /// failed fast without touching the shards.
+    Failed(String),
+}
+
+impl fmt::Display for PlaneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlaneError::UnsupportedCell { cell, available } => write!(
+                f,
+                "cell size {cell} has no compiled artifact (available: {available:?})"
+            ),
+            PlaneError::Build(e) => write!(f, "{e}"),
+            PlaneError::InvalidInput(e) => write!(f, "{e}"),
+            PlaneError::StaleOperand { id } => write!(
+                f,
+                "operand {id} is not resident on this plane (never programmed, or evicted)"
+            ),
+            PlaneError::OperandBusy { id, inflight } => write!(
+                f,
+                "operand {id} has {inflight} in-flight batch(es); drain them before evicting"
+            ),
+            PlaneError::Capacity { mca, slots } => write!(
+                f,
+                "MCA {mca} is out of tile slots ({slots} per MCA, all in use); evict an \
+                 operand or raise system.tile_slots"
+            ),
+            PlaneError::Chunk(e) => write!(f, "{e}"),
+            PlaneError::ShardDead(e) => write!(f, "{e}"),
+            PlaneError::Timeout(e) => write!(f, "{e}"),
+            PlaneError::Failed(e) => write!(f, "execution plane failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PlaneError {}
+
+impl From<PlaneError> for String {
+    fn from(e: PlaneError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_preserves_operator_facing_text() {
+        let e = PlaneError::StaleOperand { id: OperandId(3) };
+        assert!(e.to_string().contains("not resident"), "{e}");
+        let e = PlaneError::Capacity { mca: 1, slots: 2 };
+        assert!(e.to_string().contains("out of tile slots"), "{e}");
+        let e = PlaneError::UnsupportedCell {
+            cell: 48,
+            available: vec![32, 64],
+        };
+        assert!(e.to_string().contains("cell size 48"), "{e}");
+        let e = PlaneError::Failed("shard 0 panicked: boom".into());
+        let s = e.to_string();
+        assert!(s.contains("failed") && s.contains("panicked"), "{s}");
+        let e = PlaneError::OperandBusy {
+            id: OperandId(1),
+            inflight: 2,
+        };
+        assert!(e.to_string().contains("in-flight"), "{e}");
+    }
+
+    #[test]
+    fn converts_into_string_for_legacy_callers() {
+        let s: String = PlaneError::Timeout("walk timed out after 600s".into()).into();
+        assert!(s.contains("timed out"), "{s}");
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        let e: Box<dyn std::error::Error> = Box::new(PlaneError::Build("spawn failed".into()));
+        assert_eq!(e.to_string(), "spawn failed");
+    }
+}

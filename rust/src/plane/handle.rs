@@ -1,0 +1,1407 @@
+//! The clone-able plane handle: concurrent admission onto one shard pool.
+//!
+//! [`PlaneHandle`] is the multi-tenant surface of the execution plane.
+//! Every method takes `&self` and the handle is `Clone`, so any number of
+//! threads can `program` / `execute_batch` / `evict` against the same
+//! shard pool without an external mutex — batches against *different*
+//! resident operands admit and run concurrently, and leader-side work
+//! (tile extraction, partial reduction) of one walk overlaps shard-side
+//! execution of another.
+//!
+//! ## Lock map
+//!
+//! * **`structural` (plane-wide `Mutex`)** — held only across structural
+//!   bookkeeping: operand-id allocation, tile-slot alloc/free, residency
+//!   registration/eviction, energy fold-in.  Never held across a shard
+//!   round-trip, so it is contended for microseconds, not walks.
+//! * **Per-`(operand, MCA)` `Mutex<McaSlot>`** — owns that MCA's
+//!   [`TileExecutor`] and programmed tiles for one operand.  Programming
+//!   locks it from the one shard the placement assigned; batch execution
+//!   locks it from whichever worker claimed the MCA (work-stealing).
+//! * **Per-walk reply channels** — each walk (program / batch / one-shot)
+//!   gathers on its own `mpsc` channel, so concurrent gathers never
+//!   interleave messages.
+//!
+//! ## Why determinism survives concurrency
+//!
+//! * Chunk→MCA binding and per-MCA seeds ([`mca_seed`](super::mca_seed))
+//!   are pure functions of the plan and master seed.
+//! * Programming order per MCA is FIFO: each MCA's `Program` jobs go to
+//!   its one owning shard over a FIFO queue, so the executor's persistent
+//!   write–verify RNG always draws in chunk order regardless of what
+//!   other walks interleave on the same shard.
+//! * Batch execution noise is *counter-based*
+//!   ([`exec_stream_seed`](super::exec_stream_seed)): a pure function of
+//!   `(seed, mca, solve index, chunk)`.  Work-stealing can reorder which
+//!   worker runs which MCA, but never what noise a given solve draws —
+//!   and a whole MCA is claimed at once, so even its energy-ledger
+//!   accumulation order is fixed.
+//! * Solve indices are allocated atomically per operand at admission, so
+//!   concurrent batches on one operand serialize only that counter.
+//!
+//! ## Double-buffered extraction
+//!
+//! `scatter_walk` splits the leader into a producer/consumer pair over a
+//! bounded channel: the producer extracts tile `N + 1` while the consumer
+//! dispatches tile `N` to the shards (which execute `N - 1`…).  Dispatch
+//! order — and therefore every RNG draw — is exactly the serial walk's.
+
+use super::error::PlaneError;
+use super::placement::{self, Placement};
+use super::shard::{self, ShardContext, ShardJob, ShardMsg};
+use super::{reduce_partials, BatchOutcome, OperandId, ProgramReport, ServeSolve, TileAllocator};
+use crate::config::{SolveOptions, SystemConfig};
+use crate::ec::{ProgrammedTile, TileExecutor};
+use crate::linalg::{Matrix, Vector};
+use crate::matrices::MatrixSource;
+use crate::mca::EnergyLedger;
+use crate::metrics::SolveReport;
+use crate::obs::{self, Lane, Stage};
+use crate::runtime::Backend;
+use crate::virtualization::{ChunkPlan, ChunkSpec};
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Bound on in-flight jobs per shard (backpressure: caps leader-side tile
+/// memory at `depth × shards` tiles per walk).
+pub(crate) const JOB_QUEUE_DEPTH: usize = 4;
+
+/// Depth of the extraction double-buffer: how many extracted tiles may sit
+/// between the producer (extract) and consumer (dispatch) halves of a
+/// scatter walk.  `2` = classic double buffering — extract chunk `N + 1`
+/// while chunk `N` dispatches.
+pub(crate) const EXTRACT_QUEUE_DEPTH: usize = 2;
+
+/// Supervision interval of the gather loops: how often a blocked receive
+/// wakes up to check shard liveness.
+const SUPERVISE_INTERVAL: Duration = Duration::from_millis(200);
+
+/// Default hard deadline of one supervised gather.  Override with
+/// `MELISO_WALK_TIMEOUT_SECS` (`0` disables).
+const DEFAULT_WALK_TIMEOUT: Duration = Duration::from_secs(600);
+
+fn walk_timeout() -> Option<Duration> {
+    match std::env::var("MELISO_WALK_TIMEOUT_SECS") {
+        Ok(s) => match s.trim().parse::<u64>() {
+            Ok(0) => None,
+            Ok(n) => Some(Duration::from_secs(n)),
+            Err(_) => Some(DEFAULT_WALK_TIMEOUT),
+        },
+        Err(_) => Some(DEFAULT_WALK_TIMEOUT),
+    }
+}
+
+/// Lock a mutex, treating poisoning (a shard panicked while holding it)
+/// as benign: the plane is already marked failed by supervision, and the
+/// guarded state is only read for best-effort accounting afterwards.
+pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One MCA's share of one operand: the persistent executor (device
+/// simulator + energy ledger) and the tiles programmed onto it.
+#[derive(Default)]
+pub(crate) struct McaSlot {
+    pub(crate) exec: Option<TileExecutor>,
+    pub(crate) chunks: Vec<(ChunkSpec, ProgrammedTile)>,
+}
+
+/// Measured execution wall time of one MCA, accumulated across batches.
+/// Feeds the timing-aware batch distribution.
+#[derive(Default)]
+pub(crate) struct McaTiming {
+    nanos: AtomicU64,
+    chunks: AtomicU64,
+}
+
+impl McaTiming {
+    pub(crate) fn record(&self, secs: f64, chunks: u64) {
+        if chunks == 0 {
+            return;
+        }
+        self.nanos
+            .fetch_add((secs * 1e9).round() as u64, Ordering::Relaxed);
+        self.chunks.fetch_add(chunks, Ordering::Relaxed);
+    }
+
+    /// Mean measured nanoseconds per chunk execution, `None` until the
+    /// MCA has executed at least once.
+    fn mean_nanos(&self) -> Option<f64> {
+        let c = self.chunks.load(Ordering::Relaxed);
+        if c == 0 {
+            None
+        } else {
+            Some(self.nanos.load(Ordering::Relaxed) as f64 / c as f64)
+        }
+    }
+}
+
+/// Shared per-operand state: the plan plus one [`McaSlot`] per MCA.
+/// Leader and shards both hold `Arc`s; the fine-grained slot locks are
+/// what lets batches on different operands run concurrently.
+pub(crate) struct OperandEntry {
+    pub(crate) op: u64,
+    pub(crate) plan: ChunkPlan,
+    pub(crate) mcas: Vec<Mutex<McaSlot>>,
+    /// Occupied-chunk count per MCA (leader-side, set while programming).
+    pub(crate) chunks_per_mca: Vec<AtomicUsize>,
+    /// Monotonic solve counter (drives the counter-based noise streams);
+    /// advances even for failed batches so retries never reuse noise.
+    next_solve: Mutex<u64>,
+    /// Batches currently admitted but not yet returned; guards eviction.
+    inflight: AtomicUsize,
+}
+
+impl OperandEntry {
+    fn new(op: u64, plan: ChunkPlan) -> OperandEntry {
+        let mcas = plan.geometry.mcas();
+        OperandEntry {
+            op,
+            plan,
+            mcas: (0..mcas).map(|_| Mutex::new(McaSlot::default())).collect(),
+            chunks_per_mca: (0..mcas).map(|_| AtomicUsize::new(0)).collect(),
+            next_solve: Mutex::new(0),
+            inflight: AtomicUsize::new(0),
+        }
+    }
+
+    /// `(write, read)` energy accumulated by this operand's executors.
+    fn energy_totals(&self) -> (f64, f64) {
+        let (mut w, mut r) = (0.0, 0.0);
+        for m in &self.mcas {
+            let slot = lock_unpoisoned(m);
+            if let Some(e) = slot.exec.as_ref() {
+                w += e.mca.ledger.write_energy_j;
+                r += e.mca.ledger.read_energy_j;
+            }
+        }
+        (w, r)
+    }
+
+    /// Per-MCA ledger snapshot (default for MCAs this operand never
+    /// touched).
+    fn ledgers(&self) -> Vec<EnergyLedger> {
+        self.mcas
+            .iter()
+            .map(|m| {
+                lock_unpoisoned(m)
+                    .exec
+                    .as_ref()
+                    .map(|e| e.mca.ledger)
+                    .unwrap_or_default()
+            })
+            .collect()
+    }
+}
+
+/// Decrement the operand's in-flight count when a batch leaves
+/// `execute_batch` on any path.
+struct InflightGuard<'a>(&'a OperandEntry);
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Per-walk executor set of the fused one-shot path: fresh per walk (the
+/// historical consumed-plane semantics), shared with the shards by `Arc`.
+pub(crate) struct OnceWalk {
+    pub(crate) executors: Vec<Mutex<Option<TileExecutor>>>,
+}
+
+/// One batch's shared work description: the operand, the input vectors,
+/// and the per-shard MCA queues workers claim from (and steal between).
+pub(crate) struct BatchWalk {
+    pub(crate) entry: Arc<OperandEntry>,
+    pub(crate) xs: Arc<Vec<Vector>>,
+    pub(crate) first_solve: u64,
+    /// Per-shard claim queues of MCA indices (only MCAs with resident
+    /// chunks of this operand appear, each in exactly one queue).
+    queues: Vec<Vec<usize>>,
+    cursors: Vec<AtomicUsize>,
+}
+
+impl BatchWalk {
+    /// Claim the next MCA for `shard`: its own queue first, then steal
+    /// from the other workers' queues (round-robin from the next shard).
+    /// The per-queue atomic cursor hands each index out exactly once, so
+    /// an MCA is executed by exactly one worker per batch.
+    pub(crate) fn claim(&self, shard: usize) -> Option<(usize, bool)> {
+        let shards = self.queues.len();
+        for off in 0..shards {
+            let v = (shard + off) % shards;
+            let q = &self.queues[v];
+            let i = self.cursors[v].fetch_add(1, Ordering::Relaxed);
+            if i < q.len() {
+                return Some((q[i], off != 0));
+            }
+        }
+        None
+    }
+}
+
+/// Leader-side bookkeeping of one residency (kept out of the shared
+/// [`OperandEntry`] so shards never see allocator state).
+struct Residency {
+    entry: Arc<OperandEntry>,
+    chunks_resident: usize,
+    slots: Vec<(usize, usize)>,
+}
+
+/// Plane-wide structural state, guarded by one mutex held only across
+/// bookkeeping (never across a shard round-trip).
+struct Structural {
+    residencies: BTreeMap<u64, Residency>,
+    alloc: TileAllocator,
+    next_operand: u64,
+    /// `(write, read)` energy of completed one-shot walks.
+    oneshot_energy: (f64, f64),
+    /// `(write, read)` energy of evicted residencies, so plane-wide totals
+    /// stay monotone across evictions.
+    retired_energy: (f64, f64),
+    /// Set when a shard died or a gather timed out: the pool can no
+    /// longer complete walks consistently, so every later admission fails
+    /// fast instead of desynchronizing.
+    failed: Option<String>,
+}
+
+impl Structural {
+    fn ensure_live(&self) -> Result<(), PlaneError> {
+        match &self.failed {
+            Some(e) => Err(PlaneError::Failed(e.clone())),
+            None => Ok(()),
+        }
+    }
+}
+
+/// The shared pool behind every clone of one [`PlaneHandle`].
+pub(crate) struct PlaneShared {
+    config: SystemConfig,
+    opts: SolveOptions,
+    senders: Vec<mpsc::SyncSender<ShardJob>>,
+    handles: Vec<JoinHandle<()>>,
+    /// MCA index → shard index (stable for the plane's lifetime).
+    assignment: Vec<usize>,
+    /// Measured per-MCA execution time (feeds timing-aware distribution).
+    timings: Arc<Vec<McaTiming>>,
+    structural: Mutex<Structural>,
+}
+
+impl Drop for PlaneShared {
+    fn drop(&mut self) {
+        // Closing the job channels ends the shard loops.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A clone-able, thread-safe handle to one sharded execution plane.
+///
+/// All methods take `&self`: clone the handle freely across threads and
+/// sessions.  Batches against different resident operands run
+/// concurrently; structural changes (`program` / `evict`) serialize only
+/// on brief bookkeeping locks.  The shard pool shuts down when the last
+/// clone drops.
+///
+/// ```
+/// use meliso::plane::PlaneHandle;
+/// use meliso::prelude::*;
+/// use meliso::runtime::native::NativeBackend;
+/// use std::sync::Arc;
+///
+/// let src = meliso::matrices::registry::build("spd64").unwrap();
+/// let cfg = SystemConfig::new(2, 2, 32);
+/// let opts = SolveOptions::default().with_workers(2);
+/// let plane =
+///     PlaneHandle::build(src.as_ref(), &cfg, &opts, Arc::new(NativeBackend::new())).unwrap();
+/// let (id, report) = plane.program(src.as_ref()).unwrap();
+/// assert_eq!(report.chunks_resident, 4);
+/// let x = Vector::standard_normal(64, 1);
+/// let batch = plane.execute_batch(id, std::slice::from_ref(&x)).unwrap();
+/// assert_eq!(batch.solves.len(), 1);
+/// plane.evict(id).unwrap();
+/// ```
+#[derive(Clone)]
+pub struct PlaneHandle {
+    shared: Arc<PlaneShared>,
+}
+
+impl PlaneHandle {
+    /// Spawn the shard pool sized for `source`'s chunk plan.  `source` is
+    /// only used for placement statistics and geometry validation here;
+    /// tiles are extracted lazily by the execution calls, and operands of
+    /// *other* dimensions may be programmed later — the pool is shared.
+    pub fn build(
+        source: &dyn MatrixSource,
+        config: &SystemConfig,
+        opts: &SolveOptions,
+        backend: Backend,
+    ) -> Result<PlaneHandle, PlaneError> {
+        let (m, n) = (source.nrows(), source.ncols());
+        let plan = ChunkPlan::new(config.geometry(), m, n);
+        let tile = config.geometry().cell_size;
+        if !backend.tile_sizes().contains(&tile) {
+            return Err(PlaneError::UnsupportedCell {
+                cell: tile,
+                available: backend.tile_sizes(),
+            });
+        }
+        let mcas = plan.geometry.mcas();
+        let shards = opts.workers.max(1).min(mcas);
+        let policy = opts.placement.policy();
+        let assignment = policy.assign(&plan, source, shards);
+        if assignment.len() != mcas || assignment.iter().any(|&s| s >= shards) {
+            return Err(PlaneError::Build(format!(
+                "placement {} produced a malformed assignment ({} entries for {mcas} MCAs, \
+                 {shards} shards)",
+                policy.name(),
+                assignment.len()
+            )));
+        }
+
+        let timings: Arc<Vec<McaTiming>> =
+            Arc::new((0..mcas).map(|_| McaTiming::default()).collect());
+        let mut senders = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let (tx, rx) = mpsc::sync_channel::<ShardJob>(JOB_QUEUE_DEPTH);
+            senders.push(tx);
+            let ctx = ShardContext {
+                shard: s,
+                cell: tile,
+                opts: opts.clone(),
+                backend: backend.clone(),
+                jobs: rx,
+                timings: timings.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("meliso-shard-{s}"))
+                    .spawn(move || shard::run(ctx))
+                    .map_err(|e| PlaneError::Build(format!("spawn shard {s}: {e}")))?,
+            );
+        }
+
+        Ok(PlaneHandle {
+            shared: Arc::new(PlaneShared {
+                config: *config,
+                opts: opts.clone(),
+                senders,
+                handles,
+                assignment,
+                timings,
+                structural: Mutex::new(Structural {
+                    residencies: BTreeMap::new(),
+                    alloc: TileAllocator::new(mcas, config.tile_slots),
+                    next_operand: 0,
+                    oneshot_energy: (0.0, 0.0),
+                    retired_energy: (0.0, 0.0),
+                    failed: None,
+                }),
+            }),
+        })
+    }
+
+    /// Whether two handles refer to the same underlying shard pool.
+    pub fn ptr_eq(a: &PlaneHandle, b: &PlaneHandle) -> bool {
+        Arc::ptr_eq(&a.shared, &b.shared)
+    }
+
+    /// Number of shard worker threads.
+    pub fn shards(&self) -> usize {
+        self.shared.senders.len()
+    }
+
+    /// MCA index → shard index, as decided by the placement policy.
+    pub fn assignment(&self) -> &[usize] {
+        &self.shared.assignment
+    }
+
+    /// The physical system configuration the pool was built for.
+    pub fn system_config(&self) -> SystemConfig {
+        self.shared.config
+    }
+
+    /// The solve options every residency on this plane shares.
+    pub fn options(&self) -> &SolveOptions {
+        &self.shared.opts
+    }
+
+    /// Operands currently resident.
+    pub fn resident_operands(&self) -> usize {
+        lock_unpoisoned(&self.shared.structural).residencies.len()
+    }
+
+    /// Chunks currently resident across all operands.
+    pub fn resident_chunks(&self) -> usize {
+        lock_unpoisoned(&self.shared.structural)
+            .residencies
+            .values()
+            .map(|r| r.chunks_resident)
+            .sum()
+    }
+
+    /// Tile slots currently held across all MCAs.
+    pub fn slots_in_use(&self) -> usize {
+        lock_unpoisoned(&self.shared.structural).alloc.in_use()
+    }
+
+    /// Highest tile-slot count any MCA has ever needed (eviction makes
+    /// slots reusable, so reprogramming does not grow this).
+    pub fn slot_high_water(&self) -> usize {
+        lock_unpoisoned(&self.shared.structural).alloc.high_water()
+    }
+
+    /// The failure that poisoned this plane, if any (a shard panicked,
+    /// exited mid-walk, or a gather timed out).
+    pub fn failure(&self) -> Option<String> {
+        lock_unpoisoned(&self.shared.structural).failed.clone()
+    }
+
+    /// Total `(write, read)` energy across the plane so far: one-shot
+    /// walks, live residencies, and evicted (retired) residencies.
+    pub fn energy_totals(&self) -> (f64, f64) {
+        let st = lock_unpoisoned(&self.shared.structural);
+        let (mut w, mut r) = st.oneshot_energy;
+        w += st.retired_energy.0;
+        r += st.retired_energy.1;
+        for res in st.residencies.values() {
+            let (rw, rr) = res.entry.energy_totals();
+            w += rw;
+            r += rr;
+        }
+        (w, r)
+    }
+
+    /// `(write, read)` energy attributable to one resident operand, or
+    /// `None` when `id` is not resident.
+    pub fn operand_energy_totals(&self, id: OperandId) -> Option<(f64, f64)> {
+        let entry = {
+            let st = lock_unpoisoned(&self.shared.structural);
+            st.residencies.get(&id.0).map(|r| r.entry.clone())
+        };
+        entry.map(|e| e.energy_totals())
+    }
+
+    fn poison(&self, fatal: &PlaneError) {
+        lock_unpoisoned(&self.shared.structural)
+            .failed
+            .get_or_insert(fatal.to_string());
+    }
+
+    /// Publish the plane's residency gauges to the global registry (the
+    /// allocator publishes the slot-occupancy gauges itself).
+    fn publish_occupancy(st: &Structural) {
+        if !obs::metrics_on() {
+            return;
+        }
+        let g = obs::global();
+        g.gauge(
+            obs::names::PLANE_RESIDENT_OPERANDS,
+            "Operands currently resident on the plane",
+            &[],
+        )
+        .set(st.residencies.len() as f64);
+        g.gauge(
+            obs::names::PLANE_RESIDENT_CHUNKS,
+            "Chunks currently resident on the plane",
+            &[],
+        )
+        .set(
+            st.residencies
+                .values()
+                .map(|r| r.chunks_resident)
+                .sum::<usize>() as f64,
+        );
+    }
+
+    /// Program `source` resident: scatter and write–verify every non-zero
+    /// chunk (per-shard programming runs in parallel, with tile extraction
+    /// double-buffered ahead of dispatch) and return the operand's handle
+    /// with its one-time programming report.  Afterwards
+    /// [`execute_batch`](Self::execute_batch) serves unlimited solves
+    /// against it, interleaved freely with other residencies — including
+    /// from other threads holding clones of this handle.
+    ///
+    /// On failure the partial residency is retired (tile slots and
+    /// executor state reclaimed), so the plane stays serviceable and a
+    /// retry programs a fresh, bit-reproducible residency.
+    pub fn program(
+        &self,
+        source: &dyn MatrixSource,
+    ) -> Result<(OperandId, ProgramReport), PlaneError> {
+        let sh = &*self.shared;
+        let start = Instant::now();
+        let plan_span = obs::span_start();
+        let plan = ChunkPlan::new(sh.config.geometry(), source.nrows(), source.ncols());
+        let (m, n) = (plan.m, plan.n);
+        note_plan(plan_span, "program", plan.total_chunks(), m, n);
+        let op = {
+            let mut st = lock_unpoisoned(&sh.structural);
+            st.ensure_live()?;
+            let op = st.next_operand;
+            st.next_operand += 1;
+            op
+        };
+        let id = OperandId(op);
+        let entry = Arc::new(OperandEntry::new(op, plan.clone()));
+
+        let (reply_tx, reply_rx) = mpsc::channel::<ShardMsg>();
+        let mut slots: Vec<(usize, usize)> = Vec::new();
+        let (dispatched, walk_err) = {
+            let slots = &mut slots;
+            let entry = &entry;
+            scatter_walk(sh, &plan, source, &reply_tx, |spec, a_tile| {
+                let slot = lock_unpoisoned(&sh.structural).alloc.alloc(spec.mca_index)?;
+                slots.push((spec.mca_index, slot));
+                entry.chunks_per_mca[spec.mca_index].fetch_add(1, Ordering::Relaxed);
+                Ok(ShardJob::Program {
+                    spec,
+                    a_tile,
+                    entry: entry.clone(),
+                    reply: reply_tx.clone(),
+                })
+            })
+        };
+        drop(reply_tx);
+
+        let shards = sh.senders.len();
+        let mut iters_sum = 0.0f64;
+        let mut acks = 0usize;
+        let gather_span = obs::span_start();
+        let gather_clock = obs::metrics_clock();
+        let outcome = drain_walk(&reply_rx, &sh.handles, shards, |msg| match msg {
+            ShardMsg::Programmed {
+                block_row,
+                block_col,
+                outcome,
+            } => {
+                acks += 1;
+                match outcome {
+                    Ok(iters) => {
+                        iters_sum += iters as f64;
+                        None
+                    }
+                    Err(e) => Some(format!("programming chunk ({block_row},{block_col}): {e}")),
+                }
+            }
+            _ => None,
+        });
+        note_gather(gather_clock, gather_span, "program");
+        if let Some(fatal) = outcome.fatal {
+            self.poison(&fatal);
+            self.retire(&entry, &slots);
+            return Err(fatal);
+        }
+        let mut err = walk_err.or(outcome.chunk_err.map(PlaneError::Chunk));
+        if err.is_none() && acks < dispatched {
+            err = Some(PlaneError::Chunk(
+                "shards exited before acknowledging every chunk".to_string(),
+            ));
+        }
+        if let Some(e) = err {
+            // Reclaim the partial residency so the plane stays clean.
+            self.retire(&entry, &slots);
+            return Err(e);
+        }
+
+        let ledgers = entry.ledgers();
+        let used: Vec<&EnergyLedger> = ledgers.iter().filter(|l| l.write_passes > 0).collect();
+        let write_energy_j: f64 = used.iter().map(|l| l.write_energy_j).sum();
+        let write_latency_s = used.iter().map(|l| l.write_latency_s).fold(0.0, f64::max);
+        let report = ProgramReport {
+            m,
+            n,
+            chunks_total: plan.total_chunks(),
+            chunks_resident: dispatched,
+            chunks_skipped: plan.total_chunks() - dispatched,
+            mcas_used: used.len(),
+            normalization_factor: plan.normalization_factor(),
+            mean_wv_iters: if dispatched > 0 {
+                iters_sum / dispatched as f64
+            } else {
+                0.0
+            },
+            write_energy_j,
+            write_latency_s,
+            wall_seconds: start.elapsed().as_secs_f64(),
+        };
+        let resident_now = {
+            let mut st = lock_unpoisoned(&sh.structural);
+            st.residencies.insert(
+                op,
+                Residency {
+                    entry,
+                    chunks_resident: dispatched,
+                    slots,
+                },
+            );
+            Self::publish_occupancy(&st);
+            st.residencies.len()
+        };
+        crate::log_info!(
+            "plane",
+            "programmed {id} ({m}x{n}): {} resident chunks ({} skipped) on {} MCAs / {} \
+             shards, E_w {:.3e} J, wall {:.2}s ({} operands resident)",
+            report.chunks_resident,
+            report.chunks_skipped,
+            report.mcas_used,
+            shards,
+            write_energy_j,
+            report.wall_seconds,
+            resident_now
+        );
+        Ok((id, report))
+    }
+
+    /// Serve a batch of solves against resident operand `id` in one chunk
+    /// walk: every resident tile is visited once and all input vectors run
+    /// against it.  Bit-identical to the same vectors solved sequentially,
+    /// to the same operand served from a dedicated plane, and to any
+    /// degree of cross-operand concurrency (counter-based execution noise
+    /// streams — see [`exec_stream_seed`](super::exec_stream_seed)).
+    ///
+    /// Work distribution: each worker starts from the MCAs the placement
+    /// (or, under [`Placement::TimingAware`], a measured-wall-time LPT
+    /// split) handed it, then **steals** whole MCAs from slower workers,
+    /// so irregular sparsity patterns cannot idle half the pool.
+    ///
+    /// A failed batch (chunk-level shard error) leaves the residency
+    /// consistent: ledgers are fully synced and the solve counter has
+    /// advanced past the failed batch, so a subsequent batch draws exactly
+    /// the noise it would have in an error-free run.
+    pub fn execute_batch(
+        &self,
+        id: OperandId,
+        xs: &[Vector],
+    ) -> Result<BatchOutcome, PlaneError> {
+        let sh = &*self.shared;
+        // Admission: look up the entry and mark the batch in-flight under
+        // the structural lock, so `evict` can never race the walk.
+        let entry = {
+            let st = lock_unpoisoned(&sh.structural);
+            st.ensure_live()?;
+            let res = st
+                .residencies
+                .get(&id.0)
+                .ok_or(PlaneError::StaleOperand { id })?;
+            res.entry.inflight.fetch_add(1, Ordering::SeqCst);
+            res.entry.clone()
+        };
+        let _inflight = InflightGuard(&entry);
+        let n = entry.plan.n;
+        for (k, x) in xs.iter().enumerate() {
+            if x.len() != n {
+                return Err(PlaneError::InvalidInput(format!(
+                    "batch vector {k} has length {} but A has {n} columns",
+                    x.len()
+                )));
+            }
+        }
+        if xs.is_empty() {
+            return Ok(BatchOutcome {
+                solves: Vec::new(),
+                wall_seconds: 0.0,
+            });
+        }
+        let start = Instant::now();
+        let plan_span = obs::span_start();
+        let (m, tile) = (entry.plan.m, entry.plan.geometry.cell_size);
+        let first_solve = {
+            let mut next = lock_unpoisoned(&entry.next_solve);
+            let first = *next;
+            *next += xs.len() as u64;
+            first
+        };
+        let walk = Arc::new(BatchWalk {
+            entry: entry.clone(),
+            xs: Arc::new(xs.to_vec()),
+            first_solve,
+            queues: self.distribute(&entry),
+            cursors: (0..sh.senders.len()).map(|_| AtomicUsize::new(0)).collect(),
+        });
+        let (reply_tx, reply_rx) = mpsc::channel::<ShardMsg>();
+        // Best-effort broadcast: a dead shard (its receiver dropped after
+        // a panic) is skipped — the liveness sweep below catches it —
+        // while every live shard still gets the job, so the supervised
+        // drain terminates.
+        let mut dead: Option<usize> = None;
+        for (s, tx) in sh.senders.iter().enumerate() {
+            let job = ShardJob::Execute {
+                walk: walk.clone(),
+                reply: reply_tx.clone(),
+            };
+            if tx.send(job).is_err() && dead.is_none() {
+                dead = Some(s);
+            }
+        }
+        drop(reply_tx);
+        if let Some(sp) = plan_span {
+            sp.finish(
+                Stage::Plan,
+                Lane::Leader,
+                vec![
+                    ("path", "batch".to_string()),
+                    ("operand", id.0.to_string()),
+                    ("batch", xs.len().to_string()),
+                ],
+            );
+        }
+
+        // Gather: partials per (resident chunk, vector), then one seal per
+        // shard.  Drained fully even on error, so when this returns no
+        // shard is still touching the batch (the in-flight guard may then
+        // release eviction safely).
+        let shards = sh.senders.len();
+        let mut per_solve: Vec<BTreeMap<(usize, usize), Vector>> =
+            (0..xs.len()).map(|_| BTreeMap::new()).collect();
+        let gather_span = obs::span_start();
+        let gather_clock = obs::metrics_clock();
+        let outcome = drain_walk(&reply_rx, &sh.handles, shards, |msg| match msg {
+            ShardMsg::Partial {
+                solve,
+                block_row,
+                block_col,
+                outcome,
+            } => match outcome {
+                Ok(v) => {
+                    let k = solve.wrapping_sub(first_solve) as usize;
+                    match per_solve.get_mut(k) {
+                        Some(slot) => {
+                            slot.insert((block_row, block_col), v);
+                            None
+                        }
+                        None => Some(format!(
+                            "chunk ({block_row},{block_col}): stray partial for solve \
+                             {solve} (batch starts at {first_solve})"
+                        )),
+                    }
+                }
+                Err(e) => Some(format!("chunk ({block_row},{block_col}) solve {solve}: {e}")),
+            },
+            _ => None,
+        });
+        note_gather(gather_clock, gather_span, "batch");
+        if let Some(fatal) = outcome.fatal {
+            self.poison(&fatal);
+            return Err(fatal);
+        }
+        if let Some(s) = dead {
+            let fatal = PlaneError::ShardDead(format!("shard {s} died mid-batch"));
+            self.poison(&fatal);
+            return Err(fatal);
+        }
+        if let Some(e) = outcome.chunk_err {
+            return Err(PlaneError::Chunk(e));
+        }
+        let wall = start.elapsed().as_secs_f64();
+        let reduce_span = obs::span_start();
+        let solves: Vec<ServeSolve> = per_solve
+            .into_iter()
+            .enumerate()
+            .map(|(k, partials)| ServeSolve {
+                y: reduce_partials(m, tile, &partials),
+                solve_index: first_solve + k as u64,
+                wall_seconds: wall / xs.len() as f64,
+            })
+            .collect();
+        if let Some(sp) = reduce_span {
+            sp.finish(
+                Stage::Reduce,
+                Lane::Leader,
+                vec![
+                    ("operand", id.0.to_string()),
+                    ("batch", xs.len().to_string()),
+                ],
+            );
+        }
+        Ok(BatchOutcome {
+            solves,
+            wall_seconds: wall,
+        })
+    }
+
+    /// Per-shard claim queues for one batch: under
+    /// [`Placement::TimingAware`], MCAs are re-split by *measured* mean
+    /// execution wall time (LPT), so the initial distribution already
+    /// reflects how expensive each MCA's chunks really are; otherwise the
+    /// build-time placement assignment is used.  Work-stealing then
+    /// corrects whatever imbalance remains.
+    fn distribute(&self, entry: &OperandEntry) -> Vec<Vec<usize>> {
+        let sh = &*self.shared;
+        let shards = sh.senders.len();
+        let mcas = entry.plan.geometry.mcas();
+        let counts: Vec<usize> = entry
+            .chunks_per_mca
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let owner: Vec<usize> = if sh.opts.placement == Placement::TimingAware {
+            let means: Vec<Option<f64>> = sh.timings.iter().map(|t| t.mean_nanos()).collect();
+            let observed: Vec<f64> = means.iter().filter_map(|m| *m).collect();
+            let fallback = if observed.is_empty() {
+                1.0
+            } else {
+                observed.iter().sum::<f64>() / observed.len() as f64
+            };
+            let weights: Vec<usize> = counts
+                .iter()
+                .zip(&means)
+                .map(|(&c, mean)| {
+                    if c == 0 {
+                        0
+                    } else {
+                        (mean.unwrap_or(fallback).max(1.0) * c as f64).round() as usize + 1
+                    }
+                })
+                .collect();
+            placement::balance(&weights, shards)
+        } else {
+            sh.assignment.clone()
+        };
+        let mut queues: Vec<Vec<usize>> = vec![Vec::new(); shards];
+        for (mca, &count) in counts.iter().enumerate() {
+            if count > 0 {
+                queues[owner[mca]].push(mca);
+            }
+        }
+        queues
+    }
+
+    /// Evict resident operand `id`: drop its tiles and executors, fold
+    /// its energy into the plane's retired totals, and return its tile
+    /// slots to the allocator for reuse.  The id becomes stale — later
+    /// calls with it are clean errors.
+    ///
+    /// An operand with an in-flight batch is **not** evicted:
+    /// [`PlaneError::OperandBusy`] is returned instead of racing the
+    /// executing shards for the allocator.  Eviction works on a *failed*
+    /// plane too (leader-side bookkeeping is still reclaimed) — the pool
+    /// failure stays observable through [`failure`](Self::failure).
+    pub fn evict(&self, id: OperandId) -> Result<(), PlaneError> {
+        let mut st = lock_unpoisoned(&self.shared.structural);
+        let res = st
+            .residencies
+            .get(&id.0)
+            .ok_or(PlaneError::StaleOperand { id })?;
+        let inflight = res.entry.inflight.load(Ordering::SeqCst);
+        if inflight > 0 {
+            return Err(PlaneError::OperandBusy { id, inflight });
+        }
+        let res = st.residencies.remove(&id.0).expect("checked above");
+        for (mca, slot) in &res.slots {
+            st.alloc.free(*mca, *slot);
+        }
+        let (w, r) = res.entry.energy_totals();
+        st.retired_energy.0 += w;
+        st.retired_energy.1 += r;
+        if obs::metrics_on() {
+            obs::global()
+                .counter(
+                    obs::names::PLANE_EVICTIONS,
+                    "Operand evictions/retirements from the plane",
+                    &[],
+                )
+                .inc();
+        }
+        Self::publish_occupancy(&st);
+        Ok(())
+    }
+
+    /// Reclaim a residency that failed to program: free its slots and
+    /// fold whatever energy the partial write charged into the retired
+    /// totals.  The scatter walk was sealed and drained before this, so
+    /// no shard still holds the entry's slots.
+    fn retire(&self, entry: &Arc<OperandEntry>, slots: &[(usize, usize)]) {
+        let mut st = lock_unpoisoned(&self.shared.structural);
+        for (mca, slot) in slots {
+            st.alloc.free(*mca, *slot);
+        }
+        let (w, r) = entry.energy_totals();
+        st.retired_energy.0 += w;
+        st.retired_energy.1 += r;
+        if obs::metrics_on() {
+            obs::global()
+                .counter(
+                    obs::names::PLANE_EVICTIONS,
+                    "Operand evictions/retirements from the plane",
+                    &[],
+                )
+                .inc();
+        }
+        Self::publish_occupancy(&st);
+    }
+
+    /// Run one distributed MVM end-to-end (the one-shot path): program +
+    /// execute fused per chunk, exact ground-truth comparison when
+    /// `opts.ground_truth` is set, full [`SolveReport`].  The walk owns a
+    /// fresh executor set, so every call is bit-identical to the
+    /// historical consumed-plane semantics (and to every other call with
+    /// the same inputs).  Refused while operands are resident — the
+    /// one-shot path models a dedicated, throwaway grid.
+    pub fn execute_once(
+        &self,
+        source: &dyn MatrixSource,
+        x: &Vector,
+    ) -> Result<SolveReport, PlaneError> {
+        let sh = &*self.shared;
+        {
+            let st = lock_unpoisoned(&sh.structural);
+            st.ensure_live()?;
+            if !st.residencies.is_empty() {
+                // The one-shot path models a dedicated, throwaway grid;
+                // fusing it onto a serving plane is always a caller bug.
+                return Err(PlaneError::InvalidInput(
+                    "this plane holds resident operands; build a fresh plane for one-shot solves"
+                        .to_string(),
+                ));
+            }
+        }
+        let start = Instant::now();
+        let plan_span = obs::span_start();
+        let plan = ChunkPlan::new(sh.config.geometry(), source.nrows(), source.ncols());
+        let (m, n) = (plan.m, plan.n);
+        note_plan(plan_span, "one-shot", plan.total_chunks(), m, n);
+        if x.len() != n {
+            return Err(PlaneError::InvalidInput(format!(
+                "x has length {} but A has {n} columns",
+                x.len()
+            )));
+        }
+        let tile = plan.geometry.cell_size;
+        let mcas = plan.geometry.mcas();
+        let walk = Arc::new(OnceWalk {
+            executors: (0..mcas).map(|_| Mutex::new(None)).collect(),
+        });
+        let (reply_tx, reply_rx) = mpsc::channel::<ShardMsg>();
+        let (dispatched, walk_err) = {
+            let walk = &walk;
+            scatter_walk(sh, &plan, source, &reply_tx, |spec, a_tile| {
+                Ok(ShardJob::RunOnce {
+                    spec,
+                    x_chunk: x.slice_padded(spec.col0, tile),
+                    a_tile,
+                    walk: walk.clone(),
+                    reply: reply_tx.clone(),
+                })
+            })
+        };
+        drop(reply_tx);
+
+        let shards = sh.senders.len();
+        let mut partials: BTreeMap<(usize, usize), Vector> = BTreeMap::new();
+        let mut wv_sum = 0.0f64;
+        let mut got = 0usize;
+        let gather_span = obs::span_start();
+        let gather_clock = obs::metrics_clock();
+        let outcome = drain_walk(&reply_rx, &sh.handles, shards, |msg| match msg {
+            ShardMsg::Once {
+                block_row,
+                block_col,
+                outcome,
+            } => {
+                got += 1;
+                match outcome {
+                    Ok((partial, iters)) => {
+                        wv_sum += iters as f64;
+                        partials.insert((block_row, block_col), partial);
+                        None
+                    }
+                    Err(e) => Some(format!("chunk ({block_row},{block_col}): {e}")),
+                }
+            }
+            _ => None,
+        });
+        note_gather(gather_clock, gather_span, "one-shot");
+        if let Some(fatal) = outcome.fatal {
+            self.poison(&fatal);
+            return Err(fatal);
+        }
+        if let Some(e) = walk_err.or(outcome.chunk_err.map(PlaneError::Chunk)) {
+            return Err(e);
+        }
+        if got < dispatched {
+            return Err(PlaneError::Chunk(
+                "shards exited before delivering all results".to_string(),
+            ));
+        }
+        let skipped = plan.total_chunks() - dispatched;
+        let reduce_span = obs::span_start();
+        let y = reduce_partials(m, tile, &partials);
+        if let Some(sp) = reduce_span {
+            sp.finish(
+                Stage::Reduce,
+                Lane::Leader,
+                vec![("chunks", partials.len().to_string())],
+            );
+        }
+
+        // Fold the walk's ledgers into the report and the plane totals.
+        let ledgers: Vec<EnergyLedger> = walk
+            .executors
+            .iter()
+            .map(|m| {
+                lock_unpoisoned(m)
+                    .as_ref()
+                    .map(|e| e.mca.ledger)
+                    .unwrap_or_default()
+            })
+            .collect();
+        {
+            let mut st = lock_unpoisoned(&sh.structural);
+            st.oneshot_energy.0 += ledgers.iter().map(|l| l.write_energy_j).sum::<f64>();
+            st.oneshot_energy.1 += ledgers.iter().map(|l| l.read_energy_j).sum::<f64>();
+        }
+
+        // Ground truth (opt-out: O(m·n) host work, infeasible at 65k²).
+        let mut report = SolveReport::empty(m);
+        if sh.opts.ground_truth {
+            let b = source.matvec(x);
+            report.rel_err_l2 = crate::metrics::rel_err_l2(&y, &b);
+            report.rel_err_inf = crate::metrics::rel_err_inf(&y, &b);
+        } else {
+            report.rel_err_l2 = f64::NAN;
+            report.rel_err_inf = f64::NAN;
+        }
+        report.y = y;
+        report.chunks_total = plan.total_chunks();
+        report.chunks_skipped = skipped;
+        report.normalization_factor = plan.normalization_factor();
+        report.row_reassignments = plan.row_reassignments();
+        report.mean_wv_iters = if dispatched > 0 {
+            wv_sum / dispatched as f64
+        } else {
+            0.0
+        };
+        report.fill_from_ledgers(&ledgers);
+        report.wall_seconds = start.elapsed().as_secs_f64();
+        crate::log_info!(
+            "plane",
+            "solve {}x{n}: {} chunks ({} skipped) on {} shards, eps_l2={:.4e}, wall={:.2}s",
+            m,
+            dispatched,
+            skipped,
+            shards,
+            report.rel_err_l2,
+            report.wall_seconds
+        );
+        Ok(report)
+    }
+}
+
+/// Outcome of one supervised gather: chunk-level errors are recoverable
+/// (the plane stays serviceable), fatal errors (a shard panicked or
+/// exited mid-walk, or the deadline passed) poison the plane.
+struct WalkOutcome {
+    chunk_err: Option<String>,
+    fatal: Option<PlaneError>,
+}
+
+/// Mutable bookkeeping of one supervised gather.
+struct GatherState {
+    done: Vec<bool>,
+    pending: usize,
+    chunk_err: Option<String>,
+    fatal: Option<PlaneError>,
+}
+
+/// Route one shard reply: seals and failures update the per-shard done
+/// tracking; everything else goes to the walk-specific `on_msg` handler.
+fn dispatch_msg<F: FnMut(ShardMsg) -> Option<String>>(
+    st: &mut GatherState,
+    on_msg: &mut F,
+    msg: ShardMsg,
+) {
+    match msg {
+        ShardMsg::Sealed { shard } => {
+            if let Some(d) = st.done.get_mut(shard) {
+                if !*d {
+                    *d = true;
+                    st.pending -= 1;
+                }
+            }
+        }
+        ShardMsg::Failed { shard, error } => {
+            if let Some(d) = st.done.get_mut(shard) {
+                if !*d {
+                    *d = true;
+                    st.pending -= 1;
+                }
+            }
+            st.fatal
+                .get_or_insert(PlaneError::ShardDead(format!("shard {shard} panicked: {error}")));
+        }
+        msg => {
+            if let Some(e) = on_msg(msg) {
+                st.chunk_err.get_or_insert(e);
+            }
+        }
+    }
+}
+
+/// Supervised gather: drain one walk's replies until every shard has
+/// sealed, with a periodic liveness check against the worker handles so a
+/// shard that dies without sealing (panic, abort) surfaces as an error
+/// instead of blocking the receive forever, and a hard deadline
+/// (`MELISO_WALK_TIMEOUT_SECS`) so even a livelocked pool cannot hang the
+/// caller.
+///
+/// `on_msg` handles the walk-specific messages (`Once` / `Programmed` /
+/// `Partial`); it returns a chunk-level error to record (first one wins).
+fn drain_walk(
+    results: &mpsc::Receiver<ShardMsg>,
+    handles: &[JoinHandle<()>],
+    shards: usize,
+    mut on_msg: impl FnMut(ShardMsg) -> Option<String>,
+) -> WalkOutcome {
+    let mut st = GatherState {
+        done: vec![false; shards],
+        pending: shards,
+        chunk_err: None,
+        fatal: None,
+    };
+    let deadline = walk_timeout().map(|d| Instant::now() + d);
+    while st.pending > 0 {
+        match results.recv_timeout(SUPERVISE_INTERVAL) {
+            Ok(msg) => dispatch_msg(&mut st, &mut on_msg, msg),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // Liveness sweep, race-free against a shard sealing right
+                // at the deadline: snapshot liveness FIRST, then drain the
+                // queue.  A shard sends its seal strictly before moving to
+                // the next job, so if the snapshot saw it finished, its
+                // seal (if any) is consumed by the drain below before the
+                // verdict.
+                let finished: Vec<bool> = (0..shards)
+                    .map(|s| handles.get(s).map(|h| h.is_finished()).unwrap_or(true))
+                    .collect();
+                while let Ok(msg) = results.try_recv() {
+                    dispatch_msg(&mut st, &mut on_msg, msg);
+                }
+                for (s, &gone) in finished.iter().enumerate() {
+                    if gone && !st.done[s] {
+                        st.done[s] = true;
+                        st.pending -= 1;
+                        st.fatal.get_or_insert(PlaneError::ShardDead(format!(
+                            "shard {s} exited without sealing its walk"
+                        )));
+                    }
+                }
+                if let Some(dl) = deadline {
+                    if st.pending > 0 && st.fatal.is_none() && Instant::now() >= dl {
+                        st.fatal = Some(PlaneError::Timeout(format!(
+                            "supervised gather timed out with {} shard(s) unsealed \
+                             (MELISO_WALK_TIMEOUT_SECS to adjust)",
+                            st.pending
+                        )));
+                        break;
+                    }
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                if st.pending > 0 {
+                    st.fatal.get_or_insert(PlaneError::ShardDead(
+                        "a shard dropped its walk replies before sealing".to_string(),
+                    ));
+                }
+                break;
+            }
+        }
+    }
+    WalkOutcome {
+        chunk_err: st.chunk_err,
+        fatal: st.fatal,
+    }
+}
+
+/// Close a leader-side `Plan` span (shared by the one-shot, program and
+/// batch paths; a no-op `None` when tracing is off).
+fn note_plan(span: Option<obs::SpanTimer>, path: &'static str, chunks: usize, m: usize, n: usize) {
+    if let Some(sp) = span {
+        sp.finish(
+            Stage::Plan,
+            Lane::Leader,
+            vec![
+                ("path", path.to_string()),
+                ("m", m.to_string()),
+                ("n", n.to_string()),
+                ("chunks", chunks.to_string()),
+            ],
+        );
+    }
+}
+
+/// Account one supervised gather: fold the blocked-wait seconds into the
+/// leader's gather-wait counter and close the `Gather` span.  Both handles
+/// are `None` when the corresponding level is off.
+fn note_gather(clock: Option<Instant>, span: Option<obs::SpanTimer>, path: &'static str) {
+    if let Some(t0) = clock {
+        obs::global()
+            .counter(
+                obs::names::PLANE_GATHER_WAIT,
+                "Seconds the leader spent in supervised gathers",
+                &[],
+            )
+            .add(t0.elapsed().as_secs_f64());
+    }
+    if let Some(sp) = span {
+        sp.finish(Stage::Gather, Lane::Leader, vec![("path", path.to_string())]);
+    }
+}
+
+/// Stream the occupied chunks of `plan` to the shards with the extraction
+/// **double-buffered**: a producer thread enumerates
+/// [`ChunkPlan::nonzero_chunks`] and extracts one zero-padded tile at a
+/// time (unwind-caught) into a bounded channel, while the calling thread
+/// builds the job via `make_job` (which may refuse — e.g. tile-slot
+/// exhaustion) and dispatches to the owning shard.  Tile `N + 1` is
+/// extracted while tile `N` dispatches; dispatch order is exactly the
+/// serial walk's, so determinism is untouched.  Returns
+/// `(dispatched, walk_err)`.
+///
+/// The walk is **always closed**: every shard gets a best-effort
+/// [`ShardJob::Seal`] even after an error, so the matching supervised
+/// gather terminates on a partial walk.
+fn scatter_walk<F>(
+    sh: &PlaneShared,
+    plan: &ChunkPlan,
+    source: &dyn MatrixSource,
+    reply: &mpsc::Sender<ShardMsg>,
+    mut make_job: F,
+) -> (usize, Option<PlaneError>)
+where
+    F: FnMut(ChunkSpec, Matrix) -> Result<ShardJob, PlaneError>,
+{
+    let tile = plan.geometry.cell_size;
+    let mut dispatched = 0usize;
+    let mut walk_err: Option<PlaneError> = None;
+    let (tile_tx, tile_rx) =
+        mpsc::sync_channel::<Result<(ChunkSpec, Matrix), String>>(EXTRACT_QUEUE_DEPTH);
+    std::thread::scope(|scope| {
+        let producer = scope.spawn(move || {
+            let extract_metrics = if obs::metrics_on() {
+                let g = obs::global();
+                Some((
+                    g.counter(
+                        obs::names::PLANE_TILES_EXTRACTED,
+                        "Tiles extracted and dispatched by the leader",
+                        &[],
+                    ),
+                    g.counter(
+                        obs::names::PLANE_EXTRACT_SECONDS,
+                        "Seconds the leader spent extracting tiles",
+                        &[],
+                    ),
+                ))
+            } else {
+                None
+            };
+            let mut iter = plan.nonzero_chunks(source);
+            loop {
+                let spec = match next_chunk(&mut iter) {
+                    Ok(Some(spec)) => spec,
+                    Ok(None) => break,
+                    Err(e) => {
+                        let _ = tile_tx.send(Err(e));
+                        break;
+                    }
+                };
+                let span = obs::span_start();
+                let t0 = extract_metrics.as_ref().map(|_| Instant::now());
+                let extracted = extract_tile(source, &spec, tile);
+                if let (Some((tiles, secs)), Some(t0)) = (&extract_metrics, t0) {
+                    tiles.inc();
+                    secs.add(t0.elapsed().as_secs_f64());
+                }
+                if let Some(sp) = span {
+                    sp.finish(
+                        Stage::Extract,
+                        Lane::Leader,
+                        vec![
+                            ("chunk", format!("({},{})", spec.block_row, spec.block_col)),
+                            ("mca", spec.mca_index.to_string()),
+                        ],
+                    );
+                }
+                match extracted {
+                    Ok(a_tile) => {
+                        // A closed buffer means the consumer bailed out.
+                        if tile_tx.send(Ok((spec, a_tile))).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tile_tx.send(Err(e));
+                        break;
+                    }
+                }
+            }
+        });
+        for item in tile_rx {
+            match item {
+                Ok((spec, a_tile)) => {
+                    let job = match make_job(spec, a_tile) {
+                        Ok(job) => job,
+                        Err(e) => {
+                            walk_err = Some(e);
+                            break;
+                        }
+                    };
+                    let s = sh.assignment[spec.mca_index];
+                    if sh.senders[s].send(job).is_err() {
+                        walk_err =
+                            Some(PlaneError::ShardDead(format!("shard {s} died mid-walk")));
+                        break;
+                    }
+                    dispatched += 1;
+                }
+                Err(e) => {
+                    walk_err = Some(PlaneError::Chunk(e));
+                    break;
+                }
+            }
+        }
+        // Dropping the receiver (the for-loop consumed it) unblocks a
+        // producer mid-send; join so the borrowed source outlives it.
+        let _ = producer.join();
+    });
+    for tx in &sh.senders {
+        let _ = tx.send(ShardJob::Seal {
+            reply: reply.clone(),
+        });
+    }
+    (dispatched, walk_err)
+}
+
+/// Advance the chunk walk one step, converting a panic inside the
+/// source's sparsity probes into an error.
+fn next_chunk(iter: &mut dyn Iterator<Item = ChunkSpec>) -> Result<Option<ChunkSpec>, String> {
+    catch_unwind(AssertUnwindSafe(|| iter.next()))
+        .map_err(|p| format!("operand chunk walk panicked: {}", shard::panic_text(p)))
+}
+
+/// Extract one zero-padded tile, converting a panic inside the source's
+/// `block` into an error.
+fn extract_tile(
+    source: &dyn MatrixSource,
+    spec: &ChunkSpec,
+    tile: usize,
+) -> Result<Matrix, String> {
+    catch_unwind(AssertUnwindSafe(|| {
+        source.block(spec.row0, spec.col0, tile, tile)
+    }))
+    .map_err(|p| {
+        format!(
+            "extracting chunk ({},{}) panicked: {}",
+            spec.block_row,
+            spec.block_col,
+            shard::panic_text(p)
+        )
+    })
+}

@@ -76,10 +76,32 @@ impl PlacementPolicy for SparsityAwarePlacement {
     }
 }
 
+/// Balances by *measured* per-chunk execution wall time, not by counts:
+/// at batch-distribution time the plane re-splits MCAs over workers using
+/// the mean measured nanoseconds per chunk from the observability timing
+/// accumulators (LPT over `mean_time × occupied_chunks`), so chunks that
+/// are genuinely slower — denser tiles, more write–verify retries — weigh
+/// more than their count suggests.  At *build* time no measurements exist
+/// yet, so the static MCA→shard assignment falls back to
+/// [`LoadBalancedPlacement`]; the measured re-split (plus work-stealing)
+/// takes over from the first batch onwards.
+pub struct TimingAwarePlacement;
+
+impl PlacementPolicy for TimingAwarePlacement {
+    fn name(&self) -> &'static str {
+        "timing-aware"
+    }
+
+    fn assign(&self, plan: &ChunkPlan, source: &dyn MatrixSource, shards: usize) -> Vec<usize> {
+        LoadBalancedPlacement.assign(plan, source, shards)
+    }
+}
+
 /// Greedy longest-processing-time assignment: visit MCAs by descending
 /// weight (ties by index, so the result is deterministic) and hand each to
-/// the least-loaded shard.
-fn balance(counts: &[usize], shards: usize) -> Vec<usize> {
+/// the least-loaded shard.  Also used by the plane's batch distribution,
+/// with measured-time weights.
+pub(crate) fn balance(counts: &[usize], shards: usize) -> Vec<usize> {
     let shards = shards.max(1);
     let mut order: Vec<usize> = (0..counts.len()).collect();
     order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
@@ -109,6 +131,7 @@ pub enum Placement {
     RoundRobin,
     LoadBalanced,
     SparsityAware,
+    TimingAware,
 }
 
 impl Placement {
@@ -117,6 +140,7 @@ impl Placement {
             "round-robin" | "roundrobin" | "rr" => Some(Placement::RoundRobin),
             "load-balanced" | "loadbalanced" | "balanced" => Some(Placement::LoadBalanced),
             "sparsity-aware" | "sparsityaware" | "sparsity" => Some(Placement::SparsityAware),
+            "timing-aware" | "timingaware" | "timing" => Some(Placement::TimingAware),
             _ => None,
         }
     }
@@ -127,6 +151,7 @@ impl Placement {
             Placement::RoundRobin => &RoundRobinPlacement,
             Placement::LoadBalanced => &LoadBalancedPlacement,
             Placement::SparsityAware => &SparsityAwarePlacement,
+            Placement::TimingAware => &TimingAwarePlacement,
         }
     }
 
@@ -161,6 +186,7 @@ mod tests {
             Placement::RoundRobin,
             Placement::LoadBalanced,
             Placement::SparsityAware,
+            Placement::TimingAware,
         ] {
             let assign = placement.policy().assign(&plan, &src, 3);
             assert_eq!(assign.len(), plan.geometry.mcas(), "{}", placement.name());
@@ -210,8 +236,22 @@ mod tests {
         assert_eq!(Placement::parse("round-robin"), Some(Placement::RoundRobin));
         assert_eq!(Placement::parse("BALANCED"), Some(Placement::LoadBalanced));
         assert_eq!(Placement::parse("sparsity"), Some(Placement::SparsityAware));
+        assert_eq!(Placement::parse("timing"), Some(Placement::TimingAware));
+        assert_eq!(Placement::parse("TIMING-AWARE"), Some(Placement::TimingAware));
         assert_eq!(Placement::parse("nope"), None);
         assert_eq!(Placement::RoundRobin.name(), "round-robin");
         assert_eq!(Placement::SparsityAware.name(), "sparsity-aware");
+        assert_eq!(Placement::TimingAware.name(), "timing-aware");
+    }
+
+    #[test]
+    fn timing_aware_build_assignment_matches_load_balanced() {
+        // With no measurements yet (build time), timing-aware must fall
+        // back to the load-balanced static assignment.
+        let (plan, src) = dense_plan(96, 96);
+        assert_eq!(
+            TimingAwarePlacement.assign(&plan, &src, 3),
+            LoadBalancedPlacement.assign(&plan, &src, 3)
+        );
     }
 }

@@ -1,42 +1,51 @@
-//! Shard worker: the single scatter/gather execution loop behind both the
-//! one-shot coordinator and the resident serving sessions.
+//! Shard worker: the execution loop behind both the one-shot coordinator
+//! and the resident serving sessions.
 //!
-//! A shard is one long-lived thread owning, for every operand resident on
-//! it, the [`TileExecutor`]s of the MCAs placed on it (see
-//! [`crate::plane::placement`]).  An MCA never migrates, so its RNG
-//! stream, its fixed-pattern noise and its energy ledger stay consistent
-//! across every job the shard processes.
+//! A shard is one long-lived thread pulling jobs off a FIFO queue.  Since
+//! the plane grew a concurrent admission surface
+//! ([`PlaneHandle`](super::PlaneHandle)), shards no longer *own* operand
+//! state: executors and programmed tiles live in per-`(operand, MCA)`
+//! slots ([`McaSlot`](super::handle::McaSlot)) shared through `Arc`s
+//! carried by the jobs themselves, and each walk gathers on its own reply
+//! channel.  That is what lets one shard interleave jobs of many
+//! concurrent walks, and what lets batch workers **steal** MCAs from each
+//! other when irregular sparsity leaves some queues short.
 //!
 //! **Determinism contract.**  Each resident operand owns its *own* set of
 //! executors: MCA `i`'s simulator for operand `k` is seeded from
 //! `(master seed, i)` ([`mca_seed`]) exactly as if the operand had a
-//! dedicated plane, and the leader dispatches each operand's chunks in a
-//! fixed row-major order over a FIFO channel — so multi-tenant residency
-//! is bit-identical to one plane per operand.  Resident execution noise
-//! comes from a *counter-based* stream derived from
-//! `(master seed, mca, solve index, chunk)` ([`exec_stream_seed`]), so a
-//! batch of N vectors is bit-identical to N sequential solves.
+//! dedicated plane.  Programming jobs for one MCA always flow through the
+//! placement-assigned owner shard in plan order (FIFO queue), so the
+//! executor's persistent write–verify RNG draws in chunk order no matter
+//! what other walks interleave.  Resident execution noise comes from a
+//! *counter-based* stream derived from
+//! `(master seed, mca, solve index, chunk)` ([`exec_stream_seed`]), and a
+//! batch worker claims a **whole MCA** at a time under its slot lock — so
+//! which worker executes an MCA (stolen or not) can never change a single
+//! RNG draw or the MCA's energy-accumulation order.
 //!
 //! **Fault containment.**  Every job is processed under
-//! [`std::panic::catch_unwind`]: a panicking shard seals the ledgers of
-//! the walk it was serving into a [`ShardMsg::Failed`] report and exits,
+//! [`std::panic::catch_unwind`]: a panicking shard reports
+//! [`ShardMsg::Failed`] on the walk's own reply channel and exits,
 //! instead of silently dropping out of the reply protocol.  The leader's
 //! supervised gather (see [`crate::plane`]) converts that into a clean
-//! error — a shard panic can no longer hang a resident `program` or
-//! `execute_batch` gather.
+//! typed error — a shard panic cannot hang a `program` or
+//! `execute_batch` gather, including walks *other* than the one that
+//! panicked (their liveness sweep notices the dead thread).
 
+use super::handle::{lock_unpoisoned, BatchWalk, McaTiming, OnceWalk, OperandEntry};
 use crate::config::SolveOptions;
-use crate::ec::{EcOptions, ProgrammedTile, TileExecutor};
+use crate::ec::{EcOptions, TileExecutor};
 use crate::linalg::{Matrix, Vector};
-use crate::mca::{EnergyLedger, Mca};
+use crate::mca::Mca;
 use crate::obs::{self, Counter, Lane, Stage};
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::virtualization::ChunkSpec;
-use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Deterministic per-MCA seed derivation: MCA `i`'s simulator stream is a
 /// pure function of the master seed, independent of shard count and
@@ -50,7 +59,8 @@ pub fn mca_seed(master: u64, mca_index: usize) -> u64 {
 /// Counter-based execution-stream derivation (Philox-style): the noise for
 /// one `(solve, chunk)` pair is a pure function of the master seed and the
 /// chunk's coordinates.  This is what makes resident-session results
-/// independent of batching, shard count and scheduling order.
+/// independent of batching, shard count, work-stealing and scheduling
+/// order.
 pub fn exec_stream_seed(
     master: u64,
     mca_index: usize,
@@ -84,52 +94,55 @@ pub fn new_executor(
     TileExecutor::new(mca, backend.clone())
 }
 
-/// One unit of work sent from the leader to a shard.
+/// One unit of work sent from the leader to a shard.  Shared state rides
+/// along as `Arc`s and every job carries the reply sender of the walk it
+/// belongs to, so replies of concurrent walks never interleave.
 pub(crate) enum ShardJob {
     /// One-shot fused program + execute for a single chunk (the original
-    /// `correctedMatVecMul` shape): answer with [`ShardMsg::Once`].
+    /// `correctedMatVecMul` shape) against the walk's private executor
+    /// set: answer with [`ShardMsg::Once`].
     RunOnce {
         spec: ChunkSpec,
         a_tile: Matrix,
         x_chunk: Vector,
+        walk: Arc<OnceWalk>,
+        reply: mpsc::Sender<ShardMsg>,
     },
-    /// Program one chunk of operand `op` resident on its MCA: answer with
-    /// [`ShardMsg::Programmed`] and keep the tile for later `Execute`s.
+    /// Program one chunk of an operand into its MCA's slot: answer with
+    /// [`ShardMsg::Programmed`]; the tile stays in the slot for later
+    /// batches.
     Program {
-        op: u64,
         spec: ChunkSpec,
         a_tile: Matrix,
+        entry: Arc<OperandEntry>,
+        reply: mpsc::Sender<ShardMsg>,
     },
-    /// Run a batch of input vectors against every tile of operand `op`
-    /// resident on this shard: answer with one [`ShardMsg::Partial`] per
-    /// (tile, vector), then a [`ShardMsg::Sealed`] ledger snapshot.
+    /// Join one batch walk: claim MCAs from the walk's queues (own queue
+    /// first, then steal) and run every input vector against each claimed
+    /// MCA's resident tiles.  Answer with one [`ShardMsg::Partial`] per
+    /// (tile, vector) executed here, then [`ShardMsg::Sealed`].
     Execute {
-        op: u64,
-        first_solve: u64,
-        xs: Arc<Vec<Vector>>,
+        walk: Arc<BatchWalk>,
+        reply: mpsc::Sender<ShardMsg>,
     },
-    /// Drop operand `op`'s resident tiles and executors: answer with a
-    /// final [`ShardMsg::Sealed`] ledger snapshot.
-    Evict { op: u64 },
-    /// Close a `RunOnce` (`op` = `None`) or `Program` (`op` = `Some`)
-    /// scatter walk: answer with [`ShardMsg::Sealed`].
-    Seal { op: Option<u64> },
+    /// Close a scatter walk: answer with [`ShardMsg::Sealed`].
+    Seal { reply: mpsc::Sender<ShardMsg> },
 }
 
 impl ShardJob {
-    /// Which operand's ledgers a panic while serving this job should seal.
-    fn walk_op(&self) -> Option<u64> {
+    /// The reply channel of the walk this job belongs to (where a caught
+    /// panic must be reported).
+    fn reply(&self) -> &mpsc::Sender<ShardMsg> {
         match self {
-            ShardJob::RunOnce { .. } => None,
-            ShardJob::Program { op, .. }
-            | ShardJob::Execute { op, .. }
-            | ShardJob::Evict { op } => Some(*op),
-            ShardJob::Seal { op } => *op,
+            ShardJob::RunOnce { reply, .. }
+            | ShardJob::Program { reply, .. }
+            | ShardJob::Execute { reply, .. }
+            | ShardJob::Seal { reply } => reply,
         }
     }
 }
 
-/// A shard's answer to the leader.
+/// A shard's answer to the leader, on the walk's own reply channel.
 pub(crate) enum ShardMsg {
     Once {
         block_row: usize,
@@ -149,19 +162,13 @@ pub(crate) enum ShardMsg {
         block_col: usize,
         outcome: Result<Vector, String>,
     },
-    /// Cumulative per-MCA ledger snapshot, closing one walk.
-    Sealed {
-        shard: usize,
-        ledgers: Vec<(usize, EnergyLedger)>,
-    },
-    /// The shard caught a panic: its final ledger snapshot plus the panic
-    /// message.  The shard exits after sending this — the leader marks the
-    /// plane failed and every later call returns a clean error.
-    Failed {
-        shard: usize,
-        error: String,
-        ledgers: Vec<(usize, EnergyLedger)>,
-    },
+    /// This shard is done with the walk (exact reply cardinality contract:
+    /// one seal per shard per walk).
+    Sealed { shard: usize },
+    /// The shard caught a panic while serving this walk.  The shard exits
+    /// after sending this — the leader poisons the plane and every later
+    /// call returns a clean error.
+    Failed { shard: usize, error: String },
 }
 
 pub(crate) struct ShardContext {
@@ -170,44 +177,9 @@ pub(crate) struct ShardContext {
     pub opts: SolveOptions,
     pub backend: Backend,
     pub jobs: mpsc::Receiver<ShardJob>,
-    pub out: mpsc::Sender<ShardMsg>,
-}
-
-/// Per-operand shard-side residency: this shard's slice of the operand's
-/// executors and programmed tiles.
-#[derive(Default)]
-struct OperandState {
-    executors: HashMap<usize, TileExecutor>,
-    resident: Vec<(ChunkSpec, ProgrammedTile)>,
-}
-
-impl OperandState {
-    fn ledgers(&self) -> Vec<(usize, EnergyLedger)> {
-        self.executors
-            .iter()
-            .map(|(idx, e)| (*idx, e.mca.ledger))
-            .collect()
-    }
-}
-
-/// All state a shard thread owns: one executor set per resident operand,
-/// plus the separate executor set the fused one-shot path uses.
-struct ShardState {
-    oneshot: HashMap<usize, TileExecutor>,
-    ops: HashMap<u64, OperandState>,
-}
-
-impl ShardState {
-    fn ledgers_for(&self, op: Option<u64>) -> Vec<(usize, EnergyLedger)> {
-        match op {
-            None => self
-                .oneshot
-                .iter()
-                .map(|(idx, e)| (*idx, e.mca.ledger))
-                .collect(),
-            Some(op) => self.ops.get(&op).map(|o| o.ledgers()).unwrap_or_default(),
-        }
-    }
+    /// Plane-wide measured per-MCA execution timings (feeds the
+    /// timing-aware batch distribution).
+    pub timings: Arc<Vec<McaTiming>>,
 }
 
 /// One shard's cached metric handles (label `shard` is static for the
@@ -217,6 +189,7 @@ struct ShardCounters {
     idle: Counter,
     jobs: Counter,
     chunks: Counter,
+    steals: Counter,
 }
 
 /// Lazily build the shard's counter handles the first time metrics are
@@ -243,6 +216,11 @@ fn shard_counters(cache: &mut Option<ShardCounters>, shard: usize) -> &ShardCoun
                 "Chunk executions per shard, one per (chunk, vector)",
                 labels,
             ),
+            steals: g.counter(
+                obs::names::SHARD_STEALS,
+                "MCAs this shard claimed from another worker's batch queue",
+                labels,
+            ),
         }
     })
 }
@@ -259,19 +237,14 @@ pub(crate) fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// Shard main loop: process jobs until the leader closes the channel.
-///
-/// The leader's gather is *supervised* (per-shard seal tracking + liveness
-/// checks), but the contract here is still exact reply cardinalities per
-/// walk, closed by one `Sealed` per shard.  A panic inside a job no longer
-/// breaks that contract silently: it is caught, the walk's ledgers are
-/// sealed into a [`ShardMsg::Failed`], and the shard exits.
+/// Shard main loop: process jobs until the last plane handle drops (the
+/// job channel closes).  A reply channel whose receiver is gone (a leader
+/// gave up on its walk) only mutes that walk's replies — the shard keeps
+/// serving other walks.  A panic inside a job is caught, reported as
+/// [`ShardMsg::Failed`] on the walk's reply channel, and kills the shard:
+/// its in-progress executor state can no longer be trusted.
 pub(crate) fn run(ctx: ShardContext) {
     let ec = ctx.opts.ec_options();
-    let mut state = ShardState {
-        oneshot: HashMap::new(),
-        ops: HashMap::new(),
-    };
     let mut counters: Option<ShardCounters> = None;
     loop {
         let idle_clock = obs::metrics_clock();
@@ -279,40 +252,30 @@ pub(crate) fn run(ctx: ShardContext) {
             Ok(job) => job,
             Err(_) => return,
         };
-        let chunk_counter = if let Some(t0) = idle_clock {
+        let handles = if let Some(t0) = idle_clock {
             let h = shard_counters(&mut counters, ctx.shard);
             h.idle.add(t0.elapsed().as_secs_f64());
             h.jobs.inc();
-            Some(h.chunks.clone())
+            Some((h.chunks.clone(), h.steals.clone()))
         } else {
             None
         };
         let busy_clock = obs::metrics_clock();
-        let walk_op = job.walk_op();
-        let chunk_counter = chunk_counter.as_ref();
-        let handled =
-            catch_unwind(AssertUnwindSafe(|| {
-                handle(&ctx, &ec, &mut state, job, chunk_counter)
-            }));
+        let reply = job.reply().clone();
+        let handled = catch_unwind(AssertUnwindSafe(|| {
+            handle(&ctx, &ec, job, handles.as_ref())
+        }));
         if let Some(t0) = busy_clock {
             shard_counters(&mut counters, ctx.shard)
                 .busy
                 .add(t0.elapsed().as_secs_f64());
         }
-        match handled {
-            // Job handled; leader still listening.
-            Ok(true) => {}
-            // Reply channel closed: the leader is gone, stop quietly.
-            Ok(false) => return,
-            Err(payload) => {
-                let ledgers = state.ledgers_for(walk_op);
-                let _ = ctx.out.send(ShardMsg::Failed {
-                    shard: ctx.shard,
-                    error: panic_text(payload),
-                    ledgers,
-                });
-                return;
-            }
+        if let Err(payload) = handled {
+            let _ = reply.send(ShardMsg::Failed {
+                shard: ctx.shard,
+                error: panic_text(payload),
+            });
+            return;
         }
     }
 }
@@ -325,23 +288,26 @@ fn chunk_args(spec: &ChunkSpec) -> Vec<(&'static str, String)> {
     ]
 }
 
-/// Process one job.  Returns `false` when the reply channel is closed.
-/// `chunks` is the shard's chunk-execution counter when metrics are on.
+/// Process one job.  All replies are best-effort sends: a closed reply
+/// channel means that walk's leader already returned, and nothing here
+/// outlives the job (shared state sits behind the job's `Arc`s).
 fn handle(
     ctx: &ShardContext,
     ec: &EcOptions,
-    state: &mut ShardState,
     job: ShardJob,
-    chunks: Option<&Counter>,
-) -> bool {
+    counters: Option<&(Counter, Counter)>,
+) {
     let lane = Lane::Shard(ctx.shard);
     match job {
         ShardJob::RunOnce {
             spec,
             a_tile,
             x_chunk,
+            walk,
+            reply,
         } => {
-            let exec = state.oneshot.entry(spec.mca_index).or_insert_with(|| {
+            let mut slot = lock_unpoisoned(&walk.executors[spec.mca_index]);
+            let exec = slot.get_or_insert_with(|| {
                 new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
             });
             // `run_tile` split into its two halves so encode and execute
@@ -364,122 +330,122 @@ fn handle(
                 }
                 Err(e) => Err(e),
             };
-            if let Some(c) = chunks {
-                c.inc();
+            if let Some((chunks, _)) = counters {
+                chunks.inc();
             }
-            let msg = ShardMsg::Once {
+            let _ = reply.send(ShardMsg::Once {
                 block_row: spec.block_row,
                 block_col: spec.block_col,
                 outcome,
-            };
-            ctx.out.send(msg).is_ok()
+            });
         }
-        ShardJob::Program { op, spec, a_tile } => {
-            let opstate = state.ops.entry(op).or_default();
-            let exec = opstate.executors.entry(spec.mca_index).or_insert_with(|| {
+        ShardJob::Program {
+            spec,
+            a_tile,
+            entry,
+            reply,
+        } => {
+            let mut slot = lock_unpoisoned(&entry.mcas[spec.mca_index]);
+            let exec = slot.exec.get_or_insert_with(|| {
                 new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
             });
             let encode_span = obs::span_start();
             let outcome = match exec.program_tile(&a_tile, ec) {
                 Ok(tile) => {
                     let iters = tile.encode.iters;
-                    opstate.resident.push((spec, tile));
+                    slot.chunks.push((spec, tile));
                     Ok(iters)
                 }
                 Err(e) => Err(e),
             };
             if let Some(sp) = encode_span {
                 let mut args = chunk_args(&spec);
-                args.push(("operand", op.to_string()));
+                args.push(("operand", entry.op.to_string()));
                 sp.finish(Stage::Encode, lane, args);
             }
-            let msg = ShardMsg::Programmed {
+            let _ = reply.send(ShardMsg::Programmed {
                 block_row: spec.block_row,
                 block_col: spec.block_col,
                 outcome,
-            };
-            ctx.out.send(msg).is_ok()
+            });
         }
-        ShardJob::Execute {
-            op,
-            first_solve,
-            xs,
-        } => {
-            let Some(opstate) = state.ops.get_mut(&op) else {
-                // No chunks of this operand were placed on this shard:
-                // the walk still closes with an (empty) seal.
-                let msg = ShardMsg::Sealed {
-                    shard: ctx.shard,
-                    ledgers: Vec::new(),
-                };
-                return ctx.out.send(msg).is_ok();
-            };
-            for (spec, tile) in opstate.resident.iter() {
-                for (k, x) in xs.iter().enumerate() {
-                    let solve = first_solve + k as u64;
-                    let exec_span = obs::span_start();
-                    let outcome = match opstate.executors.get_mut(&spec.mca_index) {
-                        Some(exec) => {
-                            let x_chunk = x.slice_padded(spec.col0, ctx.cell);
-                            let stream = Rng::new(exec_stream_seed(
-                                ctx.opts.seed,
-                                spec.mca_index,
-                                solve,
-                                spec.block_row,
-                                spec.block_col,
-                            ));
-                            let saved = exec.mca.replace_rng(stream);
-                            let out = exec.execute_tile(tile, &x_chunk, ec).map(|r| r.y);
-                            exec.mca.replace_rng(saved);
-                            out
-                        }
-                        None => Err("resident chunk lost its executor".to_string()),
-                    };
-                    if let Some(sp) = exec_span {
-                        let mut args = chunk_args(spec);
-                        args.push(("operand", op.to_string()));
-                        args.push(("solve", solve.to_string()));
-                        sp.finish(Stage::Execute, lane, args);
-                    }
-                    if let Some(c) = chunks {
-                        c.inc();
-                    }
-                    let msg = ShardMsg::Partial {
-                        solve,
-                        block_row: spec.block_row,
-                        block_col: spec.block_col,
-                        outcome,
-                    };
-                    if ctx.out.send(msg).is_err() {
-                        return false;
-                    }
-                }
+        ShardJob::Execute { walk, reply } => {
+            execute_walk(ctx, ec, &walk, &reply, counters);
+            let _ = reply.send(ShardMsg::Sealed { shard: ctx.shard });
+        }
+        ShardJob::Seal { reply } => {
+            let _ = reply.send(ShardMsg::Sealed { shard: ctx.shard });
+        }
+    }
+}
+
+/// One worker's share of a batch walk: claim MCAs (own queue first, then
+/// steal) and run the whole batch against each claimed MCA's resident
+/// tiles under that MCA's slot lock.
+///
+/// Claiming whole MCAs is what keeps stealing deterministic: every RNG
+/// draw is counter-based per `(solve, chunk)`, and the per-MCA ledger
+/// accumulates its chunk×vector grid in the same nested order regardless
+/// of which worker holds the lock.
+fn execute_walk(
+    ctx: &ShardContext,
+    ec: &EcOptions,
+    walk: &BatchWalk,
+    reply: &mpsc::Sender<ShardMsg>,
+    counters: Option<&(Counter, Counter)>,
+) {
+    let lane = Lane::Shard(ctx.shard);
+    let entry = &walk.entry;
+    while let Some((mca, stolen)) = walk.claim(ctx.shard) {
+        if stolen {
+            if let Some((_, steals)) = counters {
+                steals.inc();
             }
-            let msg = ShardMsg::Sealed {
-                shard: ctx.shard,
-                ledgers: opstate.ledgers(),
-            };
-            ctx.out.send(msg).is_ok()
         }
-        ShardJob::Evict { op } => {
-            let ledgers = state
-                .ops
-                .remove(&op)
-                .map(|o| o.ledgers())
-                .unwrap_or_default();
-            let msg = ShardMsg::Sealed {
-                shard: ctx.shard,
-                ledgers,
-            };
-            ctx.out.send(msg).is_ok()
+        let t0 = Instant::now();
+        let mut executed = 0u64;
+        let mut slot = lock_unpoisoned(&entry.mcas[mca]);
+        let slot = &mut *slot;
+        for (spec, tile) in slot.chunks.iter() {
+            for (k, x) in walk.xs.iter().enumerate() {
+                let solve = walk.first_solve + k as u64;
+                let exec_span = obs::span_start();
+                let outcome = match slot.exec.as_mut() {
+                    Some(exec) => {
+                        let x_chunk = x.slice_padded(spec.col0, ctx.cell);
+                        let stream = Rng::new(exec_stream_seed(
+                            ctx.opts.seed,
+                            spec.mca_index,
+                            solve,
+                            spec.block_row,
+                            spec.block_col,
+                        ));
+                        let saved = exec.mca.replace_rng(stream);
+                        let out = exec.execute_tile(tile, &x_chunk, ec).map(|r| r.y);
+                        exec.mca.replace_rng(saved);
+                        out
+                    }
+                    None => Err("resident chunk lost its executor".to_string()),
+                };
+                if let Some(sp) = exec_span {
+                    let mut args = chunk_args(spec);
+                    args.push(("operand", entry.op.to_string()));
+                    args.push(("solve", solve.to_string()));
+                    sp.finish(Stage::Execute, lane, args);
+                }
+                if let Some((chunks, _)) = counters {
+                    chunks.inc();
+                }
+                executed += 1;
+                let _ = reply.send(ShardMsg::Partial {
+                    solve,
+                    block_row: spec.block_row,
+                    block_col: spec.block_col,
+                    outcome,
+                });
+            }
         }
-        ShardJob::Seal { op } => {
-            let msg = ShardMsg::Sealed {
-                shard: ctx.shard,
-                ledgers: state.ledgers_for(op),
-            };
-            ctx.out.send(msg).is_ok()
-        }
+        ctx.timings[mca].record(t0.elapsed().as_secs_f64(), executed);
     }
 }
 

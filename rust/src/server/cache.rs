@@ -3,8 +3,8 @@
 //!
 //! A serving deployment holds many operands but only so much crossbar
 //! real estate.  [`OperandCache`] keeps the `capacity` most-recently-used
-//! sessions resident *as residencies on a single shared
-//! [`ExecutionPlane`]* — one shard pool serves every tenant, instead of
+//! sessions resident *as residencies on a single shared plane* (a
+//! [`PlaneHandle`]) — one shard pool serves every tenant, instead of
 //! one thread pool per operand.  A repeated solve against a cached
 //! operand skips the whole write–verify programming pass (the expensive
 //! part); evicting the least-recently-used session returns its tile slots
@@ -22,9 +22,9 @@ use crate::config::{SolveOptions, SystemConfig};
 use crate::ec::DenoiseMode;
 use crate::matrices::MatrixSource;
 use crate::obs;
-use crate::plane::ExecutionPlane;
-use crate::solver::Meliso;
-use std::sync::{Arc, Mutex};
+use crate::plane::PlaneHandle;
+use crate::solver::{Meliso, MelisoError};
+use std::sync::Arc;
 
 /// Mirror one cache event into the global metrics registry.
 fn note_cache(name: &'static str, help: &'static str, n: u64) {
@@ -183,7 +183,7 @@ pub struct OperandCache {
     entries: Vec<CacheEntry>,
     /// The shared plane hosting every cached residency; built lazily from
     /// the first tenant, rebuilt if it fails.
-    plane: Option<Arc<Mutex<ExecutionPlane>>>,
+    plane: Option<PlaneHandle>,
     clock: u64,
     pub hits: u64,
     pub misses: u64,
@@ -218,7 +218,7 @@ impl OperandCache {
 
     /// The shared plane hosting the cached residencies (None until the
     /// first tenant is programmed).
-    pub fn plane(&self) -> Option<&Arc<Mutex<ExecutionPlane>>> {
+    pub fn plane(&self) -> Option<&PlaneHandle> {
         self.plane.as_ref()
     }
 
@@ -229,7 +229,7 @@ impl OperandCache {
         let dead = self
             .plane
             .as_ref()
-            .map(|p| p.lock().map(|g| g.failure().is_some()).unwrap_or(true))
+            .map(|p| p.failure().is_some())
             .unwrap_or(false);
         if dead {
             self.evictions += self.entries.len() as u64;
@@ -255,7 +255,7 @@ impl OperandCache {
         &mut self,
         solver: &Meliso,
         source: &Arc<dyn MatrixSource>,
-    ) -> Result<Arc<Mutex<ExecutionPlane>>, String> {
+    ) -> Result<PlaneHandle, MelisoError> {
         if let Some(plane) = &self.plane {
             return Ok(plane.clone());
         }
@@ -281,7 +281,7 @@ impl OperandCache {
         &mut self,
         solver: &Meliso,
         source: &Arc<dyn MatrixSource>,
-    ) -> Result<Arc<Session>, String> {
+    ) -> Result<Arc<Session>, MelisoError> {
         self.invalidate_failed_plane();
         let key = session_key(source.as_ref(), solver.config(), solver.options());
         self.clock += 1;
@@ -313,7 +313,7 @@ impl OperandCache {
             Ok(session) => session,
             Err(first_err) => match displaced.take() {
                 // Nothing was displaced: fail with nothing lost.
-                None => return Err(first_err),
+                None => return Err(first_err.into()),
                 // Drop the displaced residency for real (freeing its tile
                 // slots, unless an outside handle pins them) and retry.
                 Some(entry) => {
@@ -512,16 +512,16 @@ mod tests {
         let s1 = cache.get_or_open(&solver, &operand(61)).unwrap();
         let s2 = cache.get_or_open(&solver, &operand(62)).unwrap();
         assert!(
-            Arc::ptr_eq(s1.plane(), s2.plane()),
+            PlaneHandle::ptr_eq(s1.plane(), s2.plane()),
             "cache tenants must be residencies of one plane"
         );
         let plane = cache.plane().expect("plane built on first miss").clone();
-        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        assert_eq!(plane.resident_operands(), 2);
         // Evicting a tenant (capacity pressure elsewhere) frees its
         // residency once the last session handle drops.
         drop(s1);
         cache.entries.remove(0);
-        assert_eq!(plane.lock().unwrap().resident_operands(), 1);
+        assert_eq!(plane.resident_operands(), 1);
         assert!(s2.solve(&Vector::standard_normal(16, 63)).is_ok());
     }
 
@@ -541,7 +541,7 @@ mod tests {
         // Kill the shared pool with an injected shard panic.
         handle.fail_next_reads(true);
         let err = s.solve(&Vector::standard_normal(16, 72)).unwrap_err();
-        assert!(err.contains("panicked"), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
         handle.fail_next_reads(false);
         drop(s);
         // Looking the SAME (cached) operand up again must not hand back a
@@ -554,7 +554,7 @@ mod tests {
         let b = operand(73);
         let s3 = cache.get_or_open(&solver, &b).unwrap();
         assert_eq!(cache.rebuilds, 1);
-        assert!(Arc::ptr_eq(s2.plane(), s3.plane()));
+        assert!(PlaneHandle::ptr_eq(s2.plane(), s3.plane()));
         assert!(s3.solve(&Vector::standard_normal(16, 75)).is_ok());
     }
 

@@ -2,20 +2,19 @@
 //! solves against it.
 //!
 //! A [`Session`] is the serving façade over one *residency* of the shared
-//! [`ExecutionPlane`](crate::plane::ExecutionPlane): at open time the
-//! plane programs every non-zero chunk onto its sharded worker pool
-//! (write–verify paid once, tiles and
+//! execution plane: at open time the plane programs every non-zero chunk
+//! onto its sharded worker pool (write–verify paid once, tiles and
 //! [`TileExecutor`](crate::ec::TileExecutor)s stay resident), and every
 //! subsequent [`Session::solve`] / [`Session::solve_batch`] pays only the
 //! input-vector encode and the crossbar reads.  Since the plane became
 //! multi-tenant, **many sessions share one plane**: open them with
 //! [`Session::open_on`] (or
 //! [`Meliso::open_session_on`](crate::solver::Meliso::open_session_on))
-//! against the same `Arc<Mutex<ExecutionPlane>>` and their batches
-//! interleave on one shard pool — bit-identical to dedicated planes.  The
-//! session itself owns the serving concerns on top: request validation,
-//! throughput/latency statistics and the write-once/read-per-solve energy
-//! split ([`crate::metrics::serving`]).
+//! against clones of the same [`PlaneHandle`] and their batches run
+//! *concurrently* on one shard pool — no plane-wide lock, bit-identical
+//! to dedicated planes.  The session itself owns the serving concerns on
+//! top: request validation, throughput/latency statistics and the
+//! write-once/read-per-solve energy split ([`crate::metrics::serving`]).
 //!
 //! **Determinism contract.**  Each residency gets its own executor set
 //! seeded exactly like a dedicated plane, programmed in leader dispatch
@@ -25,10 +24,11 @@
 //! `(master seed, mca, solve index, chunk)` — see [`exec_stream_seed`] —
 //! so a batch of N vectors is bit-identical to N sequential solves.
 //!
-//! **Fault tolerance.**  A shard panic surfaces as a clean `Err` from the
-//! ongoing call (the plane's supervised gather — see [`crate::plane`])
-//! and poisons the plane so later calls fail fast; dropping the session
-//! evicts its residency, returning the tile slots to the allocator.
+//! **Fault tolerance.**  A shard panic surfaces as a typed
+//! [`PlaneError::ShardDead`] from the ongoing call (the plane's
+//! supervised gather — see [`crate::plane`]) and poisons the plane so
+//! later calls fail fast; dropping the session evicts its residency,
+//! returning the tile slots to the allocator.
 
 pub use crate::plane::{exec_stream_seed, OperandId, ProgramReport, ServeSolve};
 
@@ -37,9 +37,9 @@ use crate::linalg::Vector;
 use crate::matrices::MatrixSource;
 use crate::metrics::serving::{ServingReport, ServingStats};
 use crate::obs;
-use crate::plane::ExecutionPlane;
+use crate::plane::{PlaneError, PlaneHandle};
 use crate::runtime::Backend;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// Mirror an energy delta into the global registry's serve-path split.
 fn note_energy(op: &str, kind: &str, joules: f64) {
@@ -89,7 +89,7 @@ impl MvmOperator for Session {
     }
 
     fn apply(&self, x: &Vector) -> Result<Vector, String> {
-        self.solve(x).map(|s| s.y)
+        self.solve(x).map(|s| s.y).map_err(String::from)
     }
 
     fn mvm_count(&self) -> u64 {
@@ -114,14 +114,15 @@ struct SessionInner {
 /// an `Arc` and call [`solve`](Session::solve) from any thread (solves on
 /// one session are serialized, matching an analog array executing one MVM
 /// at a time; throughput comes from [`solve_batch`](Session::solve_batch)
-/// and from running many sessions).
+/// and from running many sessions — sessions on different operands of a
+/// shared plane execute concurrently).
 pub struct Session {
     source: Arc<dyn MatrixSource>,
     config: SystemConfig,
     opts: SolveOptions,
     program: ProgramReport,
     id: OperandId,
-    plane: Arc<Mutex<ExecutionPlane>>,
+    plane: PlaneHandle,
     inner: Mutex<SessionInner>,
 }
 
@@ -135,28 +136,22 @@ impl Session {
         config: SystemConfig,
         opts: SolveOptions,
         backend: Backend,
-    ) -> Result<Session, String> {
-        let plane = ExecutionPlane::build(source.as_ref(), &config, &opts, backend)?;
-        Session::open_on(Arc::new(Mutex::new(plane)), source)
+    ) -> Result<Session, PlaneError> {
+        let plane = PlaneHandle::build(source.as_ref(), &config, &opts, backend)?;
+        Session::open_on(plane, source)
     }
 
     /// Program `source` as a residency on an existing (shared) plane.
-    /// Many sessions opened on one plane serve interleaved batches from
-    /// one shard pool, bit-identical to dedicated planes.
+    /// Many sessions opened on clones of one handle serve concurrent
+    /// batches from one shard pool, bit-identical to dedicated planes.
     pub fn open_on(
-        plane: Arc<Mutex<ExecutionPlane>>,
+        plane: PlaneHandle,
         source: Arc<dyn MatrixSource>,
-    ) -> Result<Session, String> {
-        let (config, opts, id, program, write_j, read_j) = {
-            let mut guard = plane
-                .lock()
-                .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?;
-            let config = guard.system_config();
-            let opts = guard.options().clone();
-            let (id, program) = guard.program(source.as_ref())?;
-            let (write_j, read_j) = guard.operand_energy_totals(id).unwrap_or((0.0, 0.0));
-            (config, opts, id, program, write_j, read_j)
-        };
+    ) -> Result<Session, PlaneError> {
+        let config = plane.system_config();
+        let opts = plane.options().clone();
+        let (id, program) = plane.program(source.as_ref())?;
+        let (write_j, read_j) = plane.operand_energy_totals(id).unwrap_or((0.0, 0.0));
         let mut stats = ServingStats::new();
         stats.record_program(program.write_energy_j, program.write_latency_s);
         if obs::metrics_on() {
@@ -190,23 +185,24 @@ impl Session {
     }
 
     /// Serve one solve against the resident operand.
-    pub fn solve(&self, x: &Vector) -> Result<ServeSolve, String> {
+    pub fn solve(&self, x: &Vector) -> Result<ServeSolve, PlaneError> {
         let mut out = self.solve_batch(std::slice::from_ref(x))?;
-        out.pop().ok_or_else(|| "empty batch result".to_string())
+        out.pop()
+            .ok_or_else(|| PlaneError::InvalidInput("empty batch result".to_string()))
     }
 
     /// Serve a batch of solves in one chunk walk: every resident tile is
     /// visited once and all input vectors run against it, amortizing the
     /// dispatch and scheduling overhead across the batch.  Bit-identical
     /// to the same vectors solved sequentially (see module docs).
-    pub fn solve_batch(&self, xs: &[Vector]) -> Result<Vec<ServeSolve>, String> {
+    pub fn solve_batch(&self, xs: &[Vector]) -> Result<Vec<ServeSolve>, PlaneError> {
         let n = self.source.ncols();
         for (k, x) in xs.iter().enumerate() {
             if x.len() != n {
-                return Err(format!(
+                return Err(PlaneError::InvalidInput(format!(
                     "batch vector {k} has length {} but A has {n} columns",
                     x.len()
-                ));
+                )));
             }
         }
         if xs.is_empty() {
@@ -215,22 +211,16 @@ impl Session {
         let mut guard = self
             .inner
             .lock()
-            .map_err(|_| "session poisoned by an earlier panic".to_string())?;
+            .unwrap_or_else(PoisonError::into_inner);
         let inner = &mut *guard;
-        let (outcome, write_j, read_j) = {
-            let mut plane = self
-                .plane
-                .lock()
-                .map_err(|_| "execution plane poisoned by an earlier panic".to_string())?;
-            let outcome = plane.execute_batch(self.id, xs);
-            // This residency's energy totals, synced even on error, so a
-            // failed batch's energy is not attributed to the next
-            // successful one.
-            let (w, r) = plane
-                .operand_energy_totals(self.id)
-                .unwrap_or((inner.last_write_j, inner.last_read_j));
-            (outcome, w, r)
-        };
+        let outcome = self.plane.execute_batch(self.id, xs);
+        // This residency's energy totals, synced even on error, so a
+        // failed batch's energy is not attributed to the next successful
+        // one.
+        let (write_j, read_j) = self
+            .plane
+            .operand_energy_totals(self.id)
+            .unwrap_or((inner.last_write_j, inner.last_read_j));
         let (dw, dr) = (write_j - inner.last_write_j, read_j - inner.last_read_j);
         inner.last_write_j = write_j;
         inner.last_read_j = read_j;
@@ -294,10 +284,11 @@ impl Session {
     /// Snapshot of the serving statistics (throughput, latency
     /// percentiles, write/read energy split).
     pub fn report(&self) -> ServingReport {
-        match self.inner.lock() {
-            Ok(g) => g.stats.report(),
-            Err(p) => p.into_inner().stats.report(),
-        }
+        self.inner
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .stats
+            .report()
     }
 
     /// This session's residency handle on its plane.
@@ -307,7 +298,7 @@ impl Session {
 
     /// The (possibly shared) execution plane hosting this session's
     /// residency.
-    pub fn plane(&self) -> &Arc<Mutex<ExecutionPlane>> {
+    pub fn plane(&self) -> &PlaneHandle {
         &self.plane
     }
 
@@ -328,9 +319,7 @@ impl Drop for Session {
     fn drop(&mut self) {
         // Release the residency so a shared plane reclaims its tile slots;
         // on a dedicated plane the whole pool is about to join anyway.
-        if let Ok(mut plane) = self.plane.lock() {
-            let _ = plane.evict(self.id);
-        }
+        let _ = self.plane.evict(self.id);
     }
 }
 
@@ -411,13 +400,12 @@ mod tests {
 
         let src_a: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(a));
         let src_c: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(c));
-        let plane = ExecutionPlane::build(src_a.as_ref(), &config, &opts, native()).unwrap();
-        let plane = Arc::new(Mutex::new(plane));
+        let plane = PlaneHandle::build(src_a.as_ref(), &config, &opts, native()).unwrap();
         let sa = Session::open_on(plane.clone(), src_a).unwrap();
         let sc = Session::open_on(plane.clone(), src_c).unwrap();
-        assert!(Arc::ptr_eq(sa.plane(), sc.plane()));
+        assert!(PlaneHandle::ptr_eq(sa.plane(), sc.plane()));
         assert_ne!(sa.operand_id(), sc.operand_id());
-        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        assert_eq!(plane.resident_operands(), 2);
         // Interleaved order: C first, then A — counter-based noise makes
         // order irrelevant.
         let shared_c = sc.solve(&xc).unwrap().y;
@@ -427,7 +415,7 @@ mod tests {
         // Dropping one session frees its residency, the other keeps
         // serving.
         drop(sc);
-        assert_eq!(plane.lock().unwrap().resident_operands(), 1);
+        assert_eq!(plane.resident_operands(), 1);
         assert!(sa.solve(&xa).is_ok());
     }
 
@@ -521,7 +509,8 @@ mod tests {
             SolveOptions::default().with_device(Material::EpiRam),
         );
         let x = Vector::standard_normal(8, 82);
-        assert!(session.solve(&x).is_err());
+        let err = session.solve(&x).unwrap_err();
+        assert!(matches!(err, PlaneError::InvalidInput(_)), "{err:?}");
         // The session survives a rejected input.
         let ok = Vector::standard_normal(16, 83);
         assert!(session.solve(&ok).is_ok());
@@ -538,7 +527,11 @@ mod tests {
             native(),
         )
         .unwrap_err();
-        assert!(err.contains("cell size 48"), "{err}");
+        assert!(
+            matches!(err, PlaneError::UnsupportedCell { cell: 48, .. }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("cell size 48"), "{err}");
     }
 
     #[test]
@@ -551,5 +544,35 @@ mod tests {
         );
         assert!(session.solve_batch(&[]).unwrap().is_empty());
         assert_eq!(session.report().solves, 0);
+    }
+
+    #[test]
+    fn concurrent_sessions_solve_in_parallel_bit_exact() {
+        // Two sessions on one plane, solving from two threads at once:
+        // results must match the dedicated-plane references bit for bit.
+        let a = Matrix::standard_normal(48, 48, 95);
+        let c = Matrix::standard_normal(48, 48, 96);
+        let config = SystemConfig::new(2, 2, 32);
+        let opts = SolveOptions::default()
+            .with_device(Material::TaOxHfOx)
+            .with_seed(23)
+            .with_workers(2);
+        let xa = Vector::standard_normal(48, 97);
+        let xc = Vector::standard_normal(48, 98);
+        let ded_a = open(a.clone(), config, opts.clone()).solve(&xa).unwrap().y;
+        let ded_c = open(c.clone(), config, opts.clone()).solve(&xc).unwrap().y;
+
+        let src_a: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(a));
+        let src_c: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(c));
+        let plane = PlaneHandle::build(src_a.as_ref(), &config, &opts, native()).unwrap();
+        let sa = Session::open_on(plane.clone(), src_a).unwrap();
+        let sc = Session::open_on(plane.clone(), src_c).unwrap();
+        let (ya, yc) = std::thread::scope(|scope| {
+            let ha = scope.spawn(|| sa.solve(&xa).unwrap().y);
+            let hc = scope.spawn(|| sc.solve(&xc).unwrap().y);
+            (ha.join().unwrap(), hc.join().unwrap())
+        });
+        assert_eq!(ya, ded_a);
+        assert_eq!(yc, ded_c);
     }
 }

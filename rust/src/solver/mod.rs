@@ -20,14 +20,66 @@ use crate::iterative::{self, IterOptions};
 use crate::linalg::{Matrix, Vector};
 use crate::matrices::{DenseSource, MatrixSource};
 use crate::metrics::{ConvergenceReport, SolveReport};
-use crate::plane::ExecutionPlane;
+use crate::plane::{PlaneError, PlaneHandle};
 use crate::runtime::native::NativeBackend;
 use crate::runtime::pjrt::default_artifact_dir;
 use crate::runtime::service::PjrtBackend;
 use crate::runtime::Backend;
 use crate::server::{MvmOperator, Session};
+use std::fmt;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+/// Why a front-door solver call failed.
+///
+/// Plane-level failures carry the full [`PlaneError`] so embedders can
+/// match on the cause (stale operand vs. capacity vs. dead shard);
+/// `From<MelisoError> for String` keeps string-typed callers (the CLI)
+/// working through `?`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MelisoError {
+    /// The execution plane refused or failed the operation.
+    Plane(PlaneError),
+    /// The runtime backend could not be brought up (missing PJRT
+    /// artifacts, service start failure).
+    Backend(String),
+    /// Caller-supplied arguments were rejected before touching the grid.
+    InvalidInput(String),
+    /// An iterative solve or replication sweep failed.
+    Solver(String),
+}
+
+impl fmt::Display for MelisoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MelisoError::Plane(e) => write!(f, "{e}"),
+            MelisoError::Backend(e) => write!(f, "{e}"),
+            MelisoError::InvalidInput(e) => write!(f, "{e}"),
+            MelisoError::Solver(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for MelisoError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MelisoError::Plane(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<PlaneError> for MelisoError {
+    fn from(e: PlaneError) -> MelisoError {
+        MelisoError::Plane(e)
+    }
+}
+
+impl From<MelisoError> for String {
+    fn from(e: MelisoError) -> String {
+        e.to_string()
+    }
+}
 
 /// The MELISO+ solver: a configured multi-MCA system plus solve options.
 pub struct Meliso {
@@ -39,7 +91,7 @@ pub struct Meliso {
 impl Meliso {
     /// Build a solver; starts the PJRT runtime service when requested
     /// (set `MELISO_ARTIFACTS` to point elsewhere than `./artifacts`).
-    pub fn new(config: SystemConfig, opts: SolveOptions) -> Result<Meliso, String> {
+    pub fn new(config: SystemConfig, opts: SolveOptions) -> Result<Meliso, MelisoError> {
         let dir = default_artifact_dir();
         Meliso::new_with_artifacts(config, opts, &dir)
     }
@@ -50,17 +102,17 @@ impl Meliso {
         config: SystemConfig,
         opts: SolveOptions,
         dir: &Path,
-    ) -> Result<Meliso, String> {
+    ) -> Result<Meliso, MelisoError> {
         let backend: Backend = match opts.backend {
             BackendKind::Native => Arc::new(NativeBackend::new()),
             BackendKind::Pjrt => match PjrtBackend::start(dir) {
                 Ok(b) => Arc::new(b),
                 Err(e) => {
-                    return Err(format!(
+                    return Err(MelisoError::Backend(format!(
                         "failed to start PJRT runtime from {} ({e}); run `make artifacts` \
                          or use the native backend",
                         dir.display()
-                    ))
+                    )))
                 }
             },
         };
@@ -107,12 +159,18 @@ impl Meliso {
         &self,
         source: &dyn MatrixSource,
         x: &Vector,
-    ) -> Result<SolveReport, String> {
-        coordinator::solve_distributed(source, x, &self.config, &self.opts, self.backend.clone())
+    ) -> Result<SolveReport, MelisoError> {
+        Ok(coordinator::solve_distributed(
+            source,
+            x,
+            &self.config,
+            &self.opts,
+            self.backend.clone(),
+        )?)
     }
 
     /// Convenience for dense in-memory operands.
-    pub fn solve(&self, a: &Matrix, x: &Vector) -> Result<SolveReport, String> {
+    pub fn solve(&self, a: &Matrix, x: &Vector) -> Result<SolveReport, MelisoError> {
         let src = DenseSource::new(a.clone());
         self.solve_source(&src, x)
     }
@@ -138,35 +196,39 @@ impl Meliso {
     /// let out = session.solve(&Vector::standard_normal(66, 9)).unwrap();
     /// assert_eq!(out.y.len(), 66);
     /// ```
-    pub fn open_session(&self, source: Arc<dyn MatrixSource>) -> Result<Session, String> {
-        Session::open(source, self.config, self.opts.clone(), self.backend.clone())
+    pub fn open_session(&self, source: Arc<dyn MatrixSource>) -> Result<Session, MelisoError> {
+        Ok(Session::open(
+            source,
+            self.config,
+            self.opts.clone(),
+            self.backend.clone(),
+        )?)
     }
 
     /// Build a shared multi-tenant execution plane sized for `source`'s
-    /// chunk plan.  Program any number of operands onto it with
+    /// chunk plan and return its clone-able [`PlaneHandle`].  Program any
+    /// number of operands onto it with
     /// [`open_session_on`](Self::open_session_on) (or
-    /// [`ExecutionPlane::program`] directly) — they serve interleaved
-    /// batches from one shard pool, bit-identical to dedicated planes.
-    pub fn build_plane(
-        &self,
-        source: &dyn MatrixSource,
-    ) -> Result<Arc<Mutex<ExecutionPlane>>, String> {
-        Ok(Arc::new(Mutex::new(ExecutionPlane::build(
+    /// [`PlaneHandle::program`] directly) — they serve interleaved,
+    /// *concurrent* batches from one shard pool, bit-identical to
+    /// dedicated planes.
+    pub fn build_plane(&self, source: &dyn MatrixSource) -> Result<PlaneHandle, MelisoError> {
+        Ok(PlaneHandle::build(
             source,
             &self.config,
             &self.opts,
             self.backend.clone(),
-        )?)))
+        )?)
     }
 
     /// Open a resident serving session as a residency on an existing
     /// shared plane (see [`build_plane`](Self::build_plane)).
     pub fn open_session_on(
         &self,
-        plane: &Arc<Mutex<ExecutionPlane>>,
+        plane: &PlaneHandle,
         source: Arc<dyn MatrixSource>,
-    ) -> Result<Session, String> {
-        Session::open_on(plane.clone(), source)
+    ) -> Result<Session, MelisoError> {
+        Ok(Session::open_on(plane.clone(), source)?)
     }
 
     /// Solve the linear **system** `Ax = b` with an iterative method whose
@@ -199,27 +261,28 @@ impl Meliso {
         source: Arc<dyn MatrixSource>,
         b: &Vector,
         iter_opts: &IterOptions,
-    ) -> Result<ConvergenceReport, String> {
+    ) -> Result<ConvergenceReport, MelisoError> {
         // Validate before programming: opening a session pays the full
         // write–verify pass, which a bad input must not trigger.
         if source.nrows() != source.ncols() {
-            return Err(format!(
+            return Err(MelisoError::InvalidInput(format!(
                 "iterative methods need a square operand, got {}x{}",
                 source.nrows(),
                 source.ncols()
-            ));
+            )));
         }
         if b.len() != source.ncols() {
-            return Err(format!(
+            return Err(MelisoError::InvalidInput(format!(
                 "b has length {}, A is {}x{}",
                 b.len(),
                 source.nrows(),
                 source.ncols()
-            ));
+            )));
         }
         let start = std::time::Instant::now();
         let session = self.open_session(source.clone())?;
-        let outcome = iterative::solve_system(&session, Some(source.as_ref()), b, iter_opts)?;
+        let outcome = iterative::solve_system(&session, Some(source.as_ref()), b, iter_opts)
+            .map_err(MelisoError::Solver)?;
         let program = session.program_report();
         let serving = session.report();
         Ok(ConvergenceReport {
@@ -260,7 +323,7 @@ impl Meliso {
         source: &dyn MatrixSource,
         x: &Vector,
         reps: usize,
-    ) -> Result<Vec<SolveReport>, String> {
+    ) -> Result<Vec<SolveReport>, MelisoError> {
         if reps == 0 {
             return Ok(Vec::new());
         }
@@ -282,7 +345,7 @@ impl Meliso {
             }
             return Ok(reports);
         }
-        let mut slots: Vec<Option<Result<SolveReport, String>>> =
+        let mut slots: Vec<Option<Result<SolveReport, PlaneError>>> =
             std::iter::repeat_with(|| None).take(reps).collect();
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(lanes);
@@ -310,8 +373,14 @@ impl Meliso {
         for (r, slot) in slots.into_iter().enumerate() {
             match slot {
                 Some(Ok(report)) => reports.push(report),
-                Some(Err(e)) => return Err(format!("replication {r}: {e}")),
-                None => return Err(format!("replication {r} worker panicked")),
+                Some(Err(e)) => {
+                    return Err(MelisoError::Solver(format!("replication {r}: {e}")))
+                }
+                None => {
+                    return Err(MelisoError::Solver(format!(
+                        "replication {r} worker panicked"
+                    )))
+                }
             }
         }
         Ok(reports)
@@ -391,7 +460,12 @@ mod tests {
             Path::new("/nonexistent-dir"),
         );
         assert!(r.is_err());
-        let msg = r.err().unwrap();
+        let err = r.err().unwrap();
+        assert!(
+            matches!(err, MelisoError::Backend(_)),
+            "expected Backend error, got {err:?}"
+        );
+        let msg = err.to_string();
         assert!(msg.contains("make artifacts"), "{msg}");
     }
 
@@ -425,7 +499,7 @@ mod tests {
         let plane = solver.build_plane(src_a.as_ref()).unwrap();
         let sa = solver.open_session_on(&plane, src_a).unwrap();
         let sc = solver.open_session_on(&plane, src_c).unwrap();
-        assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+        assert_eq!(plane.resident_operands(), 2);
         let x = Vector::standard_normal(32, 9);
         let ba = a.matvec(&x);
         let ya = sa.solve(&x).unwrap().y;
@@ -515,7 +589,32 @@ mod tests {
         let err = solver
             .solve_system(src, &b, &IterOptions::default())
             .unwrap_err();
-        assert!(err.contains("square"), "{err}");
+        assert!(
+            matches!(err, MelisoError::InvalidInput(_)),
+            "expected InvalidInput, got {err:?}"
+        );
+        assert!(err.to_string().contains("square"), "{err}");
+    }
+
+    #[test]
+    fn plane_errors_surface_through_the_front_door() {
+        // An unsupported cell size is a plane-level refusal and must
+        // arrive as MelisoError::Plane with the inner cause intact.
+        let a = Matrix::standard_normal(16, 16, 27);
+        let solver = native_solver(SystemConfig::single_mca(48), SolveOptions::default());
+        let src = DenseSource::new(a);
+        let err = solver.build_plane(&src).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                MelisoError::Plane(PlaneError::UnsupportedCell { cell: 48, .. })
+            ),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("cell size 48"), "{err}");
+        // And std::error::Error::source exposes the plane cause.
+        use std::error::Error;
+        assert!(err.source().is_some());
     }
 
     #[test]

@@ -95,8 +95,9 @@ pub mod gen {
 /// Fault-injection doubles for the execution plane's supervision tests:
 /// a matrix source whose `block` panics on a chosen chunk (leader-side
 /// walk faults), a backend that panics mid-read (true shard-thread
-/// panics), and a backend that returns clean errors on demand (chunk-level
-/// failures that must leave the plane serviceable).
+/// panics), a backend that returns clean errors on demand (chunk-level
+/// failures that must leave the plane serviceable), and a backend whose
+/// reads park at a gate so a test can hold a batch in flight.
 ///
 /// These live in the library (not `#[cfg(test)]`) so the
 /// `fault_tolerance` integration suite and unit tests share one set of
@@ -105,8 +106,8 @@ pub mod faults {
     use crate::linalg::{Matrix, Vector};
     use crate::matrices::{DenseSource, MatrixSource};
     use crate::runtime::{EcMvmRequest, EcMvmResponse, ExecBackend};
-    use std::sync::atomic::{AtomicBool, Ordering};
-    use std::sync::Arc;
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use std::sync::{Arc, Condvar, Mutex, PoisonError};
 
     /// A dense operand whose `block` **panics** when the extraction covers
     /// `poison = (row0, col0)` — simulates a corrupt chunk on the leader's
@@ -245,6 +246,98 @@ pub mod faults {
 
         fn name(&self) -> &'static str {
             "fault-injection"
+        }
+    }
+
+    struct Gate {
+        closed: Mutex<bool>,
+        cv: Condvar,
+        waiting: AtomicUsize,
+    }
+
+    /// Shared valve controlling a [`GateBackend`]: `close` makes every
+    /// subsequent tile read block inside the backend until `open`.
+    #[derive(Clone)]
+    pub struct GateHandle(Arc<Gate>);
+
+    impl GateHandle {
+        /// Block subsequent reads until [`open`](GateHandle::open).
+        pub fn close(&self) {
+            *self.0.closed.lock().unwrap_or_else(PoisonError::into_inner) = true;
+        }
+
+        /// Release every blocked read and let new ones pass through.
+        pub fn open(&self) {
+            *self.0.closed.lock().unwrap_or_else(PoisonError::into_inner) = false;
+            self.0.cv.notify_all();
+        }
+
+        /// Number of reads currently parked at the gate — poll this to know
+        /// a concurrent batch has genuinely entered the backend.
+        pub fn waiting(&self) -> usize {
+            self.0.waiting.load(Ordering::SeqCst)
+        }
+
+        fn pass(&self) {
+            let mut closed = self.0.closed.lock().unwrap_or_else(PoisonError::into_inner);
+            if *closed {
+                self.0.waiting.fetch_add(1, Ordering::SeqCst);
+                while *closed {
+                    closed = self
+                        .0
+                        .cv
+                        .wait(closed)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
+                self.0.waiting.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Backend wrapper whose reads park at a [`GateHandle`] while it is
+    /// closed — lets a test hold a batch demonstrably in flight (poll
+    /// [`waiting`](GateHandle::waiting)), assert mid-flight behaviour, then
+    /// release it.  The gate starts open, so programming passes through;
+    /// close it only once the operand is resident.
+    pub struct GateBackend<B: ExecBackend> {
+        inner: B,
+        gate: GateHandle,
+    }
+
+    impl<B: ExecBackend> GateBackend<B> {
+        pub fn new(inner: B) -> GateBackend<B> {
+            GateBackend {
+                inner,
+                gate: GateHandle(Arc::new(Gate {
+                    closed: Mutex::new(false),
+                    cv: Condvar::new(),
+                    waiting: AtomicUsize::new(0),
+                })),
+            }
+        }
+
+        pub fn handle(&self) -> GateHandle {
+            self.gate.clone()
+        }
+    }
+
+    impl<B: ExecBackend> ExecBackend for GateBackend<B> {
+        fn mvm(&self, n: usize, at: Vec<f32>, xt: Vec<f32>) -> Result<Vec<f32>, String> {
+            self.gate.pass();
+            self.inner.mvm(n, at, xt)
+        }
+
+        fn ec_mvm(&self, req: EcMvmRequest) -> Result<EcMvmResponse, String> {
+            self.gate.pass();
+            self.inner.ec_mvm(req)
+        }
+
+        fn tile_sizes(&self) -> Vec<usize> {
+            self.inner.tile_sizes()
+        }
+
+        fn name(&self) -> &'static str {
+            "gated"
         }
     }
 }

@@ -1,0 +1,262 @@
+//! Concurrent-admission regression suite for the shared-handle execution
+//! plane: many client threads, many resident operands, one shard pool.
+//!
+//! Three invariants the `PlaneHandle` redesign must uphold:
+//!
+//! * **bit-identity under multi-tenancy** — N threads solving M operands
+//!   concurrently on one plane produce exactly the results of M dedicated
+//!   planes (execution noise is counter-based per `(operand, solve,
+//!   chunk)`, so scheduling cannot leak into the numerics);
+//! * **no deadlock under faults** — a shard panic mid-batch with several
+//!   concurrent clients surfaces as a clean typed error on every thread,
+//!   within a hard wall-clock bound, never a hang;
+//! * **work-stealing determinism** — irregular operands unbalance the
+//!   per-shard queues and trigger stealing; the steal order is
+//!   timing-dependent, the results must not be.
+
+use meliso::matrices::{generators, BandedSource, DenseSource, MatrixSource};
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::testing::faults::FaultBackend;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+const SCENARIO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Run `f` on a helper thread and fail the test if it does not finish in
+/// [`SCENARIO_TIMEOUT`] — a lost wakeup or admission deadlock trips this
+/// bound instead of wedging the whole test run.
+fn bounded<T: Send + 'static>(name: &str, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::Builder::new()
+        .name(format!("bounded-{name}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .expect("spawn scenario thread");
+    match rx.recv_timeout(SCENARIO_TIMEOUT) {
+        Ok(v) => v,
+        Err(_) => panic!("scenario {name:?} hung past {SCENARIO_TIMEOUT:?} (deadlock regression)"),
+    }
+}
+
+fn native() -> meliso::runtime::Backend {
+    Arc::new(NativeBackend::new())
+}
+
+fn config() -> SystemConfig {
+    SystemConfig::new(2, 2, 32)
+}
+
+fn opts() -> SolveOptions {
+    SolveOptions::default()
+        .with_device(Material::TaOxHfOx)
+        .with_seed(0x5EED)
+        .with_workers(3)
+}
+
+/// Mixed tenant set: dense, banded (regular sparsity) and power-law CSR
+/// (irregular sparsity, the work-stealing trigger).
+fn tenants(n: usize) -> Vec<Arc<dyn MatrixSource>> {
+    vec![
+        Arc::new(DenseSource::new(Matrix::standard_normal(n, n, 0xA1))),
+        Arc::new(BandedSource::new(n, 5, 1.0, 8.0, 0.25, 0xA2)),
+        Arc::new(generators::power_law_csr(n, 3, 4.0, 50.0, 0.2, 0xA3)),
+        Arc::new(DenseSource::new(Matrix::standard_normal(n, n, 0xA4))),
+    ]
+}
+
+fn inputs(srcs: &[Arc<dyn MatrixSource>], solves: usize) -> Vec<Vec<Vector>> {
+    srcs.iter()
+        .enumerate()
+        .map(|(m, s)| {
+            (0..solves)
+                .map(|k| Vector::standard_normal(s.ncols(), 0xB0 + (m * 100 + k) as u64))
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_tenants_match_dedicated_planes_bit_exact() {
+    bounded("concurrent-bit-identity", || {
+        let srcs = tenants(96);
+        let xs = inputs(&srcs, 3);
+
+        // References: each operand on its own dedicated plane, solved
+        // sequentially.
+        let dedicated: Vec<Vec<Vector>> = srcs
+            .iter()
+            .zip(&xs)
+            .map(|(s, stream)| {
+                let plane = PlaneHandle::build(s.as_ref(), &config(), &opts(), native()).unwrap();
+                let (id, _) = plane.program(s.as_ref()).unwrap();
+                stream
+                    .iter()
+                    .map(|x| {
+                        plane
+                            .execute_batch(id, std::slice::from_ref(x))
+                            .unwrap()
+                            .solves
+                            .remove(0)
+                            .y
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // One shared plane, one client thread per operand, all solving at
+        // once through clones of the same handle.
+        let plane =
+            PlaneHandle::build(srcs[0].as_ref(), &config(), &opts(), native()).unwrap();
+        let ids: Vec<OperandId> = srcs
+            .iter()
+            .map(|s| plane.program(s.as_ref()).unwrap().0)
+            .collect();
+        let shared: Vec<Vec<Vector>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = srcs
+                .iter()
+                .enumerate()
+                .map(|(m, _)| {
+                    let plane = plane.clone();
+                    let id = ids[m];
+                    let stream = &xs[m];
+                    scope.spawn(move || {
+                        stream
+                            .iter()
+                            .map(|x| {
+                                plane
+                                    .execute_batch(id, std::slice::from_ref(x))
+                                    .unwrap()
+                                    .solves
+                                    .remove(0)
+                                    .y
+                            })
+                            .collect::<Vec<Vector>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread"))
+                .collect()
+        });
+        assert_eq!(plane.resident_operands(), srcs.len());
+        for (m, (ded, shr)) in dedicated.iter().zip(&shared).enumerate() {
+            assert_eq!(ded, shr, "operand {m} diverged under concurrent multi-tenancy");
+        }
+    });
+}
+
+#[test]
+fn shard_panic_mid_concurrent_batches_never_deadlocks() {
+    bounded("concurrent-shard-panic", || {
+        let srcs = tenants(96);
+        let xs = inputs(&srcs, 2);
+        let backend = FaultBackend::panicking(NativeBackend::new());
+        let fault = backend.handle();
+        let plane =
+            PlaneHandle::build(srcs[0].as_ref(), &config(), &opts(), Arc::new(backend)).unwrap();
+        let ids: Vec<OperandId> = srcs
+            .iter()
+            .map(|s| plane.program(s.as_ref()).unwrap().0)
+            .collect();
+        // Arm the fault, then let every client fire at once: some batches
+        // die on the panicking shard, the rest on the poisoned plane.
+        // Every thread must get an error back — no hang, no lost client.
+        fault.fail_next_reads(true);
+        let errors: Vec<PlaneError> = std::thread::scope(|scope| {
+            let handles: Vec<_> = srcs
+                .iter()
+                .enumerate()
+                .map(|(m, _)| {
+                    let plane = plane.clone();
+                    let id = ids[m];
+                    let stream = &xs[m];
+                    scope.spawn(move || {
+                        let mut errs = Vec::new();
+                        for x in stream {
+                            if let Err(e) = plane.execute_batch(id, std::slice::from_ref(x)) {
+                                errs.push(e);
+                            }
+                        }
+                        errs
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("client thread"))
+                .collect()
+        });
+        assert!(!errors.is_empty(), "armed fault produced no errors");
+        for e in &errors {
+            assert!(
+                matches!(e, PlaneError::ShardDead(_) | PlaneError::Failed(_)),
+                "{e:?}"
+            );
+        }
+        // The plane is poisoned: later calls fail fast with the root cause.
+        assert!(plane.failure().is_some());
+        fault.fail_next_reads(false);
+        let err = plane
+            .execute_batch(ids[0], std::slice::from_ref(&xs[0][0]))
+            .unwrap_err();
+        assert!(err.to_string().contains("failed"), "{err}");
+    });
+}
+
+#[test]
+fn work_stealing_is_invisible_in_results() {
+    bounded("steal-determinism", || {
+        // A power-law CSR operand concentrates occupied chunks on a few
+        // block rows, leaving some shard queues long and others empty —
+        // exactly the imbalance batch workers steal across.  The steal
+        // schedule is timing-dependent and differs run to run; the solve
+        // must not.
+        let src = generators::power_law_csr(160, 4, 4.0, 60.0, 0.25, 0xC1);
+        let xs: Vec<Vector> = (0..3)
+            .map(|k| Vector::standard_normal(src.ncols(), 0xC2 + k))
+            .collect();
+        let run = |workers: usize, placement: Placement| {
+            let o = opts().with_workers(workers).with_placement(placement);
+            let plane = PlaneHandle::build(&src, &config(), &o, native()).unwrap();
+            let (id, _) = plane.program(&src).unwrap();
+            // Two rounds: the second round gives the timing-aware policy
+            // measured chunk times to redistribute by.
+            (0..2)
+                .map(|_| {
+                    plane
+                        .execute_batch(id, &xs)
+                        .unwrap()
+                        .solves
+                        .into_iter()
+                        .map(|s| s.y)
+                        .collect::<Vec<Vector>>()
+                })
+                .collect::<Vec<_>>()
+        };
+        let reference = run(1, Placement::RoundRobin);
+        for workers in [2, 3, 4] {
+            for placement in [
+                Placement::RoundRobin,
+                Placement::LoadBalanced,
+                Placement::SparsityAware,
+                Placement::TimingAware,
+            ] {
+                // Repeat each configuration so at least some runs take
+                // different steal schedules.
+                for rep in 0..2 {
+                    let got = run(workers, placement);
+                    assert_eq!(
+                        reference,
+                        got,
+                        "{workers} workers, {} (rep {rep}) diverged",
+                        placement.name()
+                    );
+                }
+            }
+        }
+    });
+}

@@ -128,7 +128,7 @@ fn irregular_operands_share_one_resident_plane() {
     let plane = solver.build_plane(a.as_ref()).unwrap();
     let sa = solver.open_session_on(&plane, a.clone()).unwrap();
     let sc = solver.open_session_on(&plane, c.clone()).unwrap();
-    assert_eq!(plane.lock().unwrap().resident_operands(), 2);
+    assert_eq!(plane.resident_operands(), 2);
     assert_eq!(sa.solve(&x).unwrap().y, dedicated_a);
     assert_eq!(sc.solve(&x).unwrap().y, dedicated_c);
 }
