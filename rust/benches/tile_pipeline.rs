@@ -1,0 +1,241 @@
+//! Tile-pipeline benchmark: leader-extracted dense tiles vs shard-side
+//! materialization from chunk descriptors.
+//!
+//! The historical `program` path extracts every occupied chunk as a dense
+//! zero-padded tile *on the leader thread* (double-buffered, but still a
+//! serial per-chunk stage) before dispatching it to the owning shard.
+//! `program_shared` instead ships a compact chunk descriptor — an `Arc`'d
+//! [`MatrixSource`] plus chunk coordinates — and each shard materializes
+//! its own tiles fused directly into conductance encoding.  On irregular
+//! CSR operands with many shards the leader stage stops bounding
+//! throughput.  This bench records, per operand (`sprand1k` / `powlaw1k`
+//! patterns, smaller in `--quick`):
+//!
+//! * **chunks/s** programming throughput of both paths at 8 shards,
+//! * the **leader extract-stage seconds**
+//!   (`meliso_plane_extract_seconds_total` delta: the borrowed path pays
+//!   it, the descriptor path retires it),
+//! * the **shard fused encode seconds**
+//!   (`meliso_shard_encode_seconds_total` delta, spread over the pool),
+//! * **bit-identity** — a batch solved on a leader-programmed residency
+//!   must equal the same batch on a descriptor-programmed residency
+//!   (always asserted, never gated).
+//!
+//! The perf thresholds — descriptor path ≥ 1.5× chunks/s on the irregular
+//! operands and leader extract-stage seconds reduced ≥ 4× — only assert
+//! under `MELISO_BENCH_ASSERT=1`, the repo convention for wall-clock
+//! claims on shared runners.
+//!
+//! Emits `BENCH_tile_pipeline.json` under `bench_results/`.
+//!
+//! Usage: `cargo bench --bench tile_pipeline [-- --quick --reps N]`
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::{generators, MatrixSource};
+use meliso::obs;
+use meliso::plane::PlaneHandle;
+use meliso::prelude::*;
+use meliso::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Sum a counter family across all its label series (shards, stages).
+fn counter_total(name: &str) -> f64 {
+    obs::global()
+        .snapshot()
+        .families
+        .iter()
+        .filter(|f| f.name == name)
+        .flat_map(|f| f.series.iter())
+        .map(|s| match s.value {
+            obs::registry::SeriesValue::Counter(v) => v,
+            _ => 0.0,
+        })
+        .sum()
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    // The extract/encode stage seconds this bench reports are metrics
+    // counters; record them regardless of the environment's MELISO_OBS.
+    obs::set_level(obs::ObsLevel::Metrics);
+
+    let n: usize = if args.quick { 256 } else { 1000 };
+    let cell = 32usize;
+    let workers = 8usize;
+    let reps = args.reps_or(2, 3, 5);
+    let seed = 0x711E_u64;
+    let system = SystemConfig::new(4, 2, cell); // 8 MCAs -> 8 shards
+    let opts = SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_seed(42)
+        .with_workers(workers)
+        .with_ground_truth(false);
+
+    // The registry's irregular testbed patterns (sprand1k / powlaw1k),
+    // generated at bench dimension.
+    let operands: Vec<(&str, Arc<dyn MatrixSource>)> = vec![
+        (
+            "sprand",
+            Arc::new(generators::sprand_spd_csr(n, 4, 4.0, 1.0e2, 0.2, seed ^ 1)),
+        ),
+        (
+            "powlaw",
+            Arc::new(generators::power_law_csr(n, 3, 4.0, 1.0e2, 0.2, seed ^ 2)),
+        ),
+    ];
+
+    println!(
+        "# tile pipeline: {n}x{n} CSR operands on 4x2 MCAs of {cell}², {workers} shards, \
+         {reps} reps\n"
+    );
+
+    let hard_assert = std::env::var("MELISO_BENCH_ASSERT").as_deref() == Ok("1");
+    let mut op_series = Vec::new();
+    for (name, src) in &operands {
+        // Programming throughput, best-of-reps per path.  A fresh plane
+        // per rep so every rep programs into empty tile slots.
+        let mut leader_wall = f64::INFINITY;
+        let mut shard_wall = f64::INFINITY;
+        let mut chunks = 0usize;
+        let mut leader_extract_s = 0.0;
+        let mut shard_extract_s = 0.0;
+        let mut leader_encode_s = 0.0;
+        let mut shard_encode_s = 0.0;
+        for _ in 0..reps {
+            let plane = PlaneHandle::build(src.as_ref(), &system, &opts, backend()).unwrap();
+            let (ex0, en0) = (
+                counter_total(obs::names::PLANE_EXTRACT_SECONDS),
+                counter_total(obs::names::SHARD_ENCODE_SECONDS),
+            );
+            let t = Instant::now();
+            let (_, report) = plane.program(src.as_ref()).unwrap();
+            leader_wall = leader_wall.min(t.elapsed().as_secs_f64());
+            leader_extract_s += counter_total(obs::names::PLANE_EXTRACT_SECONDS) - ex0;
+            leader_encode_s += counter_total(obs::names::SHARD_ENCODE_SECONDS) - en0;
+            chunks = report.chunks_resident;
+
+            let plane = PlaneHandle::build(src.as_ref(), &system, &opts, backend()).unwrap();
+            let (ex0, en0) = (
+                counter_total(obs::names::PLANE_EXTRACT_SECONDS),
+                counter_total(obs::names::SHARD_ENCODE_SECONDS),
+            );
+            let t = Instant::now();
+            let (_, report) = plane.program_shared(src.clone()).unwrap();
+            shard_wall = shard_wall.min(t.elapsed().as_secs_f64());
+            shard_extract_s += counter_total(obs::names::PLANE_EXTRACT_SECONDS) - ex0;
+            shard_encode_s += counter_total(obs::names::SHARD_ENCODE_SECONDS) - en0;
+            assert_eq!(
+                chunks, report.chunks_resident,
+                "{name}: paths programmed different chunk sets"
+            );
+        }
+        let leader_cps = chunks as f64 / leader_wall.max(1e-12);
+        let shard_cps = chunks as f64 / shard_wall.max(1e-12);
+        let speedup = shard_cps / leader_cps.max(1e-12);
+        // The borrowed path pays the leader extract stage every rep; the
+        // descriptor path must retire it (shards extract instead).
+        let extract_reduction =
+            (leader_extract_s / reps as f64) / (shard_extract_s / reps as f64).max(1e-9);
+
+        // Bit-identity across materialization paths — always asserted.
+        let xs: Vec<Vector> = (0..2u64)
+            .map(|k| Vector::standard_normal(n, 0xB0 + k))
+            .collect();
+        let solve = |shared: bool| -> Vec<Vector> {
+            let plane = PlaneHandle::build(src.as_ref(), &system, &opts, backend()).unwrap();
+            let id = if shared {
+                plane.program_shared(src.clone()).unwrap().0
+            } else {
+                plane.program(src.as_ref()).unwrap().0
+            };
+            plane
+                .execute_batch(id, &xs)
+                .unwrap()
+                .solves
+                .into_iter()
+                .map(|s| s.y)
+                .collect()
+        };
+        assert_eq!(
+            solve(false),
+            solve(true),
+            "{name}: descriptor materialization changed the result"
+        );
+
+        println!(
+            "{name}: {chunks} chunks  leader {leader_wall:>7.3} s ({leader_cps:>9.1} chunks/s, \
+             extract {:.3} s/rep)  descriptor {shard_wall:>7.3} s ({shard_cps:>9.1} chunks/s)  \
+             -> {speedup:.2}x, extract stage /{extract_reduction:.0}",
+            leader_extract_s / reps as f64,
+        );
+        if hard_assert {
+            assert!(
+                speedup >= 1.5,
+                "{name}: descriptor path {speedup:.2}x < 1.5x leader chunks/s"
+            );
+            assert!(
+                extract_reduction >= 4.0,
+                "{name}: leader extract stage only reduced {extract_reduction:.1}x (< 4x)"
+            );
+        }
+
+        let mut j = Json::obj();
+        j.set("operand", Json::Str(name.to_string()))
+            .set("chunks", Json::Num(chunks as f64))
+            .set("leader_wall_s", Json::Num(leader_wall))
+            .set("leader_chunks_per_s", Json::Num(leader_cps))
+            .set(
+                "leader_extract_s_per_rep",
+                Json::Num(leader_extract_s / reps as f64),
+            )
+            .set(
+                "leader_encode_s_per_rep",
+                Json::Num(leader_encode_s / reps as f64),
+            )
+            .set("shard_wall_s", Json::Num(shard_wall))
+            .set("shard_chunks_per_s", Json::Num(shard_cps))
+            .set(
+                "shard_extract_s_per_rep",
+                Json::Num(shard_extract_s / reps as f64),
+            )
+            .set(
+                "shard_encode_s_per_rep",
+                Json::Num(shard_encode_s / reps as f64),
+            )
+            .set("speedup", Json::Num(speedup))
+            .set("extract_stage_reduction", Json::Num(extract_reduction))
+            .set("bit_identical", Json::Bool(true));
+        op_series.push(j);
+    }
+
+    let mut counters = Json::obj();
+    counters
+        .set(
+            obs::names::SHARD_ENCODE_SECONDS,
+            Json::Num(counter_total(obs::names::SHARD_ENCODE_SECONDS)),
+        )
+        .set(
+            obs::names::SUBMCA_STEALS,
+            Json::Num(counter_total(obs::names::SUBMCA_STEALS)),
+        );
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("tile_pipeline".to_string()))
+        .set("n", Json::Num(n as f64))
+        .set("cell", Json::Num(cell as f64))
+        .set("workers", Json::Num(workers as f64))
+        .set("reps", Json::Num(reps as f64))
+        .set("operands", Json::Arr(op_series))
+        .set("counters", counters);
+    args.write_result("BENCH_tile_pipeline.json", &j.pretty());
+
+    if hard_assert {
+        println!("\nPASS: bit-identical paths, descriptor >=1.5x chunks/s, extract stage >=4x down");
+    } else {
+        println!(
+            "\nDONE (perf thresholds reported, not asserted — set MELISO_BENCH_ASSERT=1 to \
+             enforce >=1.5x chunks/s and >=4x extract-stage reduction)"
+        );
+    }
+}

@@ -56,6 +56,26 @@ pub trait MatrixSource: Send + Sync {
         (0, self.ncols())
     }
 
+    /// Occupied chunk-column *set* for rows `[r0, r0 + rows)` at chunk
+    /// width `tile`: a sorted, deduplicated list of chunk-column indices
+    /// (`j / tile`) that may hold nonzeros.  Unlike
+    /// [`occupied_cols`](Self::occupied_cols), a set can have interior
+    /// gaps, so patterns like arrowheads and block diagonals — whose spans
+    /// cover hole chunks between the first and last occupied column — plan
+    /// exactly their occupied chunks.  The default derives the set from
+    /// the span (no gap information); sources with exact structure
+    /// (e.g. [`CsrSource`]) override it.
+    fn occupied_col_chunks(&self, r0: usize, rows: usize, tile: usize) -> Vec<usize> {
+        if tile == 0 {
+            return Vec::new();
+        }
+        let (lo, hi) = self.occupied_cols(r0, rows);
+        if lo >= hi {
+            return Vec::new();
+        }
+        (lo / tile..crate::util::ceil_div(hi, tile)).collect()
+    }
+
     /// Upper bound on |entries| (used for conductance scaling decisions).
     fn max_abs(&self) -> f64;
 }
@@ -342,6 +362,20 @@ mod tests {
         let m = Matrix::standard_normal(10, 10, 1);
         let s = DenseSource::new(m);
         assert_eq!(s.occupied_cols(0, 4), (0, 10));
+    }
+
+    #[test]
+    fn default_occupied_col_chunks_covers_the_span() {
+        let s = BandedSource::new(1000, 8, 1.0, 10.0, 0.2, 5);
+        // Span [492, 540) at tile 32 -> chunk columns 15..17 (inclusive).
+        assert_eq!(s.occupied_col_chunks(500, 32, 32), vec![15, 16]);
+        assert_eq!(s.occupied_col_chunks(0, 32, 32), vec![0, 1]);
+        // Empty rows yield an empty set, and tile 0 never divides by zero.
+        assert!(s.occupied_col_chunks(2000, 32, 32).is_empty());
+        assert!(s.occupied_col_chunks(0, 32, 0).is_empty());
+        // Dense sources cover every chunk column.
+        let d = DenseSource::new(Matrix::standard_normal(10, 10, 1));
+        assert_eq!(d.occupied_col_chunks(0, 4, 4), vec![0, 1, 2]);
     }
 
     #[test]

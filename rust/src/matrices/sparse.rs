@@ -268,6 +268,27 @@ impl MatrixSource for CsrSource {
         }
     }
 
+    /// Exact occupied set: the chunk columns actually holding stored
+    /// entries, sorted and deduplicated — O(nnz in rows).  Interior gaps
+    /// (an arrowhead row chunk occupies column chunk 0 and its diagonal
+    /// chunk, nothing between) disappear from planning entirely, where the
+    /// span-based default would still enumerate every hole chunk just to
+    /// discard it with a `block_is_zero` probe.
+    fn occupied_col_chunks(&self, r0: usize, rows: usize, tile: usize) -> Vec<usize> {
+        if r0 >= self.nrows || rows == 0 || tile == 0 {
+            return Vec::new();
+        }
+        let r_end = (r0.saturating_add(rows)).min(self.nrows);
+        let mut chunks: Vec<usize> =
+            self.col_idx[self.row_ptr[r0]..self.row_ptr[r_end]]
+                .iter()
+                .map(|&j| j / tile)
+                .collect();
+        chunks.sort_unstable();
+        chunks.dedup();
+        chunks
+    }
+
     fn max_abs(&self) -> f64 {
         self.max_abs
     }
@@ -393,6 +414,26 @@ mod tests {
         assert_eq!(a.occupied_cols(2, 2), (40, 41));
         assert_eq!(a.occupied_cols(0, 4), (7, 91));
         assert_eq!(a.occupied_cols(9, 3), (0, 0)); // past the matrix
+    }
+
+    #[test]
+    fn occupied_col_chunks_has_interior_gaps() {
+        // Arrowhead row chunk: entries in column chunk 0 and its diagonal
+        // chunk only — the set skips the hole chunks between them that the
+        // span-derived default would enumerate.
+        let a = CsrSource::from_triplets(
+            256,
+            256,
+            &[(128, 3, 1.0), (129, 130, 2.0), (135, 250, -1.0)],
+        )
+        .unwrap();
+        assert_eq!(a.occupied_col_chunks(128, 32, 32), vec![0, 4, 7]);
+        assert_eq!(a.occupied_col_chunks(128, 1, 32), vec![0]);
+        assert_eq!(a.occupied_col_chunks(0, 32, 32), Vec::<usize>::new());
+        assert_eq!(a.occupied_col_chunks(300, 32, 32), Vec::<usize>::new());
+        // Duplicate chunk hits dedupe; result stays sorted.
+        let b = CsrSource::from_triplets(4, 64, &[(0, 5, 1.0), (1, 7, 1.0), (2, 40, 1.0)]).unwrap();
+        assert_eq!(b.occupied_col_chunks(0, 4, 16), vec![0, 2]);
     }
 
     #[test]

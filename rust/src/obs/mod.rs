@@ -173,6 +173,14 @@ pub mod names {
     pub const SHARD_CHUNKS: &str = "meliso_shard_chunks_executed_total";
     /// MCAs a shard claimed from another worker's batch queue (counter, label `shard`).
     pub const SHARD_STEALS: &str = "meliso_shard_steals_total";
+    /// Sub-MCA steal participations: a shard joined the chunk grid of an
+    /// MCA it does not own and executed at least one chunk (counter,
+    /// label `shard`).
+    pub const SUBMCA_STEALS: &str = "meliso_subMCA_steals_total";
+    /// Per-shard seconds spent in the fused extract+encode stage —
+    /// materializing a tile from its chunk descriptor and write–verifying
+    /// it onto the crossbar (counter, label `shard`).
+    pub const SHARD_ENCODE_SECONDS: &str = "meliso_shard_encode_seconds_total";
     /// Seconds the leader spent in supervised gathers (counter).
     pub const PLANE_GATHER_WAIT: &str = "meliso_plane_gather_wait_seconds_total";
     /// Tiles extracted + dispatched by the leader (counter).

@@ -32,23 +32,43 @@
 //!   other walks interleave on the same shard.
 //! * Batch execution noise is *counter-based*
 //!   ([`exec_stream_seed`](super::exec_stream_seed)): a pure function of
-//!   `(seed, mca, solve index, chunk)`.  Work-stealing can reorder which
-//!   worker runs which MCA, but never what noise a given solve draws —
-//!   and a whole MCA is claimed at once, so even its energy-ledger
-//!   accumulation order is fixed.
+//!   `(seed, mca, solve index, chunk)`.  Batch work is claimed at
+//!   **sub-MCA granularity** — one chunk × the whole batch, off a
+//!   per-MCA atomic grid cursor — and every claimant, owner or thief,
+//!   executes through the owner slot's executor under its lock.  So
+//!   stealing can reorder which worker runs which chunk, but never what
+//!   noise a given solve draws.  The one thing chunk-level interleaving
+//!   relaxes is the order one MCA's `f64` energy ledger accumulates its
+//!   chunks: ulp-level wobble in energy *reporting*, never in results.
 //! * Solve indices are allocated atomically per operand at admission, so
 //!   concurrent batches on one operand serialize only that counter.
 //!
-//! ## Double-buffered extraction
+//! ## Tile materialization: two walk modes
 //!
-//! `scatter_walk` splits the leader into a producer/consumer pair over a
-//! bounded channel: the producer extracts tile `N + 1` while the consumer
-//! dispatches tile `N` to the shards (which execute `N - 1`…).  Dispatch
-//! order — and therefore every RNG draw — is exactly the serial walk's.
+//! `scatter_walk` streams the occupied chunks of a plan to the shards in
+//! one of two modes, selected by its `WalkSource`:
+//!
+//! * **Borrowed** ([`program`](PlaneHandle::program) /
+//!   [`execute_once`](PlaneHandle::execute_once)): the leader extracts
+//!   each dense tile itself, double-buffered over a bounded channel —
+//!   a producer thread extracts tile `N + 1` while the consumer
+//!   dispatches tile `N` to the shards (which encode `N - 1`…).
+//! * **Shared** ([`program_shared`](PlaneHandle::program_shared) /
+//!   [`execute_once_shared`](PlaneHandle::execute_once_shared)): each job
+//!   carries a compact chunk descriptor (an `Arc` of the source plus the
+//!   chunk's coordinates) and the *shard* extracts the tile, fused
+//!   directly into conductance encoding.  The leader's per-chunk work
+//!   drops to enumerate + dispatch, so materialization scales with the
+//!   pool instead of one producer thread (`benches/tile_pipeline.rs`
+//!   measures both paths and hard-asserts they are bit-identical).
+//!
+//! Either way dispatch order per MCA — and therefore every programming
+//! RNG draw — is exactly the serial walk's.
 
 use super::error::PlaneError;
 use super::placement::{self, Placement};
-use super::shard::{self, ShardContext, ShardJob, ShardMsg};
+use super::shard::{self, ShardContext, ShardJob, ShardMsg, TilePayload};
+use super::timing::{self, McaTiming};
 use super::{reduce_partials, BatchOutcome, OperandId, ProgramReport, ServeSolve, TileAllocator};
 use crate::config::{SolveOptions, SystemConfig};
 use crate::ec::{ProgrammedTile, TileExecutor};
@@ -61,7 +81,7 @@ use crate::runtime::Backend;
 use crate::virtualization::{ChunkPlan, ChunkSpec};
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -108,36 +128,6 @@ pub(crate) fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 pub(crate) struct McaSlot {
     pub(crate) exec: Option<TileExecutor>,
     pub(crate) chunks: Vec<(ChunkSpec, ProgrammedTile)>,
-}
-
-/// Measured execution wall time of one MCA, accumulated across batches.
-/// Feeds the timing-aware batch distribution.
-#[derive(Default)]
-pub(crate) struct McaTiming {
-    nanos: AtomicU64,
-    chunks: AtomicU64,
-}
-
-impl McaTiming {
-    pub(crate) fn record(&self, secs: f64, chunks: u64) {
-        if chunks == 0 {
-            return;
-        }
-        self.nanos
-            .fetch_add((secs * 1e9).round() as u64, Ordering::Relaxed);
-        self.chunks.fetch_add(chunks, Ordering::Relaxed);
-    }
-
-    /// Mean measured nanoseconds per chunk execution, `None` until the
-    /// MCA has executed at least once.
-    fn mean_nanos(&self) -> Option<f64> {
-        let c = self.chunks.load(Ordering::Relaxed);
-        if c == 0 {
-            None
-        } else {
-            Some(self.nanos.load(Ordering::Relaxed) as f64 / c as f64)
-        }
-    }
 }
 
 /// Shared per-operand state: the plan plus one [`McaSlot`] per MCA.
@@ -215,7 +205,8 @@ pub(crate) struct OnceWalk {
 }
 
 /// One batch's shared work description: the operand, the input vectors,
-/// and the per-shard MCA queues workers claim from (and steal between).
+/// the per-shard MCA queues workers claim from (and steal between), and
+/// one chunk-grid cursor per MCA for sub-MCA claims.
 pub(crate) struct BatchWalk {
     pub(crate) entry: Arc<OperandEntry>,
     pub(crate) xs: Arc<Vec<Vector>>,
@@ -224,13 +215,19 @@ pub(crate) struct BatchWalk {
     /// chunks of this operand appear, each in exactly one queue).
     queues: Vec<Vec<usize>>,
     cursors: Vec<AtomicUsize>,
+    /// Per-MCA chunk-grid cursors: index of the next unclaimed resident
+    /// chunk in that MCA's slot.  *All* execution — by the queue-assigned
+    /// worker or a thief — claims chunks through these, which is what
+    /// makes sub-MCA stealing a pure scheduling change.
+    pub(crate) grid: Vec<AtomicUsize>,
 }
 
 impl BatchWalk {
-    /// Claim the next MCA for `shard`: its own queue first, then steal
+    /// Claim a starting MCA for `shard`: its own queue first, then steal
     /// from the other workers' queues (round-robin from the next shard).
-    /// The per-queue atomic cursor hands each index out exactly once, so
-    /// an MCA is executed by exactly one worker per batch.
+    /// The per-queue atomic cursor hands each index out exactly once;
+    /// the MCA's *chunks* are then claimed one by one off its grid
+    /// cursor, so a thief arriving later still splits the remainder.
     pub(crate) fn claim(&self, shard: usize) -> Option<(usize, bool)> {
         let shards = self.queues.len();
         for off in 0..shards {
@@ -242,6 +239,24 @@ impl BatchWalk {
             }
         }
         None
+    }
+
+    /// Pick a sub-MCA steal target: the MCA with the most unclaimed
+    /// chunks left on its grid, or `None` when every grid is exhausted.
+    /// Grid cursors only move forward, so repeated calls terminate; a
+    /// cursor read racing a concurrent claim at worst sends the thief to
+    /// a grid that drains on arrival (it executes nothing and rescans).
+    pub(crate) fn steal_target(&self) -> Option<usize> {
+        let mut best: Option<(usize, usize)> = None;
+        for (mca, count) in self.entry.chunks_per_mca.iter().enumerate() {
+            let total = count.load(Ordering::Relaxed);
+            let claimed = self.grid[mca].load(Ordering::Relaxed);
+            let remaining = total.saturating_sub(claimed);
+            if remaining > 0 && best.map_or(true, |(_, r)| remaining > r) {
+                best = Some((mca, remaining));
+            }
+        }
+        best.map(|(mca, _)| mca)
     }
 }
 
@@ -356,7 +371,7 @@ impl PlaneHandle {
         let mcas = plan.geometry.mcas();
         let shards = opts.workers.max(1).min(mcas);
         let policy = opts.placement.policy();
-        let assignment = policy.assign(&plan, source, shards);
+        let mut assignment = policy.assign(&plan, source, shards);
         if assignment.len() != mcas || assignment.iter().any(|&s| s >= shards) {
             return Err(PlaneError::Build(format!(
                 "placement {} produced a malformed assignment ({} entries for {mcas} MCAs, \
@@ -366,8 +381,30 @@ impl PlaneHandle {
             )));
         }
 
-        let timings: Arc<Vec<McaTiming>> =
-            Arc::new((0..mcas).map(|_| McaTiming::default()).collect());
+        // Timings are shared per (seed, geometry) domain across plane
+        // builds, so measurements taken while one plane served batches
+        // feed the *build-time* assignment of the next.  Placement never
+        // affects numerics, only scheduling.
+        let timings = timing::domain(
+            timing::DomainKey {
+                seed: opts.seed,
+                tile_rows: config.geometry().tile_rows,
+                tile_cols: config.geometry().tile_cols,
+                cell_size: tile,
+            },
+            mcas,
+        );
+        if opts.placement == Placement::TimingAware
+            && timings.iter().any(|t| t.mean_nanos().is_some())
+        {
+            let measured: u64 = timings.iter().map(|t| t.samples()).sum();
+            assignment = timed_split(&plan.assignments_per_mca(), &timings, shards);
+            crate::log_info!(
+                "plane",
+                "timing-aware build: warm-started the MCA assignment from {measured} measured \
+                 chunk executions"
+            );
+        }
         let mut senders = Vec::with_capacity(shards);
         let mut handles = Vec::with_capacity(shards);
         for s in 0..shards {
@@ -537,10 +574,36 @@ impl PlaneHandle {
         &self,
         source: &dyn MatrixSource,
     ) -> Result<(OperandId, ProgramReport), PlaneError> {
+        self.program_walk(WalkSource::Borrowed(source))
+    }
+
+    /// [`program`](Self::program) over a shared (`Arc`'d) source: jobs
+    /// carry a compact chunk descriptor instead of a leader-extracted
+    /// dense tile, and each *shard* materializes its tiles fused into
+    /// conductance encoding.  Bit-identical to [`program`](Self::program)
+    /// — extraction is a pure read and per-MCA dispatch order is
+    /// unchanged — but the leader's serial per-chunk stage shrinks to
+    /// enumerate + dispatch, so programming throughput scales with the
+    /// shard pool.  Prefer this whenever the source is already shared
+    /// (the serving sessions do).
+    pub fn program_shared(
+        &self,
+        source: Arc<dyn MatrixSource>,
+    ) -> Result<(OperandId, ProgramReport), PlaneError> {
+        self.program_walk(WalkSource::Shared(source))
+    }
+
+    fn program_walk(
+        &self,
+        source: WalkSource<'_>,
+    ) -> Result<(OperandId, ProgramReport), PlaneError> {
         let sh = &*self.shared;
         let start = Instant::now();
         let plan_span = obs::span_start();
-        let plan = ChunkPlan::new(sh.config.geometry(), source.nrows(), source.ncols());
+        let plan = {
+            let src = source.as_dyn();
+            ChunkPlan::new(sh.config.geometry(), src.nrows(), src.ncols())
+        };
         let (m, n) = (plan.m, plan.n);
         note_plan(plan_span, "program", plan.total_chunks(), m, n);
         let op = {
@@ -558,13 +621,13 @@ impl PlaneHandle {
         let (dispatched, walk_err) = {
             let slots = &mut slots;
             let entry = &entry;
-            scatter_walk(sh, &plan, source, &reply_tx, |spec, a_tile| {
+            scatter_walk(sh, &plan, &source, &reply_tx, |spec, payload| {
                 let slot = lock_unpoisoned(&sh.structural).alloc.alloc(spec.mca_index)?;
                 slots.push((spec.mca_index, slot));
                 entry.chunks_per_mca[spec.mca_index].fetch_add(1, Ordering::Relaxed);
                 Ok(ShardJob::Program {
                     spec,
-                    a_tile,
+                    payload,
                     entry: entry.clone(),
                     reply: reply_tx.clone(),
                 })
@@ -670,8 +733,12 @@ impl PlaneHandle {
     ///
     /// Work distribution: each worker starts from the MCAs the placement
     /// (or, under [`Placement::TimingAware`], a measured-wall-time LPT
-    /// split) handed it, then **steals** whole MCAs from slower workers,
-    /// so irregular sparsity patterns cannot idle half the pool.
+    /// split) handed it, steals whole MCAs from slower workers' queues,
+    /// and — once every queue is empty — steals at **sub-MCA
+    /// granularity**, joining the chunk grid of whichever MCA has the
+    /// most unclaimed chunks.  A single dominating MCA (an arrowhead's
+    /// spike column) therefore spreads over the whole pool instead of
+    /// serializing on one worker.
     ///
     /// A failed batch (chunk-level shard error) leaves the residency
     /// consistent: ledgers are fully synced and the solve counter has
@@ -726,6 +793,9 @@ impl PlaneHandle {
             first_solve,
             queues: self.distribute(&entry),
             cursors: (0..sh.senders.len()).map(|_| AtomicUsize::new(0)).collect(),
+            grid: (0..entry.plan.geometry.mcas())
+                .map(|_| AtomicUsize::new(0))
+                .collect(),
         });
         let (reply_tx, reply_rx) = mpsc::channel::<ShardMsg>();
         // Best-effort broadcast: a dead shard (its receiver dropped after
@@ -844,25 +914,7 @@ impl PlaneHandle {
             .map(|c| c.load(Ordering::Relaxed))
             .collect();
         let owner: Vec<usize> = if sh.opts.placement == Placement::TimingAware {
-            let means: Vec<Option<f64>> = sh.timings.iter().map(|t| t.mean_nanos()).collect();
-            let observed: Vec<f64> = means.iter().filter_map(|m| *m).collect();
-            let fallback = if observed.is_empty() {
-                1.0
-            } else {
-                observed.iter().sum::<f64>() / observed.len() as f64
-            };
-            let weights: Vec<usize> = counts
-                .iter()
-                .zip(&means)
-                .map(|(&c, mean)| {
-                    if c == 0 {
-                        0
-                    } else {
-                        (mean.unwrap_or(fallback).max(1.0) * c as f64).round() as usize + 1
-                    }
-                })
-                .collect();
-            placement::balance(&weights, shards)
+            timed_split(&counts, &sh.timings, shards)
         } else {
             sh.assignment.clone()
         };
@@ -951,6 +1003,26 @@ impl PlaneHandle {
         source: &dyn MatrixSource,
         x: &Vector,
     ) -> Result<SolveReport, PlaneError> {
+        self.execute_once_walk(WalkSource::Borrowed(source), x)
+    }
+
+    /// [`execute_once`](Self::execute_once) over a shared (`Arc`'d)
+    /// source: the shards materialize their own tiles from chunk
+    /// descriptors, fused into the encode.  Bit-identical to
+    /// [`execute_once`](Self::execute_once) for the same source and `x`.
+    pub fn execute_once_shared(
+        &self,
+        source: Arc<dyn MatrixSource>,
+        x: &Vector,
+    ) -> Result<SolveReport, PlaneError> {
+        self.execute_once_walk(WalkSource::Shared(source), x)
+    }
+
+    fn execute_once_walk(
+        &self,
+        source: WalkSource<'_>,
+        x: &Vector,
+    ) -> Result<SolveReport, PlaneError> {
         let sh = &*self.shared;
         {
             let st = lock_unpoisoned(&sh.structural);
@@ -966,7 +1038,10 @@ impl PlaneHandle {
         }
         let start = Instant::now();
         let plan_span = obs::span_start();
-        let plan = ChunkPlan::new(sh.config.geometry(), source.nrows(), source.ncols());
+        let plan = {
+            let src = source.as_dyn();
+            ChunkPlan::new(sh.config.geometry(), src.nrows(), src.ncols())
+        };
         let (m, n) = (plan.m, plan.n);
         note_plan(plan_span, "one-shot", plan.total_chunks(), m, n);
         if x.len() != n {
@@ -983,11 +1058,11 @@ impl PlaneHandle {
         let (reply_tx, reply_rx) = mpsc::channel::<ShardMsg>();
         let (dispatched, walk_err) = {
             let walk = &walk;
-            scatter_walk(sh, &plan, source, &reply_tx, |spec, a_tile| {
+            scatter_walk(sh, &plan, &source, &reply_tx, |spec, payload| {
                 Ok(ShardJob::RunOnce {
                     spec,
                     x_chunk: x.slice_padded(spec.col0, tile),
-                    a_tile,
+                    payload,
                     walk: walk.clone(),
                     reply: reply_tx.clone(),
                 })
@@ -1063,7 +1138,7 @@ impl PlaneHandle {
         // Ground truth (opt-out: O(m·n) host work, infeasible at 65k²).
         let mut report = SolveReport::empty(m);
         if sh.opts.ground_truth {
-            let b = source.matvec(x);
+            let b = source.as_dyn().matvec(x);
             report.rel_err_l2 = crate::metrics::rel_err_l2(&y, &b);
             report.rel_err_inf = crate::metrics::rel_err_inf(&y, &b);
         } else {
@@ -1255,15 +1330,65 @@ fn note_gather(clock: Option<Instant>, span: Option<obs::SpanTimer>, path: &'sta
     }
 }
 
-/// Stream the occupied chunks of `plan` to the shards with the extraction
-/// **double-buffered**: a producer thread enumerates
-/// [`ChunkPlan::nonzero_chunks`] and extracts one zero-padded tile at a
-/// time (unwind-caught) into a bounded channel, while the calling thread
-/// builds the job via `make_job` (which may refuse — e.g. tile-slot
-/// exhaustion) and dispatches to the owning shard.  Tile `N + 1` is
-/// extracted while tile `N` dispatches; dispatch order is exactly the
-/// serial walk's, so determinism is untouched.  Returns
-/// `(dispatched, walk_err)`.
+/// How a scatter walk reaches its operand: borrowed (the leader extracts
+/// dense tiles itself, double-buffered) or shared (jobs carry an `Arc`'d
+/// chunk descriptor and the shards extract, fused into the encode).
+pub(crate) enum WalkSource<'a> {
+    Borrowed(&'a dyn MatrixSource),
+    Shared(Arc<dyn MatrixSource>),
+}
+
+impl WalkSource<'_> {
+    fn as_dyn(&self) -> &dyn MatrixSource {
+        match self {
+            WalkSource::Borrowed(s) => *s,
+            WalkSource::Shared(s) => s.as_ref(),
+        }
+    }
+}
+
+/// LPT split of MCAs over shards weighted by *measured* mean execution
+/// time per chunk (`mean_nanos × chunks`); MCAs without measurements get
+/// the mean of the observed means.  Used by the timing-aware batch
+/// distribution and, once any history exists, by the timing-aware
+/// build-time assignment.
+fn timed_split(counts: &[usize], timings: &[McaTiming], shards: usize) -> Vec<usize> {
+    let means: Vec<Option<f64>> = timings.iter().map(|t| t.mean_nanos()).collect();
+    let observed: Vec<f64> = means.iter().filter_map(|m| *m).collect();
+    let fallback = if observed.is_empty() {
+        1.0
+    } else {
+        observed.iter().sum::<f64>() / observed.len() as f64
+    };
+    let weights: Vec<usize> = counts
+        .iter()
+        .zip(&means)
+        .map(|(&c, mean)| {
+            if c == 0 {
+                0
+            } else {
+                (mean.unwrap_or(fallback).max(1.0) * c as f64).round() as usize + 1
+            }
+        })
+        .collect();
+    placement::balance(&weights, shards)
+}
+
+/// Stream the occupied chunks of `plan` to the shards.  The calling
+/// thread builds each job via `make_job` (which may refuse — e.g.
+/// tile-slot exhaustion) and dispatches it to the owning shard; per-MCA
+/// dispatch order is exactly the serial walk's either way, so
+/// determinism is untouched.  Returns `(dispatched, walk_err)`.
+///
+/// * [`WalkSource::Borrowed`]: a producer thread enumerates
+///   [`ChunkPlan::nonzero_chunks`] and extracts one zero-padded tile at
+///   a time (unwind-caught) into a bounded channel — tile `N + 1` is
+///   extracted while tile `N` dispatches.
+/// * [`WalkSource::Shared`]: no leader-side extraction at all — jobs
+///   carry [`TilePayload::Descriptor`]s and the shards extract, so the
+///   leader's extraction counters stay untouched and the per-chunk cost
+///   moves into the shards' fused encode stage
+///   (`meliso_shard_encode_seconds_total`).
 ///
 /// The walk is **always closed**: every shard gets a best-effort
 /// [`ShardJob::Seal`] even after an error, so the matching supervised
@@ -1271,106 +1396,144 @@ fn note_gather(clock: Option<Instant>, span: Option<obs::SpanTimer>, path: &'sta
 fn scatter_walk<F>(
     sh: &PlaneShared,
     plan: &ChunkPlan,
-    source: &dyn MatrixSource,
+    source: &WalkSource<'_>,
     reply: &mpsc::Sender<ShardMsg>,
     mut make_job: F,
 ) -> (usize, Option<PlaneError>)
 where
-    F: FnMut(ChunkSpec, Matrix) -> Result<ShardJob, PlaneError>,
+    F: FnMut(ChunkSpec, TilePayload) -> Result<ShardJob, PlaneError>,
 {
-    let tile = plan.geometry.cell_size;
     let mut dispatched = 0usize;
     let mut walk_err: Option<PlaneError> = None;
-    let (tile_tx, tile_rx) =
-        mpsc::sync_channel::<Result<(ChunkSpec, Matrix), String>>(EXTRACT_QUEUE_DEPTH);
-    std::thread::scope(|scope| {
-        let producer = scope.spawn(move || {
-            let extract_metrics = if obs::metrics_on() {
-                let g = obs::global();
-                Some((
-                    g.counter(
-                        obs::names::PLANE_TILES_EXTRACTED,
-                        "Tiles extracted and dispatched by the leader",
-                        &[],
-                    ),
-                    g.counter(
-                        obs::names::PLANE_EXTRACT_SECONDS,
-                        "Seconds the leader spent extracting tiles",
-                        &[],
-                    ),
-                ))
-            } else {
-                None
-            };
-            let mut iter = plan.nonzero_chunks(source);
+    // Dispatch one job, shared by both modes.  Returns `false` when the
+    // walk must stop (job refused or the shard is gone).
+    let mut dispatch = |spec: ChunkSpec,
+                        payload: TilePayload,
+                        dispatched: &mut usize,
+                        walk_err: &mut Option<PlaneError>| {
+        let job = match make_job(spec, payload) {
+            Ok(job) => job,
+            Err(e) => {
+                *walk_err = Some(e);
+                return false;
+            }
+        };
+        let s = sh.assignment[spec.mca_index];
+        if sh.senders[s].send(job).is_err() {
+            *walk_err = Some(PlaneError::ShardDead(format!("shard {s} died mid-walk")));
+            return false;
+        }
+        *dispatched += 1;
+        true
+    };
+    match source {
+        WalkSource::Shared(src) => {
+            let mut iter = plan.nonzero_chunks(src.as_ref());
             loop {
-                let spec = match next_chunk(&mut iter) {
-                    Ok(Some(spec)) => spec,
+                match next_chunk(&mut iter) {
+                    Ok(Some(spec)) => {
+                        let payload = TilePayload::Descriptor(src.clone());
+                        if !dispatch(spec, payload, &mut dispatched, &mut walk_err) {
+                            break;
+                        }
+                    }
                     Ok(None) => break,
                     Err(e) => {
-                        let _ = tile_tx.send(Err(e));
+                        walk_err = Some(PlaneError::Chunk(e));
                         break;
                     }
-                };
-                let span = obs::span_start();
-                let t0 = extract_metrics.as_ref().map(|_| Instant::now());
-                let extracted = extract_tile(source, &spec, tile);
-                if let (Some((tiles, secs)), Some(t0)) = (&extract_metrics, t0) {
-                    tiles.inc();
-                    secs.add(t0.elapsed().as_secs_f64());
-                }
-                if let Some(sp) = span {
-                    sp.finish(
-                        Stage::Extract,
-                        Lane::Leader,
-                        vec![
-                            ("chunk", format!("({},{})", spec.block_row, spec.block_col)),
-                            ("mca", spec.mca_index.to_string()),
-                        ],
-                    );
-                }
-                match extracted {
-                    Ok(a_tile) => {
-                        // A closed buffer means the consumer bailed out.
-                        if tile_tx.send(Ok((spec, a_tile))).is_err() {
-                            break;
-                        }
-                    }
-                    Err(e) => {
-                        let _ = tile_tx.send(Err(e));
-                        break;
-                    }
-                }
-            }
-        });
-        for item in tile_rx {
-            match item {
-                Ok((spec, a_tile)) => {
-                    let job = match make_job(spec, a_tile) {
-                        Ok(job) => job,
-                        Err(e) => {
-                            walk_err = Some(e);
-                            break;
-                        }
-                    };
-                    let s = sh.assignment[spec.mca_index];
-                    if sh.senders[s].send(job).is_err() {
-                        walk_err =
-                            Some(PlaneError::ShardDead(format!("shard {s} died mid-walk")));
-                        break;
-                    }
-                    dispatched += 1;
-                }
-                Err(e) => {
-                    walk_err = Some(PlaneError::Chunk(e));
-                    break;
                 }
             }
         }
-        // Dropping the receiver (the for-loop consumed it) unblocks a
-        // producer mid-send; join so the borrowed source outlives it.
-        let _ = producer.join();
-    });
+        WalkSource::Borrowed(source) => {
+            let source: &dyn MatrixSource = *source;
+            let tile = plan.geometry.cell_size;
+            let (tile_tx, tile_rx) =
+                mpsc::sync_channel::<Result<(ChunkSpec, Matrix), String>>(EXTRACT_QUEUE_DEPTH);
+            std::thread::scope(|scope| {
+                let producer = scope.spawn(move || {
+                    let extract_metrics = if obs::metrics_on() {
+                        let g = obs::global();
+                        Some((
+                            g.counter(
+                                obs::names::PLANE_TILES_EXTRACTED,
+                                "Tiles extracted and dispatched by the leader",
+                                &[],
+                            ),
+                            g.counter(
+                                obs::names::PLANE_EXTRACT_SECONDS,
+                                "Seconds the leader spent extracting tiles",
+                                &[],
+                            ),
+                        ))
+                    } else {
+                        None
+                    };
+                    let mut iter = plan.nonzero_chunks(source);
+                    loop {
+                        let spec = match next_chunk(&mut iter) {
+                            Ok(Some(spec)) => spec,
+                            Ok(None) => break,
+                            Err(e) => {
+                                let _ = tile_tx.send(Err(e));
+                                break;
+                            }
+                        };
+                        let span = obs::span_start();
+                        let t0 = extract_metrics.as_ref().map(|_| Instant::now());
+                        let extracted = extract_tile(source, &spec, tile);
+                        if let (Some((tiles, secs)), Some(t0)) = (&extract_metrics, t0) {
+                            tiles.inc();
+                            secs.add(t0.elapsed().as_secs_f64());
+                        }
+                        if let Some(sp) = span {
+                            sp.finish(
+                                Stage::Extract,
+                                Lane::Leader,
+                                vec![
+                                    (
+                                        "chunk",
+                                        format!("({},{})", spec.block_row, spec.block_col),
+                                    ),
+                                    ("mca", spec.mca_index.to_string()),
+                                ],
+                            );
+                        }
+                        match extracted {
+                            Ok(a_tile) => {
+                                // A closed buffer means the consumer bailed.
+                                if tile_tx.send(Ok((spec, a_tile))).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                let _ = tile_tx.send(Err(e));
+                                break;
+                            }
+                        }
+                    }
+                });
+                for item in tile_rx {
+                    match item {
+                        Ok((spec, a_tile)) => {
+                            let payload = TilePayload::Dense(a_tile);
+                            if !dispatch(spec, payload, &mut dispatched, &mut walk_err) {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            walk_err = Some(PlaneError::Chunk(e));
+                            break;
+                        }
+                    }
+                }
+                // Dropping the receiver (the for-loop consumed it) unblocks
+                // a producer mid-send; join so the borrowed source outlives
+                // it.
+                let _ = producer.join();
+            });
+        }
+    }
     for tx in &sh.senders {
         let _ = tx.send(ShardJob::Seal {
             reply: reply.clone(),

@@ -25,16 +25,25 @@
 //! * The **leader** (whichever caller thread admitted the walk)
 //!   enumerates occupied chunks through
 //!   [`ChunkPlan::nonzero_chunks`](crate::virtualization::ChunkPlan::nonzero_chunks) —
-//!   O(occupied blocks) for sources with a cheap column-range bound — and
-//!   streams extracted, zero-padded tiles over bounded channels with the
-//!   extraction **double-buffered**: a producer thread extracts chunk
-//!   `N + 1` while chunk `N` dispatches to its shard.  Even a 65,536²
+//!   O(occupied blocks) for sources with exact structure or a cheap
+//!   column bound.  Over a *borrowed* source (`program` /
+//!   `execute_once`) it streams extracted, zero-padded tiles over
+//!   bounded channels with the extraction **double-buffered**: a
+//!   producer thread extracts chunk `N + 1` while chunk `N` dispatches
+//!   to its shard.  Over a *shared* (`Arc`'d) source (`program_shared`
+//!   / `execute_once_shared`) it dispatches compact chunk
+//!   **descriptors** instead and the shards extract their own tiles,
+//!   fused into conductance encoding — the leader's per-chunk stage
+//!   shrinks to enumerate + dispatch.  Either way even a 65,536²
 //!   operand never materializes densely.
 //! * Each **shard** is a long-lived worker thread.  Operand state
 //!   (executors, programmed tiles) lives in per-`(operand, MCA)` locked
 //!   slots shared via `Arc`, so shards interleave jobs of many concurrent
-//!   walks, and batch workers **steal** whole MCAs from each other when
-//!   irregular sparsity leaves their queues short.
+//!   walks.  Batch workers **steal** whole MCAs from each other's queues
+//!   when irregular sparsity leaves theirs short, and once every queue is
+//!   empty they steal at **sub-MCA granularity** — joining the chunk grid
+//!   of the MCA with the most unclaimed chunks — so a single dominating
+//!   MCA spreads over the pool instead of serializing on one worker.
 //! * A [`TileAllocator`] tracks which tile slots of which MCA hold which
 //!   operand's chunks: eviction frees slots for reuse, and an optional
 //!   per-MCA capacity (`SystemConfig::tile_slots`) makes over-subscription
@@ -82,10 +91,12 @@ pub mod error;
 pub mod handle;
 pub mod placement;
 pub(crate) mod shard;
+pub mod timing;
 
 pub use self::alloc::{OperandId, TileAllocator};
 pub use error::PlaneError;
 pub use handle::PlaneHandle;
+pub use timing::reset_domains;
 pub use placement::{
     LoadBalancedPlacement, Placement, PlacementPolicy, RoundRobinPlacement,
     SparsityAwarePlacement, TimingAwarePlacement,

@@ -78,13 +78,21 @@ impl PlacementPolicy for SparsityAwarePlacement {
 
 /// Balances by *measured* per-chunk execution wall time, not by counts:
 /// at batch-distribution time the plane re-splits MCAs over workers using
-/// the mean measured nanoseconds per chunk from the observability timing
-/// accumulators (LPT over `mean_time × occupied_chunks`), so chunks that
-/// are genuinely slower — denser tiles, more write–verify retries — weigh
-/// more than their count suggests.  At *build* time no measurements exist
-/// yet, so the static MCA→shard assignment falls back to
-/// [`LoadBalancedPlacement`]; the measured re-split (plus work-stealing)
-/// takes over from the first batch onwards.
+/// the EWMA of measured nanoseconds per chunk from the shared timing
+/// domain (LPT over `mean_time × occupied_chunks`), so chunks that are
+/// genuinely slower — denser tiles, more write–verify retries — weigh
+/// more than their count suggests.
+///
+/// The pure [`assign`](PlacementPolicy::assign) below is what runs with
+/// no history and is deliberately identical to [`LoadBalancedPlacement`]
+/// (policies stay side-effect-free).  The plane itself goes further:
+/// timing domains are keyed by `(seed, geometry)` and shared process-wide
+/// (see [`timing`](crate::plane::timing)), so when a *new* plane is built
+/// for a domain that already has measurements, `PlaneHandle::build`
+/// warm-starts the static MCA→shard assignment from the measured means
+/// instead of this cold fallback.  The measured re-split per batch (plus
+/// two-tier work-stealing) takes over from the first batch onwards
+/// either way.
 pub struct TimingAwarePlacement;
 
 impl PlacementPolicy for TimingAwarePlacement {

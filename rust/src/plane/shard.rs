@@ -8,8 +8,17 @@
 //! slots ([`McaSlot`](super::handle::McaSlot)) shared through `Arc`s
 //! carried by the jobs themselves, and each walk gathers on its own reply
 //! channel.  That is what lets one shard interleave jobs of many
-//! concurrent walks, and what lets batch workers **steal** MCAs from each
+//! concurrent walks, and what lets batch workers **steal** work from each
 //! other when irregular sparsity leaves some queues short.
+//!
+//! **Shard-side tile materialization.**  A programming job carries a
+//! [`TilePayload`]: either a dense tile the leader already extracted
+//! (the compatibility path), or a **chunk descriptor** — an `Arc`'d
+//! [`MatrixSource`] plus the chunk's coordinates.  With a descriptor the
+//! shard extracts the zero-padded block itself, fused directly into the
+//! conductance encode, so extraction parallelizes across the whole pool
+//! and sparse tiles never materialize on the leader (see
+//! `PlaneHandle::program_shared`).
 //!
 //! **Determinism contract.**  Each resident operand owns its *own* set of
 //! executors: MCA `i`'s simulator for operand `k` is seeded from
@@ -17,12 +26,18 @@
 //! dedicated plane.  Programming jobs for one MCA always flow through the
 //! placement-assigned owner shard in plan order (FIFO queue), so the
 //! executor's persistent write–verify RNG draws in chunk order no matter
-//! what other walks interleave.  Resident execution noise comes from a
-//! *counter-based* stream derived from
-//! `(master seed, mca, solve index, chunk)` ([`exec_stream_seed`]), and a
-//! batch worker claims a **whole MCA** at a time under its slot lock — so
-//! which worker executes an MCA (stolen or not) can never change a single
-//! RNG draw or the MCA's energy-accumulation order.
+//! what other walks interleave — and since extraction is a pure read of
+//! the source, *where* a tile is materialized cannot change a bit of it.
+//! Resident execution noise comes from a *counter-based* stream derived
+//! from `(master seed, mca, solve index, chunk)` ([`exec_stream_seed`]),
+//! swapped into the executor per chunk execution.  Batch work is claimed
+//! at **sub-MCA granularity**: each MCA's resident chunks form a grid
+//! with an atomic cursor, a claim is one chunk (all batch vectors), and
+//! every claimant executes through the *owner's* executor under the slot
+//! lock — so which worker runs which chunk can never change a single RNG
+//! draw.  The one thing chunk-level interleaving does relax is the order
+//! in which one MCA's `f64` energy ledger accumulates its chunks, which
+//! is ulp-level only and never touches results (see `plane::handle`).
 //!
 //! **Fault containment.**  Every job is processed under
 //! [`std::panic::catch_unwind`]: a panicking shard reports
@@ -31,18 +46,24 @@
 //! supervised gather (see [`crate::plane`]) converts that into a clean
 //! typed error — a shard panic cannot hang a `program` or
 //! `execute_batch` gather, including walks *other* than the one that
-//! panicked (their liveness sweep notices the dead thread).
+//! panicked (their liveness sweep notices the dead thread).  A panic
+//! inside a descriptor's `block()` is narrower: it is caught at the
+//! extraction site and reported as that chunk's error, matching the
+//! leader-extraction path's recoverable chunk failures.
 
-use super::handle::{lock_unpoisoned, BatchWalk, McaTiming, OnceWalk, OperandEntry};
+use super::handle::{lock_unpoisoned, BatchWalk, OnceWalk, OperandEntry};
+use super::timing::McaTiming;
 use crate::config::SolveOptions;
 use crate::ec::{EcOptions, TileExecutor};
 use crate::linalg::{Matrix, Vector};
+use crate::matrices::MatrixSource;
 use crate::mca::Mca;
 use crate::obs::{self, Counter, Lane, Stage};
 use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::virtualization::ChunkSpec;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -94,6 +115,42 @@ pub fn new_executor(
     TileExecutor::new(mca, backend.clone())
 }
 
+/// What a programming-shaped job carries for its tile.
+pub(crate) enum TilePayload {
+    /// A dense tile the leader extracted (double-buffered compatibility
+    /// path, and the baseline `benches/tile_pipeline.rs` measures against).
+    Dense(Matrix),
+    /// A chunk descriptor: the shard extracts the zero-padded block from
+    /// the shared source itself, fused into the encode stage.  The job
+    /// stays a few words instead of `cell²` floats.
+    Descriptor(Arc<dyn MatrixSource>),
+}
+
+impl TilePayload {
+    /// Materialize the dense tile for `spec`.  A panic inside a source's
+    /// `block()` is contained here and surfaces as this chunk's error —
+    /// the same recoverable semantics the leader-extraction path gives a
+    /// panicking source.
+    fn materialize(self, spec: &ChunkSpec, cell: usize) -> Result<Matrix, String> {
+        match self {
+            TilePayload::Dense(tile) => Ok(tile),
+            TilePayload::Descriptor(src) => {
+                catch_unwind(AssertUnwindSafe(|| {
+                    src.block(spec.row0, spec.col0, cell, cell)
+                }))
+                .map_err(|payload| {
+                    format!(
+                        "extracting chunk ({}, {}) panicked: {}",
+                        spec.block_row,
+                        spec.block_col,
+                        panic_text(payload)
+                    )
+                })
+            }
+        }
+    }
+}
+
 /// One unit of work sent from the leader to a shard.  Shared state rides
 /// along as `Arc`s and every job carries the reply sender of the walk it
 /// belongs to, so replies of concurrent walks never interleave.
@@ -103,7 +160,7 @@ pub(crate) enum ShardJob {
     /// set: answer with [`ShardMsg::Once`].
     RunOnce {
         spec: ChunkSpec,
-        a_tile: Matrix,
+        payload: TilePayload,
         x_chunk: Vector,
         walk: Arc<OnceWalk>,
         reply: mpsc::Sender<ShardMsg>,
@@ -113,14 +170,15 @@ pub(crate) enum ShardJob {
     /// batches.
     Program {
         spec: ChunkSpec,
-        a_tile: Matrix,
+        payload: TilePayload,
         entry: Arc<OperandEntry>,
         reply: mpsc::Sender<ShardMsg>,
     },
-    /// Join one batch walk: claim MCAs from the walk's queues (own queue
-    /// first, then steal) and run every input vector against each claimed
-    /// MCA's resident tiles.  Answer with one [`ShardMsg::Partial`] per
-    /// (tile, vector) executed here, then [`ShardMsg::Sealed`].
+    /// Join one batch walk: claim chunks from the walk's per-MCA grids
+    /// (queue-assigned MCAs first, then sub-MCA stealing) and run every
+    /// input vector against each claimed chunk.  Answer with one
+    /// [`ShardMsg::Partial`] per (chunk, vector) executed here, then
+    /// [`ShardMsg::Sealed`].
     Execute {
         walk: Arc<BatchWalk>,
         reply: mpsc::Sender<ShardMsg>,
@@ -178,8 +236,18 @@ pub(crate) struct ShardContext {
     pub backend: Backend,
     pub jobs: mpsc::Receiver<ShardJob>,
     /// Plane-wide measured per-MCA execution timings (feeds the
-    /// timing-aware batch distribution).
+    /// timing-aware batch distribution and build-time placement).
     pub timings: Arc<Vec<McaTiming>>,
+}
+
+/// The counter handles a job handler may touch, cloned out of the cached
+/// [`ShardCounters`] so the shard loop's own handles stay borrowable.
+#[derive(Clone)]
+pub(crate) struct WalkCounters {
+    chunks: Counter,
+    steals: Counter,
+    submca_steals: Counter,
+    encode_secs: Counter,
 }
 
 /// One shard's cached metric handles (label `shard` is static for the
@@ -188,8 +256,7 @@ struct ShardCounters {
     busy: Counter,
     idle: Counter,
     jobs: Counter,
-    chunks: Counter,
-    steals: Counter,
+    walk: WalkCounters,
 }
 
 /// Lazily build the shard's counter handles the first time metrics are
@@ -211,16 +278,29 @@ fn shard_counters(cache: &mut Option<ShardCounters>, shard: usize) -> &ShardCoun
                 labels,
             ),
             jobs: g.counter(obs::names::SHARD_JOBS, "Jobs processed per shard", labels),
-            chunks: g.counter(
-                obs::names::SHARD_CHUNKS,
-                "Chunk executions per shard, one per (chunk, vector)",
-                labels,
-            ),
-            steals: g.counter(
-                obs::names::SHARD_STEALS,
-                "MCAs this shard claimed from another worker's batch queue",
-                labels,
-            ),
+            walk: WalkCounters {
+                chunks: g.counter(
+                    obs::names::SHARD_CHUNKS,
+                    "Chunk executions per shard, one per (chunk, vector)",
+                    labels,
+                ),
+                steals: g.counter(
+                    obs::names::SHARD_STEALS,
+                    "MCAs this shard claimed from another worker's batch queue",
+                    labels,
+                ),
+                submca_steals: g.counter(
+                    obs::names::SUBMCA_STEALS,
+                    "Sub-MCA steal participations: this shard joined another \
+                     MCA's chunk grid and executed at least one chunk",
+                    labels,
+                ),
+                encode_secs: g.counter(
+                    obs::names::SHARD_ENCODE_SECONDS,
+                    "Seconds this shard spent in the fused extract+encode stage",
+                    labels,
+                ),
+            },
         }
     })
 }
@@ -256,7 +336,7 @@ pub(crate) fn run(ctx: ShardContext) {
             let h = shard_counters(&mut counters, ctx.shard);
             h.idle.add(t0.elapsed().as_secs_f64());
             h.jobs.inc();
-            Some((h.chunks.clone(), h.steals.clone()))
+            Some(h.walk.clone())
         } else {
             None
         };
@@ -295,13 +375,13 @@ fn handle(
     ctx: &ShardContext,
     ec: &EcOptions,
     job: ShardJob,
-    counters: Option<&(Counter, Counter)>,
+    counters: Option<&WalkCounters>,
 ) {
     let lane = Lane::Shard(ctx.shard);
     match job {
         ShardJob::RunOnce {
             spec,
-            a_tile,
+            payload,
             x_chunk,
             walk,
             reply,
@@ -312,8 +392,16 @@ fn handle(
             });
             // `run_tile` split into its two halves so encode and execute
             // trace as separate stages — same calls, bit-identical result.
+            // Descriptor extraction happens inside the encode stage: the
+            // fused extract+encode this shard is paid for.
             let encode_span = obs::span_start();
-            let programmed = exec.program_tile(&a_tile, ec);
+            let encode_clock = obs::metrics_clock();
+            let programmed = payload
+                .materialize(&spec, ctx.cell)
+                .and_then(|a_tile| exec.program_tile(&a_tile, ec));
+            if let (Some(c), Some(t0)) = (counters, encode_clock) {
+                c.encode_secs.add(t0.elapsed().as_secs_f64());
+            }
             if let Some(sp) = encode_span {
                 sp.finish(Stage::Encode, lane, chunk_args(&spec));
             }
@@ -330,8 +418,8 @@ fn handle(
                 }
                 Err(e) => Err(e),
             };
-            if let Some((chunks, _)) = counters {
-                chunks.inc();
+            if let Some(c) = counters {
+                c.chunks.inc();
             }
             let _ = reply.send(ShardMsg::Once {
                 block_row: spec.block_row,
@@ -341,7 +429,7 @@ fn handle(
         }
         ShardJob::Program {
             spec,
-            a_tile,
+            payload,
             entry,
             reply,
         } => {
@@ -350,7 +438,11 @@ fn handle(
                 new_executor(&ctx.opts, ctx.cell, &ctx.backend, spec.mca_index)
             });
             let encode_span = obs::span_start();
-            let outcome = match exec.program_tile(&a_tile, ec) {
+            let encode_clock = obs::metrics_clock();
+            let outcome = match payload
+                .materialize(&spec, ctx.cell)
+                .and_then(|a_tile| exec.program_tile(&a_tile, ec))
+            {
                 Ok(tile) => {
                     let iters = tile.encode.iters;
                     slot.chunks.push((spec, tile));
@@ -358,6 +450,9 @@ fn handle(
                 }
                 Err(e) => Err(e),
             };
+            if let (Some(c), Some(t0)) = (counters, encode_clock) {
+                c.encode_secs.add(t0.elapsed().as_secs_f64());
+            }
             if let Some(sp) = encode_span {
                 let mut args = chunk_args(&spec);
                 args.push(("operand", entry.op.to_string()));
@@ -379,73 +474,112 @@ fn handle(
     }
 }
 
-/// One worker's share of a batch walk: claim MCAs (own queue first, then
-/// steal) and run the whole batch against each claimed MCA's resident
-/// tiles under that MCA's slot lock.
+/// One worker's share of a batch walk, in two phases:
 ///
-/// Claiming whole MCAs is what keeps stealing deterministic: every RNG
-/// draw is counter-based per `(solve, chunk)`, and the per-MCA ledger
-/// accumulates its chunk×vector grid in the same nested order regardless
-/// of which worker holds the lock.
+/// 1. **Queue phase** — claim whole MCAs off the per-shard queues (own
+///    queue first, then steal across queues) and drain each claimed MCA's
+///    chunk grid.
+/// 2. **Sub-MCA phase** — once every queue is empty, scan for MCAs whose
+///    grids still have unclaimed chunks (a dominating MCA someone is
+///    mid-way through) and join them, splitting the remainder with
+///    whoever is already there.
+///
+/// Both phases execute through [`run_mca_grid`]: the unit of claim is one
+/// chunk × the whole batch, every claimant runs under the owner slot's
+/// lock with the owner's executor, and every RNG draw is counter-based
+/// per `(solve, chunk)` — so the split is invisible in the results.
 fn execute_walk(
     ctx: &ShardContext,
     ec: &EcOptions,
     walk: &BatchWalk,
     reply: &mpsc::Sender<ShardMsg>,
-    counters: Option<&(Counter, Counter)>,
+    counters: Option<&WalkCounters>,
 ) {
-    let lane = Lane::Shard(ctx.shard);
-    let entry = &walk.entry;
     while let Some((mca, stolen)) = walk.claim(ctx.shard) {
         if stolen {
-            if let Some((_, steals)) = counters {
-                steals.inc();
+            if let Some(c) = counters {
+                c.steals.inc();
             }
         }
+        run_mca_grid(ctx, ec, walk, mca, reply, counters);
+    }
+    // Queues drained: steal at sub-MCA granularity from grids still in
+    // progress.  Each target's cursor only moves forward, so this loop
+    // terminates once every grid is exhausted.
+    while let Some(mca) = walk.steal_target() {
+        let ran = run_mca_grid(ctx, ec, walk, mca, reply, counters);
+        if ran > 0 {
+            if let Some(c) = counters {
+                c.submca_steals.inc();
+            }
+        }
+    }
+}
+
+/// Drain one MCA's chunk grid: repeatedly claim the next unexecuted chunk
+/// (atomic cursor) and run the whole batch against it under the slot
+/// lock.  Returns how many chunks this call executed (possibly zero, if
+/// other workers got there first).
+fn run_mca_grid(
+    ctx: &ShardContext,
+    ec: &EcOptions,
+    walk: &BatchWalk,
+    mca: usize,
+    reply: &mpsc::Sender<ShardMsg>,
+    counters: Option<&WalkCounters>,
+) -> u64 {
+    let lane = Lane::Shard(ctx.shard);
+    let entry = &walk.entry;
+    let mut chunks_run = 0u64;
+    loop {
+        let i = walk.grid[mca].fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
+        let mut guard = lock_unpoisoned(&entry.mcas[mca]);
+        let slot = &mut *guard;
+        let Some((spec, tile)) = slot.chunks.get(i) else {
+            return chunks_run;
+        };
         let mut executed = 0u64;
-        let mut slot = lock_unpoisoned(&entry.mcas[mca]);
-        let slot = &mut *slot;
-        for (spec, tile) in slot.chunks.iter() {
-            for (k, x) in walk.xs.iter().enumerate() {
-                let solve = walk.first_solve + k as u64;
-                let exec_span = obs::span_start();
-                let outcome = match slot.exec.as_mut() {
-                    Some(exec) => {
-                        let x_chunk = x.slice_padded(spec.col0, ctx.cell);
-                        let stream = Rng::new(exec_stream_seed(
-                            ctx.opts.seed,
-                            spec.mca_index,
-                            solve,
-                            spec.block_row,
-                            spec.block_col,
-                        ));
-                        let saved = exec.mca.replace_rng(stream);
-                        let out = exec.execute_tile(tile, &x_chunk, ec).map(|r| r.y);
-                        exec.mca.replace_rng(saved);
-                        out
-                    }
-                    None => Err("resident chunk lost its executor".to_string()),
-                };
-                if let Some(sp) = exec_span {
-                    let mut args = chunk_args(spec);
-                    args.push(("operand", entry.op.to_string()));
-                    args.push(("solve", solve.to_string()));
-                    sp.finish(Stage::Execute, lane, args);
+        for (k, x) in walk.xs.iter().enumerate() {
+            let solve = walk.first_solve + k as u64;
+            let exec_span = obs::span_start();
+            let outcome = match slot.exec.as_mut() {
+                Some(exec) => {
+                    let x_chunk = x.slice_padded(spec.col0, ctx.cell);
+                    let stream = Rng::new(exec_stream_seed(
+                        ctx.opts.seed,
+                        spec.mca_index,
+                        solve,
+                        spec.block_row,
+                        spec.block_col,
+                    ));
+                    let saved = exec.mca.replace_rng(stream);
+                    let out = exec.execute_tile(tile, &x_chunk, ec).map(|r| r.y);
+                    exec.mca.replace_rng(saved);
+                    out
                 }
-                if let Some((chunks, _)) = counters {
-                    chunks.inc();
-                }
-                executed += 1;
-                let _ = reply.send(ShardMsg::Partial {
-                    solve,
-                    block_row: spec.block_row,
-                    block_col: spec.block_col,
-                    outcome,
-                });
+                None => Err("resident chunk lost its executor".to_string()),
+            };
+            if let Some(sp) = exec_span {
+                let mut args = chunk_args(spec);
+                args.push(("operand", entry.op.to_string()));
+                args.push(("solve", solve.to_string()));
+                sp.finish(Stage::Execute, lane, args);
             }
+            if let Some(c) = counters {
+                c.chunks.inc();
+            }
+            executed += 1;
+            let _ = reply.send(ShardMsg::Partial {
+                solve,
+                block_row: spec.block_row,
+                block_col: spec.block_col,
+                outcome,
+            });
         }
+        drop(guard);
         ctx.timings[mca].record(t0.elapsed().as_secs_f64(), executed);
+        chunks_run += 1;
     }
 }
 
@@ -477,5 +611,52 @@ mod tests {
         assert_eq!(panic_text(s), "boom");
         let s = catch_unwind(|| panic!("chunk {}", 3)).unwrap_err();
         assert_eq!(panic_text(s), "chunk 3");
+    }
+
+    #[test]
+    fn descriptor_payload_materializes_the_same_tile() {
+        use crate::matrices::generators;
+        use crate::virtualization::{ChunkPlan, SystemGeometry};
+        let src = generators::power_law_csr(96, 3, 4.0, 50.0, 0.2, 0x7E57);
+        let plan = ChunkPlan::new(SystemGeometry::new(2, 2, 32), 96, 96);
+        let shared: Arc<dyn MatrixSource> = Arc::new(generators::power_law_csr(
+            96, 3, 4.0, 50.0, 0.2, 0x7E57,
+        ));
+        for spec in plan.chunks() {
+            let leader = src.block(spec.row0, spec.col0, 32, 32);
+            let shard = TilePayload::Descriptor(shared.clone())
+                .materialize(&spec, 32)
+                .unwrap();
+            assert_eq!(leader, shard, "chunk ({}, {})", spec.block_row, spec.block_col);
+            let dense = TilePayload::Dense(leader.clone())
+                .materialize(&spec, 32)
+                .unwrap();
+            assert_eq!(leader, dense);
+        }
+        // A panicking source surfaces as a chunk error, not a dead shard.
+        struct Bomb;
+        impl MatrixSource for Bomb {
+            fn nrows(&self) -> usize {
+                64
+            }
+            fn ncols(&self) -> usize {
+                64
+            }
+            fn block(&self, _: usize, _: usize, _: usize, _: usize) -> Matrix {
+                panic!("bad source")
+            }
+            fn matvec(&self, _: &Vector) -> Vector {
+                unreachable!()
+            }
+            fn max_abs(&self) -> f64 {
+                1.0
+            }
+        }
+        let bomb: Arc<dyn MatrixSource> = Arc::new(Bomb);
+        let spec = plan.chunk(0, 0);
+        let err = TilePayload::Descriptor(bomb)
+            .materialize(&spec, 32)
+            .unwrap_err();
+        assert!(err.contains("panicked") && err.contains("bad source"), "{err}");
     }
 }

@@ -1,0 +1,209 @@
+//! Measured per-MCA execution timing, shared across plane builds.
+//!
+//! Each batch worker records how long every chunk claim took on which
+//! MCA.  [`McaTiming`] folds those samples into an exponentially-weighted
+//! moving average of nanoseconds per `(chunk, vector)` execution — an
+//! EWMA tracks device- and placement-induced drift (a hot MCA slowing
+//! down under contention) where a lifetime mean would average it away.
+//!
+//! The timings live in a process-global **domain registry** keyed by
+//! `(seed, tile geometry, cell size)`: every plane built for the same
+//! domain shares one `Arc<Vec<McaTiming>>`, so measurements taken while
+//! one plane serves batches inform the *build-time* assignment of the
+//! next plane built for that domain (see `PlaneHandle::build` — with
+//! `--placement timing-aware`, measured means weight the initial
+//! shard assignment instead of only redistributing per batch).
+//!
+//! Timing never influences numerics: results are bit-identical whatever
+//! the measurements say (noise is counter-based per `(operand, solve,
+//! chunk)`), so sharing state across planes is observability-grade, not
+//! correctness-grade.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+
+/// EWMA smoothing factor: each new per-chunk sample moves the average a
+/// quarter of the way.  Large enough to follow load shifts within a few
+/// batches, small enough to damp single-claim jitter.
+const ALPHA: f64 = 0.25;
+
+/// Measured execution wall time of one MCA: an EWMA of nanoseconds per
+/// chunk execution plus a lifetime sample count, both lock-free.
+#[derive(Default)]
+pub struct McaTiming {
+    /// EWMA of nanos per `(chunk, vector)` execution, stored as `f64`
+    /// bits.  `0` doubles as "no sample yet" (a genuine 0.0 ns sample
+    /// would re-arm initialization, which is harmless).
+    ewma_bits: AtomicU64,
+    /// Total chunk executions folded in (monotone).
+    chunks: AtomicU64,
+}
+
+impl McaTiming {
+    /// Fold one measurement: `secs` of wall time covering `chunks`
+    /// `(chunk, vector)` executions.
+    pub(crate) fn record(&self, secs: f64, chunks: u64) {
+        if chunks == 0 {
+            return;
+        }
+        let sample = secs * 1e9 / chunks as f64;
+        self.chunks.fetch_add(chunks, Ordering::Relaxed);
+        let mut cur = self.ewma_bits.load(Ordering::Relaxed);
+        loop {
+            let next = if cur == 0 {
+                sample
+            } else {
+                let prev = f64::from_bits(cur);
+                prev + ALPHA * (sample - prev)
+            };
+            match self.ewma_bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Smoothed nanoseconds per chunk execution, `None` until the MCA has
+    /// executed at least once.
+    pub(crate) fn mean_nanos(&self) -> Option<f64> {
+        let bits = self.ewma_bits.load(Ordering::Relaxed);
+        if bits == 0 {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
+    }
+
+    /// Lifetime chunk executions measured.
+    pub(crate) fn samples(&self) -> u64 {
+        self.chunks.load(Ordering::Relaxed)
+    }
+}
+
+/// A timing domain: planes with the same seed and geometry share
+/// measurements (their MCAs are the same devices with the same chunk
+/// binding, so per-MCA timing transfers between builds).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub(crate) struct DomainKey {
+    pub seed: u64,
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    pub cell_size: usize,
+}
+
+fn registry() -> &'static Mutex<HashMap<DomainKey, Arc<Vec<McaTiming>>>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<DomainKey, Arc<Vec<McaTiming>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// The shared timing vector for `key` (one entry per MCA), creating it on
+/// first use.  A key whose recorded MCA count no longer matches (the same
+/// seed rebuilt at a different geometry cannot happen, since geometry is
+/// part of the key) always returns a consistently-sized vector.
+pub(crate) fn domain(key: DomainKey, mcas: usize) -> Arc<Vec<McaTiming>> {
+    let mut reg = registry().lock().unwrap_or_else(PoisonError::into_inner);
+    let entry = reg
+        .entry(key)
+        .or_insert_with(|| Arc::new((0..mcas).map(|_| McaTiming::default()).collect()));
+    if entry.len() != mcas {
+        // Defensive: never hand a mismatched vector to a plane.
+        *entry = Arc::new((0..mcas).map(|_| McaTiming::default()).collect());
+    }
+    entry.clone()
+}
+
+/// Drop all accumulated timing domains.  Benches and tests that compare
+/// cold-build behavior call this to keep runs independent; planes already
+/// holding a domain `Arc` keep recording into their (now unregistered)
+/// vector.
+pub fn reset_domains() {
+    registry()
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_tracks_recent_samples() {
+        let t = McaTiming::default();
+        assert_eq!(t.mean_nanos(), None);
+        t.record(1e-6, 1); // 1000 ns/chunk
+        assert_eq!(t.mean_nanos(), Some(1000.0));
+        // A shifted load moves the mean a quarter of the way per sample.
+        t.record(2e-6, 1); // 2000 ns/chunk
+        let m = t.mean_nanos().unwrap();
+        assert!((m - 1250.0).abs() < 1e-9, "{m}");
+        assert_eq!(t.samples(), 2);
+        // Zero-chunk measurements are ignored.
+        t.record(5.0, 0);
+        assert_eq!(t.samples(), 2);
+    }
+
+    #[test]
+    fn ewma_converges_toward_sustained_rate() {
+        let t = McaTiming::default();
+        t.record(9e-6, 1); // one slow outlier: 9000 ns
+        for _ in 0..32 {
+            t.record(1e-6, 1); // sustained 1000 ns
+        }
+        let m = t.mean_nanos().unwrap();
+        assert!((m - 1000.0).abs() < 10.0, "outlier should decay: {m}");
+    }
+
+    #[test]
+    fn domains_are_shared_per_key_and_resettable() {
+        let key = DomainKey {
+            seed: 0xD0D0_0001,
+            tile_rows: 2,
+            tile_cols: 2,
+            cell_size: 32,
+        };
+        let a = domain(key, 4);
+        a[1].record(1e-6, 2);
+        let b = domain(key, 4);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(b[1].samples(), 2);
+        // A different key is a different domain.
+        let other = domain(
+            DomainKey {
+                seed: 0xD0D0_0002,
+                ..key
+            },
+            4,
+        );
+        assert!(!Arc::ptr_eq(&a, &other));
+        assert_eq!(other[1].samples(), 0);
+        reset_domains();
+        let c = domain(key, 4);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c[1].samples(), 0);
+    }
+
+    #[test]
+    fn record_is_safe_under_contention() {
+        let t = Arc::new(McaTiming::default());
+        std::thread::scope(|s| {
+            for k in 0..4 {
+                let t = t.clone();
+                s.spawn(move || {
+                    for i in 0..250 {
+                        t.record((1 + (i + k) % 3) as f64 * 1e-6, 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(t.samples(), 1000);
+        let m = t.mean_nanos().unwrap();
+        assert!(m >= 1000.0 - 1e-6 && m <= 3000.0 + 1e-6, "{m}");
+    }
+}

@@ -144,13 +144,17 @@ impl Session {
     /// Program `source` as a residency on an existing (shared) plane.
     /// Many sessions opened on clones of one handle serve concurrent
     /// batches from one shard pool, bit-identical to dedicated planes.
+    /// The source is already shared, so programming goes through the
+    /// descriptor path ([`PlaneHandle::program_shared`]): shards extract
+    /// their own tiles fused into the encode, instead of the leader
+    /// extracting serially.
     pub fn open_on(
         plane: PlaneHandle,
         source: Arc<dyn MatrixSource>,
     ) -> Result<Session, PlaneError> {
         let config = plane.system_config();
         let opts = plane.options().clone();
-        let (id, program) = plane.program(source.as_ref())?;
+        let (id, program) = plane.program_shared(source.clone())?;
         let (write_j, read_j) = plane.operand_energy_totals(id).unwrap_or((0.0, 0.0));
         let mut stats = ServingStats::new();
         stats.record_program(program.write_energy_j, program.write_latency_s);

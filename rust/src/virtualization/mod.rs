@@ -122,11 +122,15 @@ impl ChunkPlan {
     /// deterministic row-major order as [`chunks`](Self::chunks), exactly
     /// the chunks whose block intersects `source`'s nonzero pattern.
     ///
-    /// Per block row, candidates are restricted to the column span
-    /// reported by [`MatrixSource::occupied_cols`] and then confirmed with
-    /// [`MatrixSource::block_is_zero`] — so the walk is O(occupied blocks)
-    /// for sources with a cheap column bound (e.g.
-    /// [`BandedSource`](crate::matrices::BandedSource): the full
+    /// Per block row, candidates come from the occupied chunk-column *set*
+    /// reported by [`MatrixSource::occupied_col_chunks`] and are confirmed
+    /// with [`MatrixSource::block_is_zero`].  A set (unlike the older
+    /// span) carries interior gaps, so irregular patterns — an arrowhead's
+    /// first-column spike plus its diagonal, block diagonals — skip the
+    /// hole chunks between their extremes instead of probing each one.
+    /// The walk is O(occupied blocks) for sources with exact structure
+    /// (CSR) or a cheap column bound
+    /// ([`BandedSource`](crate::matrices::BandedSource): the full
     /// `O(grid²)` scan at 65,536²/32² would visit 4M chunks, the band
     /// visits only the few per row that exist), and never worse than the
     /// full grid walk for dense sources.
@@ -137,13 +141,11 @@ impl ChunkPlan {
         let tile = self.geometry.cell_size;
         (0..self.grid_rows)
             .flat_map(move |i| {
-                let (lo, hi) = source.occupied_cols(i * tile, tile);
-                let (j_lo, j_hi) = if lo >= hi {
-                    (0, 0)
-                } else {
-                    (lo / tile, ceil_div(hi, tile).min(self.grid_cols))
-                };
-                (j_lo..j_hi).map(move |j| self.chunk(i, j))
+                source
+                    .occupied_col_chunks(i * tile, tile, tile)
+                    .into_iter()
+                    .filter(move |&j| j < self.grid_cols)
+                    .map(move |j| self.chunk(i, j))
             })
             .filter(move |spec| !source.block_is_zero(spec.row0, spec.col0, tile, tile))
     }
@@ -378,5 +380,67 @@ mod tests {
         assert!(count >= plan.grid_rows, "{count}");
         assert!(count <= 3 * plan.grid_rows, "{count}");
         assert_eq!(plan.total_chunks(), 64 * 64);
+    }
+
+    #[test]
+    fn nonzero_chunks_skips_interior_hole_chunks() {
+        use crate::matrices::{CsrSource, MatrixSource};
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        /// Wrapper counting how many candidate chunks reach the
+        /// `block_is_zero` confirmation probe.
+        struct Probed {
+            inner: CsrSource,
+            probes: AtomicUsize,
+        }
+        impl MatrixSource for Probed {
+            fn nrows(&self) -> usize {
+                self.inner.nrows()
+            }
+            fn ncols(&self) -> usize {
+                self.inner.ncols()
+            }
+            fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> crate::linalg::Matrix {
+                self.inner.block(r0, c0, h, w)
+            }
+            fn matvec(&self, x: &crate::linalg::Vector) -> crate::linalg::Vector {
+                self.inner.matvec(x)
+            }
+            fn block_is_zero(&self, r0: usize, c0: usize, h: usize, w: usize) -> bool {
+                self.probes.fetch_add(1, Ordering::Relaxed);
+                self.inner.block_is_zero(r0, c0, h, w)
+            }
+            fn occupied_cols(&self, r0: usize, rows: usize) -> (usize, usize) {
+                self.inner.occupied_cols(r0, rows)
+            }
+            fn occupied_col_chunks(&self, r0: usize, rows: usize, tile: usize) -> Vec<usize> {
+                self.inner.occupied_col_chunks(r0, rows, tile)
+            }
+            fn max_abs(&self) -> f64 {
+                self.inner.max_abs()
+            }
+        }
+
+        // Arrowhead: full first row/column + diagonal.  Away from the top,
+        // each block row occupies exactly chunk column 0 and its diagonal
+        // chunk — the span between them is all holes.
+        let n = 512;
+        let mut trip: Vec<(usize, usize, f64)> = (0..n).map(|j| (0, j, 1.0)).collect();
+        trip.extend((1..n).map(|i| (i, 0, 1.0)));
+        trip.extend((1..n).map(|i| (i, i, 4.0)));
+        let src = Probed {
+            inner: CsrSource::from_triplets(n, n, &trip).unwrap(),
+            probes: AtomicUsize::new(0),
+        };
+        let plan = ChunkPlan::new(SystemGeometry::new(2, 2, 32), n, n);
+        let planned = plan.nonzero_chunks(&src).count();
+        let probes = src.probes.load(Ordering::Relaxed);
+        // Row chunk 0 spans all 16 columns; each of the other 15 row
+        // chunks occupies {0, diag} only.
+        assert_eq!(planned, plan.grid_cols + (plan.grid_rows - 1) * 2);
+        // Exact occupied sets: every probe confirms a real chunk, no hole
+        // chunk between column 0 and the diagonal is ever probed (the old
+        // span walk probed the full triangle, ~8x more).
+        assert_eq!(probes, planned);
     }
 }

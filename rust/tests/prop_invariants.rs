@@ -348,3 +348,72 @@ fn prop_csr_planned_chunks_match_filtered_grid_walk() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_descriptor_chunk_encodes_bit_identical_to_leader_extraction() {
+    use meliso::matrices::generators;
+    // A shard materializing a chunk straight from the CSR source (the
+    // descriptor path) must produce the exact zero-padded tile the leader
+    // would have extracted from a dense materialization — and feeding
+    // either tile to a same-seeded MCA must yield bit-identical
+    // conductance encodings.
+    PropRunner::new(24, 110).run("descriptor-encode-identity", |rng, case| {
+        let n = 64 + rng.below(192);
+        let src = generators::power_law_csr(n, 3, 4.0, 50.0, 0.2, 1000 + case as u64);
+        let cell = *gen::choice(rng, &[16usize, 32]);
+        let full = DenseSource::new(src.block(0, 0, n, n));
+        let material = gen::material(rng);
+        for _ in 0..6 {
+            let r0 = rng.below(1 + n / cell) * cell;
+            let c0 = rng.below(1 + n / cell) * cell;
+            let desc_tile = src.block(r0, c0, cell, cell);
+            let dense_tile = full.block(r0, c0, cell, cell);
+            if desc_tile != dense_tile {
+                return Err(format!("case {case}: tile ({r0},{c0}) extraction differs"));
+            }
+            let seed = 2000 + case as u64;
+            let mut mca_a = Mca::new(material, cell, cell, seed);
+            let mut mca_b = Mca::new(material, cell, cell, seed);
+            if mca_a.set_weights(&desc_tile) != mca_b.set_weights(&dense_tile) {
+                return Err(format!("case {case}: tile ({r0},{c0}) encoding differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_materialization_matches_leader_extraction_end_to_end() {
+    use meliso::matrices::generators;
+    // One-shot walks over a borrowed source (leader extracts dense tiles)
+    // and over a shared source (shards materialize from descriptors) must
+    // be bit-identical across random operands, geometries and worker
+    // counts.
+    PropRunner::new(8, 111).run("descriptor-walk-identity", |rng, case| {
+        let n = 48 + rng.below(160);
+        let src: Arc<dyn MatrixSource> = match rng.below(3) {
+            0 => Arc::new(generators::power_law_csr(n, 3, 4.0, 50.0, 0.2, 3000 + case as u64)),
+            1 => Arc::new(generators::arrowhead_csr(n, 4.0, 50.0, 0.2, 3000 + case as u64)),
+            _ => Arc::new(DenseSource::new(Matrix::standard_normal(n, n, 3000 + case as u64))),
+        };
+        let config = SystemConfig::new(1 + rng.below(3), 1 + rng.below(3), 32);
+        let opts = SolveOptions::default()
+            .with_device(gen::material(rng))
+            .with_seed(5000 + case as u64)
+            .with_workers(1 + rng.below(4));
+        let x = gen::vector(rng, n);
+        let backend = Arc::new(NativeBackend::new());
+        let leader = PlaneHandle::build(src.as_ref(), &config, &opts, backend.clone())
+            .map_err(|e| e.to_string())?
+            .execute_once(src.as_ref(), &x)
+            .map_err(|e| e.to_string())?;
+        let shard = PlaneHandle::build(src.as_ref(), &config, &opts, backend)
+            .map_err(|e| e.to_string())?
+            .execute_once_shared(src.clone(), &x)
+            .map_err(|e| e.to_string())?;
+        if leader.y != shard.y {
+            return Err(format!("case {case}: one-shot descriptor walk diverged"));
+        }
+        Ok(())
+    });
+}

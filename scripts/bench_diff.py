@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Diff fresh bench emissions against the committed repo-root baselines.
+
+Usage:
+    python3 scripts/bench_diff.py \
+        --baseline-dir . --fresh-dir bench_results [--max-regression 0.20] \
+        BENCH_plane_contention.json BENCH_sparse_dispatch.json ...
+
+For every named file the script loads ``<baseline-dir>/<name>`` (the
+committed baseline) and ``<fresh-dir>/<name>`` (what the bench just
+emitted) and compares them:
+
+* **ratio metrics** (higher is better): ``speedup``,
+  ``speedup_chunks_per_s``, ``extract_stage_reduction``.  These are
+  same-run throughput *ratios* (concurrent vs serialized admission,
+  descriptor vs leader materialization), so they transfer across machines
+  far better than absolute chunks/s.  A fresh value more than
+  ``--max-regression`` (default 20%) below the baseline fails the diff.
+* **exact metrics** (deterministic workload facts): ``chunks``,
+  ``chunks_total``, ``chunks_planned``, ``max_shard_load``,
+  ``deterministic``, ``bit_identical``.  Any change fails — these catch
+  planning regressions (e.g. occupied-chunk enumeration dispatching more
+  blocks) that wall clocks would hide.
+* everything else (``wall_s``, ``chunks_per_s``, latencies) is
+  informational only: absolute wall numbers do not transfer between
+  machines, so they are printed but never gated.
+
+A baseline whose ``provenance.status`` is ``"seed"`` (committed before
+any measured run existed) gates nothing: the script prints a refresh
+notice and exits 0.  To arm the gate, replace the repo-root baseline with
+a measured emission — e.g. the ``bench-results`` artifact of a trusted CI
+run — and set ``provenance.status`` to ``"measured"``.
+
+Exit status: 0 when every gated metric holds, 1 otherwise.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+RATIO_KEYS = {"speedup", "speedup_chunks_per_s", "extract_stage_reduction"}
+EXACT_KEYS = {
+    "chunks",
+    "chunks_total",
+    "chunks_planned",
+    "max_shard_load",
+    "deterministic",
+    "bit_identical",
+}
+
+
+def walk(base, fresh, path, out):
+    """Collect (path, key, baseline, fresh) for every leaf present in both."""
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for key in base:
+            if key in fresh:
+                walk(base[key], fresh[key], f"{path}.{key}" if path else key, out)
+    elif isinstance(base, list) and isinstance(fresh, list):
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            walk(b, f, f"{path}[{i}]", out)
+    else:
+        out.append((path, path.rsplit(".", 1)[-1].split("[")[0], base, fresh))
+
+
+def diff_file(name, baseline_dir, fresh_dir, max_regression):
+    """Return a list of failure strings for one bench emission."""
+    base_path = os.path.join(baseline_dir, name)
+    fresh_path = os.path.join(fresh_dir, name)
+    if not os.path.exists(base_path):
+        return [f"{name}: no committed baseline at {base_path}"]
+    if not os.path.exists(fresh_path):
+        return [f"{name}: bench did not emit {fresh_path}"]
+    with open(base_path) as fh:
+        base = json.load(fh)
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+
+    status = base.get("provenance", {}).get("status", "measured")
+    if status == "seed":
+        print(
+            f"  {name}: baseline is a SEED (no measured run committed yet) — "
+            f"gating skipped.  Refresh: copy a trusted run's "
+            f"bench_results/{name} over the repo-root baseline and set "
+            f'provenance.status = "measured".'
+        )
+        return []
+
+    leaves = []
+    walk(base, fresh, "", leaves)
+    failures = []
+    gated = 0
+    for path, key, b, f in leaves:
+        if key in RATIO_KEYS and isinstance(b, (int, float)) and isinstance(f, (int, float)):
+            gated += 1
+            floor = b * (1.0 - max_regression)
+            verdict = "ok" if f >= floor else "REGRESSION"
+            print(f"  {name}:{path}: baseline {b:.3f} fresh {f:.3f} floor {floor:.3f} {verdict}")
+            if f < floor:
+                failures.append(
+                    f"{name}:{path}: {f:.3f} fell more than "
+                    f"{max_regression:.0%} below baseline {b:.3f}"
+                )
+        elif key in EXACT_KEYS:
+            gated += 1
+            if b != f:
+                print(f"  {name}:{path}: baseline {b!r} fresh {f!r} CHANGED")
+                failures.append(f"{name}:{path}: deterministic metric changed {b!r} -> {f!r}")
+    if gated == 0:
+        failures.append(f"{name}: measured baseline but no gated metrics found (schema drift?)")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="+", help="BENCH_*.json filenames to diff")
+    ap.add_argument("--baseline-dir", default=".", help="directory of committed baselines")
+    ap.add_argument("--fresh-dir", default="bench_results", help="directory of fresh emissions")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.20,
+        help="allowed fractional drop in ratio metrics (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    failures = []
+    for name in args.names:
+        print(f"diffing {name} (baseline {args.baseline_dir}, fresh {args.fresh_dir})")
+        failures += diff_file(name, args.baseline_dir, args.fresh_dir, args.max_regression)
+    if failures:
+        print("\nFAIL:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nPASS: no gated bench metric regressed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
