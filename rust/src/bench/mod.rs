@@ -89,6 +89,7 @@ impl BenchRunner {
         }
         let mut samples = Vec::with_capacity(self.sample_iters);
         for _ in 0..self.sample_iters.max(1) {
+            // meliso-lint: allow(clock) -- bench harness stopwatch, measurement is the product
             let t = Instant::now();
             f();
             samples.push(t.elapsed().as_secs_f64());

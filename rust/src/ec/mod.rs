@@ -19,7 +19,7 @@ use crate::linalg::tridiag::Tridiag;
 use crate::linalg::{Matrix, Vector};
 use crate::mca::{EncodeStats, Mca, WriteVerifyOpts};
 use crate::runtime::{Backend, EcMvmRequest};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// How the second-order correction is applied.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -97,9 +97,9 @@ pub struct TileExecutor {
     pub mca: Mca,
     backend: Backend,
     /// Encoded (noisy) denoiser per (tile size, λ-bits) — in-memory mode.
-    minv_encoded: HashMap<(usize, u64), Vec<f32>>,
+    minv_encoded: BTreeMap<(usize, u64), Vec<f32>>,
     /// Exact operator per (tile size, λ-bits) — digital mode.
-    operators: HashMap<(usize, u64), Tridiag>,
+    operators: BTreeMap<(usize, u64), Tridiag>,
 }
 
 impl TileExecutor {
@@ -107,8 +107,8 @@ impl TileExecutor {
         TileExecutor {
             mca,
             backend,
-            minv_encoded: HashMap::new(),
-            operators: HashMap::new(),
+            minv_encoded: BTreeMap::new(),
+            operators: BTreeMap::new(),
         }
     }
 

@@ -260,6 +260,7 @@ fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {
         } else {
             args.solves.min(5)
         };
+        // meliso-lint: allow(clock) -- CLI baseline timing printed to the user
         let t = Instant::now();
         let mut oneshot_write_j = 0.0;
         for x in xs.iter().take(baseline) {

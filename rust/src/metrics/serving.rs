@@ -32,6 +32,7 @@ pub struct ServingStats {
 impl ServingStats {
     pub fn new() -> ServingStats {
         ServingStats {
+            // meliso-lint: allow(clock) -- serving-uptime bookkeeping, reporting only
             started: Instant::now(),
             solves: 0,
             batches: 0,

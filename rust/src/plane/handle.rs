@@ -598,7 +598,7 @@ impl PlaneHandle {
         source: WalkSource<'_>,
     ) -> Result<(OperandId, ProgramReport), PlaneError> {
         let sh = &*self.shared;
-        let start = Instant::now();
+        let start = timing::monotonic_now();
         let plan_span = obs::span_start();
         let plan = {
             let src = source.as_dyn();
@@ -778,7 +778,7 @@ impl PlaneHandle {
                 wall_seconds: 0.0,
             });
         }
-        let start = Instant::now();
+        let start = timing::monotonic_now();
         let plan_span = obs::span_start();
         let (m, tile) = (entry.plan.m, entry.plan.geometry.cell_size);
         let first_solve = {
@@ -947,7 +947,11 @@ impl PlaneHandle {
         if inflight > 0 {
             return Err(PlaneError::OperandBusy { id, inflight });
         }
-        let res = st.residencies.remove(&id.0).expect("checked above");
+        let Some(res) = st.residencies.remove(&id.0) else {
+            // Unreachable (checked under the same lock above), but the
+            // plane/server contract is typed errors, never panics.
+            return Err(PlaneError::StaleOperand { id });
+        };
         for (mca, slot) in &res.slots {
             st.alloc.free(*mca, *slot);
         }
@@ -1036,7 +1040,7 @@ impl PlaneHandle {
                 ));
             }
         }
-        let start = Instant::now();
+        let start = timing::monotonic_now();
         let plan_span = obs::span_start();
         let plan = {
             let src = source.as_dyn();
@@ -1242,7 +1246,7 @@ fn drain_walk(
         chunk_err: None,
         fatal: None,
     };
-    let deadline = walk_timeout().map(|d| Instant::now() + d);
+    let deadline = walk_timeout().map(|d| timing::monotonic_now() + d);
     while st.pending > 0 {
         match results.recv_timeout(SUPERVISE_INTERVAL) {
             Ok(msg) => dispatch_msg(&mut st, &mut on_msg, msg),
@@ -1269,7 +1273,7 @@ fn drain_walk(
                     }
                 }
                 if let Some(dl) = deadline {
-                    if st.pending > 0 && st.fatal.is_none() && Instant::now() >= dl {
+                    if st.pending > 0 && st.fatal.is_none() && timing::monotonic_now() >= dl {
                         st.fatal = Some(PlaneError::Timeout(format!(
                             "supervised gather timed out with {} shard(s) unsealed \
                              (MELISO_WALK_TIMEOUT_SECS to adjust)",
@@ -1480,7 +1484,7 @@ where
                             }
                         };
                         let span = obs::span_start();
-                        let t0 = extract_metrics.as_ref().map(|_| Instant::now());
+                        let t0 = extract_metrics.as_ref().map(|_| timing::monotonic_now());
                         let extracted = extract_tile(source, &spec, tile);
                         if let (Some((tiles, secs)), Some(t0)) = (&extract_metrics, t0) {
                             tiles.inc();

@@ -66,7 +66,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::Duration;
 
 /// Deterministic per-MCA seed derivation: MCA `i`'s simulator stream is a
 /// pure function of the master seed, independent of shard count and
@@ -326,11 +326,18 @@ pub(crate) fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
 pub(crate) fn run(ctx: ShardContext) {
     let ec = ctx.opts.ec_options();
     let mut counters: Option<ShardCounters> = None;
+    // Bounded receive (lint rule C1): the shard never parks forever on a
+    // channel — it wakes on a coarse tick so a wedged sender side can
+    // never strand a pool thread past plane teardown.
+    const IDLE_TICK: Duration = Duration::from_millis(200);
     loop {
         let idle_clock = obs::metrics_clock();
-        let job = match ctx.jobs.recv() {
-            Ok(job) => job,
-            Err(_) => return,
+        let job = loop {
+            match ctx.jobs.recv_timeout(IDLE_TICK) {
+                Ok(job) => break job,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
         };
         let handles = if let Some(t0) = idle_clock {
             let h = shard_counters(&mut counters, ctx.shard);
@@ -533,7 +540,7 @@ fn run_mca_grid(
     let mut chunks_run = 0u64;
     loop {
         let i = walk.grid[mca].fetch_add(1, Ordering::Relaxed);
-        let t0 = Instant::now();
+        let t0 = super::timing::monotonic_now();
         let mut guard = lock_unpoisoned(&entry.mcas[mca]);
         let slot = &mut *guard;
         let Some((spec, tile)) = slot.chunks.get(i) else {

@@ -19,9 +19,20 @@
 //! chunk)`), so sharing state across planes is observability-grade, not
 //! correctness-grade.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+/// The one sanctioned monotonic-clock read on execution paths.
+///
+/// The determinism contract (meliso-lint rule D2) confines clock reads to
+/// `obs/` and this file: timing feeds placement and metrics, never
+/// numerics, and funnelling every plane/shard `Instant::now()` through
+/// here keeps that reviewable in one place.
+pub(crate) fn monotonic_now() -> Instant {
+    Instant::now()
+}
 
 /// EWMA smoothing factor: each new per-chunk sample moves the average a
 /// quarter of the way.  Large enough to follow load shifts within a few
@@ -89,7 +100,7 @@ impl McaTiming {
 /// A timing domain: planes with the same seed and geometry share
 /// measurements (their MCAs are the same devices with the same chunk
 /// binding, so per-MCA timing transfers between builds).
-#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub(crate) struct DomainKey {
     pub seed: u64,
     pub tile_rows: usize,
@@ -97,9 +108,9 @@ pub(crate) struct DomainKey {
     pub cell_size: usize,
 }
 
-fn registry() -> &'static Mutex<HashMap<DomainKey, Arc<Vec<McaTiming>>>> {
-    static REGISTRY: OnceLock<Mutex<HashMap<DomainKey, Arc<Vec<McaTiming>>>>> = OnceLock::new();
-    REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+fn registry() -> &'static Mutex<BTreeMap<DomainKey, Arc<Vec<McaTiming>>>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<DomainKey, Arc<Vec<McaTiming>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
 }
 
 /// The shared timing vector for `key` (one entry per MCA), creating it on

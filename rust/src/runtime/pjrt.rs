@@ -11,7 +11,7 @@
 
 use super::{EcMvmRequest, EcMvmResponse};
 use crate::util::json::Json;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 // Without the vendored crate, `xla::*` resolves to the API-compatible
@@ -23,7 +23,7 @@ use std::path::{Path, PathBuf};
 use super::xla_stub as xla;
 
 /// Artifact kinds produced by `make artifacts`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum ArtifactKind {
     Mvm,
     EcMvm,
@@ -41,7 +41,7 @@ impl ArtifactKind {
 /// Single-threaded PJRT execution engine.
 pub struct PjrtEngine {
     client: xla::PjRtClient,
-    exes: HashMap<(ArtifactKind, usize), xla::PjRtLoadedExecutable>,
+    exes: BTreeMap<(ArtifactKind, usize), xla::PjRtLoadedExecutable>,
     sizes: Vec<usize>,
 }
 
@@ -65,7 +65,7 @@ impl PjrtEngine {
         }
 
         let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
-        let mut exes = HashMap::new();
+        let mut exes = BTreeMap::new();
         let artifacts = manifest
             .get("artifacts")
             .and_then(|v| v.as_obj())

@@ -19,6 +19,34 @@ use std::sync::mpsc;
 use std::sync::Mutex;
 #[cfg(feature = "pjrt")]
 use std::thread::JoinHandle;
+#[cfg(feature = "pjrt")]
+use std::time::Duration;
+
+/// Service-loop wake-up tick (lint rule C1: no unbounded receives): the
+/// engine thread re-checks channel liveness at this cadence while idle.
+#[cfg(feature = "pjrt")]
+const SERVICE_TICK: Duration = Duration::from_millis(200);
+
+/// Hard bound on one caller's wait for a reply.  The engine executes one
+/// tile MVM at a time, far below this; if the service thread wedges (a
+/// hung PJRT call), callers get a typed error instead of blocking forever.
+#[cfg(feature = "pjrt")]
+const REPLY_DEADLINE: Duration = Duration::from_secs(600);
+
+/// Bounded reply wait shared by init and per-request paths.
+#[cfg(feature = "pjrt")]
+fn recv_reply<T>(rx: &mpsc::Receiver<T>, what: &str) -> Result<T, String> {
+    match rx.recv_timeout(REPLY_DEADLINE) {
+        Ok(v) => Ok(v),
+        Err(mpsc::RecvTimeoutError::Timeout) => Err(format!(
+            "runtime service unresponsive for {}s awaiting {what}",
+            REPLY_DEADLINE.as_secs()
+        )),
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            Err(format!("runtime service dropped {what}"))
+        }
+    }
+}
 
 /// Placeholder backend when the `pjrt` feature (and its vendored `xla`
 /// dependency) is absent: [`PjrtBackend::start`] always fails with a clear
@@ -102,7 +130,12 @@ impl PjrtBackend {
                         return;
                     }
                 };
-                while let Ok(req) = rx.recv() {
+                loop {
+                    let req = match rx.recv_timeout(SERVICE_TICK) {
+                        Ok(req) => req,
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    };
                     match req {
                         Request::Mvm { n, at, xt, reply } => {
                             let _ = reply.send(engine.mvm(n, &at, &xt));
@@ -115,9 +148,7 @@ impl PjrtBackend {
                 }
             })
             .map_err(|e| format!("spawn runtime service: {e}"))?;
-        let sizes = init_rx
-            .recv()
-            .map_err(|_| "runtime service died during init".to_string())??;
+        let sizes = recv_reply(&init_rx, "artifact init")??;
         Ok(PjrtBackend {
             tx: Mutex::new(tx),
             sizes,
@@ -139,7 +170,7 @@ impl ExecBackend for PjrtBackend {
     fn mvm(&self, n: usize, at: Vec<f32>, xt: Vec<f32>) -> Result<Vec<f32>, String> {
         let (reply, rx) = mpsc::channel();
         self.send(Request::Mvm { n, at, xt, reply })?;
-        rx.recv().map_err(|_| "runtime service dropped reply".to_string())?
+        recv_reply(&rx, "mvm reply")?
     }
 
     fn ec_mvm(&self, req: EcMvmRequest) -> Result<EcMvmResponse, String> {
@@ -150,7 +181,7 @@ impl ExecBackend for PjrtBackend {
             req: Box::new(req),
             reply,
         })?;
-        rx.recv().map_err(|_| "runtime service dropped reply".to_string())?
+        recv_reply(&rx, "ec_mvm reply")?
     }
 
     fn tile_sizes(&self) -> Vec<usize> {

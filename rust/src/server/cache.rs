@@ -300,14 +300,18 @@ impl OperandCache {
         let plane = self.live_plane(solver, source)?;
         let mut displaced: Option<CacheEntry> = None;
         if self.entries.len() >= self.capacity {
-            let lru = self
+            // `min_by_key` is `None` only for an empty entry list (a
+            // zero-capacity cache): nothing to displace, every miss
+            // programs fresh.
+            if let Some(lru) = self
                 .entries
                 .iter()
                 .enumerate()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i)
-                .expect("non-empty cache");
-            displaced = Some(self.entries.swap_remove(lru));
+            {
+                displaced = Some(self.entries.swap_remove(lru));
+            }
         }
         let session = match Session::open_on(plane.clone(), source.clone()) {
             Ok(session) => session,

@@ -279,6 +279,7 @@ impl Meliso {
                 source.ncols()
             )));
         }
+        // meliso-lint: allow(clock) -- solve wall-clock for the report, not for results
         let start = std::time::Instant::now();
         let session = self.open_session(source.clone())?;
         let outcome = iterative::solve_system(&session, Some(source.as_ref()), b, iter_opts)

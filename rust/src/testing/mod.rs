@@ -7,6 +7,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod sched;
+
 /// Configuration for a property run.
 pub struct PropRunner {
     pub cases: usize,

@@ -5,6 +5,7 @@
 //! touching the hot path when the level is disabled.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+// meliso-lint: allow(clock) -- log-line timestamps are human-facing metadata, never numerics
 use std::time::{SystemTime, UNIX_EPOCH};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -73,6 +74,7 @@ pub fn log(lv: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(lv) {
         return;
     }
+    // meliso-lint: allow(clock) -- wall-clock stamp on an emitted log line
     let t = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .unwrap_or_default();

@@ -165,6 +165,36 @@ fn resident_session_surfaces_shard_panic_as_error() {
 }
 
 #[test]
+fn dead_shard_mid_gather_errors_within_supervision_bound() {
+    // Regression for the blocking-recv audit: a shard that dies while a
+    // gather is outstanding must surface an error within the supervision
+    // window, not park forever on a channel nobody will ever write.  The
+    // wall-clock assertion is deliberately generous (60 s on a gather
+    // that should fail in milliseconds) — it exists to catch a return to
+    // unbounded waiting, not to benchmark the failure path.
+    let elapsed = bounded("resident/dead-shard-bounded-gather", || {
+        let src = DenseSource::new(dense(15));
+        let backend = FaultBackend::panicking(NativeBackend::new());
+        let handle = backend.handle();
+        let plane = PlaneHandle::build(&src, &config(), &opts(), Arc::new(backend)).unwrap();
+        let (id, _) = plane.program(&src).unwrap();
+        handle.fail_next_reads(true);
+        let x = Vector::standard_normal(64, 16);
+        let t0 = std::time::Instant::now();
+        let err = plane
+            .execute_batch(id, std::slice::from_ref(&x))
+            .unwrap_err();
+        let elapsed = t0.elapsed();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        elapsed
+    });
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "dead-shard gather took {elapsed:?}: supervision bound regressed"
+    );
+}
+
+#[test]
 fn multi_tenant_plane_survives_leader_fault_in_one_tenant() {
     bounded("resident/multi-tenant-isolation", || {
         let good: Arc<dyn MatrixSource> = Arc::new(DenseSource::new(dense(12)));

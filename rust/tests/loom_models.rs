@@ -1,0 +1,397 @@
+//! Concurrency models for the execution plane, checked over **every**
+//! interleaving by the exhaustive explorer in `meliso::testing::sched`
+//! (the repo's vendored loom stand-in — see that module's docs for why
+//! loom itself is not in the build closure).
+//!
+//! Two designs get modeled, each in two variants:
+//!
+//! 1. **Two-tier steal cursors** (`plane/shard.rs`): workers claim MCAs
+//!    from per-queue tier-1 cursors, drain each MCA's chunks through a
+//!    tier-2 cursor, then sub-MCA-steal chunks from busy MCAs.  The
+//!    faithful model (every cursor claim is one `fetch_add` step) must
+//!    show every chunk claimed **exactly once** in every schedule.  A
+//!    deliberately broken variant splits the stealer's claim into a read
+//!    step and a write step; the explorer must find the double-claim,
+//!    proving the harness actually has teeth.
+//!
+//! 2. **`InflightGuard` vs `evict`** (`plane/handle.rs`): admission
+//!    checks residency and bumps the inflight count under one structural
+//!    lock; evict checks the inflight count under the same lock and
+//!    surfaces `OperandBusy` instead of removing a residency that a
+//!    batch is using.  The faithful model never executes against an
+//!    evicted residency; the broken variant (check residency, release
+//!    the lock, then bump inflight) must be caught as a torn residency.
+//!
+//! The tests always run; `RUSTFLAGS="--cfg loom"` (the CI static-analysis
+//! job) scales the thread counts up for a larger state space.
+#![allow(unknown_lints)]
+#![allow(unexpected_cfgs)]
+
+use meliso::testing::sched::{explore, Model};
+
+// ---------------------------------------------------------------------------
+// Model 1: two-tier steal cursors
+// ---------------------------------------------------------------------------
+
+/// One worker's control state.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum W {
+    /// Claiming an MCA from queue `(tid + scan) % queues` (tier 1).
+    Scan { scan: u8 },
+    /// Draining chunks of an exclusively claimed MCA (tier 2, owner).
+    Drain { mca: u8 },
+    /// Sub-MCA stealing: scanning MCA `scan` for leftover chunks.
+    Steal { scan: u8 },
+    /// Racy-variant only: holds a stale tier-2 cursor read, write pending.
+    StealWrite { scan: u8, pending: u8 },
+    Done,
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct StealModel {
+    /// When set, stealers claim with a read step then a write step
+    /// instead of one atomic step — the bug the real design excludes.
+    racy_steal: bool,
+    queues: u8,
+    mcas_per_queue: u8,
+    /// Chunks per MCA.
+    chunks: u8,
+    /// Tier-1 cursor per queue (next unclaimed MCA offset).
+    t1: Vec<u8>,
+    /// Tier-2 cursor per MCA (next unclaimed chunk).
+    t2: Vec<u8>,
+    /// Claim count per chunk, indexed `mca * chunks + chunk`.
+    claims: Vec<u8>,
+    workers: Vec<W>,
+}
+
+impl StealModel {
+    fn new(workers: usize, queues: u8, mcas_per_queue: u8, chunks: u8, racy: bool) -> StealModel {
+        let mcas = (queues * mcas_per_queue) as usize;
+        StealModel {
+            racy_steal: racy,
+            queues,
+            mcas_per_queue,
+            chunks,
+            t1: vec![0; queues as usize],
+            t2: vec![0; mcas],
+            claims: vec![0; mcas * chunks as usize],
+            workers: vec![W::Scan { scan: 0 }; workers],
+        }
+    }
+
+    fn chunk_index(&self, mca: usize, chunk: u8) -> usize {
+        mca * self.chunks as usize + chunk as usize
+    }
+}
+
+impl Model for StealModel {
+    fn runnable(&self) -> Vec<usize> {
+        (0..self.workers.len())
+            .filter(|&t| self.workers[t] != W::Done)
+            .collect()
+    }
+
+    fn step(&mut self, tid: usize) {
+        match self.workers[tid] {
+            W::Scan { scan } => {
+                let q = ((tid as u8) + scan) % self.queues;
+                if self.t1[q as usize] < self.mcas_per_queue {
+                    // Tier-1 claim is a fetch_add: one step.
+                    let mca = q * self.mcas_per_queue + self.t1[q as usize];
+                    self.t1[q as usize] += 1;
+                    self.workers[tid] = W::Drain { mca };
+                } else if scan + 1 < self.queues {
+                    self.workers[tid] = W::Scan { scan: scan + 1 };
+                } else {
+                    // Every queue exhausted: fall through to sub-MCA steal.
+                    self.workers[tid] = W::Steal { scan: 0 };
+                }
+            }
+            W::Drain { mca } => {
+                let m = mca as usize;
+                if self.t2[m] < self.chunks {
+                    // Owner's tier-2 claim is a fetch_add: one step.
+                    let idx = self.chunk_index(m, self.t2[m]);
+                    self.claims[idx] += 1;
+                    self.t2[m] += 1;
+                } else {
+                    self.workers[tid] = W::Scan { scan: 0 };
+                }
+            }
+            W::Steal { scan } => {
+                let m = scan as usize;
+                if m >= self.t2.len() {
+                    self.workers[tid] = W::Done;
+                } else if self.t2[m] < self.chunks {
+                    if self.racy_steal {
+                        // BUG variant: read the cursor now, claim later.
+                        self.workers[tid] = W::StealWrite {
+                            scan,
+                            pending: self.t2[m],
+                        };
+                    } else {
+                        let idx = self.chunk_index(m, self.t2[m]);
+                        self.claims[idx] += 1;
+                        self.t2[m] += 1;
+                    }
+                } else {
+                    self.workers[tid] = W::Steal { scan: scan + 1 };
+                }
+            }
+            W::StealWrite { scan, pending } => {
+                // BUG variant second half: claims against the stale read and
+                // clobbers whatever the owner did in between.
+                let idx = self.chunk_index(scan as usize, pending);
+                self.claims[idx] += 1;
+                self.t2[scan as usize] = pending + 1;
+                self.workers[tid] = W::Steal { scan };
+            }
+            W::Done => {}
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        for (i, &c) in self.claims.iter().enumerate() {
+            if c > 1 {
+                return Err(format!("chunk {i} claimed {c} times"));
+            }
+        }
+        Ok(())
+    }
+
+    fn is_done(&self) -> bool {
+        self.workers.iter().all(|&w| w == W::Done)
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        for (i, &c) in self.claims.iter().enumerate() {
+            if c != 1 {
+                return Err(format!("chunk {i} claimed {c} times (want exactly 1)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn steal_model(racy: bool) -> StealModel {
+    if cfg!(loom) {
+        // Larger space for the dedicated loom CI job: a third worker with
+        // no queue of its own becomes a pure stealer.
+        StealModel::new(3, 2, 1, 2, racy)
+    } else {
+        StealModel::new(2, 2, 1, 2, racy)
+    }
+}
+
+const STEAL_STATE_CAP: usize = 4_000_000;
+
+#[test]
+fn steal_claims_every_chunk_exactly_once_in_all_interleavings() {
+    let report = explore(steal_model(false), STEAL_STATE_CAP).expect("two-tier steal model");
+    assert!(report.finals >= 1, "no terminal schedule: {report:?}");
+    assert!(
+        report.states > 50,
+        "state space suspiciously small: {report:?}"
+    );
+}
+
+#[test]
+fn explorer_catches_unsynchronized_sub_mca_steal() {
+    let err = explore(steal_model(true), STEAL_STATE_CAP).unwrap_err();
+    assert!(err.contains("claimed"), "wrong failure: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Model 2: InflightGuard vs evict
+// ---------------------------------------------------------------------------
+
+/// A client running `execute_batch` against one resident operand.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum Client {
+    /// About to admit: check residency (+ bump inflight, if atomic).
+    Admit,
+    /// Racy-variant only: residency observed, inflight bump still pending
+    /// (models re-acquiring the lock after an unlocked check).
+    AdmitWrite,
+    /// Executing with an `InflightGuard` held.
+    Exec,
+    DoneOk,
+    DoneStale,
+}
+
+/// The evictor racing the clients.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum Evictor {
+    Start,
+    /// Residency removed (inflight was zero).
+    DoneEvicted,
+    /// Surfaced `OperandBusy` (inflight was nonzero).
+    DoneBusy,
+    /// Surfaced `StaleOperand` (already gone).
+    DoneStale,
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct AdmissionModel {
+    /// When set, admission checks residency and bumps inflight in two
+    /// separate steps instead of one locked step.
+    racy_admit: bool,
+    resident: bool,
+    inflight: u8,
+    clients: Vec<Client>,
+    evictor: Evictor,
+}
+
+impl AdmissionModel {
+    fn new(clients: usize, racy: bool) -> AdmissionModel {
+        AdmissionModel {
+            racy_admit: racy,
+            resident: true,
+            inflight: 0,
+            clients: vec![Client::Admit; clients],
+            evictor: Evictor::Start,
+        }
+    }
+
+    fn evictor_tid(&self) -> usize {
+        self.clients.len()
+    }
+}
+
+impl Model for AdmissionModel {
+    fn runnable(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..self.clients.len())
+            .filter(|&t| {
+                !matches!(self.clients[t], Client::DoneOk | Client::DoneStale)
+            })
+            .collect();
+        if self.evictor == Evictor::Start {
+            out.push(self.evictor_tid());
+        }
+        out
+    }
+
+    fn step(&mut self, tid: usize) {
+        if tid == self.evictor_tid() {
+            // Evict runs entirely under the structural lock: one step.
+            self.evictor = if !self.resident {
+                Evictor::DoneStale
+            } else if self.inflight > 0 {
+                Evictor::DoneBusy
+            } else {
+                self.resident = false;
+                Evictor::DoneEvicted
+            };
+            return;
+        }
+        match self.clients[tid] {
+            Client::Admit => {
+                if !self.resident {
+                    self.clients[tid] = Client::DoneStale;
+                } else if self.racy_admit {
+                    // BUG variant: residency observed, lock released before
+                    // the inflight bump.
+                    self.clients[tid] = Client::AdmitWrite;
+                } else {
+                    // Faithful: check + bump under one structural-lock step.
+                    self.inflight += 1;
+                    self.clients[tid] = Client::Exec;
+                }
+            }
+            Client::AdmitWrite => {
+                self.inflight += 1;
+                self.clients[tid] = Client::Exec;
+            }
+            Client::Exec => {
+                // Guard drop releases the inflight count: one step.
+                self.inflight -= 1;
+                self.clients[tid] = Client::DoneOk;
+            }
+            Client::DoneOk | Client::DoneStale => {}
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        let executing = self
+            .clients
+            .iter()
+            .filter(|&&c| c == Client::Exec)
+            .count() as u8;
+        if executing > 0 && !self.resident {
+            return Err("torn residency: a batch is executing on an evicted operand".into());
+        }
+        if self.inflight != executing {
+            return Err(format!(
+                "inflight count {} disagrees with {executing} executing batches",
+                self.inflight
+            ));
+        }
+        Ok(())
+    }
+
+    fn is_done(&self) -> bool {
+        self.evictor != Evictor::Start
+            && self
+                .clients
+                .iter()
+                .all(|&c| matches!(c, Client::DoneOk | Client::DoneStale))
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        if self.inflight != 0 {
+            return Err(format!("inflight count leaked: {}", self.inflight));
+        }
+        match self.evictor {
+            Evictor::DoneEvicted if self.resident => {
+                Err("evict reported success but residency survived".into())
+            }
+            Evictor::DoneBusy if !self.resident => {
+                Err("evict reported OperandBusy but removed the residency".into())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+fn admission_model(racy: bool) -> AdmissionModel {
+    AdmissionModel::new(if cfg!(loom) { 2 } else { 1 }, racy)
+}
+
+const ADMIT_STATE_CAP: usize = 1_000_000;
+
+#[test]
+fn admission_never_tears_residency_in_any_interleaving() {
+    let report = explore(admission_model(false), ADMIT_STATE_CAP).expect("admission model");
+    assert!(report.finals >= 2, "expected multiple outcomes: {report:?}");
+}
+
+#[test]
+fn explorer_catches_check_then_admit_race() {
+    let err = explore(admission_model(true), ADMIT_STATE_CAP).unwrap_err();
+    assert!(err.contains("torn residency"), "wrong failure: {err}");
+}
+
+#[test]
+fn busy_eviction_surfaces_operand_busy_not_a_torn_residency() {
+    // Directed schedule: admit first, then evict mid-flight.
+    let mut m = admission_model(false);
+    m.step(0); // client 0 admits: inflight = 1
+    assert_eq!(m.clients[0], Client::Exec);
+    let evictor = m.evictor_tid();
+    m.step(evictor);
+    assert_eq!(m.evictor, Evictor::DoneBusy);
+    assert!(m.resident, "busy eviction must leave the residency intact");
+    m.invariant().expect("mid-flight state is consistent");
+}
+
+#[test]
+fn evicting_idle_then_admitting_surfaces_stale_not_torn() {
+    let mut m = admission_model(false);
+    let evictor = m.evictor_tid();
+    m.step(evictor); // inflight == 0: eviction succeeds
+    assert_eq!(m.evictor, Evictor::DoneEvicted);
+    m.step(0); // late client must see StaleOperand, never execute
+    assert_eq!(m.clients[0], Client::DoneStale);
+    m.invariant().expect("post-evict state is consistent");
+}

@@ -1,0 +1,467 @@
+//! A minimal Rust lexer: just enough token shape for the lint rules.
+//!
+//! Produces a flat stream of identifier / punctuation / literal tokens with
+//! 1-based line:column positions, plus the text of every `//` line comment
+//! (the waiver grammar lives in comments).  Strings, raw strings, byte
+//! strings, char literals, lifetimes, numbers and nested block comments are
+//! consumed correctly so their contents can never masquerade as code — a
+//! `"HashMap"` inside a string or doc comment is not a diagnostic.
+
+/// Token class.  The lint rules only distinguish words from punctuation;
+/// every literal collapses into [`TokKind::Lit`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Lit,
+}
+
+/// One lexed token with its source position (1-based).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// A lexed file: the token stream plus per-line `//` comments.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// `(line, comment text)` for every line comment, including the `//`.
+    pub line_comments: Vec<(u32, String)>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl Cursor {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied()?;
+        self.pos += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens and line comments.  The lexer never fails: any
+/// character it does not understand becomes a one-char punctuation token,
+/// and unterminated literals simply run to end of file.
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor {
+        chars: src.chars().collect(),
+        pos: 0,
+        line: 1,
+        col: 1,
+    };
+    let mut toks = Vec::new();
+    let mut line_comments = Vec::new();
+
+    while let Some(c) = cur.peek(0) {
+        let (line, col) = (cur.line, cur.col);
+        if c.is_whitespace() {
+            cur.bump();
+            continue;
+        }
+        // Comments.
+        if c == '/' && cur.peek(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            line_comments.push((line, text));
+            continue;
+        }
+        if c == '/' && cur.peek(1) == Some('*') {
+            cur.bump();
+            cur.bump();
+            let mut depth = 1usize;
+            while depth > 0 {
+                match (cur.peek(0), cur.peek(1)) {
+                    (Some('/'), Some('*')) => {
+                        cur.bump();
+                        cur.bump();
+                        depth += 1;
+                    }
+                    (Some('*'), Some('/')) => {
+                        cur.bump();
+                        cur.bump();
+                        depth -= 1;
+                    }
+                    (Some(_), _) => {
+                        cur.bump();
+                    }
+                    (None, _) => break,
+                }
+            }
+            continue;
+        }
+        // Raw strings / raw identifiers / byte strings, before plain idents.
+        if c == 'r' || c == 'b' {
+            if let Some(tok) = lex_prefixed(&mut cur, line, col) {
+                toks.push(tok);
+                continue;
+            }
+        }
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text,
+                line,
+                col,
+            });
+            continue;
+        }
+        if c == '"' {
+            lex_string(&mut cur);
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text: String::from("\"str\""),
+                line,
+                col,
+            });
+            continue;
+        }
+        if c == '\'' {
+            if lex_quote(&mut cur) {
+                toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::from("'char'"),
+                    line,
+                    col,
+                });
+            }
+            // Lifetimes are consumed silently: no rule looks at them.
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let text = lex_number(&mut cur);
+            toks.push(Tok {
+                kind: TokKind::Lit,
+                text,
+                line,
+                col,
+            });
+            continue;
+        }
+        cur.bump();
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+            col,
+        });
+    }
+
+    Lexed {
+        toks,
+        line_comments,
+    }
+}
+
+/// Handle `r"…"`, `r#"…"#`, `r#ident`, `b"…"`, `b'…'`, `br#"…"#`.
+/// Returns `None` when the `r`/`b` is just the start of a plain identifier
+/// (the caller then lexes it normally).
+fn lex_prefixed(cur: &mut Cursor, line: u32, col: u32) -> Option<Tok> {
+    let c0 = cur.peek(0)?;
+    let mut ahead = 1;
+    if c0 == 'b' && matches!(cur.peek(1), Some('r')) {
+        ahead = 2;
+    }
+    // Count `#` marks after the prefix.
+    let mut hashes = 0usize;
+    while cur.peek(ahead + hashes) == Some('#') {
+        hashes += 1;
+    }
+    match cur.peek(ahead + hashes) {
+        Some('"') => {
+            // (Byte-)raw or plain-prefixed string.  `b"` has hashes == 0.
+            for _ in 0..ahead + hashes + 1 {
+                cur.bump();
+            }
+            let raw = c0 == 'r' || ahead == 2;
+            if !raw {
+                // `b"…"` — ordinary escapes apply.
+                lex_string_body(cur);
+            } else if hashes == 0 {
+                // `r"…"` — no escapes, ends at first quote.
+                while let Some(ch) = cur.bump() {
+                    if ch == '"' {
+                        break;
+                    }
+                }
+            } else {
+                // `r#…#"…"#…#` — ends at quote followed by `hashes` marks.
+                loop {
+                    match cur.bump() {
+                        Some('"') => {
+                            let mut seen = 0;
+                            while seen < hashes && cur.peek(0) == Some('#') {
+                                cur.bump();
+                                seen += 1;
+                            }
+                            if seen == hashes {
+                                break;
+                            }
+                        }
+                        Some(_) => {}
+                        None => break,
+                    }
+                }
+            }
+            Some(Tok {
+                kind: TokKind::Lit,
+                text: String::from("\"str\""),
+                line,
+                col,
+            })
+        }
+        Some('\'') if c0 == 'b' && ahead == 1 && hashes == 0 => {
+            cur.bump(); // b
+            lex_quote(cur);
+            Some(Tok {
+                kind: TokKind::Lit,
+                text: String::from("'char'"),
+                line,
+                col,
+            })
+        }
+        Some(ch) if c0 == 'r' && hashes == 1 && is_ident_start(ch) => {
+            // Raw identifier `r#ident` — token text is the bare name.
+            cur.bump(); // r
+            cur.bump(); // #
+            let mut text = String::new();
+            while let Some(ch) = cur.peek(0) {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                text.push(ch);
+                cur.bump();
+            }
+            Some(Tok {
+                kind: TokKind::Ident,
+                text,
+                line,
+                col,
+            })
+        }
+        _ => None,
+    }
+}
+
+/// Consume a `"`-opened string literal, cursor on the opening quote.
+fn lex_string(cur: &mut Cursor) {
+    cur.bump(); // opening quote
+    lex_string_body(cur);
+}
+
+/// Consume a string body with escapes, cursor just past the opening quote.
+fn lex_string_body(cur: &mut Cursor) {
+    while let Some(ch) = cur.bump() {
+        match ch {
+            '\\' => {
+                cur.bump();
+            }
+            '"' => break,
+            _ => {}
+        }
+    }
+}
+
+/// Cursor on a `'`.  Returns `true` if it was a char literal (consumed),
+/// `false` for a lifetime (also consumed).
+fn lex_quote(cur: &mut Cursor) -> bool {
+    cur.bump(); // the quote
+    match cur.peek(0) {
+        Some('\\') => {
+            // Escaped char literal: `\n`, `\\`, `\'`, `\x41`, `\u{1F600}`.
+            cur.bump(); // the backslash
+            match cur.bump() {
+                Some('u') => {
+                    if cur.peek(0) == Some('{') {
+                        while let Some(ch) = cur.bump() {
+                            if ch == '}' {
+                                break;
+                            }
+                        }
+                    }
+                }
+                Some('x') => {
+                    cur.bump();
+                    cur.bump();
+                }
+                _ => {}
+            }
+            if cur.peek(0) == Some('\'') {
+                cur.bump();
+            }
+            true
+        }
+        Some(ch) if is_ident_continue(ch) => {
+            // `'a'` is a char literal; `'a` (no closing quote after the
+            // ident run) is a lifetime.
+            let mut run = 1;
+            while cur.peek(run).map(is_ident_continue).unwrap_or(false) {
+                run += 1;
+            }
+            if cur.peek(run) == Some('\'') && run == 1 {
+                cur.bump();
+                cur.bump();
+                true
+            } else {
+                for _ in 0..run {
+                    cur.bump();
+                }
+                false
+            }
+        }
+        Some('\'') => {
+            cur.bump();
+            true
+        }
+        Some(_) => {
+            // Punctuation char literal like `'('`.
+            cur.bump();
+            if cur.peek(0) == Some('\'') {
+                cur.bump();
+            }
+            true
+        }
+        None => false,
+    }
+}
+
+/// Consume a numeric literal (ints, floats, suffixes, exponents).
+fn lex_number(cur: &mut Cursor) -> String {
+    let mut text = String::new();
+    let mut seen_dot = false;
+    while let Some(ch) = cur.peek(0) {
+        if is_ident_continue(ch) {
+            text.push(ch);
+            cur.bump();
+            continue;
+        }
+        if ch == '.' && !seen_dot && cur.peek(1).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+            seen_dot = true;
+            text.push(ch);
+            cur.bump();
+            continue;
+        }
+        if (ch == '+' || ch == '-')
+            && matches!(text.chars().last(), Some('e') | Some('E'))
+            && cur.peek(1).map(|c| c.is_ascii_digit()).unwrap_or(false)
+        {
+            text.push(ch);
+            cur.bump();
+            continue;
+        }
+        break;
+    }
+    text
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_idents() {
+        let src = r##"
+            // HashMap in a comment
+            /* HashMap /* nested */ still comment */
+            let s = "HashMap";
+            let r = r#"HashMap"#;
+            let b = b"HashMap";
+            let real = HashSet::new();
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(ids.contains(&"HashSet".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a str) -> &'a str { let c = 'x'; x }";
+        let lexed = lex(src);
+        let chars: Vec<_> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lit && t.text == "'char'")
+            .collect();
+        assert_eq!(chars.len(), 1);
+        assert!(idents(src).contains(&"str".to_string()));
+    }
+
+    #[test]
+    fn positions_are_one_based() {
+        let lexed = lex("ab\n  cd");
+        assert_eq!((lexed.toks[0].line, lexed.toks[0].col), (1, 1));
+        assert_eq!((lexed.toks[1].line, lexed.toks[1].col), (2, 3));
+    }
+
+    #[test]
+    fn line_comments_are_captured_with_line() {
+        let lexed = lex("let x = 1; // meliso-lint: allow(clock) -- why\nlet y = 2;");
+        assert_eq!(lexed.line_comments.len(), 1);
+        let (line, text) = &lexed.line_comments[0];
+        assert_eq!(*line, 1);
+        assert!(text.contains("allow(clock)"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let lexed = lex("for i in 0..10 { }");
+        let texts: Vec<_> = lexed.toks.iter().map(|t| t.text.as_str()).collect();
+        assert!(texts.contains(&"0"));
+        assert!(texts.contains(&"10"));
+        assert_eq!(texts.iter().filter(|t| **t == ".").count(), 2);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_idents() {
+        let ids = idents("let r#type = 1;");
+        assert!(ids.contains(&"type".to_string()));
+    }
+}

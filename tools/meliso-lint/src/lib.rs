@@ -1,0 +1,55 @@
+//! # meliso-lint — determinism & concurrency static analysis for MELISO+
+//!
+//! The MELISO+ determinism contract (docs/ARCHITECTURE.md) promises that a
+//! solve is bit-identical across shard counts, placements, concurrency
+//! levels and steal orders.  That only holds if a handful of source-level
+//! invariants hold everywhere; this crate machine-checks them:
+//!
+//! | rule | name | invariant |
+//! |------|------|-----------|
+//! | D1 | `nondeterministic_map` | no `HashMap`/`HashSet` in result-path modules (`plane`, `server`, `iterative`, `ec`, `linalg`, `matrices`) — ordered maps only |
+//! | D2 | `clock` | no `Instant::now`/`SystemTime` outside `obs/` and `plane/timing.rs` |
+//! | D3 | `ad_hoc_random` | no `rand::`/`thread_rng` — randomness flows through `util::rng` counter streams |
+//! | C1 | `unbounded_recv` | no bare `.recv()` — gathers and worker loops use `.recv_timeout(..)` |
+//! | C2 | `panic_path` | no `.unwrap()`/`.expect()`/`panic!`-family in non-test `plane`/`server` code |
+//! | C3 | `lock_order` | structural mutex strictly before per-`(operand, MCA)` slot mutexes, per function |
+//!
+//! Waive a diagnostic in place with
+//! `// meliso-lint: allow(<rule>) -- <reason>` on the offending line or the
+//! line above; the reason is mandatory (a bare waiver is a
+//! `malformed_waiver` diagnostic).
+//!
+//! Run it from the workspace root:
+//!
+//! ```text
+//! cargo run -p meliso-lint            # lints rust/src, exit 1 on findings
+//! cargo run -p meliso-lint -- <dir>   # lint another source root
+//! ```
+//!
+//! The analysis is token-level (a hand-rolled lexer, no crates.io
+//! dependencies — this repo builds hermetically), which is exactly enough
+//! for these rules and keeps the tool buildable everywhere the crate is.
+
+pub mod lexer;
+pub mod rules;
+pub mod walk;
+
+pub use rules::{lint_file, Diagnostic, FileCtx};
+
+use std::io;
+use std::path::Path;
+
+/// Lint every `.rs` file under `root` (a source root like `rust/src`).
+/// Diagnostics come back sorted by `(file, line, col)`.
+pub fn lint_tree(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    let mut diags = Vec::new();
+    for rel in walk::rust_sources(root)? {
+        let src = std::fs::read_to_string(root.join(&rel))?;
+        let ctx = FileCtx {
+            rel_path: rel.clone(),
+        };
+        diags.extend(lint_file(&ctx, &src));
+    }
+    diags.sort();
+    Ok(diags)
+}

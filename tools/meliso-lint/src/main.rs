@@ -1,0 +1,48 @@
+//! CLI: `meliso-lint [source-root]` — lints `rust/src` by default, prints
+//! `file:line:col: [rule] message` diagnostics, exits 1 if any remain.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn default_root() -> PathBuf {
+    // Works both from the workspace root (`cargo run -p meliso-lint`) and
+    // from the tool's own directory.
+    let local = Path::new("rust/src");
+    if local.is_dir() {
+        return local.to_path_buf();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src")
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let root = match args.next() {
+        Some(flag) if flag == "--help" || flag == "-h" => {
+            println!(
+                "meliso-lint: determinism & concurrency checks (D1-D3, C1-C3)\n\
+                 usage: meliso-lint [source-root]   (default: rust/src)\n\
+                 waive: // meliso-lint: allow(<rule>) -- <reason>"
+            );
+            return ExitCode::SUCCESS;
+        }
+        Some(dir) => PathBuf::from(dir),
+        None => default_root(),
+    };
+    let diags = match meliso_lint::lint_tree(&root) {
+        Ok(diags) => diags,
+        Err(err) => {
+            eprintln!("meliso-lint: cannot read {}: {err}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        println!("meliso-lint: clean ({} ok)", root.display());
+        ExitCode::SUCCESS
+    } else {
+        println!("meliso-lint: {} diagnostic(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}

@@ -1,0 +1,580 @@
+//! The lint rules: determinism (D1–D3) and concurrency (C1–C3).
+//!
+//! Every rule works on the token stream from [`crate::lexer`], with two
+//! structural overlays computed first:
+//!
+//! * **test regions** — the brace span of any item carrying an attribute
+//!   that mentions `test` (`#[test]`, `#[cfg(test)]`, …).  Test code is
+//!   exempt from every rule except D3 (tests must be deterministic too).
+//! * **function spans** — `fn name { … }` brace spans, used by C3 to
+//!   approximate lock-acquisition order per function.
+//!
+//! Diagnostics can be waived in place with
+//! `// meliso-lint: allow(<rule>) -- <reason>` on the offending line or the
+//! line above.  A waiver without a `-- <reason>` is itself a diagnostic
+//! (`malformed_waiver`): the reason is the reviewable artifact.
+
+use crate::lexer::{lex, Tok, TokKind};
+
+/// Rule identifiers, as used in waiver comments and diagnostics.
+pub mod rule {
+    /// D1 — `HashMap`/`HashSet` in a result-path module.
+    pub const NONDETERMINISTIC_MAP: &str = "nondeterministic_map";
+    /// D2 — `Instant::now`/`SystemTime` outside `obs/` + `plane/timing.rs`.
+    pub const CLOCK: &str = "clock";
+    /// D3 — `rand::`/`thread_rng` anywhere (randomness must flow through
+    /// `util::rng` counter streams).
+    pub const AD_HOC_RANDOM: &str = "ad_hoc_random";
+    /// C1 — bare `.recv()` (unbounded wait) instead of `.recv_timeout(..)`.
+    pub const UNBOUNDED_RECV: &str = "unbounded_recv";
+    /// C2 — `.unwrap()`/`.expect()`/`panic!`-family in non-test
+    /// `plane`/`server` code.
+    pub const PANIC_PATH: &str = "panic_path";
+    /// C3 — slot mutex acquired before the structural mutex in one function.
+    pub const LOCK_ORDER: &str = "lock_order";
+    /// A waiver comment missing its `-- <reason>` tail.
+    pub const MALFORMED_WAIVER: &str = "malformed_waiver";
+}
+
+/// Modules whose iteration order can reach solve results (D1 scope).
+const RESULT_PATH_MODULES: &[&str] = &["plane", "server", "iterative", "ec", "linalg", "matrices"];
+
+/// Modules where the panic-free (typed-`PlaneError`) contract holds (C2).
+const PANIC_FREE_MODULES: &[&str] = &["plane", "server"];
+
+/// One finding, pointing at a file position.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: [{}] {}",
+            self.file, self.line, self.col, self.rule, self.msg
+        )
+    }
+}
+
+/// A parsed `// meliso-lint: allow(<rule>) -- <reason>` comment.
+struct Waiver {
+    line: u32,
+    rule: String,
+    has_reason: bool,
+}
+
+fn parse_waivers(comments: &[(u32, String)]) -> Vec<Waiver> {
+    let mut waivers = Vec::new();
+    for (line, text) in comments {
+        let Some(at) = text.find("meliso-lint:") else {
+            continue;
+        };
+        let rest = &text[at + "meliso-lint:".len()..];
+        let Some(open) = rest.find("allow(") else {
+            continue;
+        };
+        let after = &rest[open + "allow(".len()..];
+        let Some(close) = after.find(')') else {
+            continue;
+        };
+        let rule = after[..close].trim().to_string();
+        let tail = &after[close + 1..];
+        let has_reason = tail
+            .find("--")
+            .map(|d| !tail[d + 2..].trim().is_empty())
+            .unwrap_or(false);
+        waivers.push(Waiver {
+            line: *line,
+            rule,
+            has_reason,
+        });
+    }
+    waivers
+}
+
+/// Inclusive token-index span.
+#[derive(Clone, Copy)]
+struct Span {
+    start: usize,
+    end: usize,
+}
+
+/// Find the token index of the brace matching the `{` at `open`.
+/// Returns the last token index when unbalanced (lexer-level safety net).
+fn matching_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return i;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Brace spans of items behind a `test`-mentioning attribute.
+///
+/// Heuristic: an attribute `#[…]` whose bracket content contains the bare
+/// identifier `test` (and not `not`, so `#[cfg(not(test))]` keeps its body
+/// linted) marks the next `{ … }` block as test code.  Attributes followed
+/// by `;` before any `{` (e.g. on a `use`) mark nothing.
+fn test_regions(toks: &[Tok]) -> Vec<Span> {
+    let mut regions: Vec<Span> = Vec::new();
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        let is_attr = toks[i].kind == TokKind::Punct
+            && toks[i].text == "#"
+            && toks[i + 1].kind == TokKind::Punct
+            && toks[i + 1].text == "[";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        // Find the matching `]`.
+        let mut depth = 0usize;
+        let mut close = None;
+        let mut mentions_test = false;
+        let mut mentions_not = false;
+        for (j, t) in toks.iter().enumerate().skip(i + 1) {
+            match (t.kind, t.text.as_str()) {
+                (TokKind::Punct, "[") => depth += 1,
+                (TokKind::Punct, "]") => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close = Some(j);
+                        break;
+                    }
+                }
+                (TokKind::Ident, "test") => mentions_test = true,
+                (TokKind::Ident, "not") => mentions_not = true,
+                _ => {}
+            }
+        }
+        let Some(close) = close else { break };
+        if mentions_test && !mentions_not {
+            // Scan for the item body, skipping over further attributes.
+            let mut k = close + 1;
+            while k < toks.len() {
+                let t = &toks[k];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "{" => {
+                            let end = matching_brace(toks, k);
+                            regions.push(Span { start: k, end });
+                            break;
+                        }
+                        ";" => break,
+                        _ => {}
+                    }
+                }
+                k += 1;
+            }
+        }
+        i = close + 1;
+    }
+    regions
+}
+
+/// `fn` body spans with the function name (C3 scope units).
+fn fn_spans(toks: &[Tok]) -> Vec<(String, Span)> {
+    let mut spans = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Ident && toks[i].text == "fn" {
+            let name = toks
+                .get(i + 1)
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.clone())
+                .unwrap_or_default();
+            let mut k = i + 2;
+            while k < toks.len() {
+                let t = &toks[k];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "{" => {
+                            let end = matching_brace(toks, k);
+                            spans.push((name.clone(), Span { start: k, end }));
+                            i = k; // nested fns/closures re-scan from inside
+                            break;
+                        }
+                        ";" => break, // trait method declaration, no body
+                        _ => {}
+                    }
+                }
+                k += 1;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Per-file lint context: path relative to the scanned source root,
+/// with `/` separators (e.g. `plane/handle.rs`).
+pub struct FileCtx {
+    pub rel_path: String,
+}
+
+impl FileCtx {
+    fn top_module(&self) -> &str {
+        match self.rel_path.find('/') {
+            Some(cut) => &self.rel_path[..cut],
+            None => "",
+        }
+    }
+
+    fn result_path(&self) -> bool {
+        RESULT_PATH_MODULES.contains(&self.top_module())
+    }
+
+    fn panic_free(&self) -> bool {
+        PANIC_FREE_MODULES.contains(&self.top_module())
+    }
+
+    fn clock_exempt(&self) -> bool {
+        self.top_module() == "obs" || self.rel_path == "plane/timing.rs"
+    }
+}
+
+struct Linter<'a> {
+    ctx: &'a FileCtx,
+    toks: Vec<Tok>,
+    tests: Vec<Span>,
+    waivers: Vec<Waiver>,
+    diags: Vec<Diagnostic>,
+}
+
+impl<'a> Linter<'a> {
+    fn in_test(&self, idx: usize) -> bool {
+        self.tests.iter().any(|s| s.start <= idx && idx <= s.end)
+    }
+
+    /// Emit a diagnostic unless a well-formed waiver covers it; a matching
+    /// waiver without a reason becomes a `malformed_waiver` diagnostic.
+    fn emit(&mut self, rule: &'static str, tok: &Tok, msg: String) {
+        let covering = self
+            .waivers
+            .iter()
+            .find(|w| w.rule == rule && (w.line == tok.line || w.line + 1 == tok.line));
+        match covering {
+            Some(w) if w.has_reason => {}
+            Some(w) => {
+                self.diags.push(Diagnostic {
+                    file: self.ctx.rel_path.clone(),
+                    line: w.line,
+                    col: 1,
+                    rule: rule::MALFORMED_WAIVER,
+                    msg: format!(
+                        "waiver for `{rule}` is missing its `-- <reason>` tail; \
+                         the reason is what makes the waiver reviewable"
+                    ),
+                });
+            }
+            None => {
+                self.diags.push(Diagnostic {
+                    file: self.ctx.rel_path.clone(),
+                    line: tok.line,
+                    col: tok.col,
+                    rule,
+                    msg,
+                });
+            }
+        }
+    }
+
+    fn ident_at(&self, i: usize, text: &str) -> bool {
+        self.toks
+            .get(i)
+            .map(|t| t.kind == TokKind::Ident && t.text == text)
+            .unwrap_or(false)
+    }
+
+    fn punct_at(&self, i: usize, text: &str) -> bool {
+        self.toks
+            .get(i)
+            .map(|t| t.kind == TokKind::Punct && t.text == text)
+            .unwrap_or(false)
+    }
+
+    /// `.name(` method-call shape at ident index `i`.
+    fn is_method_call(&self, i: usize) -> bool {
+        i >= 1 && self.punct_at(i - 1, ".") && self.punct_at(i + 1, "(")
+    }
+
+    fn rule_d1_nondeterministic_map(&mut self) {
+        if !self.ctx.result_path() {
+            return;
+        }
+        for i in 0..self.toks.len() {
+            let t = &self.toks[i];
+            if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+                continue;
+            }
+            if self.in_test(i) {
+                continue;
+            }
+            let tok = t.clone();
+            let name = tok.text.clone();
+            let ordered = if name == "HashMap" { "BTreeMap" } else { "BTreeSet" };
+            self.emit(
+                rule::NONDETERMINISTIC_MAP,
+                &tok,
+                format!(
+                    "`{name}` in result-path module `{}`: iteration order is \
+                     nondeterministic; use `{ordered}` or waive with a reason",
+                    self.ctx.top_module()
+                ),
+            );
+        }
+    }
+
+    fn rule_d2_clock(&mut self) {
+        if self.ctx.clock_exempt() {
+            return;
+        }
+        for i in 0..self.toks.len() {
+            let t = &self.toks[i];
+            if t.kind != TokKind::Ident || self.in_test(i) {
+                continue;
+            }
+            if t.text == "SystemTime" {
+                let tok = t.clone();
+                self.emit(
+                    rule::CLOCK,
+                    &tok,
+                    "`SystemTime` outside `obs/`: wall-clock reads are confined to \
+                     observability (route timing through `plane::timing`)"
+                        .to_string(),
+                );
+            } else if t.text == "Instant"
+                && self.punct_at(i + 1, ":")
+                && self.punct_at(i + 2, ":")
+                && self.ident_at(i + 3, "now")
+            {
+                let tok = t.clone();
+                self.emit(
+                    rule::CLOCK,
+                    &tok,
+                    "`Instant::now()` outside `obs/`/`plane/timing.rs`: clock reads on \
+                     execution paths go through `plane::timing::monotonic_now()`"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    fn rule_d3_ad_hoc_random(&mut self) {
+        // Applies to test code too: tests replay from counter seeds.
+        for i in 0..self.toks.len() {
+            let t = &self.toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let hit = t.text == "thread_rng"
+                || (t.text == "rand" && self.punct_at(i + 1, ":") && self.punct_at(i + 2, ":"));
+            if hit {
+                let tok = t.clone();
+                self.emit(
+                    rule::AD_HOC_RANDOM,
+                    &tok,
+                    "ad-hoc randomness: all random streams derive from `util::rng` \
+                     counter seeds (`exec_stream_seed`/`mca_seed`) so solves replay \
+                     bit-identically"
+                        .to_string(),
+                );
+            }
+        }
+    }
+
+    fn rule_c1_unbounded_recv(&mut self) {
+        for i in 0..self.toks.len() {
+            let t = &self.toks[i];
+            if t.kind != TokKind::Ident || t.text != "recv" {
+                continue;
+            }
+            if !self.is_method_call(i) || self.in_test(i) {
+                continue;
+            }
+            let tok = t.clone();
+            self.emit(
+                rule::UNBOUNDED_RECV,
+                &tok,
+                "bare `.recv()` blocks forever if the sender side dies; use \
+                 `.recv_timeout(..)` with a liveness check (see `drain_walk`)"
+                    .to_string(),
+            );
+        }
+    }
+
+    fn rule_c2_panic_path(&mut self) {
+        if !self.ctx.panic_free() {
+            return;
+        }
+        for i in 0..self.toks.len() {
+            let t = &self.toks[i];
+            if t.kind != TokKind::Ident || self.in_test(i) {
+                continue;
+            }
+            let method_hit = (t.text == "unwrap" || t.text == "expect") && self.is_method_call(i);
+            let macro_hit = matches!(
+                t.text.as_str(),
+                "panic" | "unreachable" | "todo" | "unimplemented"
+            ) && self.punct_at(i + 1, "!");
+            if method_hit || macro_hit {
+                let tok = t.clone();
+                let what = if method_hit {
+                    format!(".{}()", tok.text)
+                } else {
+                    format!("{}!", tok.text)
+                };
+                self.emit(
+                    rule::PANIC_PATH,
+                    &tok,
+                    format!(
+                        "`{what}` in non-test `{}` code: the plane/server contract is \
+                         typed errors only (`PlaneError`); a panic here kills a shard \
+                         or poisons a lock",
+                        self.ctx.top_module()
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Lock tier for C3, classified from the receiver/argument tokens of a
+    /// lock acquisition.
+    fn classify_lock(&self, site: usize) -> LockTier {
+        // `site` indexes the `lock`/`lock_unpoisoned` ident.  Look at the
+        // receiver chain before a `.lock()` and the argument tokens after a
+        // `lock_unpoisoned(`.
+        let mut names: Vec<&str> = Vec::new();
+        if self.is_method_call(site) {
+            // Walk the `a.b.c` / `a::b` chain backwards.
+            let mut k = site - 1; // the `.`
+            while k > 0 {
+                k -= 1;
+                let t = &self.toks[k];
+                match (t.kind, t.text.as_str()) {
+                    (TokKind::Ident, name) => names.push(name),
+                    (TokKind::Punct, "." | ":" | ")" | "]" | "[") => {}
+                    (TokKind::Lit, _) => {}
+                    _ => break,
+                }
+            }
+        } else if self.punct_at(site + 1, "(") {
+            // Argument tokens up to the matching `)`.
+            let mut depth = 0usize;
+            for t in self.toks.iter().skip(site + 1) {
+                match (t.kind, t.text.as_str()) {
+                    (TokKind::Punct, "(") => depth += 1,
+                    (TokKind::Punct, ")") => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    (TokKind::Ident, name) => names.push(name),
+                    _ => {}
+                }
+            }
+        }
+        if names.iter().any(|n| *n == "structural") {
+            LockTier::Structural
+        } else if names.iter().any(|n| *n == "mcas" || *n == "executors") {
+            LockTier::Slot
+        } else {
+            LockTier::Unknown
+        }
+    }
+
+    fn rule_c3_lock_order(&mut self) {
+        // Per function: once a per-(operand, MCA) slot mutex is taken, the
+        // structural mutex must not be acquired afterwards in source order.
+        // This is an approximation (guards may be dropped between the two
+        // calls), deliberately conservative: the repo convention is to
+        // never even *write* the inverted order in one function.
+        let spans = fn_spans(&self.toks);
+        let mut flagged: Vec<(Tok, String)> = Vec::new();
+        for (name, span) in &spans {
+            let mut slot_seen: Option<u32> = None;
+            for i in span.start..=span.end.min(self.toks.len() - 1) {
+                let t = &self.toks[i];
+                if t.kind != TokKind::Ident || self.in_test(i) {
+                    continue;
+                }
+                let is_lock = (t.text == "lock" && self.is_method_call(i))
+                    || (t.text == "lock_unpoisoned" && self.punct_at(i + 1, "("));
+                if !is_lock {
+                    continue;
+                }
+                match self.classify_lock(i) {
+                    LockTier::Slot => slot_seen = slot_seen.or(Some(t.line)),
+                    LockTier::Structural => {
+                        if let Some(slot_line) = slot_seen {
+                            flagged.push((
+                                t.clone(),
+                                format!(
+                                    "structural mutex acquired after a slot mutex \
+                                     (slot lock at line {slot_line}) in fn `{name}`: \
+                                     the lock order is structural -> slot, always"
+                                ),
+                            ));
+                        }
+                    }
+                    LockTier::Unknown => {}
+                }
+            }
+        }
+        for (tok, msg) in flagged {
+            self.emit(rule::LOCK_ORDER, &tok, msg);
+        }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum LockTier {
+    Structural,
+    Slot,
+    Unknown,
+}
+
+/// Lint one file's source text.  `ctx.rel_path` decides which module-scoped
+/// rules apply.  Diagnostics come back sorted by position.
+pub fn lint_file(ctx: &FileCtx, src: &str) -> Vec<Diagnostic> {
+    let lexed = lex(src);
+    let tests = test_regions(&lexed.toks);
+    let waivers = parse_waivers(&lexed.line_comments);
+    let mut linter = Linter {
+        ctx,
+        toks: lexed.toks,
+        tests,
+        waivers,
+        diags: Vec::new(),
+    };
+    if !linter.toks.is_empty() {
+        linter.rule_d1_nondeterministic_map();
+        linter.rule_d2_clock();
+        linter.rule_d3_ad_hoc_random();
+        linter.rule_c1_unbounded_recv();
+        linter.rule_c2_panic_path();
+        linter.rule_c3_lock_order();
+    }
+    let mut diags = linter.diags;
+    diags.sort();
+    diags.dedup();
+    diags
+}

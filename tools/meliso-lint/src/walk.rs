@@ -1,0 +1,51 @@
+//! Std-only recursive `.rs` collector (walkdir stand-in).
+
+use std::collections::BTreeSet;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// All `.rs` files under `root`, sorted, as paths relative to `root` with
+/// `/` separators.  Sorted order keeps diagnostics deterministic across
+/// platforms and filesystem enumeration orders.
+pub fn rust_sources(root: &Path) -> io::Result<Vec<String>> {
+    let mut found = BTreeSet::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let path = entry.path();
+            let ty = entry.file_type()?;
+            if ty.is_dir() {
+                stack.push(path);
+            } else if ty.is_file() && path.extension().map(|e| e == "rs").unwrap_or(false) {
+                found.insert(relative_slash(root, &path));
+            }
+        }
+    }
+    Ok(found.into_iter().collect())
+}
+
+fn relative_slash(root: &Path, path: &Path) -> String {
+    let rel: PathBuf = path.strip_prefix(root).unwrap_or(path).to_path_buf();
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    parts.join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walks_this_crate_sorted() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let files = rust_sources(&root).unwrap();
+        assert!(files.contains(&"lexer.rs".to_string()), "{files:?}");
+        assert!(files.contains(&"rules.rs".to_string()));
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted);
+    }
+}

@@ -1,0 +1,7 @@
+//! D2 exemption fixture: `obs/` may read wall clocks.
+
+use std::time::{Instant, SystemTime};
+
+pub fn stamp() -> (Instant, SystemTime) {
+    (Instant::now(), SystemTime::now())
+}

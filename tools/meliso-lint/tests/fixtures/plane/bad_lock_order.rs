@@ -1,0 +1,20 @@
+//! C3 fixture: slot mutex taken before the structural mutex.
+
+use std::sync::Mutex;
+
+pub struct Shared {
+    pub structural: Mutex<u32>,
+    pub mcas: Vec<Mutex<u32>>,
+}
+
+pub fn inverted(sh: &Shared) -> u32 {
+    let slot = sh.mcas[0].lock().unwrap_or_else(|e| e.into_inner());
+    let st = sh.structural.lock().unwrap_or_else(|e| e.into_inner());
+    *slot + *st
+}
+
+pub fn correct(sh: &Shared) -> u32 {
+    let st = sh.structural.lock().unwrap_or_else(|e| e.into_inner());
+    let slot = sh.mcas[0].lock().unwrap_or_else(|e| e.into_inner());
+    *st + *slot
+}

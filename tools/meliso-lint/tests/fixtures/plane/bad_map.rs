@@ -1,0 +1,16 @@
+//! D1 fixture: nondeterministic maps in a result-path module.
+
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+// meliso-lint: allow(nondeterministic_map) -- bounded scratch, drained before results
+use std::collections::HashMap as WaivedMap;
+
+// meliso-lint: allow(nondeterministic_map)
+use std::collections::HashSet as BadWaiver;
+
+pub fn sizes() -> (usize, usize) {
+    let m = HashMap::<u32, u32>::new();
+    let s = HashSet::<u32>::new();
+    (m.len(), s.len())
+}

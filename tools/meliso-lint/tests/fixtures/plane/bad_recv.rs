@@ -1,0 +1,24 @@
+//! C1 fixture: unbounded receives in worker loops.
+
+use std::sync::mpsc::Receiver;
+use std::time::Duration;
+
+pub fn gather(rx: &Receiver<u32>) -> u32 {
+    rx.recv().unwrap_or(0)
+}
+
+pub fn gather_bounded(rx: &Receiver<u32>) -> u32 {
+    rx.recv_timeout(Duration::from_millis(200)).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn recv_in_tests_is_fine() {
+        let (tx, rx) = channel();
+        tx.send(1u32).ok();
+        let _ = rx.recv();
+    }
+}

@@ -1,0 +1,7 @@
+//! D2 exemption fixture: `plane/timing.rs` owns the monotonic clock.
+
+use std::time::Instant;
+
+pub fn monotonic_now() -> Instant {
+    Instant::now()
+}

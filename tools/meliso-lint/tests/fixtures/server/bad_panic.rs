@@ -1,0 +1,24 @@
+//! C2 fixture: panic paths in non-test server code.
+
+pub fn risky(v: Option<u32>, r: Result<u32, String>) -> u32 {
+    let a = v.unwrap();
+    let b = r.expect("must");
+    if a + b > 100 {
+        panic!("overflow");
+    }
+    a + b
+}
+
+pub fn graceful(v: Option<u32>) -> u32 {
+    v.unwrap_or_else(|| 0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::graceful(Some(3)), 3);
+        let x: Option<u32> = Some(1);
+        x.unwrap();
+    }
+}

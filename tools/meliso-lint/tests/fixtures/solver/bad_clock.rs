@@ -1,0 +1,11 @@
+//! D2 fixture: clock reads outside `obs/` and `plane/timing.rs`.
+
+use std::time::Instant;
+use std::time::SystemTime;
+
+pub fn now_pair() -> u128 {
+    let t0 = Instant::now();
+    let wall = SystemTime::now();
+    let _ = wall;
+    t0.elapsed().as_nanos()
+}

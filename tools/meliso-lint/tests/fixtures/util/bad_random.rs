@@ -1,0 +1,14 @@
+//! D3 fixture: ad-hoc randomness — applies to test code too.
+
+pub fn sample() -> u64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn nondeterministic_test_seed() {
+        let _ = thread_rng();
+    }
+}

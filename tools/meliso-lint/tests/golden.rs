@@ -1,0 +1,92 @@
+//! Golden tests pinning the lint rules against drift: the fixture tree
+//! under `tests/fixtures/` must produce exactly the diagnostics recorded
+//! in `tests/fixtures/expected.txt`, every rule must fire at least once,
+//! and the real `rust/src` tree must stay clean.
+
+use meliso_lint::rules::rule;
+use meliso_lint::lint_tree;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+fn fixtures_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures")
+}
+
+fn fixture_diags() -> Vec<String> {
+    lint_tree(&fixtures_root())
+        .expect("fixture tree readable")
+        .iter()
+        .map(|d| d.to_string())
+        .collect()
+}
+
+#[test]
+fn fixtures_match_golden_diagnostics() {
+    let got = fixture_diags();
+    let expected: Vec<String> = std::fs::read_to_string(fixtures_root().join("expected.txt"))
+        .expect("expected.txt readable")
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect();
+    assert_eq!(
+        got,
+        expected,
+        "fixture diagnostics drifted from the golden file;\n\
+         got:\n  {}\nexpected:\n  {}",
+        got.join("\n  "),
+        expected.join("\n  ")
+    );
+}
+
+#[test]
+fn every_rule_fires_at_least_once() {
+    let diags = lint_tree(&fixtures_root()).expect("fixture tree readable");
+    let fired: BTreeSet<&str> = diags.iter().map(|d| d.rule).collect();
+    for required in [
+        rule::NONDETERMINISTIC_MAP,
+        rule::CLOCK,
+        rule::AD_HOC_RANDOM,
+        rule::UNBOUNDED_RECV,
+        rule::PANIC_PATH,
+        rule::LOCK_ORDER,
+        rule::MALFORMED_WAIVER,
+    ] {
+        assert!(
+            fired.contains(required),
+            "rule `{required}` never fired in the fixture tree (fired: {fired:?})"
+        );
+    }
+}
+
+#[test]
+fn clean_fixtures_stay_clean() {
+    let diags = fixture_diags();
+    for clean in [
+        "linalg/clean.rs",
+        "obs/clock_ok.rs",
+        "plane/timing.rs",
+        "plane/bad_lock_order.rs:17", // the `correct` fn must not fire
+    ] {
+        let hits: Vec<&String> = diags.iter().filter(|d| d.contains(clean)).collect();
+        assert!(hits.is_empty(), "unexpected diagnostics for {clean}: {hits:?}");
+    }
+}
+
+/// The real tree is the ultimate fixture: `rust/src` stays lint-clean, so
+/// the CI `static-analysis` job is blocking, not advisory.
+#[test]
+fn repo_source_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    if !root.is_dir() {
+        // Tool checked out standalone — nothing to lint.
+        return;
+    }
+    let diags = lint_tree(&root).expect("rust/src readable");
+    let rendered: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        rendered.is_empty(),
+        "rust/src has lint diagnostics:\n  {}",
+        rendered.join("\n  ")
+    );
+}
