@@ -1,0 +1,183 @@
+//! Serving-front-door coalescing benchmark: the cross-client gather
+//! window (`meliso::serve::coalesce`) against the per-request baseline.
+//!
+//! Quantifies what the coalescer exists for:
+//!
+//! * **chunks/s coalesced vs per-request** — N solve requests against one
+//!   resident operand, folded into `max_batch`-sized windows and executed
+//!   as single `solve_batch` chunk walks, against the same N requests
+//!   issued one `solve` at a time (each paying its own plane round
+//!   trip);
+//! * **bit-identity** (always asserted): the coalesced arm must produce
+//!   exactly the per-request arm's bytes, solve index by solve index —
+//!   execution noise is counter-based, so folding requests into one
+//!   window may never change the numerics.
+//!
+//! The wall-clock threshold (coalesced at least 2x the per-request
+//! chunks/s) only asserts when `MELISO_BENCH_ASSERT=1`, like
+//! `plane_contention` — shared CI runners report the numbers (and upload
+//! `BENCH_serve_coalescing.json`) without flaking.
+//!
+//! Usage: `cargo bench --bench serve_coalescing [-- --quick]`
+
+use meliso::bench::{backend, BenchArgs};
+use meliso::device::materials::Material;
+use meliso::matrices::{DenseSource, MatrixSource};
+use meliso::prelude::*;
+use meliso::serve::coalesce::{await_reply, Coalescer, SolveRequest};
+use meliso::server::fingerprint;
+use meliso::util::json::Json;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+struct RunStats {
+    wall_s: f64,
+    chunks_per_s: f64,
+    /// Raw result bits per solve, in solve-index order.
+    bits: Vec<Vec<u64>>,
+}
+
+impl RunStats {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("wall_s", Json::Num(self.wall_s))
+            .set("chunks_per_s", Json::Num(self.chunks_per_s));
+        j
+    }
+}
+
+/// Per-request baseline: every solve pays its own plane round trip.
+fn per_request_run(solver: &Meliso, src: &Arc<dyn MatrixSource>, xs: &[Vector]) -> RunStats {
+    let session = solver.open_session(src.clone()).unwrap();
+    let chunks = session.program_report().chunks_resident;
+    let t0 = Instant::now();
+    let bits: Vec<Vec<u64>> = xs
+        .iter()
+        .map(|x| {
+            let out = session.solve(x).unwrap();
+            out.y.data().iter().map(|v| v.to_bits()).collect()
+        })
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    RunStats {
+        wall_s,
+        chunks_per_s: (chunks * xs.len()) as f64 / wall_s.max(1e-12),
+        bits,
+    }
+}
+
+/// Coalesced arm: the same requests submitted through the gather window
+/// in `batch`-sized bursts, each burst folding into one `solve_batch`.
+/// `max_batch == batch` closes every window as soon as the burst is in,
+/// so the measured wall clock is execution, not idle window time.
+fn coalesced_run(
+    solver: &Meliso,
+    src: &Arc<dyn MatrixSource>,
+    xs: &[Vector],
+    batch: usize,
+) -> RunStats {
+    let session = Arc::new(solver.open_session(src.clone()).unwrap());
+    let chunks = session.program_report().chunks_resident;
+    let fp = fingerprint(src.as_ref());
+    let coalescer = Coalescer::start(Duration::from_millis(50), batch, xs.len().max(1));
+    let t0 = Instant::now();
+    let mut bits: Vec<Vec<u64>> = Vec::with_capacity(xs.len());
+    for burst in xs.chunks(batch) {
+        let replies: Vec<mpsc::Receiver<_>> = burst
+            .iter()
+            .map(|x| {
+                let (tx, rx) = mpsc::sync_channel(1);
+                coalescer
+                    .submit(SolveRequest {
+                        fp,
+                        session: session.clone(),
+                        x: x.clone(),
+                        reply: tx,
+                    })
+                    .unwrap();
+                rx
+            })
+            .collect();
+        for rx in &replies {
+            let out = await_reply(rx, Duration::from_secs(600)).unwrap();
+            bits.push(out.y.data().iter().map(|v| v.to_bits()).collect());
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    coalescer.shutdown();
+    RunStats {
+        wall_s,
+        chunks_per_s: (chunks * xs.len()) as f64 / wall_s.max(1e-12),
+        bits,
+    }
+}
+
+fn main() {
+    let args = BenchArgs::parse();
+    let (n, requests, batch) = if args.quick { (64, 32, 16) } else { (128, 64, 16) };
+    let config = SystemConfig::new(2, 2, 32);
+    let opts = SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_seed(42)
+        .with_workers(4)
+        .with_ground_truth(false);
+    let solver = Meliso::with_backend(config, opts, backend());
+    let src: Arc<dyn MatrixSource> =
+        Arc::new(DenseSource::new(Matrix::standard_normal(n, n, 0x5E)));
+    let xs: Vec<Vector> = (0..requests)
+        .map(|k| Vector::standard_normal(n, 0xC0A1 + k as u64))
+        .collect();
+
+    println!(
+        "# serve coalescing: {requests} solve requests against one resident {n}x{n} operand, \
+         window batch {batch}\n"
+    );
+
+    let per_request = per_request_run(&solver, &src, &xs);
+    println!(
+        "per-request: {:>10.1} chunks/s  ({:.3} s)",
+        per_request.chunks_per_s, per_request.wall_s
+    );
+    let coalesced = coalesced_run(&solver, &src, &xs, batch);
+    println!(
+        "coalesced:   {:>10.1} chunks/s  ({:.3} s)",
+        coalesced.chunks_per_s, coalesced.wall_s
+    );
+    let speedup = coalesced.chunks_per_s / per_request.chunks_per_s.max(1e-12);
+    println!("\nchunks/s vs per-request baseline: {speedup:.2}x   (target >= 2x)");
+
+    let bit_identical = coalesced.bits == per_request.bits;
+    println!("bit-identical to per-request solves: {bit_identical}");
+
+    let mut j = Json::obj();
+    j.set("bench", Json::Str("serve_coalescing".to_string()))
+        .set("n", Json::Num(n as f64))
+        .set("requests", Json::Num(requests as f64))
+        .set("batch", Json::Num(batch as f64))
+        .set("per_request", per_request.to_json())
+        .set("coalesced", coalesced.to_json())
+        .set("speedup_chunks_per_s", Json::Num(speedup))
+        .set("bit_identical", Json::Bool(bit_identical));
+    args.write_result("BENCH_serve_coalescing.json", &j.pretty());
+
+    assert!(
+        bit_identical,
+        "coalesced windows must be bit-identical to per-request solves"
+    );
+    // Batch amortization can be muted on single-core shared runners:
+    // hard-assert only when explicitly requested.
+    let hard_assert = std::env::var("MELISO_BENCH_ASSERT").as_deref() == Ok("1");
+    if hard_assert {
+        assert!(
+            speedup >= 2.0,
+            "coalesced serving {speedup:.2}x < 2x the per-request baseline"
+        );
+        println!("\nPASS: coalesced serving is {speedup:.2}x the per-request baseline");
+    } else {
+        println!(
+            "\nDONE (coalescing threshold reported, not asserted — set MELISO_BENCH_ASSERT=1 \
+             to enforce >= 2x)"
+        );
+    }
+}

@@ -18,6 +18,7 @@ use crate::plane::Placement;
 #[derive(Debug)]
 pub enum Command {
     Run(RunArgs),
+    Serve(ServeArgs),
     ServeBench(ServeBenchArgs),
     SolveSystem(SolveSystemArgs),
     Status(StatusArgs),
@@ -100,6 +101,45 @@ pub struct ServeBenchArgs {
     pub obs: ObsArgs,
 }
 
+/// `meliso serve`: the network serving front door
+/// ([`crate::serve::Server`]) over one shared execution plane.
+#[derive(Debug)]
+pub struct ServeArgs {
+    /// Bind address (`host:port`; port 0 = ephemeral).
+    pub addr: String,
+    pub system: SystemConfig,
+    pub opts: SolveOptions,
+    /// Operands kept resident (LRU beyond this).
+    pub cache_capacity: usize,
+    /// Coalescing gather window in milliseconds.
+    pub window_ms: u64,
+    /// Max solves folded into one coalesced window.
+    pub max_batch: usize,
+    /// Global in-flight request budget.
+    pub max_inflight: usize,
+    /// Per-client in-flight request budget.
+    pub max_inflight_per_client: usize,
+    /// Connection-handler threads.
+    pub http_threads: usize,
+    pub obs: ObsArgs,
+}
+
+impl ServeArgs {
+    /// Assemble the [`crate::serve::ServeConfig`] these flags describe.
+    pub fn serve_config(&self) -> crate::serve::ServeConfig {
+        crate::serve::ServeConfig {
+            addr: self.addr.clone(),
+            cache_capacity: self.cache_capacity,
+            window: std::time::Duration::from_millis(self.window_ms),
+            max_batch: self.max_batch,
+            max_inflight: self.max_inflight,
+            max_inflight_per_client: self.max_inflight_per_client,
+            http_threads: self.http_threads,
+            ..crate::serve::ServeConfig::default()
+        }
+    }
+}
+
 impl ServeBenchArgs {
     /// The operand list to serve: `--operands` when given, else the single
     /// `--matrix`.
@@ -120,6 +160,7 @@ USAGE:
 
 COMMANDS:
     run          execute a distributed in-memory MVM benchmark
+    serve        start the HTTP serving front door over one shared plane
     solve-system solve Ax=b iteratively on a resident crossbar session
     serve-bench  compare resident-session serving vs repeated one-shot solves
     status       render a metrics snapshot written by --metrics-out
@@ -140,6 +181,15 @@ SOLVE-SYSTEM OPTIONS (plus the applicable RUN options below):
     --omega W          Richardson relaxation (default 1.0)
     --refinements N    outer refinement steps, 0 = off (default 40)
     --inner-tol T      inner-solve tolerance under refinement (default 1e-2)
+
+SERVE OPTIONS (plus the applicable RUN options below):
+    --addr HOST:PORT   bind address (default 127.0.0.1:7737; port 0 = ephemeral)
+    --cache N          operands kept resident, LRU beyond (default 8)
+    --window-ms N      coalescing gather window in ms (default 2)
+    --max-batch N      max solves folded into one coalesced window (default 32)
+    --max-inflight N   global in-flight request budget, excess 503 (default 64)
+    --per-client N     per-client in-flight budget, excess 429 (default 16)
+    --threads N        connection-handler threads (default 8)
 
 SERVE-BENCH OPTIONS (plus the applicable RUN options below):
     --operands A,B,C   program several operands resident on ONE shared
@@ -190,6 +240,7 @@ pub fn parse(args: &[String]) -> Result<Command, String> {
         Some("devices") => Ok(Command::Devices),
         Some("artifacts") => Ok(Command::Artifacts),
         Some("run") => parse_run(&mut it),
+        Some("serve") => parse_serve(&mut it),
         Some("solve-system") => parse_solve_system(&mut it),
         Some("serve-bench") => parse_serve_bench(&mut it),
         Some("status") => parse_status(&mut it),
@@ -421,6 +472,97 @@ fn parse_solve_system(it: &mut ArgIter<'_>) -> Result<Command, String> {
     }))
 }
 
+fn parse_serve(it: &mut ArgIter<'_>) -> Result<Command, String> {
+    let defaults = crate::serve::ServeConfig::default();
+    let mut addr = defaults.addr.clone();
+    // The front door has no fixed operand — clients upload them — but the
+    // shared RUN flags (device, tiles, workers, seed, ...) shape the one
+    // solver every residency is programmed under.
+    let mut matrix = String::new();
+    let mut system = SystemConfig::tiles_8x8(1024);
+    let mut opts = SolveOptions::default();
+    let mut cache_capacity = defaults.cache_capacity;
+    let mut window_ms = 2u64;
+    let mut max_batch = defaults.max_batch;
+    let mut max_inflight = defaults.max_inflight;
+    let mut max_inflight_per_client = defaults.max_inflight_per_client;
+    let mut http_threads = defaults.http_threads;
+    let mut json = false;
+    let mut obs = ObsArgs::default();
+
+    while let Some(arg) = it.next() {
+        if parse_common_flag(
+            arg.as_str(),
+            it,
+            &mut matrix,
+            &mut system,
+            &mut opts,
+            &mut json,
+            &mut obs,
+        )? {
+            continue;
+        }
+        match arg.as_str() {
+            "--addr" => addr = next_value(it, "--addr")?,
+            "--cache" => {
+                cache_capacity = next_value(it, "--cache")?
+                    .parse()
+                    .map_err(|e| format!("--cache: {e}"))?
+            }
+            "--window-ms" => {
+                window_ms = next_value(it, "--window-ms")?
+                    .parse()
+                    .map_err(|e| format!("--window-ms: {e}"))?
+            }
+            "--max-batch" => {
+                max_batch = next_value(it, "--max-batch")?
+                    .parse()
+                    .map_err(|e| format!("--max-batch: {e}"))?
+            }
+            "--max-inflight" => {
+                max_inflight = next_value(it, "--max-inflight")?
+                    .parse()
+                    .map_err(|e| format!("--max-inflight: {e}"))?
+            }
+            "--per-client" => {
+                max_inflight_per_client = next_value(it, "--per-client")?
+                    .parse()
+                    .map_err(|e| format!("--per-client: {e}"))?
+            }
+            "--threads" => {
+                http_threads = next_value(it, "--threads")?
+                    .parse()
+                    .map_err(|e| format!("--threads: {e}"))?
+            }
+            other => return Err(format!("unknown option {other:?}; try `meliso help`")),
+        }
+    }
+    if cache_capacity == 0 {
+        return Err("--cache must be at least 1".to_string());
+    }
+    if max_batch == 0 {
+        return Err("--max-batch must be at least 1".to_string());
+    }
+    if max_inflight == 0 || max_inflight_per_client == 0 {
+        return Err("--max-inflight and --per-client must be at least 1".to_string());
+    }
+    if http_threads == 0 {
+        return Err("--threads must be at least 1".to_string());
+    }
+    Ok(Command::Serve(ServeArgs {
+        addr,
+        system,
+        opts,
+        cache_capacity,
+        window_ms,
+        max_batch,
+        max_inflight,
+        max_inflight_per_client,
+        http_threads,
+        obs,
+    }))
+}
+
 fn parse_serve_bench(it: &mut ArgIter<'_>) -> Result<Command, String> {
     let mut matrix = "iperturb66".to_string();
     let mut operands: Vec<String> = Vec::new();
@@ -607,6 +749,54 @@ mod tests {
         assert!(parse(&argv("solve-system --inner-tol 0")).is_err());
         assert!(parse(&argv("solve-system --maxiter 0")).is_err());
         assert!(parse(&argv("solve-system --frobnicate")).is_err());
+    }
+
+    #[test]
+    fn parses_serve_with_options() {
+        let cmd = parse(&argv(
+            "serve --addr 127.0.0.1:0 --cache 4 --window-ms 5 --max-batch 16 \
+             --max-inflight 32 --per-client 8 --threads 3 --device epiram --cell 64 \
+             --tiles 2x2 --workers 2 --seed 11 --backend native",
+        ))
+        .unwrap();
+        match cmd {
+            Command::Serve(s) => {
+                assert_eq!(s.addr, "127.0.0.1:0");
+                assert_eq!(s.cache_capacity, 4);
+                assert_eq!(s.window_ms, 5);
+                assert_eq!(s.max_batch, 16);
+                assert_eq!(s.max_inflight, 32);
+                assert_eq!(s.max_inflight_per_client, 8);
+                assert_eq!(s.http_threads, 3);
+                assert_eq!(s.opts.material, Material::EpiRam);
+                assert_eq!(s.system, SystemConfig::new(2, 2, 64));
+                assert_eq!(s.opts.workers, 2);
+                assert_eq!(s.opts.seed, 11);
+                assert_eq!(s.opts.backend, BackendKind::Native);
+                let cfg = s.serve_config();
+                assert_eq!(cfg.window, std::time::Duration::from_millis(5));
+                assert_eq!(cfg.max_batch, 16);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn serve_defaults_and_rejections() {
+        match parse(&argv("serve")).unwrap() {
+            Command::Serve(s) => {
+                assert_eq!(s.addr, "127.0.0.1:7737");
+                assert_eq!(s.cache_capacity, 8);
+                assert_eq!(s.window_ms, 2);
+                assert_eq!(s.http_threads, 8);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse(&argv("serve --cache 0")).is_err());
+        assert!(parse(&argv("serve --max-batch 0")).is_err());
+        assert!(parse(&argv("serve --max-inflight 0")).is_err());
+        assert!(parse(&argv("serve --threads 0")).is_err());
+        assert!(parse(&argv("serve --frobnicate")).is_err());
     }
 
     #[test]

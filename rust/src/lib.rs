@@ -66,6 +66,7 @@
 //! | [`obs`] | observability: process-wide metrics registry + flight recorder, Prometheus/Chrome-trace export, the `meliso status` surface |
 //! | [`plane`] | the sharded execution plane behind [`plane::PlaneHandle`]: placement, dispatch, work stealing, supervised gathers, multi-operand residency |
 //! | [`runtime`] | execution backends: pure-Rust native twin, PJRT artifact engine |
+//! | [`serve`] | the network front door: std-only HTTP server, cross-client request coalescing, admission control (`meliso serve`) |
 //! | [`server`] | resident [`server::Session`]s, [`server::OperandCache`], serving metrics |
 //! | [`solver`] | the [`solver::Meliso`] front door: one-shot, sessions, `Ax = b` |
 //! | [`testing`] | property-test mini-framework and fault-injection helpers |
@@ -189,6 +190,7 @@ pub mod metrics;
 pub mod obs;
 pub mod plane;
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod solver;
 pub mod testing;

@@ -1,7 +1,7 @@
 //! `meliso` — leader entrypoint / CLI for the MELISO+ framework.
 
 use meliso::cli::{
-    parse, usage, Command, ObsArgs, RunArgs, ServeBenchArgs, SolveSystemArgs, StatusArgs,
+    parse, usage, Command, ObsArgs, RunArgs, ServeArgs, ServeBenchArgs, SolveSystemArgs, StatusArgs,
 };
 use meliso::device::materials::Material;
 use meliso::matrices::registry;
@@ -23,6 +23,13 @@ fn main() {
         Ok(Command::Devices) => cmd_devices(),
         Ok(Command::Artifacts) => cmd_artifacts(),
         Ok(Command::Run(run)) => match cmd_run(run) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e}");
+                1
+            }
+        },
+        Ok(Command::Serve(sv)) => match cmd_serve(sv) {
             Ok(()) => 0,
             Err(e) => {
                 eprintln!("error: {e}");
@@ -206,6 +213,38 @@ fn solver_or_native(system: SystemConfig, opts: SolveOptions) -> Meliso {
             )
         }
     }
+}
+
+/// `meliso serve`: run the network front door until a `POST /shutdown`
+/// begins the graceful drain (or the process is killed).
+fn cmd_serve(args: ServeArgs) -> Result<(), String> {
+    arm_obs(&args.obs);
+    let solver = solver_or_native(args.system, args.opts.clone());
+    let backend = solver.backend_name().to_string();
+    let cfg = args.serve_config();
+    let server = meliso::serve::Server::start(solver, cfg.clone())?;
+    eprintln!(
+        "# meliso serve on http://{} — device {}, system {}x{} tiles of {}², backend {}; \
+         cache {} operands, window {:?}, max batch {}, {} global / {} per-client \
+         in-flight, {} http threads",
+        server.addr(),
+        args.opts.material,
+        args.system.tile_rows,
+        args.system.tile_cols,
+        args.system.cell_size,
+        backend,
+        cfg.cache_capacity,
+        cfg.window,
+        cfg.max_batch,
+        cfg.max_inflight,
+        cfg.max_inflight_per_client,
+        cfg.http_threads,
+    );
+    eprintln!("# POST /operands, /operands/{{id}}/solve, /operands/{{id}}/solve-system; GET /status, /metrics; POST /shutdown to drain");
+    server.wait();
+    eprintln!("# drained; goodbye");
+    write_obs_sinks(&args.obs)?;
+    Ok(())
 }
 
 fn cmd_serve_bench(args: ServeBenchArgs) -> Result<(), String> {

@@ -219,6 +219,16 @@ pub mod names {
     pub const ITER_RESIDUAL: &str = "meliso_iterative_final_rel_residual";
     /// Serving latency samples overwritten by the stats ring buffer (counter).
     pub const SAMPLES_DROPPED: &str = "meliso_serving_latency_samples_dropped_total";
+    /// HTTP requests handled by the serving front door (counter, label `route`).
+    pub const SERVE_REQUESTS: &str = "meliso_serve_requests_total";
+    /// Front-door requests rejected before execution (counter, label `reason`).
+    pub const SERVE_REJECTED: &str = "meliso_serve_rejected_total";
+    /// Coalesced `execute_batch` windows dispatched by the front door (counter).
+    pub const SERVE_COALESCED_BATCHES: &str = "meliso_serve_coalesced_batches_total";
+    /// Solve requests folded into coalesced windows (counter).
+    pub const SERVE_COALESCED_SOLVES: &str = "meliso_serve_coalesced_solves_total";
+    /// Requests currently admitted and executing on the front door (gauge).
+    pub const SERVE_INFLIGHT: &str = "meliso_serve_inflight_requests";
     /// Seconds since the observability epoch, set at snapshot time (gauge).
     pub const UPTIME: &str = "meliso_obs_uptime_seconds";
 }

@@ -62,6 +62,18 @@ pub struct StatusReport {
     pub energy_write_j: Option<f64>,
     /// Serve-path read energy, joules.
     pub energy_read_j: Option<f64>,
+    /// Front-door HTTP requests handled, all routes.
+    pub serve_requests: Option<f64>,
+    /// Front-door requests rejected before execution (admission).
+    pub serve_rejected: Option<f64>,
+    /// Requests currently admitted and executing on the front door.
+    pub serve_inflight: Option<f64>,
+    /// Coalesced `execute_batch` windows dispatched.
+    pub serve_coalesced_batches: Option<f64>,
+    /// Solve requests folded into coalesced windows.
+    pub serve_coalesced_solves: Option<f64>,
+    /// Mean solves per coalesced window (the amortization factor).
+    pub serve_coalesce_factor: Option<f64>,
 }
 
 fn family<'a>(doc: &'a Json, name: &str) -> Option<&'a Json> {
@@ -230,6 +242,18 @@ impl StatusReport {
             solve_errors: sum_values(doc, names::SOLVE_ERRORS),
             energy_write_j: sum_where(doc, names::ENERGY_JOULES, "kind", "write"),
             energy_read_j: sum_where(doc, names::ENERGY_JOULES, "kind", "read"),
+            serve_requests: sum_values(doc, names::SERVE_REQUESTS),
+            serve_rejected: sum_values(doc, names::SERVE_REJECTED),
+            serve_inflight: sum_values(doc, names::SERVE_INFLIGHT),
+            serve_coalesced_batches: sum_values(doc, names::SERVE_COALESCED_BATCHES),
+            serve_coalesced_solves: sum_values(doc, names::SERVE_COALESCED_SOLVES),
+            serve_coalesce_factor: match (
+                sum_values(doc, names::SERVE_COALESCED_SOLVES),
+                sum_values(doc, names::SERVE_COALESCED_BATCHES),
+            ) {
+                (Some(s), Some(b)) if b > 0.0 => Some(s / b),
+                _ => None,
+            },
         })
     }
 
@@ -274,13 +298,22 @@ impl StatusReport {
         energy
             .set("write_j", opt(self.energy_write_j))
             .set("read_j", opt(self.energy_read_j));
+        let mut serve = Json::obj();
+        serve
+            .set("requests", opt(self.serve_requests))
+            .set("rejected", opt(self.serve_rejected))
+            .set("inflight", opt(self.serve_inflight))
+            .set("coalesced_batches", opt(self.serve_coalesced_batches))
+            .set("coalesced_solves", opt(self.serve_coalesced_solves))
+            .set("coalesce_factor", opt(self.serve_coalesce_factor));
         let mut doc = Json::obj();
         doc.set("uptime_s", Json::Num(self.uptime_s))
             .set("plane", plane)
             .set("shards", Json::Arr(shards))
             .set("cache", cache)
             .set("solves", solves)
-            .set("energy", energy);
+            .set("energy", energy)
+            .set("serve", serve);
         doc
     }
 
@@ -364,6 +397,15 @@ impl StatusReport {
             sci(self.energy_write_j),
             sci(self.energy_read_j),
         ));
+        out.push_str(&format!(
+            "serve           requests {}   rejected {}   inflight {}   coalesced {}/{} (x{})\n",
+            cell(self.serve_requests),
+            cell(self.serve_rejected),
+            cell(self.serve_inflight),
+            cell(self.serve_coalesced_solves),
+            cell(self.serve_coalesced_batches),
+            cell(self.serve_coalesce_factor),
+        ));
         out
     }
 }
@@ -398,6 +440,15 @@ mod tests {
             .add(1e-3);
         r.counter(names::ENERGY_JOULES, "h", &[("operand", "op0"), ("kind", "read")])
             .add(2e-5);
+        r.counter(names::SERVE_REQUESTS, "h", &[("route", "solve")])
+            .add(12.0);
+        r.counter(names::SERVE_REQUESTS, "h", &[("route", "status")])
+            .add(3.0);
+        r.counter(names::SERVE_REJECTED, "h", &[("reason", "global_budget")])
+            .add(2.0);
+        r.gauge(names::SERVE_INFLIGHT, "h", &[]).set(1.0);
+        r.counter(names::SERVE_COALESCED_BATCHES, "h", &[]).add(4.0);
+        r.counter(names::SERVE_COALESCED_SOLVES, "h", &[]).add(12.0);
         to_json(&r.snapshot(), 10.0)
     }
 
@@ -416,6 +467,12 @@ mod tests {
         assert!(p50 > 1.0 && p50 <= 2.5, "p50 = {p50}");
         assert_eq!(report.energy_write_j, Some(1e-3));
         assert_eq!(report.energy_read_j, Some(2e-5));
+        assert_eq!(report.serve_requests, Some(15.0));
+        assert_eq!(report.serve_rejected, Some(2.0));
+        assert_eq!(report.serve_inflight, Some(1.0));
+        assert_eq!(report.serve_coalesced_batches, Some(4.0));
+        assert_eq!(report.serve_coalesced_solves, Some(12.0));
+        assert_eq!(report.serve_coalesce_factor, Some(3.0));
     }
 
     #[test]
@@ -439,6 +496,18 @@ mod tests {
             .unwrap()
             .as_f64()
             .is_some());
+        assert_eq!(
+            back.get("serve").unwrap().get("requests").unwrap().as_f64(),
+            Some(15.0)
+        );
+        assert_eq!(
+            back.get("serve")
+                .unwrap()
+                .get("coalesce_factor")
+                .unwrap()
+                .as_f64(),
+            Some(3.0)
+        );
     }
 
     #[test]

@@ -1,0 +1,174 @@
+//! Admission control: bounded in-flight work, per client and global.
+//!
+//! The front door refuses work it cannot serve promptly instead of
+//! queueing unboundedly: each executing request holds a [`Permit`], and
+//! [`Admission::try_acquire`] rejects — deterministically, with a typed
+//! [`ServeError`] — when either the per-client or the global in-flight
+//! budget is exhausted (HTTP 429 and 503 respectively).  Permits release
+//! on `Drop`, so every exit path (success, typed error, client
+//! disconnect, handler unwind) returns the budget; the fault-injection
+//! battery asserts the in-flight gauge always drains back to zero.
+
+use super::error::ServeError;
+use crate::obs;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, PoisonError};
+
+#[derive(Default)]
+struct AdmissionState {
+    total: usize,
+    per_client: BTreeMap<String, usize>,
+}
+
+/// Shared admission budget for the serving front door.
+pub struct Admission {
+    global_limit: usize,
+    per_client_limit: usize,
+    state: Arc<Mutex<AdmissionState>>,
+}
+
+fn lock_state(state: &Mutex<AdmissionState>) -> std::sync::MutexGuard<'_, AdmissionState> {
+    state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Admission {
+    /// Budgets of zero are clamped to one so the server can always make
+    /// progress.
+    pub fn new(global_limit: usize, per_client_limit: usize) -> Admission {
+        Admission {
+            global_limit: global_limit.max(1),
+            per_client_limit: per_client_limit.max(1),
+            state: Arc::new(Mutex::new(AdmissionState::default())),
+        }
+    }
+
+    /// Requests currently holding permits.
+    pub fn inflight(&self) -> usize {
+        lock_state(&self.state).total
+    }
+
+    /// Admit one request for `client`, or reject with a typed error.
+    /// Per-client exhaustion is checked first so a single greedy client
+    /// sees 429 (back off) rather than 503 (server trouble).
+    pub fn try_acquire(&self, client: &str) -> Result<Permit, ServeError> {
+        let mut st = lock_state(&self.state);
+        let held = st.per_client.get(client).copied().unwrap_or(0);
+        if held >= self.per_client_limit {
+            drop(st);
+            note_rejected("client_budget");
+            return Err(ServeError::TooManyRequests(format!(
+                "client has {held} requests in flight (limit {})",
+                self.per_client_limit
+            )));
+        }
+        if st.total >= self.global_limit {
+            let total = st.total;
+            drop(st);
+            note_rejected("global_budget");
+            return Err(ServeError::Overloaded(format!(
+                "server has {total} requests in flight (limit {})",
+                self.global_limit
+            )));
+        }
+        st.total += 1;
+        *st.per_client.entry(client.to_string()).or_insert(0) += 1;
+        let total = st.total;
+        drop(st);
+        set_inflight_gauge(total as f64);
+        Ok(Permit {
+            state: self.state.clone(),
+            client: client.to_string(),
+        })
+    }
+}
+
+/// One admitted request; releases its budget on `Drop`.
+pub struct Permit {
+    state: Arc<Mutex<AdmissionState>>,
+    client: String,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut st = lock_state(&self.state);
+        st.total = st.total.saturating_sub(1);
+        if let Some(held) = st.per_client.get_mut(&self.client) {
+            *held = held.saturating_sub(1);
+            if *held == 0 {
+                st.per_client.remove(&self.client);
+            }
+        }
+        let total = st.total;
+        drop(st);
+        set_inflight_gauge(total as f64);
+    }
+}
+
+fn set_inflight_gauge(total: f64) {
+    if obs::metrics_on() {
+        obs::global()
+            .gauge(
+                obs::names::SERVE_INFLIGHT,
+                "Requests currently admitted and executing on the front door",
+                &[],
+            )
+            .set(total);
+    }
+}
+
+fn note_rejected(reason: &'static str) {
+    if obs::metrics_on() {
+        obs::global()
+            .counter(
+                obs::names::SERVE_REJECTED,
+                "Front-door requests rejected before execution",
+                &[("reason", reason)],
+            )
+            .inc();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_client_budget_rejects_with_429_shape() {
+        let adm = Admission::new(8, 2);
+        let _a = adm.try_acquire("alice").unwrap();
+        let _b = adm.try_acquire("alice").unwrap();
+        let err = adm.try_acquire("alice").unwrap_err();
+        assert_eq!(err.status(), 429);
+        // A different client still gets in.
+        let _c = adm.try_acquire("bob").unwrap();
+        assert_eq!(adm.inflight(), 3);
+    }
+
+    #[test]
+    fn global_budget_rejects_with_503_shape() {
+        let adm = Admission::new(2, 2);
+        let _a = adm.try_acquire("alice").unwrap();
+        let _b = adm.try_acquire("bob").unwrap();
+        let err = adm.try_acquire("carol").unwrap_err();
+        assert_eq!(err.status(), 503);
+        assert_eq!(err.code(), "overloaded");
+    }
+
+    #[test]
+    fn dropping_permits_returns_budget() {
+        let adm = Admission::new(2, 1);
+        let a = adm.try_acquire("alice").unwrap();
+        assert!(adm.try_acquire("alice").is_err());
+        drop(a);
+        assert_eq!(adm.inflight(), 0);
+        let _again = adm.try_acquire("alice").unwrap();
+        assert_eq!(adm.inflight(), 1);
+    }
+
+    #[test]
+    fn budget_floor_is_one() {
+        let adm = Admission::new(0, 0);
+        let _a = adm.try_acquire("alice").unwrap();
+        assert!(adm.try_acquire("alice").is_err());
+    }
+}

@@ -1,0 +1,385 @@
+//! Cross-client request coalescing: the gather window.
+//!
+//! Concurrent solve requests against the *same* resident operand are the
+//! serving pattern the paper's energy model rewards: the conductance
+//! write was paid once at program time, and one
+//! [`crate::plane::PlaneHandle::execute_batch`] chunk walk can serve many
+//! input vectors for nearly the cost of one.  The [`Coalescer`] exploits
+//! that across clients: a single dispatcher thread gathers submitted
+//! requests for a short window (or until `max_batch`), groups them by
+//! operand fingerprint, runs **one** `solve_batch` per group, and demuxes
+//! the per-request completions back over oneshot-style reply channels.
+//!
+//! Correctness contract (checked exhaustively by the interleaving model
+//! in `rust/tests/loom_models.rs` and end-to-end by
+//! `rust/tests/serve_end_to_end.rs`):
+//!
+//! * every submitted request is completed **exactly once** — with a
+//!   result or with a typed [`ServeError`], never both, never zero;
+//! * a failed window fans its error out to *every* waiter in the window
+//!   (no waiter is left hanging on a reply that will never come);
+//! * results are bit-identical to sequential solves: solve-index
+//!   assignment follows arrival order within each operand group, and the
+//!   plane's counter-based noise makes `y_k` a pure function of
+//!   `(x_k, solve_index_k)`.
+//!
+//! Concurrency discipline: the dispatcher waits with `recv_timeout`
+//! (C1 — a dead sender can never park it forever), reply sends ignore a
+//! dropped receiver (a disconnected client leaks nothing), and deadlines
+//! come from [`crate::plane::timing::monotonic_now`] (D2).
+
+use super::error::ServeError;
+use crate::obs;
+use crate::plane::timing::monotonic_now;
+use crate::server::{ServeSolve, Session};
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Idle poll period of the dispatcher (liveness check cadence) and of
+/// reply waits.  Short enough that shutdown is prompt, long enough that
+/// an idle server costs nothing measurable.
+const TICK: Duration = Duration::from_millis(100);
+
+/// One solve request submitted to the gather window.
+pub struct SolveRequest {
+    /// Operand fingerprint — requests with equal fingerprints fold into
+    /// one `solve_batch` call.
+    pub fp: u64,
+    /// The resident session serving this operand.
+    pub session: Arc<Session>,
+    /// Input vector.
+    pub x: crate::linalg::Vector,
+    /// Oneshot-style completion channel (capacity 1; the send never
+    /// blocks).  A dropped receiver means the client went away — the
+    /// completion is discarded, nothing leaks.
+    pub reply: SyncSender<Result<ServeSolve, ServeError>>,
+}
+
+/// The cross-client gather window (one dispatcher thread).
+pub struct Coalescer {
+    /// `None` after shutdown: submissions fail with
+    /// [`ServeError::ShuttingDown`].
+    tx: Mutex<Option<SyncSender<SolveRequest>>>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+fn lock_unpoisoned<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl Coalescer {
+    /// Start the dispatcher.  `window` is how long the first request of a
+    /// window waits for company; `max_batch` caps one window; `queue`
+    /// bounds the submission channel (admission control bounds the number
+    /// of outstanding requests, so a queue of that size never blocks a
+    /// submitter for long).
+    pub fn start(window: Duration, max_batch: usize, queue: usize) -> Coalescer {
+        let max_batch = max_batch.max(1);
+        let (tx, rx) = mpsc::sync_channel::<SolveRequest>(queue.max(1));
+        let dispatcher = std::thread::Builder::new()
+            .name("serve-coalescer".into())
+            .spawn(move || dispatch_loop(&rx, window, max_batch))
+            .ok();
+        Coalescer {
+            tx: Mutex::new(Some(tx)),
+            dispatcher: Mutex::new(dispatcher),
+        }
+    }
+
+    /// Submit a request to the current gather window.  Fails only when
+    /// the server is draining.
+    pub fn submit(&self, req: SolveRequest) -> Result<(), ServeError> {
+        // Clone the sender out of the lock so a briefly-full queue never
+        // blocks shutdown (which needs this mutex to drop the sender).
+        let tx = match lock_unpoisoned(&self.tx).as_ref() {
+            Some(tx) => tx.clone(),
+            None => return Err(ServeError::ShuttingDown),
+        };
+        tx.send(req).map_err(|_| ServeError::ShuttingDown)
+    }
+
+    /// Drain and stop: no new submissions, buffered requests complete
+    /// (with results or errors), then the dispatcher exits and is joined.
+    pub fn shutdown(&self) {
+        drop(lock_unpoisoned(&self.tx).take());
+        if let Some(h) = lock_unpoisoned(&self.dispatcher).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coalescer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Wait for a coalesced completion with a hard deadline.  The poll loop
+/// keeps the wait bounded (C1) even if the dispatcher dies, in which case
+/// the dropped sender surfaces as a typed internal error.
+pub fn await_reply(
+    rx: &mpsc::Receiver<Result<ServeSolve, ServeError>>,
+    timeout: Duration,
+) -> Result<ServeSolve, ServeError> {
+    let deadline = monotonic_now() + timeout;
+    loop {
+        match rx.recv_timeout(TICK.min(timeout)) {
+            Ok(res) => return res,
+            Err(RecvTimeoutError::Timeout) => {
+                if monotonic_now() >= deadline {
+                    return Err(ServeError::Timeout(format!(
+                        "solve did not complete within {timeout:?}"
+                    )));
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(ServeError::Internal(
+                    "coalescer dropped the completion channel".into(),
+                ))
+            }
+        }
+    }
+}
+
+/// The dispatcher: gather a window, execute it, repeat.  Exits when every
+/// sender is gone and the buffer is drained.
+fn dispatch_loop(rx: &mpsc::Receiver<SolveRequest>, window: Duration, max_batch: usize) {
+    loop {
+        match rx.recv_timeout(TICK) {
+            Ok(first) => {
+                let batch = gather_window(rx, first, window, max_batch);
+                execute_window(batch);
+            }
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+/// Collect company for `first` until the window closes, `max_batch` is
+/// reached, or every sender is gone (remaining buffered requests are
+/// picked up by the next outer iteration).
+fn gather_window(
+    rx: &mpsc::Receiver<SolveRequest>,
+    first: SolveRequest,
+    window: Duration,
+    max_batch: usize,
+) -> Vec<SolveRequest> {
+    let mut batch = vec![first];
+    let deadline: Instant = monotonic_now() + window;
+    while batch.len() < max_batch {
+        let remaining = deadline.saturating_duration_since(monotonic_now());
+        if remaining.is_zero() {
+            break;
+        }
+        match rx.recv_timeout(remaining) {
+            Ok(req) => batch.push(req),
+            Err(_) => break, // window elapsed, or senders gone
+        }
+    }
+    batch
+}
+
+/// Execute one gathered window: group by operand fingerprint (BTreeMap
+/// for deterministic group order; arrival order is preserved within each
+/// group), one `solve_batch` per group, demux completions.
+fn execute_window(batch: Vec<SolveRequest>) {
+    let mut groups: BTreeMap<u64, Vec<SolveRequest>> = BTreeMap::new();
+    for req in batch {
+        groups.entry(req.fp).or_default().push(req);
+    }
+    let metrics = obs::metrics_on();
+    for (_, group) in groups {
+        if metrics {
+            obs::global()
+                .counter(
+                    obs::names::SERVE_COALESCED_BATCHES,
+                    "Coalesced execute_batch windows dispatched",
+                    &[],
+                )
+                .inc();
+            obs::global()
+                .counter(
+                    obs::names::SERVE_COALESCED_SOLVES,
+                    "Solve requests folded into coalesced windows",
+                    &[],
+                )
+                .add(group.len() as f64);
+        }
+        let session = group[0].session.clone();
+        let xs: Vec<crate::linalg::Vector> = group.iter().map(|r| r.x.clone()).collect();
+        match session.solve_batch(&xs) {
+            Ok(solves) => {
+                // `solve_batch` returns exactly one ServeSolve per input,
+                // in input order — zip demuxes each to its waiter.
+                for (req, solve) in group.into_iter().zip(solves) {
+                    let _ = req.reply.send(Ok(solve));
+                }
+            }
+            Err(e) => {
+                // One failure, every waiter in the window notified.
+                let err: ServeError = e.into();
+                for req in group {
+                    let _ = req.reply.send(Err(err.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SolveOptions, SystemConfig};
+    use crate::device::materials::Material;
+    use crate::linalg::{Matrix, Vector};
+    use crate::matrices::{DenseSource, MatrixSource};
+    use crate::runtime::native::NativeBackend;
+    use crate::server::fingerprint;
+    use crate::solver::Meliso;
+
+    fn solver() -> Meliso {
+        Meliso::with_backend(
+            SystemConfig::single_mca(32),
+            SolveOptions::default()
+                .with_device(Material::EpiRam)
+                .with_workers(2)
+                .with_seed(11),
+            Arc::new(NativeBackend::new()),
+        )
+    }
+
+    fn operand(seed: u64) -> Arc<dyn MatrixSource> {
+        Arc::new(DenseSource::new(Matrix::standard_normal(16, 16, seed)))
+    }
+
+    fn submit_all(
+        coalescer: &Coalescer,
+        session: &Arc<Session>,
+        fp: u64,
+        xs: &[Vector],
+    ) -> Vec<mpsc::Receiver<Result<ServeSolve, ServeError>>> {
+        xs.iter()
+            .map(|x| {
+                let (tx, rx) = mpsc::sync_channel(1);
+                coalescer
+                    .submit(SolveRequest {
+                        fp,
+                        session: session.clone(),
+                        x: x.clone(),
+                        reply: tx,
+                    })
+                    .unwrap();
+                rx
+            })
+            .collect()
+    }
+
+    #[test]
+    fn coalesced_solves_bit_identical_to_sequential() {
+        let solver = solver();
+        let src = operand(1);
+        let fp = fingerprint(src.as_ref());
+        let xs: Vec<Vector> = (0..6).map(|s| Vector::standard_normal(16, 40 + s)).collect();
+
+        // Reference: one fresh session, sequential solves 0..N.
+        let reference: Vec<Vector> = {
+            let session = solver.open_session(src.clone()).unwrap();
+            xs.iter().map(|x| session.solve(x).unwrap().y).collect()
+        };
+
+        // Coalesced: submit all six before the window closes.
+        let session = Arc::new(solver.open_session(src.clone()).unwrap());
+        let coalescer = Coalescer::start(Duration::from_millis(50), 32, 64);
+        let replies = submit_all(&coalescer, &session, fp, &xs);
+        for (k, rx) in replies.iter().enumerate() {
+            let out = await_reply(rx, Duration::from_secs(60)).unwrap();
+            assert_eq!(out.solve_index, k as u64);
+            assert_eq!(out.y.data(), reference[k].data(), "solve {k}");
+        }
+        coalescer.shutdown();
+    }
+
+    #[test]
+    fn window_groups_by_fingerprint() {
+        let solver = solver();
+        let (src_a, src_b) = (operand(2), operand(3));
+        let (fpa, fpb) = (fingerprint(src_a.as_ref()), fingerprint(src_b.as_ref()));
+        assert_ne!(fpa, fpb);
+        let plane = solver.build_plane(src_a.as_ref()).unwrap();
+        let sa = Arc::new(solver.open_session_on(&plane, src_a).unwrap());
+        let sb = Arc::new(solver.open_session_on(&plane, src_b).unwrap());
+        let coalescer = Coalescer::start(Duration::from_millis(50), 32, 64);
+        let xs: Vec<Vector> = (0..2).map(|s| Vector::standard_normal(16, 60 + s)).collect();
+        let ra = submit_all(&coalescer, &sa, fpa, &xs);
+        let rb = submit_all(&coalescer, &sb, fpb, &xs);
+        // Both groups complete; each session saw exactly its own solves.
+        for rx in ra.iter().chain(rb.iter()) {
+            await_reply(rx, Duration::from_secs(60)).unwrap();
+        }
+        assert_eq!(sa.report().solves, 2);
+        assert_eq!(sb.report().solves, 2);
+        coalescer.shutdown();
+    }
+
+    #[test]
+    fn dropped_reply_receiver_leaks_nothing() {
+        let solver = solver();
+        let src = operand(4);
+        let fp = fingerprint(src.as_ref());
+        let session = Arc::new(solver.open_session(src).unwrap());
+        let coalescer = Coalescer::start(Duration::from_millis(5), 8, 8);
+        let (tx, rx) = mpsc::sync_channel(1);
+        drop(rx); // the client disconnected before completion
+        coalescer
+            .submit(SolveRequest {
+                fp,
+                session: session.clone(),
+                x: Vector::standard_normal(16, 70),
+                reply: tx,
+            })
+            .unwrap();
+        // A live request behind it still completes normally.
+        let (tx2, rx2) = mpsc::sync_channel(1);
+        coalescer
+            .submit(SolveRequest {
+                fp,
+                session: session.clone(),
+                x: Vector::standard_normal(16, 71),
+                reply: tx2,
+            })
+            .unwrap();
+        await_reply(&rx2, Duration::from_secs(60)).unwrap();
+        coalescer.shutdown();
+        // Both solves executed; the orphaned completion was discarded.
+        assert_eq!(session.report().solves, 2);
+    }
+
+    #[test]
+    fn shutdown_drains_buffered_requests_then_refuses() {
+        let solver = solver();
+        let src = operand(5);
+        let fp = fingerprint(src.as_ref());
+        let session = Arc::new(solver.open_session(src).unwrap());
+        let coalescer = Coalescer::start(Duration::from_millis(5), 8, 8);
+        let xs: Vec<Vector> = (0..3).map(|s| Vector::standard_normal(16, 80 + s)).collect();
+        let replies = submit_all(&coalescer, &session, fp, &xs);
+        coalescer.shutdown(); // blocks until the buffer is drained
+        for rx in &replies {
+            await_reply(rx, Duration::from_secs(1)).unwrap();
+        }
+        let (tx, _rx) = mpsc::sync_channel(1);
+        let err = coalescer
+            .submit(SolveRequest {
+                fp,
+                session,
+                x: Vector::standard_normal(16, 90),
+                reply: tx,
+            })
+            .unwrap_err();
+        assert_eq!(err, ServeError::ShuttingDown);
+    }
+}

@@ -1,0 +1,180 @@
+//! Typed serving errors and their HTTP shape.
+//!
+//! Every failure on the request path becomes a [`ServeError`]: a stable
+//! machine-readable `code`, an HTTP status, and a human message, rendered
+//! as a JSON body.  [`crate::plane::PlaneError`] variants map onto the
+//! client-facing taxonomy here (bad input → 400, stale residency → 404,
+//! busy operand → 429, capacity/failed plane → 503) so embedded callers
+//! and HTTP clients see the *same* cause for the same fault.
+
+use crate::plane::PlaneError;
+use crate::solver::MelisoError;
+use crate::util::json::Json;
+use std::fmt;
+
+/// A request-path failure with an HTTP mapping.
+///
+/// `Clone` is deliberate: one failed coalesced window fans a single error
+/// out to every waiter that was folded into it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Malformed request (bad JSON, wrong vector length, unknown route
+    /// payload) — HTTP 400.
+    BadRequest(String),
+    /// Unknown operand id / route — HTTP 404.
+    NotFound(String),
+    /// Per-client in-flight budget exhausted, or the operand is busy —
+    /// HTTP 429.
+    TooManyRequests(String),
+    /// Global in-flight budget or plane capacity exhausted — HTTP 503.
+    Overloaded(String),
+    /// The server is draining; new work is refused — HTTP 503.
+    ShuttingDown,
+    /// The request did not complete within the serving deadline — HTTP 504.
+    Timeout(String),
+    /// Plane/shard failure or another internal fault — HTTP 500.
+    Internal(String),
+}
+
+impl ServeError {
+    /// The HTTP status this error renders as.
+    pub fn status(&self) -> u16 {
+        match self {
+            ServeError::BadRequest(_) => 400,
+            ServeError::NotFound(_) => 404,
+            ServeError::TooManyRequests(_) => 429,
+            ServeError::Overloaded(_) | ServeError::ShuttingDown => 503,
+            ServeError::Timeout(_) => 504,
+            ServeError::Internal(_) => 500,
+        }
+    }
+
+    /// Stable machine-readable error code for clients to match on.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::BadRequest(_) => "bad_request",
+            ServeError::NotFound(_) => "not_found",
+            ServeError::TooManyRequests(_) => "too_many_requests",
+            ServeError::Overloaded(_) => "overloaded",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::Timeout(_) => "timeout",
+            ServeError::Internal(_) => "internal",
+        }
+    }
+
+    /// The JSON error body (`{"error": {"code": ..., "message": ...}}`).
+    pub fn to_json(&self) -> Json {
+        let mut inner = Json::obj();
+        inner
+            .set("code", Json::Str(self.code().to_string()))
+            .set("message", Json::Str(self.to_string()));
+        let mut body = Json::obj();
+        body.set("error", inner);
+        body
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BadRequest(m)
+            | ServeError::NotFound(m)
+            | ServeError::TooManyRequests(m)
+            | ServeError::Overloaded(m)
+            | ServeError::Timeout(m)
+            | ServeError::Internal(m) => write!(f, "{m}"),
+            ServeError::ShuttingDown => write!(f, "server is shutting down; refusing new work"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<PlaneError> for ServeError {
+    fn from(e: PlaneError) -> ServeError {
+        let msg = e.to_string();
+        match e {
+            PlaneError::InvalidInput(_) | PlaneError::UnsupportedCell { .. } => {
+                ServeError::BadRequest(msg)
+            }
+            PlaneError::StaleOperand { .. } => ServeError::NotFound(msg),
+            PlaneError::OperandBusy { .. } => ServeError::TooManyRequests(msg),
+            PlaneError::Capacity { .. } => ServeError::Overloaded(msg),
+            PlaneError::Timeout(_) => ServeError::Timeout(msg),
+            PlaneError::Build(_)
+            | PlaneError::Chunk(_)
+            | PlaneError::ShardDead(_)
+            | PlaneError::Failed(_) => ServeError::Internal(msg),
+        }
+    }
+}
+
+impl From<MelisoError> for ServeError {
+    fn from(e: MelisoError) -> ServeError {
+        match e {
+            MelisoError::Plane(p) => p.into(),
+            MelisoError::InvalidInput(m) => ServeError::BadRequest(m),
+            MelisoError::Backend(m) | MelisoError::Solver(m) => ServeError::Internal(m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plane::OperandId;
+
+    #[test]
+    fn plane_errors_map_to_client_statuses() {
+        let cases: Vec<(PlaneError, u16, &str)> = vec![
+            (
+                PlaneError::InvalidInput("x len".into()),
+                400,
+                "bad_request",
+            ),
+            (
+                PlaneError::StaleOperand {
+                    id: OperandId(3),
+                },
+                404,
+                "not_found",
+            ),
+            (
+                PlaneError::OperandBusy {
+                    id: OperandId(3),
+                    inflight: 2,
+                },
+                429,
+                "too_many_requests",
+            ),
+            (
+                PlaneError::Capacity { mca: 0, slots: 4 },
+                503,
+                "overloaded",
+            ),
+            (PlaneError::Timeout("gather".into()), 504, "timeout"),
+            (PlaneError::ShardDead("shard 1".into()), 500, "internal"),
+            (PlaneError::Failed("poisoned".into()), 500, "internal"),
+        ];
+        for (plane, status, code) in cases {
+            let e = ServeError::from(plane.clone());
+            assert_eq!(e.status(), status, "{plane:?}");
+            assert_eq!(e.code(), code, "{plane:?}");
+        }
+    }
+
+    #[test]
+    fn json_body_carries_code_and_message() {
+        let e = ServeError::TooManyRequests("client budget".into());
+        let body = e.to_json();
+        let err = body.get("error").unwrap();
+        assert_eq!(err.get("code").unwrap().as_str(), Some("too_many_requests"));
+        assert_eq!(err.get("message").unwrap().as_str(), Some("client budget"));
+    }
+
+    #[test]
+    fn shutdown_renders_503() {
+        assert_eq!(ServeError::ShuttingDown.status(), 503);
+        assert!(ServeError::ShuttingDown.to_string().contains("shutting down"));
+    }
+}

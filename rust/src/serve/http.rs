@@ -1,0 +1,226 @@
+//! A minimal std-only HTTP/1.1 layer: just enough protocol for the
+//! front door.
+//!
+//! One request per connection (`Connection: close`), headers capped,
+//! bodies bounded by `Content-Length`, everything read/written over a
+//! plain [`std::net::TcpStream`] with caller-set timeouts.  Deliberately
+//! not a general HTTP implementation — no chunked encoding, no
+//! keep-alive, no TLS — because the repo's hermetic-build rule forbids
+//! dependencies and the serving protocol needs none of it.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Maximum size of the request line + headers.
+const MAX_HEAD: usize = 16 * 1024;
+/// Maximum request body (a dense f64 `.mtx` upload of ~1M entries).
+pub const MAX_BODY: usize = 64 * 1024 * 1024;
+
+/// A parsed HTTP request.
+pub struct Request {
+    /// Uppercased method (`GET`, `POST`, `DELETE`, ...).
+    pub method: String,
+    /// Path with any query string stripped.
+    pub path: String,
+    /// Header name/value pairs; names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// Request body (may be empty).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value for `name` (case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one request from `stream`.  The caller is responsible for having
+/// set a read timeout; a timeout or short read surfaces as `Err`.
+pub fn read_request(stream: &mut TcpStream, max_body: usize) -> Result<Request, String> {
+    let mut head = Vec::with_capacity(512);
+    let mut buf = [0u8; 1024];
+    let split = loop {
+        if let Some(pos) = find_head_end(&head) {
+            break pos;
+        }
+        if head.len() > MAX_HEAD {
+            return Err("request head exceeds 16KiB".into());
+        }
+        let n = stream.read(&mut buf).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed before request head".into());
+        }
+        head.extend_from_slice(&buf[..n]);
+    };
+    let (head_bytes, mut body) = {
+        let rest = head.split_off(split + 4);
+        (head, rest)
+    };
+    let head_str = String::from_utf8_lossy(&head_bytes);
+    let mut lines = head_str.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| "empty request line".to_string())?
+        .to_ascii_uppercase();
+    let target = parts
+        .next()
+        .ok_or_else(|| "request line missing target".to_string())?;
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+        }
+    }
+    let content_length = headers
+        .iter()
+        .find(|(n, _)| n == "content-length")
+        .map(|(_, v)| v.parse::<usize>())
+        .transpose()
+        .map_err(|_| "unparseable Content-Length".to_string())?
+        .unwrap_or(0);
+    if content_length > max_body {
+        return Err(format!("body of {content_length} bytes exceeds limit"));
+    }
+    if body.len() > content_length {
+        body.truncate(content_length);
+    }
+    while body.len() < content_length {
+        let n = stream.read(&mut buf).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".into());
+        }
+        let take = n.min(content_length - body.len());
+        body.extend_from_slice(&buf[..take]);
+    }
+    Ok(Request {
+        method,
+        path,
+        headers,
+        body,
+    })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write a complete response and flush.  Errors are returned but callers
+/// typically ignore them — a client that hung up loses only its own
+/// response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> Result<(), String> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status_text(status),
+        body.len()
+    );
+    stream
+        .write_all(head.as_bytes())
+        .and_then(|()| stream.write_all(body))
+        .and_then(|()| stream.flush())
+        .map_err(|e| format!("write: {e}"))
+}
+
+/// Reason phrase for the statuses the front door emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Round-trip a raw request through a real socket pair.
+    fn parse_raw(raw: &[u8]) -> Result<Request, String> {
+        let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| e.to_string())?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let mut client = TcpStream::connect(addr).map_err(|e| e.to_string())?;
+        client.write_all(raw).map_err(|e| e.to_string())?;
+        client.flush().map_err(|e| e.to_string())?;
+        let (mut server_side, _) = listener.accept().map_err(|e| e.to_string())?;
+        server_side
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .map_err(|e| e.to_string())?;
+        read_request(&mut server_side, MAX_BODY)
+    }
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let req = parse_raw(
+            b"POST /operands/1a2b/solve?trace=1 HTTP/1.1\r\n\
+              Content-Type: application/json\r\n\
+              X-Client-Id: alice\r\n\
+              Content-Length: 11\r\n\r\n{\"x\":[1,2]}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/operands/1a2b/solve");
+        assert_eq!(req.header("x-client-id"), Some("alice"));
+        assert_eq!(req.header("X-Client-Id"), Some("alice"));
+        assert_eq!(req.body, b"{\"x\":[1,2]}");
+    }
+
+    #[test]
+    fn missing_content_length_means_empty_body() {
+        let req = parse_raw(b"GET /status HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn oversized_body_is_refused() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        client
+            .write_all(b"POST /operands HTTP/1.1\r\nContent-Length: 999999\r\n\r\n")
+            .unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        server_side
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        assert!(read_request(&mut server_side, 1024).is_err());
+    }
+
+    #[test]
+    fn response_wire_format_is_parseable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        write_response(&mut server_side, 429, "application/json", b"{}").unwrap();
+        drop(server_side);
+        let mut raw = String::new();
+        let mut client = client;
+        client.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(raw.contains("Content-Length: 2\r\n"));
+        assert!(raw.ends_with("\r\n\r\n{}"));
+    }
+}

@@ -1,0 +1,329 @@
+//! The network serving front door: a std-only HTTP/1.1 + JSON server
+//! over **one** shared [`PlaneHandle`](crate::plane::PlaneHandle).
+//!
+//! The paper's MELISO+ deployment is a *serving* substrate — distributed
+//! RRAM planes answering matrix computations for many concurrent
+//! clients.  This module is the process boundary: a dependency-free
+//! `TcpListener` + thread-pool server (the repo's hermetic-build rule
+//! forbids an HTTP crate, and the protocol needs none) exposing the
+//! resident-session machinery over the wire:
+//!
+//! * [`router`] — the endpoint surface (`POST /operands`, `/solve`,
+//!   `/solve-system`, `DELETE`, `GET /status|/metrics`,
+//!   `POST /shutdown`) with residency handles keyed by operand content
+//!   fingerprint, deduped through the
+//!   [`OperandCache`](crate::server::OperandCache);
+//! * [`coalesce`] — the headline win: a cross-client gather window
+//!   folding concurrent solves against one resident operand into a
+//!   single `execute_batch` chunk walk, demuxed per request — the
+//!   write-once / read-many amortization the paper's energy model
+//!   rewards, applied *across* clients;
+//! * [`admission`] — bounded in-flight per client and global, typed
+//!   429/503 JSON rejections;
+//! * [`error`] — the [`PlaneError`](crate::plane::PlaneError) →
+//!   HTTP taxonomy;
+//! * [`http`] — minimal request parsing / response writing.
+//!
+//! Graceful shutdown (`POST /shutdown` or [`Server::shutdown`]) drains:
+//! the accept loop stops, queued connections get typed 503s, in-flight
+//! requests complete, the coalescer empties its buffer, then every
+//! thread is joined.
+//!
+//! Start from the CLI with `meliso serve --addr 127.0.0.1:7737`, or
+//! embed via [`Server::start`] (bind to port 0 for an ephemeral port —
+//! what the end-to-end tests do).
+
+pub mod admission;
+pub mod coalesce;
+pub mod error;
+pub mod http;
+pub mod router;
+
+pub use error::ServeError;
+pub use router::{ServeResponse, ServeState};
+
+use crate::obs;
+use crate::solver::Meliso;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{self, RecvTimeoutError, TrySendError};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Front-door tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 for ephemeral).
+    pub addr: String,
+    /// Operands kept resident (LRU beyond this).
+    pub cache_capacity: usize,
+    /// How long the first solve of a window waits for company.
+    pub window: Duration,
+    /// Max solves folded into one coalesced window.
+    pub max_batch: usize,
+    /// Global in-flight request budget (excess → 503).
+    pub max_inflight: usize,
+    /// Per-client in-flight budget (excess → 429).
+    pub max_inflight_per_client: usize,
+    /// Connection-handler threads.
+    pub http_threads: usize,
+    /// Hard deadline for one request's execution.
+    pub request_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7737".into(),
+            cache_capacity: 8,
+            window: Duration::from_millis(2),
+            max_batch: 32,
+            max_inflight: 64,
+            max_inflight_per_client: 16,
+            http_threads: 8,
+            request_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Idle poll period for the accept loop and connection-queue waits.
+const POLL: Duration = Duration::from_millis(2);
+/// Worker wait on the connection queue between liveness checks.
+const QUEUE_TICK: Duration = Duration::from_millis(200);
+/// Per-connection socket timeouts.
+const SOCKET_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A running front door: accept loop + handler pool over one
+/// [`ServeState`].
+pub struct Server {
+    state: Arc<ServeState>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving.  Metrics are armed if not already on —
+    /// `/metrics` and `/status` are part of the serving contract.
+    pub fn start(solver: Meliso, cfg: ServeConfig) -> Result<Server, String> {
+        if !obs::metrics_on() {
+            obs::set_level(obs::ObsLevel::Metrics);
+        }
+        let listener =
+            TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("set_nonblocking: {e}"))?;
+        let state = Arc::new(ServeState::new(solver, &cfg));
+        let threads = cfg.http_threads.max(1);
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<(TcpStream, SocketAddr)>(threads * 2);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let state = state.clone();
+            let conn_rx = conn_rx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-http-{i}"))
+                .spawn(move || worker_loop(&state, &conn_rx))
+                .map_err(|e| format!("spawn worker: {e}"))?;
+            workers.push(handle);
+        }
+        let accept = {
+            let state = state.clone();
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(&listener, &state, &conn_tx))
+                .map_err(|e| format!("spawn accept loop: {e}"))?
+        };
+        Ok(Server {
+            state,
+            addr,
+            accept: Some(accept),
+            workers,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared handler state (fault tests watch
+    /// [`ServeState::inflight`] through this).
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Begin draining and block until fully stopped: accept loop down,
+    /// queued connections answered with 503, in-flight requests
+    /// completed, coalescer emptied, all threads joined.
+    pub fn shutdown(mut self) {
+        self.state.begin_shutdown();
+        self.teardown();
+    }
+
+    /// Block until something (e.g. `POST /shutdown`) begins the drain,
+    /// then tear down as [`shutdown`](Self::shutdown) does.  This is the
+    /// CLI's main loop.
+    pub fn wait(mut self) {
+        while !self.state.shutting_down() {
+            std::thread::sleep(QUEUE_TICK);
+        }
+        self.teardown();
+    }
+
+    fn teardown(&mut self) {
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        // The accept thread dropped its sender: workers drain the queue
+        // (every queued connection gets a response — 503 on execution
+        // routes once draining), then exit on Disconnected.
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+        self.state.drain();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.state.begin_shutdown();
+        self.teardown();
+    }
+}
+
+/// Accept until draining.  Overflow beyond the bounded connection queue
+/// is answered inline with a typed 503 — the server never queues
+/// unboundedly and never blocks the accept loop on a slow handler.
+fn accept_loop(
+    listener: &TcpListener,
+    state: &ServeState,
+    conn_tx: &mpsc::SyncSender<(TcpStream, SocketAddr)>,
+) {
+    while !state.shutting_down() {
+        match listener.accept() {
+            Ok((stream, peer)) => match conn_tx.try_send((stream, peer)) {
+                Ok(()) => {}
+                Err(TrySendError::Full((mut stream, _))) => {
+                    let body = ServeError::Overloaded("connection queue is full".into())
+                        .to_json()
+                        .pretty();
+                    let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
+                    let _ = http::write_response(&mut stream, 503, "application/json", body.as_bytes());
+                }
+                Err(TrySendError::Disconnected(_)) => return,
+            },
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL),
+            Err(_) => std::thread::sleep(POLL),
+        }
+    }
+}
+
+/// Handler-pool worker: take connections until the queue closes.
+fn worker_loop(
+    state: &ServeState,
+    conn_rx: &Mutex<mpsc::Receiver<(TcpStream, SocketAddr)>>,
+) {
+    loop {
+        let next = lock(conn_rx).recv_timeout(QUEUE_TICK);
+        match next {
+            Ok((stream, peer)) => handle_connection(state, stream, peer),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// One connection, one request, one response (`Connection: close`).
+/// A client that hangs up mid-solve costs nothing: the response write
+/// fails silently and every resource is permit/Drop-managed.
+fn handle_connection(state: &ServeState, mut stream: TcpStream, peer: SocketAddr) {
+    let _ = stream.set_read_timeout(Some(SOCKET_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(SOCKET_TIMEOUT));
+    let req = match http::read_request(&mut stream, http::MAX_BODY) {
+        Ok(req) => req,
+        Err(e) => {
+            let err = ServeError::BadRequest(e);
+            let _ = http::write_response(
+                &mut stream,
+                err.status(),
+                "application/json",
+                err.to_json().pretty().as_bytes(),
+            );
+            return;
+        }
+    };
+    let client = req
+        .header("x-client-id")
+        .map(str::to_string)
+        .unwrap_or_else(|| peer.ip().to_string());
+    let resp = state.handle(&req, &client);
+    let _ = http::write_response(&mut stream, resp.status, resp.content_type, &resp.body);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SolveOptions, SystemConfig};
+    use crate::device::materials::Material;
+    use crate::runtime::native::NativeBackend;
+    use std::io::{Read, Write};
+
+    fn solver() -> Meliso {
+        Meliso::with_backend(
+            SystemConfig::single_mca(32),
+            SolveOptions::default()
+                .with_device(Material::EpiRam)
+                .with_workers(2)
+                .with_seed(11),
+            Arc::new(NativeBackend::new()),
+        )
+    }
+
+    fn ephemeral_config() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            http_threads: 2,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn roundtrip(addr: SocketAddr, raw: &str) -> String {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(raw.as_bytes()).unwrap();
+        conn.flush().unwrap();
+        let mut out = String::new();
+        conn.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn boots_serves_metrics_and_drains_on_shutdown_route() {
+        let server = Server::start(solver(), ephemeral_config()).unwrap();
+        let addr = server.addr();
+        let metrics = roundtrip(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(metrics.starts_with("HTTP/1.1 200 OK\r\n"), "{metrics}");
+        assert!(metrics.contains("meliso_serve_requests_total"), "{metrics}");
+        let bye = roundtrip(addr, "POST /shutdown HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(bye.contains("\"draining\": true"), "{bye}");
+        // wait() returns because the shutdown route flipped the flag.
+        server.wait();
+    }
+
+    #[test]
+    fn explicit_shutdown_is_idempotent_with_drop() {
+        let server = Server::start(solver(), ephemeral_config()).unwrap();
+        let addr = server.addr();
+        let resp = roundtrip(addr, "GET /status HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,564 @@
+//! Request routing and handlers: the front door's endpoint surface.
+//!
+//! | Method | Path | Purpose |
+//! |---|---|---|
+//! | `POST` | `/operands` | Program an operand (registry name or `.mtx` upload) → residency handle |
+//! | `POST` | `/operands/{id}/solve` | One MVM solve through the coalescing window |
+//! | `POST` | `/operands/{id}/solve-system` | Iterative `Ax = b` (CG/GMRES/…) on the residency |
+//! | `DELETE` | `/operands/{id}` | Evict the residency |
+//! | `GET` | `/status` | [`crate::obs::StatusReport`] as JSON |
+//! | `GET` | `/metrics` | Prometheus text exposition |
+//! | `POST` | `/shutdown` | Begin graceful drain |
+//!
+//! The residency handle `{id}` is the operand's content
+//! [`fingerprint`](crate::server::fingerprint) in hex: uploading the same
+//! matrix twice — from any client — dedups onto one resident session
+//! through the [`OperandCache`].  Handlers never panic (lint rule C2
+//! applies to this module): every failure renders as a typed
+//! [`ServeError`] JSON body.
+
+use super::admission::Admission;
+use super::coalesce::{await_reply, Coalescer, SolveRequest};
+use super::error::ServeError;
+use super::http::Request;
+use super::ServeConfig;
+use crate::iterative::{self, IterOptions, Method};
+use crate::linalg::Vector;
+use crate::matrices::{registry, MatrixSource};
+use crate::obs;
+use crate::server::{fingerprint, OperandCache};
+use crate::solver::Meliso;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+/// Shared state behind every connection handler thread.
+pub struct ServeState {
+    solver: Meliso,
+    cache: Mutex<OperandCache>,
+    /// Residency registry: fingerprint → source.  Outlives cache
+    /// eviction so a solve against a known-but-displaced operand can
+    /// transparently re-program it (also how service resumes after a
+    /// plane rebuild).
+    operands: Mutex<BTreeMap<u64, Arc<dyn MatrixSource>>>,
+    coalescer: Coalescer,
+    admission: Admission,
+    shutting_down: AtomicBool,
+    request_timeout: Duration,
+}
+
+/// A fully-formed response, ready for [`super::http::write_response`].
+pub struct ServeResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl ServeState {
+    pub fn new(solver: Meliso, cfg: &ServeConfig) -> ServeState {
+        ServeState {
+            solver,
+            cache: Mutex::new(OperandCache::new(cfg.cache_capacity.max(1))),
+            operands: Mutex::new(BTreeMap::new()),
+            coalescer: Coalescer::start(cfg.window, cfg.max_batch, cfg.max_inflight.max(1)),
+            admission: Admission::new(cfg.max_inflight, cfg.max_inflight_per_client),
+            shutting_down: AtomicBool::new(false),
+            request_timeout: cfg.request_timeout,
+        }
+    }
+
+    /// Flip into drain mode: execution routes refuse with 503, the accept
+    /// loop stops taking connections, in-flight requests complete.
+    pub fn begin_shutdown(&self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+    }
+
+    pub fn shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::SeqCst)
+    }
+
+    /// Drain the coalescer (buffered windows complete, dispatcher joins).
+    pub fn drain(&self) {
+        self.coalescer.shutdown();
+    }
+
+    /// Requests currently admitted (fault tests assert this returns to 0).
+    pub fn inflight(&self) -> usize {
+        self.admission.inflight()
+    }
+
+    /// Dispatch one parsed request.  `client` identifies the caller for
+    /// per-client admission (X-Client-Id header, else peer IP).
+    pub fn handle(&self, req: &Request, client: &str) -> ServeResponse {
+        let segments: Vec<&str> = req
+            .path
+            .trim_matches('/')
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .collect();
+        // Count the request *before* dispatch so even the first
+        // `/metrics` scrape sees its own route in the exposition.
+        let route = route_label(req.method.as_str(), &segments);
+        if obs::metrics_on() {
+            obs::global()
+                .counter(
+                    obs::names::SERVE_REQUESTS,
+                    "HTTP requests handled by the serving front door",
+                    &[("route", route)],
+                )
+                .inc();
+        }
+        let result = match (req.method.as_str(), segments.as_slice()) {
+            ("GET", ["status"]) => self.get_status(),
+            ("GET", ["metrics"]) => self.get_metrics(),
+            ("POST", ["shutdown"]) => self.post_shutdown(),
+            ("POST", ["operands"]) => self.post_operand(req, client),
+            ("POST", ["operands", id, "solve"]) => self.post_solve(req, client, id),
+            ("POST", ["operands", id, "solve-system"]) => self.post_solve_system(req, client, id),
+            ("DELETE", ["operands", id]) => self.delete_operand(id),
+            _ => Err(ServeError::NotFound(format!(
+                "no route for {} {}",
+                req.method, req.path
+            ))),
+        };
+        match result {
+            Ok(resp) => resp,
+            Err(e) => ServeResponse {
+                status: e.status(),
+                content_type: "application/json",
+                body: e.to_json().pretty().into_bytes(),
+            },
+        }
+    }
+
+    fn refuse_if_draining(&self) -> Result<(), ServeError> {
+        if self.shutting_down() {
+            Err(ServeError::ShuttingDown)
+        } else {
+            Ok(())
+        }
+    }
+
+    fn get_status(&self) -> Result<ServeResponse, ServeError> {
+        let doc = obs::export::to_json(&obs::global().snapshot(), obs::uptime_s());
+        let report = obs::StatusReport::from_json(&doc).map_err(ServeError::Internal)?;
+        Ok(json_response(200, &report.to_json()))
+    }
+
+    fn get_metrics(&self) -> Result<ServeResponse, ServeError> {
+        let text = obs::export::prometheus(&obs::global().snapshot());
+        Ok(ServeResponse {
+            status: 200,
+            content_type: "text/plain; version=0.0.4",
+            body: text.into_bytes(),
+        })
+    }
+
+    fn post_shutdown(&self) -> Result<ServeResponse, ServeError> {
+        self.begin_shutdown();
+        let mut body = Json::obj();
+        body.set("draining", Json::Bool(true));
+        Ok(json_response(200, &body))
+    }
+
+    /// Program (or dedup onto) a residency and hand back its fingerprint.
+    fn post_operand(&self, req: &Request, client: &str) -> Result<ServeResponse, ServeError> {
+        self.refuse_if_draining()?;
+        let _permit = self.admission.try_acquire(client)?;
+        let source = load_source(&req.body)?;
+        let fp = fingerprint(source.as_ref());
+        let (session, cached) = {
+            let mut cache = lock(&self.cache);
+            let hits_before = cache.hits;
+            let session = cache
+                .get_or_open(&self.solver, &source)
+                .map_err(ServeError::from)?;
+            (session, cache.hits > hits_before)
+        };
+        lock(&self.operands).insert(fp, source.clone());
+        let report = session.program_report();
+        let mut program = Json::obj();
+        program
+            .set("chunks_total", Json::Num(report.chunks_total as f64))
+            .set("chunks_resident", Json::Num(report.chunks_resident as f64))
+            .set("mcas_used", Json::Num(report.mcas_used as f64))
+            .set("mean_wv_iters", Json::Num(report.mean_wv_iters))
+            .set("write_energy_j", Json::Num(report.write_energy_j))
+            .set("write_latency_s", Json::Num(report.write_latency_s));
+        let mut body = Json::obj();
+        body.set("operand", Json::Str(format!("{fp:016x}")))
+            .set("m", Json::Num(source.nrows() as f64))
+            .set("n", Json::Num(source.ncols() as f64))
+            .set("cached", Json::Bool(cached))
+            .set("program", program);
+        Ok(json_response(200, &body))
+    }
+
+    /// Resolve a residency handle to a live session, transparently
+    /// re-programming a known operand after eviction or a plane rebuild.
+    fn session_for(&self, fp: u64) -> Result<Arc<crate::server::Session>, ServeError> {
+        let mut cache = lock(&self.cache);
+        if let Some(session) = cache.find_by_fingerprint(fp) {
+            return Ok(session);
+        }
+        let source = lock(&self.operands)
+            .get(&fp)
+            .cloned()
+            .ok_or_else(|| ServeError::NotFound(format!("unknown operand {fp:016x}")))?;
+        cache
+            .get_or_open(&self.solver, &source)
+            .map_err(ServeError::from)
+    }
+
+    /// One MVM solve, folded into the coalescing window.
+    fn post_solve(&self, req: &Request, client: &str, id: &str) -> Result<ServeResponse, ServeError> {
+        self.refuse_if_draining()?;
+        let _permit = self.admission.try_acquire(client)?;
+        let fp = parse_handle(id)?;
+        let session = self.session_for(fp)?;
+        let doc = parse_json(&req.body)?;
+        let x = Vector::from_vec(vector_field(&doc, "x")?);
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.coalescer.submit(SolveRequest {
+            fp,
+            session,
+            x,
+            reply,
+        })?;
+        let solve = await_reply(&rx, self.request_timeout)?;
+        let mut body = Json::obj();
+        body.set(
+            "y",
+            Json::Arr(solve.y.data().iter().map(|&v| Json::Num(v)).collect()),
+        )
+        .set("solve_index", Json::Num(solve.solve_index as f64))
+        .set("wall_seconds", Json::Num(solve.wall_seconds));
+        Ok(json_response(200, &body))
+    }
+
+    /// Iterative `Ax = b` against the residency (exact residuals from the
+    /// registered source drive refinement, as in `meliso solve-system`).
+    fn post_solve_system(
+        &self,
+        req: &Request,
+        client: &str,
+        id: &str,
+    ) -> Result<ServeResponse, ServeError> {
+        self.refuse_if_draining()?;
+        let _permit = self.admission.try_acquire(client)?;
+        let fp = parse_handle(id)?;
+        let session = self.session_for(fp)?;
+        let source = lock(&self.operands)
+            .get(&fp)
+            .cloned()
+            .ok_or_else(|| ServeError::NotFound(format!("unknown operand {fp:016x}")))?;
+        let doc = parse_json(&req.body)?;
+        let b = Vector::from_vec(vector_field(&doc, "b")?);
+        let opts = iter_options(&doc)?;
+        if source.nrows() != source.ncols() {
+            return Err(ServeError::BadRequest(format!(
+                "iterative methods need a square operand, got {}x{}",
+                source.nrows(),
+                source.ncols()
+            )));
+        }
+        if b.len() != source.ncols() {
+            return Err(ServeError::BadRequest(format!(
+                "b has length {}, operand is {}x{}",
+                b.len(),
+                source.nrows(),
+                source.ncols()
+            )));
+        }
+        let outcome = iterative::solve_system(&*session, Some(source.as_ref()), &b, &opts)
+            .map_err(ServeError::Internal)?;
+        let mut body = Json::obj();
+        body.set(
+            "x",
+            Json::Arr(outcome.x.data().iter().map(|&v| Json::Num(v)).collect()),
+        )
+        .set("converged", Json::Bool(outcome.converged))
+        .set("rel_residual", Json::Num(outcome.rel_residual))
+        .set("iterations", Json::Num(outcome.iterations as f64))
+        .set("refinements", Json::Num(outcome.refinements as f64))
+        .set("mvms", Json::Num(outcome.mvms as f64));
+        Ok(json_response(200, &body))
+    }
+
+    fn delete_operand(&self, id: &str) -> Result<ServeResponse, ServeError> {
+        let fp = parse_handle(id)?;
+        let known = lock(&self.operands).remove(&fp).is_some();
+        let evicted = lock(&self.cache).evict_by_fingerprint(fp);
+        if !known && !evicted {
+            return Err(ServeError::NotFound(format!("unknown operand {fp:016x}")));
+        }
+        let mut body = Json::obj();
+        body.set("evicted", Json::Bool(evicted))
+            .set("operand", Json::Str(format!("{fp:016x}")));
+        Ok(json_response(200, &body))
+    }
+}
+
+/// Static route label for the request counter (mirrors the dispatch
+/// match in [`ServeState::handle`]).
+fn route_label(method: &str, segments: &[&str]) -> &'static str {
+    match (method, segments) {
+        ("GET", ["status"]) => "status",
+        ("GET", ["metrics"]) => "metrics",
+        ("POST", ["shutdown"]) => "shutdown",
+        ("POST", ["operands"]) => "operands",
+        ("POST", ["operands", _, "solve"]) => "solve",
+        ("POST", ["operands", _, "solve-system"]) => "solve_system",
+        ("DELETE", ["operands", _]) => "delete",
+        _ => "other",
+    }
+}
+
+fn json_response(status: u16, body: &Json) -> ServeResponse {
+    ServeResponse {
+        status,
+        content_type: "application/json",
+        body: body.pretty().into_bytes(),
+    }
+}
+
+fn parse_handle(id: &str) -> Result<u64, ServeError> {
+    u64::from_str_radix(id, 16)
+        .map_err(|_| ServeError::BadRequest(format!("operand handle '{id}' is not a hex id")))
+}
+
+fn parse_json(body: &[u8]) -> Result<Json, ServeError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ServeError::BadRequest("request body is not UTF-8".into()))?;
+    Json::parse(text).map_err(|e| ServeError::BadRequest(format!("bad JSON body: {e}")))
+}
+
+fn vector_field(doc: &Json, key: &str) -> Result<Vec<f64>, ServeError> {
+    let arr = doc
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServeError::BadRequest(format!("body needs a numeric array '{key}'")))?;
+    arr.iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| ServeError::BadRequest(format!("'{key}' holds a non-number")))
+        })
+        .collect()
+}
+
+fn iter_options(doc: &Json) -> Result<IterOptions, ServeError> {
+    let mut opts = IterOptions::default();
+    if let Some(m) = doc.get("method").and_then(Json::as_str) {
+        let method = Method::parse(m)
+            .ok_or_else(|| ServeError::BadRequest(format!("unknown method '{m}'")))?;
+        opts = opts.with_method(method);
+    }
+    if let Some(v) = doc.get("tol").and_then(Json::as_f64) {
+        opts = opts.with_tol(v);
+    }
+    if let Some(v) = doc.get("max_iters").and_then(Json::as_usize) {
+        opts = opts.with_max_iters(v);
+    }
+    if let Some(v) = doc.get("restart").and_then(Json::as_usize) {
+        opts = opts.with_restart(v);
+    }
+    if let Some(v) = doc.get("omega").and_then(Json::as_f64) {
+        opts = opts.with_omega(v);
+    }
+    if let Some(v) = doc.get("refinements").and_then(Json::as_usize) {
+        opts = opts.with_refinements(v);
+    }
+    if let Some(v) = doc.get("inner_tol").and_then(Json::as_f64) {
+        opts = opts.with_inner_tol(v);
+    }
+    Ok(opts)
+}
+
+/// Upload sequence number — keeps concurrent `.mtx` temp files distinct
+/// within the process (the name also folds in the PID).
+static UPLOAD_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Materialize the request body as an operand: a JSON `{"name": ...}`
+/// registry reference, or a raw Matrix-Market upload (spilled to a temp
+/// file for the `.mtx` reader, then removed).
+fn load_source(body: &[u8]) -> Result<Arc<dyn MatrixSource>, ServeError> {
+    let lead = body
+        .iter()
+        .position(|b| !b.is_ascii_whitespace())
+        .unwrap_or(body.len());
+    if body[lead..].starts_with(b"%%MatrixMarket") {
+        let path = std::env::temp_dir().join(format!(
+            "meliso-upload-{}-{}.mtx",
+            std::process::id(),
+            UPLOAD_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&path, body)
+            .map_err(|e| ServeError::Internal(format!("spill upload: {e}")))?;
+        let built = registry::build(&format!("mtx:{}", path.display()));
+        let _ = std::fs::remove_file(&path);
+        return built.map_err(ServeError::BadRequest);
+    }
+    let doc = parse_json(body)?;
+    let name = doc.get("name").and_then(Json::as_str).ok_or_else(|| {
+        ServeError::BadRequest(
+            "body must be a Matrix-Market upload or {\"name\": \"<registry operand>\"}".into(),
+        )
+    })?;
+    registry::build(name).map_err(ServeError::BadRequest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SolveOptions, SystemConfig};
+    use crate::device::materials::Material;
+    use crate::runtime::native::NativeBackend;
+
+    fn state() -> ServeState {
+        let solver = Meliso::with_backend(
+            SystemConfig::single_mca(32),
+            SolveOptions::default()
+                .with_device(Material::EpiRam)
+                .with_workers(2)
+                .with_seed(11),
+            Arc::new(NativeBackend::new()),
+        );
+        ServeState::new(solver, &ServeConfig::default())
+    }
+
+    fn request(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn body_json(resp: &ServeResponse) -> Json {
+        Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn upload_solve_delete_round_trip() {
+        let st = state();
+        let up = st.handle(&request("POST", "/operands", "{\"name\": \"iperturb66\"}"), "t");
+        assert_eq!(up.status, 200, "{}", String::from_utf8_lossy(&up.body));
+        let doc = body_json(&up);
+        let handle = doc.get("operand").unwrap().as_str().unwrap().to_string();
+        assert_eq!(doc.get("m").unwrap().as_usize(), Some(66));
+        assert_eq!(doc.get("cached").unwrap(), &Json::Bool(false));
+
+        // Re-upload dedups onto the same residency.
+        let again = st.handle(&request("POST", "/operands", "{\"name\": \"iperturb66\"}"), "t");
+        assert_eq!(body_json(&again).get("cached").unwrap(), &Json::Bool(true));
+
+        let x: Vec<String> = (0..66).map(|i| format!("{}", (i % 7) as f64 * 0.25)).collect();
+        let solve = st.handle(
+            &request(
+                "POST",
+                &format!("/operands/{handle}/solve"),
+                &format!("{{\"x\": [{}]}}", x.join(",")),
+            ),
+            "t",
+        );
+        assert_eq!(solve.status, 200, "{}", String::from_utf8_lossy(&solve.body));
+        let out = body_json(&solve);
+        assert_eq!(out.get("y").unwrap().as_arr().unwrap().len(), 66);
+        assert_eq!(out.get("solve_index").unwrap().as_usize(), Some(0));
+
+        let del = st.handle(&request("DELETE", &format!("/operands/{handle}"), ""), "t");
+        assert_eq!(del.status, 200);
+        // The registry entry is gone: a further solve is 404.
+        let gone = st.handle(
+            &request(
+                "POST",
+                &format!("/operands/{handle}/solve"),
+                &format!("{{\"x\": [{}]}}", x.join(",")),
+            ),
+            "t",
+        );
+        assert_eq!(gone.status, 404);
+        st.drain();
+    }
+
+    #[test]
+    fn malformed_requests_get_typed_400s() {
+        let st = state();
+        assert_eq!(st.handle(&request("POST", "/operands", "not json"), "t").status, 400);
+        assert_eq!(
+            st.handle(&request("POST", "/operands", "{\"name\": \"no-such\"}"), "t").status,
+            400
+        );
+        assert_eq!(
+            st.handle(&request("POST", "/operands/zzz/solve", "{\"x\": []}"), "t").status,
+            400
+        );
+        assert_eq!(
+            st.handle(&request("POST", "/operands/1234/solve", "{\"x\": [1]}"), "t").status,
+            404
+        );
+        assert_eq!(st.handle(&request("GET", "/nope", ""), "t").status, 404);
+        st.drain();
+    }
+
+    #[test]
+    fn mtx_upload_and_solve_system() {
+        let st = state();
+        let mtx = std::fs::read_to_string(
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("data/arrow16.mtx"),
+        )
+        .unwrap();
+        let up = st.handle(&request("POST", "/operands", &mtx), "t");
+        assert_eq!(up.status, 200, "{}", String::from_utf8_lossy(&up.body));
+        let doc = body_json(&up);
+        let handle = doc.get("operand").unwrap().as_str().unwrap().to_string();
+        assert_eq!(doc.get("m").unwrap().as_usize(), Some(16));
+
+        let b: Vec<String> = (0..16).map(|_| "1".to_string()).collect();
+        let solve = st.handle(
+            &request(
+                "POST",
+                &format!("/operands/{handle}/solve-system"),
+                &format!(
+                    "{{\"b\": [{}], \"method\": \"gmres\", \"tol\": 1e-8}}",
+                    b.join(",")
+                ),
+            ),
+            "t",
+        );
+        assert_eq!(solve.status, 200, "{}", String::from_utf8_lossy(&solve.body));
+        let out = body_json(&solve);
+        assert_eq!(out.get("converged").unwrap(), &Json::Bool(true));
+        assert!(out.get("rel_residual").unwrap().as_f64().unwrap() <= 1e-6);
+        st.drain();
+    }
+
+    #[test]
+    fn drain_mode_refuses_new_work_but_serves_reads() {
+        let st = state();
+        let resp = st.handle(&request("POST", "/shutdown", ""), "t");
+        assert_eq!(resp.status, 200);
+        assert!(st.shutting_down());
+        let refused = st.handle(&request("POST", "/operands", "{\"name\": \"iperturb66\"}"), "t");
+        assert_eq!(refused.status, 503);
+        assert_eq!(
+            body_json(&refused)
+                .get("error")
+                .unwrap()
+                .get("code")
+                .unwrap()
+                .as_str(),
+            Some("shutting_down")
+        );
+        assert_eq!(st.handle(&request("GET", "/metrics", ""), "t").status, 200);
+        st.drain();
+    }
+}

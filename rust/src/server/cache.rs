@@ -129,7 +129,20 @@ pub fn session_key(
     config: &SystemConfig,
     opts: &SolveOptions,
 ) -> SessionKey {
+    session_key_with_fp(source, config, opts).0
+}
+
+/// [`session_key`] plus the content [`fingerprint`] from the same hash
+/// pass — the serve front door needs both (the key for residency, the
+/// fingerprint as the client-visible operand handle) without hashing the
+/// operand twice.
+fn session_key_with_fp(
+    source: &dyn MatrixSource,
+    config: &SystemConfig,
+    opts: &SolveOptions,
+) -> (SessionKey, u64) {
     let (mut h, exact) = content_hash(source);
+    let fp = h.0;
     h.mix(config.tile_rows as u64);
     h.mix(config.tile_cols as u64);
     h.mix(config.cell_size as u64);
@@ -158,11 +171,14 @@ pub fn session_key(
     h.mix(opts.nonideal.drift.nu.to_bits());
     h.mix(opts.nonideal.drift.elapsed.to_bits());
     h.mix(opts.nonideal.ir_drop.alpha.to_bits());
-    SessionKey { hash: h, exact }
+    (SessionKey { hash: h, exact }, fp)
 }
 
 struct CacheEntry {
     key: SessionKey,
+    /// Content fingerprint (pre-option hash lane) — the serve front
+    /// door's residency handle.
+    fp: u64,
     source: Arc<dyn MatrixSource>,
     last_used: u64,
     session: Arc<Session>,
@@ -283,7 +299,7 @@ impl OperandCache {
         source: &Arc<dyn MatrixSource>,
     ) -> Result<Arc<Session>, MelisoError> {
         self.invalidate_failed_plane();
-        let key = session_key(source.as_ref(), solver.config(), solver.options());
+        let (key, fp) = session_key_with_fp(source.as_ref(), solver.config(), solver.options());
         self.clock += 1;
         if let Some(entry) = self.entries.iter_mut().find(|e| e.matches(&key, source)) {
             entry.last_used = self.clock;
@@ -335,6 +351,7 @@ impl OperandCache {
         let session = Arc::new(session);
         self.entries.push(CacheEntry {
             key,
+            fp,
             source: source.clone(),
             last_used: self.clock,
             session: session.clone(),
@@ -346,6 +363,42 @@ impl OperandCache {
     pub fn contains(&self, solver: &Meliso, source: &Arc<dyn MatrixSource>) -> bool {
         let key = session_key(source.as_ref(), solver.config(), solver.options());
         self.entries.iter().any(|e| e.matches(&key, source))
+    }
+
+    /// Fast-path lookup by content [`fingerprint`] — the serve front
+    /// door's residency handle.  Bumps LRU recency and counts a hit; a
+    /// `None` return is *not* counted as a miss (the caller falls back to
+    /// [`get_or_open`](Self::get_or_open), which counts it).  A failed
+    /// plane is invalidated first, so this can never hand out a session
+    /// wired to a dead pool.
+    pub fn find_by_fingerprint(&mut self, fp: u64) -> Option<Arc<Session>> {
+        self.invalidate_failed_plane();
+        self.clock += 1;
+        let clock = self.clock;
+        let session = {
+            let entry = self.entries.iter_mut().find(|e| e.fp == fp)?;
+            entry.last_used = clock;
+            entry.session.clone()
+        };
+        self.hits += 1;
+        note_cache(obs::names::CACHE_HITS, "Operand-cache session reuses", 1);
+        Some(session)
+    }
+
+    /// Evict the residency with content fingerprint `fp` (serve front
+    /// door `DELETE`).  Returns whether anything was resident.  Tile
+    /// slots return to the plane allocator when the last outstanding
+    /// `Arc<Session>` drops.
+    pub fn evict_by_fingerprint(&mut self, fp: u64) -> bool {
+        match self.entries.iter().position(|e| e.fp == fp) {
+            Some(i) => {
+                self.entries.swap_remove(i);
+                self.evictions += 1;
+                note_cache(obs::names::CACHE_EVICTIONS, "Operand-cache evictions", 1);
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -424,6 +477,7 @@ mod tests {
         assert!(!ka.exact);
         let entry = CacheEntry {
             key: ka,
+            fp: fingerprint(big_a.as_ref()),
             source: big_a.clone(),
             last_used: 0,
             session: Arc::new(
@@ -448,6 +502,41 @@ mod tests {
         // The cached session actually serves.
         let x = Vector::standard_normal(16, 6);
         assert!(s2.solve(&x).is_ok());
+    }
+
+    #[test]
+    fn fingerprint_lookup_finds_and_evicts_residencies() {
+        let solver = solver();
+        let mut cache = OperandCache::new(2);
+        let a = operand(21);
+        let fp = fingerprint(a.as_ref());
+        assert!(cache.find_by_fingerprint(fp).is_none());
+        let s1 = cache.get_or_open(&solver, &a).unwrap();
+        let s2 = cache.find_by_fingerprint(fp).expect("resident after open");
+        assert!(Arc::ptr_eq(&s1, &s2));
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert!(cache.evict_by_fingerprint(fp));
+        assert!(!cache.evict_by_fingerprint(fp));
+        assert!(cache.find_by_fingerprint(fp).is_none());
+        assert_eq!(cache.evictions, 1);
+    }
+
+    #[test]
+    fn fingerprint_lookup_bumps_lru_recency() {
+        let solver = solver();
+        let mut cache = OperandCache::new(2);
+        let (a, b, c) = (operand(31), operand(32), operand(33));
+        cache.get_or_open(&solver, &a).unwrap();
+        cache.get_or_open(&solver, &b).unwrap();
+        // Touch `a` through the fingerprint path, then insert a third
+        // tenant: `b` (now LRU) must be the one displaced.
+        cache
+            .find_by_fingerprint(fingerprint(a.as_ref()))
+            .expect("a resident");
+        cache.get_or_open(&solver, &c).unwrap();
+        assert!(cache.contains(&solver, &a));
+        assert!(!cache.contains(&solver, &b));
+        assert!(cache.contains(&solver, &c));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! (the repo's vendored loom stand-in — see that module's docs for why
 //! loom itself is not in the build closure).
 //!
-//! Two designs get modeled, each in two variants:
+//! Three designs get modeled, each in two variants:
 //!
 //! 1. **Two-tier steal cursors** (`plane/shard.rs`): workers claim MCAs
 //!    from per-queue tier-1 cursors, drain each MCA's chunks through a
@@ -21,6 +21,15 @@
 //!    batch is using.  The faithful model never executes against an
 //!    evicted residency; the broken variant (check residency, release
 //!    the lock, then bump inflight) must be caught as a torn residency.
+//!
+//! 3. **The serve coalescer's gather window** (`serve/coalesce.rs`):
+//!    producers submit solve requests, a single dispatcher gathers a
+//!    window and demuxes one completion per request.  The faithful model
+//!    (the window hand-off is one atomic step — the mpsc channel in the
+//!    real code) must complete every submitted request **exactly once**
+//!    in every schedule.  A deliberately racy variant snapshots the
+//!    window and clears it in two separate steps; the explorer must find
+//!    the schedule where a submission lands in between and is lost.
 //!
 //! The tests always run; `RUSTFLAGS="--cfg loom"` (the CI static-analysis
 //! job) scales the thread counts up for a larger state space.
@@ -394,4 +403,188 @@ fn evicting_idle_then_admitting_surfaces_stale_not_torn() {
     m.step(0); // late client must see StaleOperand, never execute
     assert_eq!(m.clients[0], Client::DoneStale);
     m.invariant().expect("post-evict state is consistent");
+}
+
+// ---------------------------------------------------------------------------
+// Model 3: the serve coalescer's gather window
+// ---------------------------------------------------------------------------
+
+/// The gather-window dispatcher of the serving front door.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+enum Dispatcher {
+    /// Waiting for submissions.
+    Wait,
+    /// Racy-variant only: window contents observed, queue clear pending.
+    ReadDone { batch: Vec<u8> },
+    /// Demuxing the gathered window, one completion per step.
+    Exec { batch: Vec<u8> },
+}
+
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct CoalesceModel {
+    /// When set, the dispatcher snapshots the window and clears it in
+    /// two separate steps instead of one atomic hand-off (the mpsc
+    /// channel in the real coalescer) — a submission landing in between
+    /// is wiped without ever being completed.
+    racy_gather: bool,
+    /// Pending submissions (the open gather window), in arrival order.
+    queue: Vec<u8>,
+    /// Which producers have submitted their one request.
+    submitted: Vec<bool>,
+    /// Completion count per request id (id == producer tid).
+    completions: Vec<u8>,
+    dispatcher: Dispatcher,
+}
+
+impl CoalesceModel {
+    fn new(producers: usize, racy: bool) -> CoalesceModel {
+        CoalesceModel {
+            racy_gather: racy,
+            queue: Vec::new(),
+            submitted: vec![false; producers],
+            completions: vec![0; producers],
+            dispatcher: Dispatcher::Wait,
+        }
+    }
+
+    fn dispatcher_tid(&self) -> usize {
+        self.submitted.len()
+    }
+}
+
+impl Model for CoalesceModel {
+    fn runnable(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..self.submitted.len())
+            .filter(|&t| !self.submitted[t])
+            .collect();
+        let dispatcher_can_run = match &self.dispatcher {
+            Dispatcher::Wait => !self.queue.is_empty(),
+            Dispatcher::ReadDone { .. } | Dispatcher::Exec { .. } => true,
+        };
+        if dispatcher_can_run {
+            out.push(self.dispatcher_tid());
+        }
+        out
+    }
+
+    fn step(&mut self, tid: usize) {
+        if tid < self.submitted.len() {
+            // One producer submission is one channel send: one step.
+            self.queue.push(tid as u8);
+            self.submitted[tid] = true;
+            return;
+        }
+        self.dispatcher = match std::mem::replace(&mut self.dispatcher, Dispatcher::Wait) {
+            Dispatcher::Wait => {
+                if self.racy_gather {
+                    // BUG variant: observe the window now, clear it later.
+                    Dispatcher::ReadDone {
+                        batch: self.queue.clone(),
+                    }
+                } else {
+                    // Faithful: the channel hands the whole window over
+                    // atomically — nothing can land "in between".
+                    Dispatcher::Exec {
+                        batch: std::mem::take(&mut self.queue),
+                    }
+                }
+            }
+            Dispatcher::ReadDone { batch } => {
+                // BUG variant second half: wipes submissions that arrived
+                // after the snapshot — they are never completed.
+                self.queue.clear();
+                Dispatcher::Exec { batch }
+            }
+            Dispatcher::Exec { mut batch } => {
+                let id = batch.remove(0);
+                self.completions[id as usize] += 1;
+                if batch.is_empty() {
+                    Dispatcher::Wait
+                } else {
+                    Dispatcher::Exec { batch }
+                }
+            }
+        };
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        for (i, &c) in self.completions.iter().enumerate() {
+            if c > 1 {
+                return Err(format!("request {i} completed {c} times"));
+            }
+        }
+        Ok(())
+    }
+
+    fn is_done(&self) -> bool {
+        self.submitted.iter().all(|&s| s)
+            && self.queue.is_empty()
+            && self.dispatcher == Dispatcher::Wait
+    }
+
+    fn final_check(&self) -> Result<(), String> {
+        for (i, &c) in self.completions.iter().enumerate() {
+            if c != 1 {
+                return Err(format!("request {i} completed {c} times (want exactly once)"));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn coalesce_model(racy: bool) -> CoalesceModel {
+    CoalesceModel::new(if cfg!(loom) { 3 } else { 2 }, racy)
+}
+
+const COALESCE_STATE_CAP: usize = 1_000_000;
+
+#[test]
+fn coalescer_completes_every_request_exactly_once_in_all_interleavings() {
+    let report =
+        explore(coalesce_model(false), COALESCE_STATE_CAP).expect("coalescer window model");
+    assert!(report.finals >= 1, "no terminal schedule: {report:?}");
+    assert!(
+        report.states > 10,
+        "state space suspiciously small: {report:?}"
+    );
+}
+
+#[test]
+fn explorer_catches_torn_gather_window() {
+    let err = explore(coalesce_model(true), COALESCE_STATE_CAP).unwrap_err();
+    assert!(err.contains("completed"), "wrong failure: {err}");
+}
+
+#[test]
+fn torn_window_loses_the_submission_that_raced_the_snapshot() {
+    // Directed schedule for the racy variant: producer 0 submits, the
+    // dispatcher snapshots the window, producer 1 submits, the clear
+    // wipes it — request 1 is never completed.
+    let mut m = CoalesceModel::new(2, true);
+    let d = m.dispatcher_tid();
+    m.step(0); // queue = [0]
+    m.step(d); // snapshot [0], clear pending
+    m.step(1); // queue = [0, 1]
+    m.step(d); // clear: request 1 is gone
+    assert!(m.queue.is_empty(), "clear left the window populated");
+    m.step(d); // complete request 0
+    assert!(m.is_done());
+    let err = m.final_check().unwrap_err();
+    assert!(err.contains("request 1 completed 0 times"), "{err}");
+}
+
+#[test]
+fn atomic_window_handoff_completes_late_arrivals_in_the_next_window() {
+    // The same schedule against the faithful model: the late submission
+    // survives in the queue and is completed by the next window.
+    let mut m = CoalesceModel::new(2, false);
+    let d = m.dispatcher_tid();
+    m.step(0); // queue = [0]
+    m.step(d); // window [0] handed off atomically
+    m.step(1); // queue = [1] — the next window's content
+    m.step(d); // complete request 0
+    m.step(d); // gather the next window: [1]
+    m.step(d); // complete request 1
+    assert!(m.is_done());
+    m.final_check().expect("every request completed exactly once");
 }

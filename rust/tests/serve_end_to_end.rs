@@ -1,0 +1,303 @@
+//! End-to-end battery for the network serving front door: a real
+//! `meliso::serve::Server` on an ephemeral port, driven by a std-only
+//! test HTTP client over `TcpStream`.
+//!
+//! The load-bearing assertions are bit-identity ones: a solve answered
+//! through upload → coalescing window → `solve_batch` → JSON must equal,
+//! bit for bit, the same solve issued directly against a resident
+//! [`Session`] on an identically-seeded solver.  The JSON layer is
+//! exact by construction (the vendored writer emits shortest
+//! round-trip f64), so any mismatch is a serving-path bug, not a
+//! formatting artifact.
+
+use meliso::linalg::Vector;
+use meliso::matrices::registry;
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::serve::{ServeConfig, Server};
+use meliso::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn solver() -> Meliso {
+    Meliso::with_backend(
+        SystemConfig::new(2, 2, 32),
+        SolveOptions::default()
+            .with_device(Material::EpiRam)
+            .with_workers(2)
+            .with_seed(11),
+        Arc::new(NativeBackend::new()),
+    )
+}
+
+fn server() -> Server {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        http_threads: 4,
+        ..ServeConfig::default()
+    };
+    Server::start(solver(), cfg).unwrap()
+}
+
+/// Minimal std-only HTTP client: one request, one connection
+/// (the server speaks `Connection: close`), bounded socket timeouts so
+/// a server bug fails the test instead of hanging it.
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    client_id: &str,
+    body: &[u8],
+) -> (u16, String) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    conn.set_write_timeout(Some(Duration::from_secs(60))).unwrap();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: meliso-test\r\nX-Client-Id: {client_id}\r\n\
+         Content-Length: {}\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes()).unwrap();
+    conn.write_all(body).unwrap();
+    conn.flush().unwrap();
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response: {raw}"));
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn solve_body(x: &Vector) -> String {
+    let mut doc = Json::obj();
+    doc.set(
+        "x",
+        Json::Arr(x.data().iter().map(|&v| Json::Num(v)).collect()),
+    );
+    doc.compact()
+}
+
+fn parse_solve(body: &str) -> (u64, Vec<f64>) {
+    let doc = Json::parse(body).unwrap();
+    let index = doc.get("solve_index").unwrap().as_f64().unwrap() as u64;
+    let y = doc
+        .get("y")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect();
+    (index, y)
+}
+
+fn upload(addr: SocketAddr, client: &str, body: &[u8]) -> String {
+    let (status, resp) = http(addr, "POST", "/operands", client, body);
+    assert_eq!(status, 200, "{resp}");
+    Json::parse(&resp)
+        .unwrap()
+        .get("operand")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+fn arrow16_mtx() -> Vec<u8> {
+    std::fs::read(Path::new(env!("CARGO_MANIFEST_DIR")).join("data/arrow16.mtx")).unwrap()
+}
+
+#[test]
+fn upload_solve_evict_round_trip_matches_direct_session() {
+    let server = server();
+    let addr = server.addr();
+    let handle = upload(addr, "e2e-a", &arrow16_mtx());
+
+    // Direct reference: an identically-seeded solver, the same operand
+    // through the same registry route, sequential solves 0..N.
+    let src = registry::build(&format!(
+        "mtx:{}",
+        Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("data/arrow16.mtx")
+            .display()
+    ))
+    .unwrap();
+    let reference_session = solver().open_session(src).unwrap();
+
+    let xs: Vec<Vector> = (0..4).map(|s| Vector::standard_normal(16, 300 + s)).collect();
+    for (k, x) in xs.iter().enumerate() {
+        let (status, resp) = http(
+            addr,
+            "POST",
+            &format!("/operands/{handle}/solve"),
+            "e2e-a",
+            solve_body(x).as_bytes(),
+        );
+        assert_eq!(status, 200, "{resp}");
+        let (index, y) = parse_solve(&resp);
+        assert_eq!(index, k as u64);
+        let direct = reference_session.solve(x).unwrap();
+        assert_eq!(direct.solve_index, k as u64);
+        assert_eq!(y, direct.y.data(), "solve {k} diverged from direct session");
+    }
+
+    // Evict, then the handle is gone.
+    let (status, _) = http(addr, "DELETE", &format!("/operands/{handle}"), "e2e-a", b"");
+    assert_eq!(status, 200);
+    let (status, resp) = http(
+        addr,
+        "POST",
+        &format!("/operands/{handle}/solve"),
+        "e2e-a",
+        solve_body(&xs[0]).as_bytes(),
+    );
+    assert_eq!(status, 404, "{resp}");
+
+    // The front door observed itself: /status carries the serve section.
+    let (status, resp) = http(addr, "GET", "/status", "e2e-a", b"");
+    assert_eq!(status, 200);
+    let report = Json::parse(&resp).unwrap();
+    let requests = report
+        .get("serve")
+        .unwrap()
+        .get("requests")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(requests >= 7.0, "serve.requests = {requests}");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_clients_on_one_operand_coalesce_bit_identically() {
+    let server = server();
+    let addr = server.addr();
+    let handle = upload(addr, "seed", b"{\"name\": \"spd64\"}");
+
+    // Every client solves the SAME vector, so y depends only on the
+    // solve index the window assigned: y_k = f(x, k).  The sequential
+    // reference enumerates exactly those values.
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 3;
+    let x = Vector::standard_normal(64, 99);
+    let reference: Vec<Vec<f64>> = {
+        let session = solver().open_session(registry::build("spd64").unwrap()).unwrap();
+        (0..THREADS * PER_THREAD)
+            .map(|_| session.solve(&x).unwrap().y.data().to_vec())
+            .collect()
+    };
+
+    let collected: Arc<Mutex<Vec<(u64, Vec<f64>)>>> = Arc::new(Mutex::new(Vec::new()));
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let collected = collected.clone();
+            let handle = handle.clone();
+            let x = x.clone();
+            s.spawn(move || {
+                for _ in 0..PER_THREAD {
+                    let (status, resp) = http(
+                        addr,
+                        "POST",
+                        &format!("/operands/{handle}/solve"),
+                        &format!("client-{t}"),
+                        solve_body(&x).as_bytes(),
+                    );
+                    assert_eq!(status, 200, "{resp}");
+                    collected.lock().unwrap().push(parse_solve(&resp));
+                }
+            });
+        }
+    });
+
+    let mut results = Arc::try_unwrap(collected).unwrap().into_inner().unwrap();
+    results.sort_by_key(|(index, _)| *index);
+    // Exactly-once completion: every solve index 0..N, no dup, no gap.
+    let indices: Vec<u64> = results.iter().map(|(i, _)| *i).collect();
+    assert_eq!(indices, (0..(THREADS * PER_THREAD) as u64).collect::<Vec<_>>());
+    for (index, y) in &results {
+        assert_eq!(
+            y,
+            &reference[*index as usize],
+            "coalesced solve {index} diverged from sequential reference"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn threads_over_distinct_operands_match_sequential_reference() {
+    let server = server();
+    let addr = server.addr();
+    let operands: [(&str, usize); 3] = [("spd64", 64), ("nonsym64", 64), ("iperturb66", 66)];
+
+    // Per-operand arrival order is each thread's own request order, so
+    // solve indices are 0..K per operand and inputs can differ.
+    std::thread::scope(|s| {
+        for (t, (name, n)) in operands.iter().enumerate() {
+            s.spawn(move || {
+                let handle = upload(
+                    addr,
+                    &format!("tenant-{t}"),
+                    format!("{{\"name\": \"{name}\"}}").as_bytes(),
+                );
+                let reference_session = solver()
+                    .open_session(registry::build(name).unwrap())
+                    .unwrap();
+                for k in 0..3u64 {
+                    let x = Vector::standard_normal(*n, 500 + 10 * t as u64 + k);
+                    let (status, resp) = http(
+                        addr,
+                        "POST",
+                        &format!("/operands/{handle}/solve"),
+                        &format!("tenant-{t}"),
+                        solve_body(&x).as_bytes(),
+                    );
+                    assert_eq!(status, 200, "{resp}");
+                    let (index, y) = parse_solve(&resp);
+                    assert_eq!(index, k);
+                    let direct = reference_session.solve(&x).unwrap();
+                    assert_eq!(y, direct.y.data(), "{name} solve {k} diverged");
+                }
+            });
+        }
+    });
+    server.shutdown();
+}
+
+#[test]
+fn repeat_boot_with_same_seed_is_deterministic() {
+    // The whole served sequence — program, coalesce, solve — replays
+    // bit-identically on a fresh server with the same solver seed.
+    // (Only the payload is compared: `wall_seconds` is a measurement.)
+    let run = || -> Vec<(u64, Vec<f64>)> {
+        let server = server();
+        let addr = server.addr();
+        let handle = upload(addr, "det", &arrow16_mtx());
+        let out = (0..3)
+            .map(|s| {
+                let x = Vector::standard_normal(16, 700 + s);
+                let (status, resp) = http(
+                    addr,
+                    "POST",
+                    &format!("/operands/{handle}/solve"),
+                    "det",
+                    solve_body(&x).as_bytes(),
+                );
+                assert_eq!(status, 200, "{resp}");
+                parse_solve(&resp)
+            })
+            .collect();
+        server.shutdown();
+        out
+    };
+    assert_eq!(run(), run(), "served solves are not deterministic under a fixed seed");
+}

@@ -1,0 +1,338 @@
+//! Fault-injection battery for the serving front door.  Every scenario
+//! runs under a hard wall-clock bound (the `fault_tolerance.rs` idiom):
+//! a regression that turns a fault into a hang trips the bound instead
+//! of wedging CI.
+//!
+//! * a shard panic mid-coalesced-window fans typed errors to **every**
+//!   waiter, and the operand-cache plane rebuild restores service on the
+//!   very next request — no re-upload, no restart;
+//! * a client that disconnects mid-solve leaks nothing: the solve
+//!   completes, its reply is discarded, the admission permit is
+//!   released, in-flight returns to zero;
+//! * an admission burst past the global budget rejects the excess with
+//!   deterministic typed 503s and never deadlocks (held requests parked
+//!   inside a [`GateBackend`] prove the budget was genuinely full).
+
+use meliso::linalg::Vector;
+use meliso::prelude::*;
+use meliso::runtime::native::NativeBackend;
+use meliso::serve::{ServeConfig, Server};
+use meliso::testing::faults::{FaultBackend, GateBackend};
+use meliso::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Hard bound on any single scenario (generous for slow CI runners).
+const SCENARIO_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Run `f` on a helper thread; fail instead of hanging if it stalls.
+fn bounded<T: Send + 'static>(name: &str, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    std::thread::Builder::new()
+        .name(format!("bounded-{name}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .expect("spawn scenario thread");
+    match rx.recv_timeout(SCENARIO_TIMEOUT) {
+        Ok(v) => v,
+        Err(_) => panic!("scenario {name:?} hung past {SCENARIO_TIMEOUT:?}"),
+    }
+}
+
+fn config() -> SystemConfig {
+    SystemConfig::new(2, 2, 32)
+}
+
+fn opts() -> SolveOptions {
+    SolveOptions::default()
+        .with_device(Material::EpiRam)
+        .with_workers(2)
+        .with_seed(11)
+}
+
+fn serve_config() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        http_threads: 8,
+        ..ServeConfig::default()
+    }
+}
+
+fn http(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    client_id: &str,
+    body: &[u8],
+) -> (u16, String) {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(90))).unwrap();
+    conn.set_write_timeout(Some(Duration::from_secs(90))).unwrap();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: meliso-test\r\nX-Client-Id: {client_id}\r\n\
+         Content-Length: {}\r\n\r\n",
+        body.len()
+    );
+    conn.write_all(head.as_bytes()).unwrap();
+    conn.write_all(body).unwrap();
+    conn.flush().unwrap();
+    let mut raw = String::new();
+    conn.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("malformed response: {raw}"));
+    let body = raw
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+fn upload(addr: SocketAddr, client: &str, name: &str) -> String {
+    let (status, resp) = http(
+        addr,
+        "POST",
+        "/operands",
+        client,
+        format!("{{\"name\": \"{name}\"}}").as_bytes(),
+    );
+    assert_eq!(status, 200, "{resp}");
+    Json::parse(&resp)
+        .unwrap()
+        .get("operand")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+fn solve_body(x: &Vector) -> String {
+    let mut doc = Json::obj();
+    doc.set(
+        "x",
+        Json::Arr(x.data().iter().map(|&v| Json::Num(v)).collect()),
+    );
+    doc.compact()
+}
+
+fn error_code(body: &str) -> String {
+    Json::parse(body)
+        .unwrap()
+        .get("error")
+        .unwrap()
+        .get("code")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string()
+}
+
+#[test]
+fn shard_panic_mid_window_errors_every_waiter_then_rebuild_restores_service() {
+    bounded("shard-panic-rebuild", || {
+        let backend = FaultBackend::panicking(NativeBackend::new());
+        let fault = backend.handle();
+        let solver = Meliso::with_backend(config(), opts(), Arc::new(backend));
+        let server = Server::start(solver, serve_config()).unwrap();
+        let addr = server.addr();
+        // Programming never touches the backend, so the upload succeeds
+        // with the fault disarmed and the panic fires inside a shard's
+        // execute walk mid-coalesced-window.
+        let handle = upload(addr, "victim", "spd64");
+        fault.fail_next_reads(true);
+
+        const WAITERS: usize = 4;
+        let results: Vec<(u16, String)> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..WAITERS)
+                .map(|t| {
+                    let handle = handle.clone();
+                    s.spawn(move || {
+                        let x = Vector::standard_normal(64, 900 + t as u64);
+                        http(
+                            addr,
+                            "POST",
+                            &format!("/operands/{handle}/solve"),
+                            &format!("victim-{t}"),
+                            solve_body(&x).as_bytes(),
+                        )
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        // Every waiter got a typed error — none hung, none got a partial
+        // result, and the error taxonomy held (5xx, machine-readable).
+        for (status, body) in &results {
+            assert!(
+                *status == 500 || *status == 503 || *status == 504,
+                "expected a typed 5xx, got {status}: {body}"
+            );
+            let code = error_code(body);
+            assert!(
+                code == "internal" || code == "overloaded" || code == "timeout",
+                "unexpected code {code}: {body}"
+            );
+        }
+
+        // Disarm and solve again: the cache notices the failed plane,
+        // rebuilds, re-programs the registered operand, and serves — the
+        // client never re-uploaded anything.
+        fault.fail_next_reads(false);
+        let x = Vector::standard_normal(64, 990);
+        let (status, resp) = http(
+            addr,
+            "POST",
+            &format!("/operands/{handle}/solve"),
+            "victim",
+            solve_body(&x).as_bytes(),
+        );
+        assert_eq!(status, 200, "service did not recover: {resp}");
+        assert_eq!(server.state().inflight(), 0);
+        server.shutdown();
+    });
+}
+
+#[test]
+fn client_disconnect_mid_solve_leaks_nothing() {
+    bounded("client-disconnect", || {
+        let backend = GateBackend::new(NativeBackend::new());
+        let gate = backend.handle();
+        let solver = Meliso::with_backend(config(), opts(), Arc::new(backend));
+        let server = Server::start(solver, serve_config()).unwrap();
+        let addr = server.addr();
+        let handle = upload(addr, "ghost", "spd64");
+
+        // Hold the next solve inside the backend, then hang up on it.
+        gate.close();
+        {
+            let mut conn = TcpStream::connect(addr).unwrap();
+            let body = solve_body(&Vector::standard_normal(64, 40));
+            let head = format!(
+                "POST /operands/{handle}/solve HTTP/1.1\r\nHost: x\r\n\
+                 X-Client-Id: ghost\r\nContent-Length: {}\r\n\r\n",
+                body.len()
+            );
+            conn.write_all(head.as_bytes()).unwrap();
+            conn.write_all(body.as_bytes()).unwrap();
+            conn.flush().unwrap();
+            // The request is demonstrably mid-solve: reads are parked at
+            // the gate.  Now the client vanishes without reading.
+            while gate.waiting() == 0 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            assert_eq!(server.state().inflight(), 1);
+        } // <- connection dropped here
+
+        gate.open();
+        // The orphaned solve completes, its reply is discarded, and the
+        // admission permit is released: in-flight returns to zero.
+        while server.state().inflight() != 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Nothing wedged: the next client is served, and the orphaned
+        // solve really executed (it consumed solve index 0).
+        let (status, resp) = http(
+            addr,
+            "POST",
+            &format!("/operands/{handle}/solve"),
+            "alive",
+            solve_body(&Vector::standard_normal(64, 41)).as_bytes(),
+        );
+        assert_eq!(status, 200, "{resp}");
+        let index = Json::parse(&resp)
+            .unwrap()
+            .get("solve_index")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(index, 1, "orphaned solve was dropped instead of completed");
+        server.shutdown();
+    });
+}
+
+#[test]
+fn admission_burst_rejects_excess_deterministically_and_never_deadlocks() {
+    bounded("admission-burst", || {
+        let backend = GateBackend::new(NativeBackend::new());
+        let gate = backend.handle();
+        let solver = Meliso::with_backend(config(), opts(), Arc::new(backend));
+        let cfg = ServeConfig {
+            max_inflight: 2,
+            max_inflight_per_client: 1,
+            ..serve_config()
+        };
+        let server = Server::start(solver, cfg).unwrap();
+        let addr = server.addr();
+        let handle = upload(addr, "seed", "spd64");
+
+        // Park enough solves at the gate to fill the global budget, so
+        // every burst probe below sees a deterministically-full server.
+        gate.close();
+        std::thread::scope(|s| {
+            let holders: Vec<_> = (0..2)
+                .map(|t| {
+                    let handle = handle.clone();
+                    s.spawn(move || {
+                        let x = Vector::standard_normal(64, 60 + t as u64);
+                        http(
+                            addr,
+                            "POST",
+                            &format!("/operands/{handle}/solve"),
+                            &format!("holder-{t}"),
+                            solve_body(&x).as_bytes(),
+                        )
+                    })
+                })
+                .collect();
+            // Both holders admitted (permits held; at least one is
+            // provably parked inside the backend) — the budget is full.
+            while server.state().inflight() != 2 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            while gate.waiting() == 0 {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            // Every probe in the burst is refused with the same typed
+            // 503 — no probe is queued, delayed, or deadlocked.
+            for t in 0..4u64 {
+                let (status, body) = http(
+                    addr,
+                    "POST",
+                    &format!("/operands/{handle}/solve"),
+                    &format!("burst-{t}"),
+                    solve_body(&Vector::standard_normal(64, 70 + t)).as_bytes(),
+                );
+                assert_eq!(status, 503, "{body}");
+                assert_eq!(error_code(&body), "overloaded", "{body}");
+            }
+            gate.open();
+            for h in holders {
+                let (status, body) = h.join().unwrap();
+                assert_eq!(status, 200, "held solve failed after release: {body}");
+            }
+        });
+        while server.state().inflight() != 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // No deadlock and no latch: with the gate open the same burst
+        // shape is served in full.
+        for t in 0..3 {
+            let (status, resp) = http(
+                addr,
+                "POST",
+                &format!("/operands/{handle}/solve"),
+                &format!("after-{t}"),
+                solve_body(&Vector::standard_normal(64, 80 + t)).as_bytes(),
+            );
+            assert_eq!(status, 200, "{resp}");
+        }
+        server.shutdown();
+    });
+}

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Promote fresh bench emissions to committed repo-root baselines.
+
+Usage:
+    python3 scripts/promote_baselines.py [bench_results] [--repo-root .]
+    python3 scripts/promote_baselines.py bench_results BENCH_serve_coalescing.json
+
+Copies every ``BENCH_*.json`` present in the fresh-emissions directory
+(default ``bench_results``, the directory ``cargo bench`` writes and the
+CI ``bench-results`` artifact unpacks to) over the matching repo-root
+baseline.  A fresh emission carries no ``provenance`` block, which
+``scripts/bench_diff.py`` treats as ``status = "measured"`` — so
+promotion is exactly the "plain copy arms the gate" step the seed
+baselines document in their ``provenance.refresh`` notes.
+
+Guard rails, so a promotion is always a conscious upgrade:
+
+* only baselines that already exist at the repo root are replaced — a
+  stray emission never creates an ungated orphan baseline;
+* an emission that *itself* carries ``provenance.status = "seed"`` is
+  refused (promoting a placeholder over a placeholder is a no-op that
+  would masquerade as a measurement);
+* the script prints which gated metrics each promoted baseline now
+  enforces, as a review aid for the commit that lands it.
+
+Exit status: 0 if every requested baseline was promoted, 1 otherwise.
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+GATED_KEYS = {
+    "speedup",
+    "speedup_chunks_per_s",
+    "extract_stage_reduction",
+    "chunks",
+    "chunks_total",
+    "chunks_planned",
+    "max_shard_load",
+    "deterministic",
+    "bit_identical",
+}
+
+
+def gated_metrics(doc, path=""):
+    """Every gated leaf in a bench emission, as dotted paths."""
+    out = []
+    if isinstance(doc, dict):
+        for key, val in doc.items():
+            sub = f"{path}.{key}" if path else key
+            if key in GATED_KEYS and not isinstance(val, (dict, list)):
+                out.append(f"{sub} = {val!r}")
+            else:
+                out.extend(gated_metrics(val, sub))
+    elif isinstance(doc, list):
+        for i, val in enumerate(doc):
+            out.extend(gated_metrics(val, f"{path}[{i}]"))
+    return out
+
+
+def promote(name, fresh_dir, repo_root):
+    """Copy one emission over its baseline.  Returns an error or None."""
+    fresh_path = os.path.join(fresh_dir, name)
+    base_path = os.path.join(repo_root, name)
+    if not os.path.exists(fresh_path):
+        return f"{name}: no fresh emission at {fresh_path} (run the bench first)"
+    if not os.path.exists(base_path):
+        return f"{name}: no committed baseline at {base_path} to replace"
+    with open(fresh_path) as fh:
+        fresh = json.load(fh)
+    if fresh.get("provenance", {}).get("status") == "seed":
+        return f"{name}: refusing to promote — the emission is itself a seed placeholder"
+    metrics = gated_metrics(fresh)
+    if not metrics:
+        return f"{name}: emission has no gated metrics (schema drift?)"
+    shutil.copyfile(fresh_path, base_path)
+    print(f"promoted {name}: the baseline-diff gate now enforces")
+    for m in metrics:
+        print(f"  {m}")
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "fresh_dir",
+        nargs="?",
+        default="bench_results",
+        help="directory of fresh emissions (default: bench_results)",
+    )
+    ap.add_argument(
+        "names",
+        nargs="*",
+        help="specific BENCH_*.json files (default: every baseline at the repo root)",
+    )
+    ap.add_argument("--repo-root", default=".", help="repository root (default: .)")
+    args = ap.parse_args()
+
+    names = args.names or sorted(
+        f for f in os.listdir(args.repo_root) if f.startswith("BENCH_") and f.endswith(".json")
+    )
+    if not names:
+        print("no BENCH_*.json baselines found at the repo root")
+        return 1
+
+    failures = []
+    for name in names:
+        err = promote(name, args.fresh_dir, args.repo_root)
+        if err:
+            failures.append(err)
+    if failures:
+        print("\nNOT PROMOTED:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nPASS: every baseline promoted to a measured emission")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

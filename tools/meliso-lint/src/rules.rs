@@ -37,10 +37,12 @@ pub mod rule {
 }
 
 /// Modules whose iteration order can reach solve results (D1 scope).
-const RESULT_PATH_MODULES: &[&str] = &["plane", "server", "iterative", "ec", "linalg", "matrices"];
+const RESULT_PATH_MODULES: &[&str] =
+    &["plane", "serve", "server", "iterative", "ec", "linalg", "matrices"];
 
-/// Modules where the panic-free (typed-`PlaneError`) contract holds (C2).
-const PANIC_FREE_MODULES: &[&str] = &["plane", "server"];
+/// Modules where the panic-free (typed-`ServeError`/`PlaneError`)
+/// contract holds (C2): no unwrap/expect/panic on the request path.
+const PANIC_FREE_MODULES: &[&str] = &["plane", "serve", "server"];
 
 /// One finding, pointing at a file position.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
